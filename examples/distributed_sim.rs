@@ -1,0 +1,50 @@
+//! §IV-G scenario: distributed-memory execution simulated with an
+//! explicit communication-cost model. Reproduces the paper's qualitative
+//! claims: C-1's locality minimizes per-superstep communication, higher
+//! orders trade messages for supersteps, and union-find pays fine-grained
+//! remote traffic.
+//!
+//!     cargo run --release --offline --example distributed_sim
+
+use contour::distsim::{simulate, CostModel, DistAlgorithm};
+use contour::graph::gen;
+
+fn main() {
+    let g = gen::delaunay(60_000, 5).into_csr().shuffled_edges(9);
+    println!("delaunay graph: n={} m={}\n", g.n, g.m());
+
+    let cost = CostModel::default();
+    println!(
+        "{:>8} {:>6} {:>10} {:>12} {:>10} {:>10}",
+        "alg", "nodes", "supersteps", "remote_gets", "MB", "modeled_s"
+    );
+    for alg in [
+        DistAlgorithm::Contour { hops: 1 },
+        DistAlgorithm::Contour { hops: 2 },
+        DistAlgorithm::Contour { hops: 64 },
+        DistAlgorithm::FastSv,
+        DistAlgorithm::UnionFind,
+    ] {
+        for nodes in [4usize, 16, 32] {
+            let r = simulate(&g, nodes, alg, cost);
+            println!(
+                "{:>8} {:>6} {:>10} {:>12} {:>10.2} {:>10.4}",
+                alg.name(),
+                nodes,
+                r.supersteps,
+                r.remote_reads,
+                r.bytes as f64 / 1e6,
+                r.modeled_total()
+            );
+        }
+    }
+
+    // §IV-G claim: per superstep, C-1 moves less data than C-2.
+    let r1 = simulate(&g, 16, DistAlgorithm::Contour { hops: 1 }, cost);
+    let r2 = simulate(&g, 16, DistAlgorithm::Contour { hops: 2 }, cost);
+    let per1 = r1.remote_reads as f64 / r1.supersteps as f64;
+    let per2 = r2.remote_reads as f64 / r2.supersteps as f64;
+    println!("\nremote reads per superstep: C-1 {per1:.0} vs C-2 {per2:.0}");
+    assert!(per1 < per2, "C-1 must be the locality-friendly operator");
+    assert!(r2.supersteps <= r1.supersteps, "C-2 must take fewer supersteps");
+}

@@ -1,0 +1,108 @@
+//! End-to-end driver: exercises all three layers of the system on a real
+//! workload and reports the paper's headline metric.
+//!
+//! 1. builds a representative slice of the Table I corpus (power-law,
+//!    road, kmer, delaunay classes);
+//! 2. runs every Contour variant plus FastSV and ConnectIt through the
+//!    L3 coordinator (native engine);
+//! 3. replays C-2 through the PJRT engine — the AOT-compiled L2 JAX
+//!    graph whose hot spot is the L1 Pallas kernel — and checks parity,
+//!    proving the three layers compose;
+//! 4. prints the headline numbers: average speedup vs FastSV (paper:
+//!    C-m 7.3x) and vs ConnectIt (paper: C-m 1.41x), plus iteration
+//!    counts vs the Theorem 1 bound.
+//!
+//!     make artifacts && cargo run --release --offline --example end_to_end
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use contour::cc::{self, Algorithm};
+use contour::coordinator::{algorithm_by_name, PjrtContour, PjrtMode};
+use contour::graph::{gen, stats, Csr};
+use contour::util::Timer;
+
+const ALGS: &[&str] = &["FastSV", "ConnectIt", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m", "C-Syn"];
+
+fn main() {
+    let workloads: Vec<(&str, Csr)> = vec![
+        ("social (rmat s16)", gen::rmat(16, 1 << 20, gen::RmatKind::Graph500, 1).into_csr()),
+        ("collab (ba 150k)", gen::barabasi_albert(150_000, 7, 2).into_csr()),
+        ("road 500x500", gen::road(500, 500, 3).into_csr().shuffled_edges(3)),
+        ("kmer chains", gen::kmer_chains(600, 400, 4).into_csr().shuffled_edges(4)),
+        ("delaunay n16", gen::delaunay(1 << 16, 5).into_csr().shuffled_edges(5)),
+    ];
+
+    println!("== end-to-end: native sweep over {} workloads ==\n", workloads.len());
+    let mut speed_vs_fastsv = vec![0.0f64; ALGS.len()];
+    let mut speed_vs_connectit = vec![0.0f64; ALGS.len()];
+    for (name, g) in &workloads {
+        let s = stats::stats(g);
+        println!("{name}: n={} m={} diam~{}", g.n, g.m(), s.pseudo_diameter);
+        let mut times = Vec::new();
+        let mut want = None;
+        for &alg_name in ALGS {
+            let alg = algorithm_by_name(alg_name, 0).unwrap();
+            let t = Timer::start();
+            let r = alg.run_with_stats(g);
+            let ms = t.ms();
+            times.push(ms);
+            match &want {
+                None => want = Some(r.labels.clone()),
+                Some(w) => assert!(
+                    cc::same_partition(&r.labels, w),
+                    "{alg_name} disagrees on {name}"
+                ),
+            }
+            let bound = (s.pseudo_diameter.max(2) as f64).log(1.5).ceil() as usize + 2;
+            let bound_txt = if alg_name.starts_with("C-") && alg_name != "C-1" && r.iterations <= bound
+            {
+                format!("<= Thm1 bound {bound}")
+            } else {
+                String::new()
+            };
+            println!("  {alg_name:>9}: {:>5} iters {ms:>9.1} ms  {bound_txt}", r.iterations);
+        }
+        let fastsv = times[0];
+        let connectit = times[1];
+        for (i, &t) in times.iter().enumerate() {
+            speed_vs_fastsv[i] += fastsv / t;
+            speed_vs_connectit[i] += connectit / t;
+        }
+        println!();
+    }
+
+    let k = workloads.len() as f64;
+    println!("== headline: average speedups (paper: C-m 7.3x vs FastSV, 1.41x vs ConnectIt) ==");
+    for (i, &alg) in ALGS.iter().enumerate() {
+        println!(
+            "  {alg:>9}: {:>5.2}x vs FastSV, {:>5.2}x vs ConnectIt",
+            speed_vs_fastsv[i] / k,
+            speed_vs_connectit[i] / k
+        );
+    }
+
+    // Layer-composition proof: C-2 through PJRT (L1 Pallas kernel inside
+    // the L2 JAX iteration, AOT HLO executed by the L3 runtime).
+    println!("\n== PJRT engine (L1+L2 artifacts driven from L3) ==");
+    match contour::runtime::Runtime::from_env() {
+        Ok(rt) => {
+            let g = gen::delaunay(1 << 14, 6).into_csr();
+            let want = cc::contour::Contour::c2().run(&g);
+            for mode in [PjrtMode::PerIteration, PjrtMode::FusedRun] {
+                let eng = PjrtContour::new(&rt, 2, mode);
+                let t = Timer::start();
+                let r = eng.try_run(&g).expect("pjrt");
+                assert!(cc::same_partition(&r.labels, &want), "PJRT parity");
+                println!(
+                    "  {:>15}: {} components, {} iterations, {:.1} ms — parity OK",
+                    eng.name(),
+                    cc::num_components(&r.labels),
+                    r.iterations,
+                    t.ms()
+                );
+            }
+            println!("\nall three layers compose: PASS");
+        }
+        Err(e) => println!("  skipped (run `make artifacts`): {e}"),
+    }
+}

@@ -1,0 +1,48 @@
+//! Large-diameter scenario (the paper's `road_usa` / `kmer_*` regime):
+//! shows why operator order matters — C-1 needs diameter-many
+//! iterations while C-2/C-m converge logarithmically (§IV-C), and how
+//! the §IV-E auto-selection policy picks the right variant.
+//!
+//!     cargo run --release --offline --example road_network
+
+use contour::cc::{contour::Contour, Algorithm};
+use contour::coordinator::auto_select;
+use contour::graph::{gen, stats};
+use contour::util::Timer;
+
+fn main() {
+    // A 600x600 road lattice: ~360k vertices, diameter ~1200.
+    let g = gen::road(600, 600, 11).into_csr().shuffled_edges(3);
+    let s = stats::stats(&g);
+    println!(
+        "road network: n={} m={} pseudo-diameter={} components={}",
+        s.n, s.m, s.pseudo_diameter, s.num_components
+    );
+
+    let mut reference = None;
+    for alg in [Contour::c1(), Contour::c2(), Contour::cm(), Contour::c11mm()] {
+        let t = Timer::start();
+        let r = alg.run_with_stats(&g);
+        println!(
+            "  {:>7}: {:>5} iterations  {:>9.1} ms",
+            alg.name(),
+            r.iterations,
+            t.ms()
+        );
+        if let Some(ref want) = reference {
+            assert_eq!(&r.labels, want, "{} disagrees", alg.name());
+        } else {
+            reference = Some(r.labels);
+        }
+    }
+
+    // Theorem 1: C-2 converges within ceil(log_1.5(d)) + 1 iterations.
+    let bound = (s.pseudo_diameter as f64).log(1.5).ceil() as usize + 1;
+    let c2 = Contour::c2().run_with_stats(&g);
+    println!("Theorem 1 bound for C-2: {} iterations (measured {})", bound, c2.iterations);
+    assert!(c2.iterations <= bound + 1);
+
+    // The §IV-E policy picks a high-order operator for this topology.
+    let chosen = auto_select(&s);
+    println!("auto-selected variant: {}", chosen.name());
+}

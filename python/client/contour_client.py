@@ -1,0 +1,137 @@
+"""Arkouda-style Python client for the contour server.
+
+The paper integrates Contour into Arachne/Arkouda: a Python front end
+sends messages to a parallel back end, so data scientists get
+``graph_cc(G)`` in a notebook while the heavy lifting happens server-side
+(§III-A). This client is that front end for our Rust server
+(``contour serve``): Python never computes — it ships messages, exactly
+like Arkouda's ``pdarray`` front end.
+
+Usage:
+
+    from contour_client import ContourClient
+
+    with ContourClient("127.0.0.1", 7021) as c:
+        c.gen("g", "rmat:16:16")        # or c.upload("g", edges)
+        comps, iters, ms = c.graph_cc("g", alg="C-2")
+        print(c.stats("g"))
+"""
+
+from __future__ import annotations
+
+import socket
+from typing import Iterable, List, Optional, Tuple
+
+
+class ContourError(RuntimeError):
+    """Server-side error (an ``ERR ...`` reply)."""
+
+
+class ContourClient:
+    def __init__(self, host: str = "127.0.0.1", port: int = 7021, timeout: float = 120.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self._sock.makefile("r", encoding="utf-8", newline="\n")
+
+    # ------------------------------------------------------------ transport
+
+    def _send(self, line: str) -> None:
+        self._sock.sendall((line + "\n").encode("utf-8"))
+
+    def _recv(self) -> str:
+        line = self._rfile.readline()
+        if not line:
+            raise ConnectionError("server closed the connection")
+        return line.rstrip("\n")
+
+    def _request(self, line: str) -> str:
+        self._send(line)
+        reply = self._recv()
+        if reply.startswith("ERR"):
+            raise ContourError(reply[4:])
+        return reply
+
+    # -------------------------------------------------------------- session
+
+    def ping(self) -> bool:
+        return self._request("PING") == "PONG"
+
+    def close(self) -> None:
+        try:
+            self._send("QUIT")
+            self._recv()  # BYE
+        except OSError:
+            pass
+        finally:
+            self._sock.close()
+
+    def __enter__(self) -> "ContourClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------------- graphs
+
+    def gen(self, name: str, spec: str) -> Tuple[int, int]:
+        """Generate a graph server-side (specs like ``rmat:16:16``,
+        ``delaunay:100000``, ``road:500:500``). Returns (n, m)."""
+        _, n, m = self._request(f"GEN {name} {spec}").split()
+        return int(n), int(m)
+
+    def upload(self, name: str, edges: Iterable[Tuple[int, int]]) -> Tuple[int, int]:
+        """Upload an explicit edge list. Returns (n, m) after dedup."""
+        edges = list(edges)
+        self._send(f"UPLOAD {name} {len(edges)}")
+        for u, v in edges:
+            self._send(f"{u} {v}")
+        reply = self._recv()
+        if reply.startswith("ERR"):
+            raise ContourError(reply[4:])
+        _, n, m = reply.split()
+        return int(n), int(m)
+
+    def load(self, name: str, path: str) -> Tuple[int, int]:
+        """Load a server-visible file (.mtx / SNAP edge list / .bin)."""
+        _, n, m = self._request(f"LOAD {name} {path}").split()
+        return int(n), int(m)
+
+    def drop(self, name: str) -> None:
+        self._request(f"DROP {name}")
+
+    def list_graphs(self) -> List[Tuple[str, int, int]]:
+        reply = self._request("LIST").split()[1:]
+        out = []
+        for item in reply:
+            gname, n, m = item.split(":")
+            out.append((gname, int(n), int(m)))
+        return out
+
+    # ------------------------------------------------------------- analysis
+
+    def graph_cc(self, name: str, alg: str = "C-2") -> Tuple[int, int, float]:
+        """The paper's ``graph_cc(graph)`` call: returns
+        (components, iterations, server_millis)."""
+        _, comps, iters, ms = self._request(f"CC {name} {alg}").split()
+        return int(comps), int(iters), float(ms)
+
+    def labels(self, name: str, alg: str = "C-2") -> List[int]:
+        """Component labels (first 10k vertices)."""
+        parts = self._request(f"LABELS {name} {alg}").split()[1:]
+        return [int(x) for x in parts]
+
+    def stats(self, name: str) -> dict:
+        parts = self._request(f"STATS {name}").split()[1:]
+        return {k: int(v) for k, v in (p.split("=") for p in parts)}
+
+    def metrics(self) -> dict:
+        parts = self._request("METRICS").split()[1:]
+        return {k: int(v) for k, v in (p.split("=") for p in parts)}
+
+
+def graph_cc(graph_name: str, host: str = "127.0.0.1", port: int = 7021,
+             alg: str = "C-2") -> int:
+    """One-shot convenience mirroring Arachne's ``graph_cc``: number of
+    connected components of a graph already resident on the server."""
+    with ContourClient(host, port) as c:
+        comps, _, _ = c.graph_cc(graph_name, alg)
+        return comps

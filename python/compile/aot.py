@@ -1,0 +1,124 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (never on the request path):
+
+    python -m compile.aot --out-dir ../artifacts
+
+Every artifact is a self-contained HLO module specialized to one
+(n, m) size bucket; the Rust runtime picks the smallest bucket that fits
+the live graph and pads (padding vertices are self-labelled, padding edges
+are (0,0) self-loops — both correctness-neutral; see model.py).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (n, m) size buckets. Kept in sync with rust/src/runtime/registry.rs.
+BUCKETS = [
+    (1_024, 4_096),
+    (16_384, 65_536),
+    (262_144, 1_048_576),
+]
+QUICK_BUCKETS = BUCKETS[:1]
+
+MAX_ITERS = 64  # Theorem 1: ceil(log_1.5 d_max)+1; 64 covers d_max ~ 2^37.
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lab(n):
+    return jax.ShapeDtypeStruct((n,), jnp.int32)
+
+
+def _edges(m):
+    return jax.ShapeDtypeStruct((m,), jnp.int32)
+
+
+def artifact_set(n: int, m: int):
+    """All (name, fn, example_args) triples for one size bucket."""
+    sets = []
+    for hops in (1, 2, 4):
+        sets.append(
+            (
+                f"contour_iter_h{hops}",
+                functools.partial(model.contour_iter, hops=hops),
+                (_lab(n), _edges(m), _edges(m)),
+            )
+        )
+    # Full on-device convergence loops for the default operator orders.
+    for hops in (1, 2):
+        sets.append(
+            (
+                f"contour_run_h{hops}",
+                functools.partial(model.contour_run, hops=hops, max_iters=MAX_ITERS),
+                (_lab(n), _edges(m), _edges(m)),
+            )
+        )
+    sets.append(("fastsv_iter", model.fastsv_iter, (_lab(n), _edges(m), _edges(m))))
+    return sets
+
+
+def vertex_artifact_set(n: int):
+    """Artifacts that only depend on n."""
+    return [
+        ("compress", functools.partial(model.compress_to_stars, max_iters=MAX_ITERS), (_lab(n),)),
+        ("count_components", model.count_components, (_lab(n),)),
+    ]
+
+
+def emit(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = QUICK_BUCKETS if quick else BUCKETS
+    manifest = []
+    for n, m in buckets:
+        for name, fn, args in artifact_set(n, m):
+            fname = f"{name}_n{n}_m{m}.hlo.txt"
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest.append(f"{name} n={n} m={m} file={fname}")
+            print(f"  wrote {fname} ({len(text)} chars)")
+    for n, _ in buckets:
+        for name, fn, args in vertex_artifact_set(n):
+            fname = f"{name}_n{n}.hlo.txt"
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest.append(f"{name} n={n} m=0 file={fname}")
+            print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="smallest bucket only")
+    args = ap.parse_args()
+    emit(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

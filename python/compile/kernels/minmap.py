@@ -1,0 +1,148 @@
+"""L1 Pallas kernels for the Contour minimum-mapping operator.
+
+The paper's per-edge hot spot is the h-order minimum-mapping operator
+MM^h (Definition 3): for an edge (w, v) compute
+
+    z^h = min(L^h[w], L^h[v]),   L^h[x] = L[L^{h-1}[x]]
+
+and conditionally lower the labels of the 2h touched vertices to z^h.
+
+On a TPU this splits into two phases (see DESIGN.md §Hardware-Adaptation):
+
+1. ``hop_min``      — per-edge gather chain + elementwise min. Pure
+                      gather/VPU work, tiled over edge blocks with the label
+                      array resident in VMEM. This is the Pallas kernel.
+2. scatter-min      — the conditional-vector-assignment combine. Left to
+                      XLA's native ``scatter`` (deterministic min combiner)
+                      in the L2 graph; a serial in-kernel variant
+                      (``scatter_min``) exists for comparison/ablation.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Correctness is checked
+against the pure-jnp oracles in ``ref.py`` by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default edge-block size: 2048 edges x 4 B x 3 vectors (src, dst, out) plus
+# the resident label block keeps VMEM usage ~(n*4 + 24 KiB) per grid step.
+DEFAULT_EDGE_BLOCK = 2048
+
+
+def _hop_min_kernel(l_ref, src_ref, dst_ref, z_ref, *, hops: int):
+    """Per-edge-block kernel: z[e] = min(L^h[src[e]], L^h[dst[e]]).
+
+    ``l_ref`` holds the full label array (one VMEM-resident block); the edge
+    arrays are streamed block by block via the grid.
+    """
+    labels = l_ref[...]
+    ls = jnp.take(labels, src_ref[...], mode="clip")
+    ld = jnp.take(labels, dst_ref[...], mode="clip")
+    # Each extra hop follows one more pointer: L^k[x] = L[L^{k-1}[x]].
+    for _ in range(hops - 1):
+        ls = jnp.take(labels, ls, mode="clip")
+        ld = jnp.take(labels, ld, mode="clip")
+    z_ref[...] = jnp.minimum(ls, ld)
+
+
+def hop_min(labels, src, dst, hops: int = 2, edge_block: int | None = None):
+    """z[e] = min(L^hops[src[e]], L^hops[dst[e]]) for every edge, via Pallas.
+
+    Args:
+      labels: int32[n] current label array.
+      src, dst: int32[m] edge endpoints (padding edges may be (0, 0)).
+      hops: the operator order h >= 1.
+      edge_block: edges per grid step (defaults to min(m, DEFAULT_EDGE_BLOCK)).
+
+    Returns:
+      int32[m] per-edge minimum z^h.
+    """
+    if hops < 1:
+        raise ValueError(f"hops must be >= 1, got {hops}")
+    (m,) = src.shape
+    (n,) = labels.shape
+    bm = edge_block or min(m, DEFAULT_EDGE_BLOCK)
+    if m % bm != 0:
+        raise ValueError(f"edge count {m} not divisible by block {bm}")
+    return pl.pallas_call(
+        functools.partial(_hop_min_kernel, hops=hops),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # labels: resident
+            pl.BlockSpec((bm,), lambda i: (i,)),  # src: streamed
+            pl.BlockSpec((bm,), lambda i: (i,)),  # dst: streamed
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), labels.dtype),
+        interpret=True,
+    )(labels, src, dst)
+
+
+def _pointer_jump_kernel(l_ref, out_ref):
+    """Vertex-block kernel: out[i] = L[L[i]] (one round of compression)."""
+    labels = l_ref[...]
+    blk = out_ref.shape[0]
+    i = pl.program_id(0)
+    mine = jax.lax.dynamic_slice(labels, (i * blk,), (blk,))
+    out_ref[...] = jnp.take(labels, mine, mode="clip")
+
+
+def pointer_jump(labels, vertex_block: int | None = None):
+    """One pointer-jumping round: L'[i] = L[L[i]], via Pallas.
+
+    This is the tree-compression step of §II-C effect (1), used by the
+    star-compression routine that finalizes the pointer graph.
+    """
+    (n,) = labels.shape
+    bn = vertex_block or min(n, DEFAULT_EDGE_BLOCK)
+    if n % bn != 0:
+        raise ValueError(f"vertex count {n} not divisible by block {bn}")
+    return pl.pallas_call(
+        _pointer_jump_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), labels.dtype),
+        interpret=True,
+    )(labels)
+
+
+def _scatter_min_kernel(idx_ref, val_ref, init_ref, out_ref):
+    """Serial conditional-vector-assignment: out[idx[e]] min= val[e].
+
+    Single-block ablation variant of the combine phase (the production path
+    uses XLA's native scatter-min; see module docstring). The fori_loop is
+    the in-kernel analog of the paper's CAS loop (Eq. 4), made race-free by
+    serialization instead of atomics.
+    """
+    idx = idx_ref[...]
+    val = val_ref[...]
+
+    def body(e, acc):
+        return acc.at[idx[e]].min(val[e])
+
+    out_ref[...] = jax.lax.fori_loop(0, idx.shape[0], body, init_ref[...])
+
+
+def scatter_min(idx, val, init):
+    """out = init, then out[idx[e]] = min(out[idx[e]], val[e]) serially."""
+    (n,) = init.shape
+    (m,) = idx.shape
+    return pl.pallas_call(
+        _scatter_min_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), init.dtype),
+        interpret=True,
+    )(idx, val, init)

@@ -1,0 +1,104 @@
+"""Pure-jnp / pure-python correctness oracles for the L1 kernels and the
+L2 iteration graphs.
+
+Everything here is deliberately simple and independent of the Pallas code:
+``python/tests`` asserts the kernels and models against these references.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def hop_min_ref(labels, src, dst, hops: int = 2):
+    """Reference for minmap.hop_min: z[e] = min(L^h[src[e]], L^h[dst[e]])."""
+    ls = labels[src]
+    ld = labels[dst]
+    for _ in range(hops - 1):
+        ls = labels[ls]
+        ld = labels[ld]
+    return jnp.minimum(ls, ld)
+
+
+def pointer_jump_ref(labels):
+    """Reference for minmap.pointer_jump: L'[i] = L[L[i]]."""
+    return labels[labels]
+
+
+def scatter_min_ref(idx, val, init):
+    """Reference for minmap.scatter_min (order-independent min combine)."""
+    return init.at[idx].min(val)
+
+
+def contour_iter_ref(labels, src, dst, hops: int = 2):
+    """One synchronous Contour iteration (Alg. 1 body with MM^h).
+
+    For each edge (w, v): z = min(L^h[w], L^h[v]) and the 2h touched
+    vertices {w, v, L[w], L[v], ..., L^{h-1}[w], L^{h-1}[v]} are lowered
+    to z if above it (Definition 2/3's conditional vector assignment).
+    """
+    z = hop_min_ref(labels, src, dst, hops)
+    out = labels
+    ls, ld = src, dst
+    for _ in range(hops):
+        out = out.at[ls].min(z).at[ld].min(z)
+        ls = labels[ls]
+        ld = labels[ld]
+    return out
+
+
+def fastsv_iter_ref(labels, src, dst):
+    """Reference FastSV iteration (Zhang, Azad & Hu 2020), both edge
+    directions: stochastic hooking, aggressive hooking, shortcutting."""
+    f = labels
+    gf = f[f]
+    out = f
+    # Stochastic hooking: f[f[u]] <- min(gf[v]); both directions.
+    out = out.at[f[src]].min(gf[dst]).at[f[dst]].min(gf[src])
+    # Aggressive hooking: f[u] <- min(gf[v]); both directions.
+    out = out.at[src].min(gf[dst]).at[dst].min(gf[src])
+    # Shortcutting: f[u] <- min(gf[u]).
+    out = jnp.minimum(out, gf)
+    return out
+
+
+def connected_components_ref(n: int, edges) -> np.ndarray:
+    """Ground-truth CC labels via union-find; label = min vertex id of the
+    component (the fixed point the Contour algorithm converges to)."""
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for w, v in edges:
+        rw, rv = find(int(w)), find(int(v))
+        if rw != rv:
+            parent[max(rw, rv)] = min(rw, rv)
+    # Min-id canonical form: every root is already the min of its component
+    # because unions always hang the larger id under the smaller one.
+    return np.asarray([find(i) for i in range(n)], dtype=np.int32)
+
+
+def contour_run_ref(n: int, edges, hops: int = 2, max_iters: int = 10_000):
+    """Run synchronous Contour to convergence in numpy; returns (L, iters).
+
+    ``iters`` counts the convergence-detecting iteration too, matching the
+    do/while in Alg. 1 (an extra no-change pass is what terminates it).
+    """
+    labels = np.arange(n, dtype=np.int32)
+    if len(edges) == 0:
+        return labels, 1
+    src = jnp.asarray([e[0] for e in edges], dtype=jnp.int32)
+    dst = jnp.asarray([e[1] for e in edges], dtype=jnp.int32)
+    for it in range(1, max_iters + 1):
+        nxt = np.asarray(contour_iter_ref(jnp.asarray(labels), src, dst, hops))
+        if np.array_equal(nxt, labels):
+            return labels, it
+        labels = nxt
+    raise RuntimeError("contour_run_ref did not converge")

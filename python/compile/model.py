@@ -1,0 +1,173 @@
+"""L2: whole-graph Contour / FastSV iteration graphs in JAX.
+
+Each public function here is a jit-able computation over fixed (n, m)
+shapes; ``aot.py`` lowers them to HLO text for the Rust runtime. The hot
+per-edge phase calls the L1 Pallas kernels in ``kernels.minmap``; the
+conditional-vector-assignment combine uses XLA's native scatter-min
+(race-free by construction — the TPU formulation of the paper's CAS loop,
+see DESIGN.md §Hardware-Adaptation).
+
+Conventions (shared with rust/src/runtime):
+  * labels      int32[n]  — L array; padding vertices carry their own id.
+  * src, dst    int32[m]  — edge endpoints; padding edges are (0, 0)
+                            self-loops, which are correctness-neutral
+                            (a self-loop only applies compression).
+  * every iteration returns (labels', changed:int32) where changed != 0
+    iff any label moved.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import minmap
+
+
+def _scatter_targets(labels, src, dst, hops: int):
+    """The 2h vertices MM^h conditionally assigns: w, v, L[w], L[v], ...,
+    L^{h-1}[w], L^{h-1}[v] (Definition 3)."""
+    targets = []
+    ls, ld = src, dst
+    for _ in range(hops):
+        targets.append(ls)
+        targets.append(ld)
+        ls = labels[ls]
+        ld = labels[ld]
+    return targets
+
+
+def contour_iter(labels, src, dst, *, hops: int = 2, use_pallas: bool = True,
+                 combine: str = "scatter"):
+    """One synchronous Contour iteration (Alg. 1 body with MM^hops).
+
+    Returns (labels', changed). ``use_pallas=False`` swaps the L1 kernel for
+    the pure-jnp gather chain (ablation; identical numerics).
+
+    ``combine`` selects the conditional-vector-assignment implementation:
+
+    * ``"scatter"`` — XLA scatter with a min combiner (default).
+    * ``"sort"``    — the TPU-idiomatic alternative: sort the 2h·m
+      (target, z) pairs by target, segmented-min via associative scan,
+      then a *conflict-free* scatter of one minimum per unique target.
+      Trades a sort for a collision-free memory pattern; numerics are
+      identical (ablated in python/tests and `bench ablation`).
+    """
+    if use_pallas:
+        z = minmap.hop_min(labels, src, dst, hops=hops)
+    else:
+        ls, ld = labels[src], labels[dst]
+        for _ in range(hops - 1):
+            ls, ld = labels[ls], labels[ld]
+        z = jnp.minimum(ls, ld)
+    targets = _scatter_targets(labels, src, dst, hops)
+    if combine == "scatter":
+        out = labels
+        for t in targets:
+            out = out.at[t].min(z)
+    elif combine == "sort":
+        out = _sorted_combine(labels, jnp.concatenate(targets),
+                              jnp.tile(z, len(targets)))
+    else:
+        raise ValueError(f"unknown combine {combine!r}")
+    changed = jnp.any(out != labels).astype(jnp.int32)
+    return out, changed
+
+
+def _sorted_combine(labels, idx, val):
+    """min-combine (idx, val) pairs into ``labels`` without write
+    conflicts: sort by index, segmented min-scan, keep each segment's
+    last (= full-segment) minimum, scatter-min those unique slots."""
+    order = jnp.argsort(idx)
+    sidx = idx[order]
+    sval = val[order]
+    # Segmented min via associative scan: (start_flag, min) pairs.
+    starts = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sidx[1:] != sidx[:-1]]
+    )
+
+    def seg_min(a, b):
+        a_flag, a_min = a
+        b_flag, b_min = b
+        return (
+            jnp.logical_or(b_flag, a_flag),
+            jnp.where(b_flag, b_min, jnp.minimum(a_min, b_min)),
+        )
+
+    _, run_min = jax.lax.associative_scan(seg_min, (starts, sval))
+    # A segment's total min sits at its last element.
+    ends = jnp.concatenate([sidx[1:] != sidx[:-1], jnp.ones((1,), jnp.bool_)])
+    # Conflict-free: route non-end lanes to a dummy slot (their own index
+    # holds a value >= the end lane's min, so a min-scatter is harmless —
+    # but unique=True semantics hold because each target's end lane is
+    # unique).
+    out = labels.at[jnp.where(ends, sidx, sidx)].min(
+        jnp.where(ends, run_min, jnp.iinfo(labels.dtype).max)
+    )
+    return out
+
+
+def contour_run(labels, src, dst, *, hops: int = 2, max_iters: int = 64,
+                use_pallas: bool = True):
+    """Full on-device convergence loop: iterate MM^hops until no label
+    changes (or ``max_iters``). Returns (labels, iters).
+
+    By Theorem 1 the loop needs at most ceil(log_1.5 d_max) + 1 iterations,
+    so ``max_iters=64`` covers any graph that fits in memory. The loop
+    carries only (L, changed, k); XLA keeps L donated in-place.
+    """
+
+    def cond(state):
+        _, changed, k = state
+        return jnp.logical_and(changed != 0, k < max_iters)
+
+    def body(state):
+        lab, _, k = state
+        nxt, changed = contour_iter(lab, src, dst, hops=hops, use_pallas=use_pallas)
+        return nxt, changed, k + 1
+
+    init = (labels, jnp.int32(1), jnp.int32(0))
+    lab, _, iters = jax.lax.while_loop(cond, body, init)
+    return lab, iters
+
+
+def fastsv_iter(labels, src, dst):
+    """One FastSV iteration (Zhang, Azad & Hu 2020): stochastic hooking,
+    aggressive hooking, shortcutting — each a scatter-min/gather round.
+    The baseline the paper's Figs. 1-3 compare against. Returns
+    (labels', changed)."""
+    f = labels
+    gf = f[f]
+    out = f
+    out = out.at[f[src]].min(gf[dst]).at[f[dst]].min(gf[src])  # stochastic
+    out = out.at[src].min(gf[dst]).at[dst].min(gf[src])        # aggressive
+    out = jnp.minimum(out, gf)                                 # shortcut
+    changed = jnp.any(out != labels).astype(jnp.int32)
+    return out, changed
+
+
+def compress_to_stars(labels, *, max_iters: int = 64, use_pallas: bool = True):
+    """Pointer-jump L <- L[L] until the pointer graph is a forest of stars
+    (L == L[L]). Used to canonicalize partial results. Returns (labels,
+    rounds)."""
+
+    def jump(lab):
+        return minmap.pointer_jump(lab) if use_pallas else lab[lab]
+
+    def cond(state):
+        lab, k = state
+        return jnp.logical_and(jnp.any(jump(lab) != lab), k < max_iters)
+
+    def body(state):
+        lab, k = state
+        return jump(lab), k + 1
+
+    lab, rounds = jax.lax.while_loop(cond, body, (labels, jnp.int32(0)))
+    return lab, rounds
+
+
+def count_components(labels):
+    """Number of stars in a converged pointer graph: |{i : L[i] == i}|.
+    Padding vertices count as singletons; the Rust side subtracts them."""
+    n = labels.shape[0]
+    return jnp.sum(labels == jnp.arange(n, dtype=labels.dtype)).astype(jnp.int32)

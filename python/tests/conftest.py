@@ -1,0 +1,11 @@
+"""Make `compile` (and the client) importable whether pytest runs from
+the repo root (`pytest python/tests/`) or from `python/` (the Makefile's
+`cd python && pytest tests/`)."""
+
+import pathlib
+import sys
+
+PKG_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for p in (PKG_ROOT, PKG_ROOT / "client"):
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))

@@ -1,0 +1,107 @@
+"""End-to-end test of the Arkouda-style integration: start the Rust
+server (`contour serve`), drive it from the Python client, and check the
+answers against python-side ground truth. Skips when the release binary
+has not been built yet."""
+
+import pathlib
+import socket
+import subprocess
+import sys
+import time
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "client"))
+from contour_client import ContourClient, ContourError  # noqa: E402
+
+from compile.kernels.ref import connected_components_ref  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+BINARY = REPO / "target" / "release" / "contour"
+PORT = 39741
+
+
+@pytest.fixture(scope="module")
+def server():
+    if not BINARY.exists():
+        pytest.skip("release binary not built (cargo build --release)")
+    proc = subprocess.Popen(
+        [str(BINARY), "serve", "--addr", f"127.0.0.1:{PORT}"],
+        cwd=REPO,
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL,
+    )
+    # Wait for the port to open.
+    for _ in range(100):
+        try:
+            socket.create_connection(("127.0.0.1", PORT), timeout=0.2).close()
+            break
+        except OSError:
+            if proc.poll() is not None:
+                pytest.skip("server binary exited (no `serve` subcommand?)")
+            time.sleep(0.1)
+    else:
+        proc.kill()
+        pytest.skip("server did not come up")
+    yield proc
+    proc.terminate()
+    proc.wait(timeout=10)
+
+
+def test_ping_and_generate(server):
+    with ContourClient(port=PORT) as c:
+        assert c.ping()
+        n, m = c.gen("t1", "path:100")
+        assert (n, m) == (100, 99)
+        comps, iters, ms = c.graph_cc("t1", "C-2")
+        assert comps == 1
+        assert iters >= 1
+        assert ms >= 0.0
+
+
+def test_upload_matches_ground_truth(server):
+    import numpy as np
+
+    rng = np.random.default_rng(5)
+    n, m = 200, 300
+    edges = [(int(rng.integers(0, n)), int(rng.integers(0, n))) for _ in range(m)]
+    # Force vertex n-1 to exist so the universe size matches.
+    edges.append((n - 1, n - 1))
+    want = connected_components_ref(n, edges)
+    with ContourClient(port=PORT) as c:
+        c.upload("up", edges)
+        labels = c.labels("up", "ConnectIt")
+        assert labels == list(want)
+        comps, _, _ = c.graph_cc("up", "C-m")
+        assert comps == len(set(want))
+        c.drop("up")
+
+
+def test_stats_and_metrics(server):
+    with ContourClient(port=PORT) as c:
+        c.gen("s1", "star:50")
+        st = c.stats("s1")
+        assert st["n"] == 50 and st["m"] == 49
+        assert st["components"] == 1
+        assert st["diameter"] == 2
+        metrics = c.metrics()
+        assert metrics["requests"] > 0
+        assert metrics["errors"] >= 0
+
+
+def test_error_paths(server):
+    with ContourClient(port=PORT) as c:
+        with pytest.raises(ContourError):
+            c.graph_cc("missing-graph")
+        with pytest.raises(ContourError):
+            c.gen("bad", "nosuchgen:10")
+
+
+def test_multiple_clients(server):
+    with ContourClient(port=PORT) as a, ContourClient(port=PORT) as b:
+        a.gen("shared", "soup:3:20")
+        # The second client sees the first client's graph (shared store).
+        comps, _, _ = b.graph_cc("shared", "auto")
+        assert comps == 3
+        names = [g[0] for g in b.list_graphs()]
+        assert "shared" in names

@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes, dtypes, block sizes and adversarial edge
+patterns; every property is also pinned by a deterministic case so plain
+pytest runs are meaningful without hypothesis's database.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minmap, ref
+
+DTYPES = [jnp.int32, jnp.int64]
+
+
+def _rand_case(rng, n, m, selfloops=False):
+    labels = jnp.asarray(rng.integers(0, n, n), dtype=jnp.int32)
+    src = rng.integers(0, n, m)
+    dst = src.copy() if selfloops else rng.integers(0, n, m)
+    return labels, jnp.asarray(src, dtype=jnp.int32), jnp.asarray(dst, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------- hop_min
+
+
+@pytest.mark.parametrize("hops", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("n,m,block", [(16, 8, 4), (64, 128, 32), (1024, 4096, 2048)])
+def test_hop_min_matches_ref(hops, n, m, block):
+    rng = np.random.default_rng(n * m + hops)
+    labels, src, dst = _rand_case(rng, n, m)
+    got = minmap.hop_min(labels, src, dst, hops=hops, edge_block=block)
+    want = ref.hop_min_ref(labels, src, dst, hops)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    blocks=st.integers(1, 8),
+    block=st.sampled_from([1, 2, 8, 32]),
+    hops=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_hop_min_property(n, blocks, block, hops, seed):
+    m = blocks * block
+    rng = np.random.default_rng(seed)
+    labels, src, dst = _rand_case(rng, n, m)
+    got = minmap.hop_min(labels, src, dst, hops=hops, edge_block=block)
+    want = ref.hop_min_ref(labels, src, dst, hops)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hop_min_identity_labels():
+    """With L = identity, z^h = min(src, dst) for every h."""
+    n, m = 32, 64
+    rng = np.random.default_rng(7)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    for hops in (1, 2, 4):
+        got = minmap.hop_min(labels, src, dst, hops=hops, edge_block=16)
+        np.testing.assert_array_equal(np.asarray(got), np.minimum(src, dst))
+
+
+def test_hop_min_self_loops():
+    """Self-loop edges produce z = L^h[v]: pure compression, no cross-merge."""
+    n, m = 64, 32
+    rng = np.random.default_rng(13)
+    labels, src, dst = _rand_case(rng, n, m, selfloops=True)
+    got = minmap.hop_min(labels, src, dst, hops=2, edge_block=8)
+    want = labels[labels[src]]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hop_min_rejects_bad_block():
+    labels = jnp.arange(8, dtype=jnp.int32)
+    e = jnp.zeros(6, dtype=jnp.int32)
+    with pytest.raises(ValueError):
+        minmap.hop_min(labels, e, e, hops=2, edge_block=4)
+    with pytest.raises(ValueError):
+        minmap.hop_min(labels, e, e, hops=0)
+
+
+def test_hop_min_monotone_in_hops():
+    """z^{h+1} <= z^h pointwise once labels form a decreasing pointer graph
+    (L[i] <= i), which holds throughout any Contour run."""
+    n, m = 128, 256
+    rng = np.random.default_rng(21)
+    raw = rng.integers(0, n, n)
+    labels = jnp.asarray(np.minimum(raw, np.arange(n)), dtype=jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    prev = None
+    for hops in (1, 2, 3, 4):
+        z = np.asarray(minmap.hop_min(labels, src, dst, hops=hops, edge_block=64))
+        if prev is not None:
+            assert (z <= prev).all()
+        prev = z
+
+
+# ------------------------------------------------------------ pointer_jump
+
+
+@pytest.mark.parametrize("n,block", [(8, 4), (64, 16), (1024, 256), (1024, 1024)])
+def test_pointer_jump_matches_ref(n, block):
+    rng = np.random.default_rng(n)
+    labels = jnp.asarray(rng.integers(0, n, n), dtype=jnp.int32)
+    got = minmap.pointer_jump(labels, vertex_block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.pointer_jump_ref(labels)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(blocks=st.integers(1, 6), block=st.sampled_from([1, 4, 16]), seed=st.integers(0, 2**31))
+def test_pointer_jump_property(blocks, block, seed):
+    n = blocks * block
+    rng = np.random.default_rng(seed)
+    labels = jnp.asarray(rng.integers(0, n, n), dtype=jnp.int32)
+    got = minmap.pointer_jump(labels, vertex_block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(labels)[np.asarray(labels)])
+
+
+def test_pointer_jump_fixed_point_on_stars():
+    """A forest of stars (L[L] == L) is a fixed point of compression."""
+    labels = jnp.asarray([0, 0, 0, 3, 3, 5, 5, 5], dtype=jnp.int32)
+    got = minmap.pointer_jump(labels, vertex_block=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(labels))
+
+
+# ------------------------------------------------------------- scatter_min
+
+
+@pytest.mark.parametrize("n,m", [(8, 4), (64, 256), (512, 128)])
+def test_scatter_min_matches_ref(n, m):
+    rng = np.random.default_rng(n + m)
+    idx = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    val = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    init = jnp.asarray(rng.integers(0, n, n), dtype=jnp.int32)
+    got = minmap.scatter_min(idx, val, init)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.scatter_min_ref(idx, val, init))
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 100), m=st.integers(1, 200), seed=st.integers(0, 2**31))
+def test_scatter_min_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    val = jnp.asarray(rng.integers(-5, n, m), dtype=jnp.int32)
+    init = jnp.asarray(rng.integers(0, n, n), dtype=jnp.int32)
+    got = np.asarray(minmap.scatter_min(idx, val, init))
+    want = np.asarray(init).copy()
+    for i, v in zip(np.asarray(idx), np.asarray(val)):
+        want[i] = min(want[i], v)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_scatter_min_duplicate_indices():
+    """All edges target one slot: result is the global min (CAS-loop analog)."""
+    idx = jnp.zeros(16, dtype=jnp.int32)
+    val = jnp.asarray(np.arange(16, 0, -1), dtype=jnp.int32)
+    init = jnp.full((4,), 100, dtype=jnp.int32)
+    got = np.asarray(minmap.scatter_min(idx, val, init))
+    assert got[0] == 1
+    assert (got[1:] == 100).all()

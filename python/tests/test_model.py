@@ -1,0 +1,199 @@
+"""L2 correctness: iteration graphs vs references, convergence properties,
+and the paper's theorems checked as executable properties.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _random_graph(rng, n, m):
+    src = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    return src, dst
+
+
+def _path_edges(n, pad_to=None):
+    src = list(range(n - 1))
+    dst = list(range(1, n))
+    if pad_to:
+        src += [0] * (pad_to - len(src))
+        dst += [0] * (pad_to - len(dst))
+    return jnp.asarray(src, dtype=jnp.int32), jnp.asarray(dst, dtype=jnp.int32)
+
+
+# ------------------------------------------------------------ contour_iter
+
+
+@pytest.mark.parametrize("hops", [1, 2, 4])
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_contour_iter_matches_ref(hops, use_pallas):
+    rng = np.random.default_rng(42 + hops)
+    n, m = 64, 128
+    labels = jnp.asarray(np.minimum(rng.integers(0, n, n), np.arange(n)), dtype=jnp.int32)
+    src, dst = _random_graph(rng, n, m)
+    got, changed = model.contour_iter(labels, src, dst, hops=hops, use_pallas=use_pallas)
+    want = ref.contour_iter_ref(labels, src, dst, hops)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert bool(changed) == bool((np.asarray(got) != np.asarray(labels)).any())
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 128), m=st.integers(1, 256), hops=st.integers(1, 4),
+       seed=st.integers(0, 2**31))
+def test_contour_iter_property(n, m, hops, seed):
+    rng = np.random.default_rng(seed)
+    labels = jnp.asarray(np.minimum(rng.integers(0, n, n), np.arange(n)), dtype=jnp.int32)
+    src, dst = _random_graph(rng, n, m)
+    got, _ = model.contour_iter(labels, src, dst, hops=hops, use_pallas=False)
+    want = ref.contour_iter_ref(labels, src, dst, hops)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Labels never increase (minimum-mapping is monotone).
+    assert (np.asarray(got) <= np.asarray(labels)).all()
+
+
+def test_contour_iter_pallas_jnp_identical():
+    """The Pallas kernel path and the pure-jnp path lower to the same math."""
+    rng = np.random.default_rng(3)
+    n, m = 256, 512
+    labels = jnp.arange(n, dtype=jnp.int32)
+    src, dst = _random_graph(rng, n, m)
+    a, ca = model.contour_iter(labels, src, dst, hops=2, use_pallas=True)
+    b, cb = model.contour_iter(labels, src, dst, hops=2, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(ca) == int(cb)
+
+
+def test_contour_iter_converged_graph_reports_no_change():
+    labels = jnp.asarray([0, 0, 0, 3, 3], dtype=jnp.int32)
+    src = jnp.asarray([0, 1, 3], dtype=jnp.int32)
+    dst = jnp.asarray([1, 2, 4], dtype=jnp.int32)
+    out, changed = model.contour_iter(labels, src, dst, hops=2, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(labels))
+    assert int(changed) == 0
+
+
+def test_padding_edges_are_neutral():
+    """(0,0) padding self-loops must not alter any real label."""
+    n = 16
+    src, dst = _path_edges(8, pad_to=32)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    lab, _ = model.contour_run(labels, src, dst, hops=2, use_pallas=False)
+    lab = np.asarray(lab)
+    assert (lab[:8] == 0).all()
+    assert (lab[8:] == np.arange(8, 16)).all()
+
+
+# ------------------------------------------------------------- contour_run
+
+
+@pytest.mark.parametrize("hops", [1, 2])
+@pytest.mark.parametrize("topo", ["path", "random", "two_comps"])
+def test_contour_run_finds_components(hops, topo):
+    n = 64
+    rng = np.random.default_rng(hash(topo) % 2**31)
+    if topo == "path":
+        src, dst = _path_edges(n)
+        edges = list(zip(np.asarray(src), np.asarray(dst)))
+    elif topo == "random":
+        src, dst = _random_graph(rng, n, 96)
+        edges = list(zip(np.asarray(src), np.asarray(dst)))
+    else:
+        src = jnp.asarray(list(range(0, 31)) + list(range(32, 63)), dtype=jnp.int32)
+        dst = jnp.asarray(list(range(1, 32)) + list(range(33, 64)), dtype=jnp.int32)
+        edges = list(zip(np.asarray(src), np.asarray(dst)))
+    labels = jnp.arange(n, dtype=jnp.int32)
+    lab, iters = model.contour_run(labels, src, dst, hops=hops, use_pallas=False)
+    want = ref.connected_components_ref(n, edges)
+    np.testing.assert_array_equal(np.asarray(lab), want)
+    assert int(iters) >= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 96), m=st.integers(1, 192), seed=st.integers(0, 2**31))
+def test_contour_run_property_vs_union_find(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src, dst = _random_graph(rng, n, m)
+    edges = list(zip(np.asarray(src), np.asarray(dst)))
+    labels = jnp.arange(n, dtype=jnp.int32)
+    lab, _ = model.contour_run(labels, src, dst, hops=2, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(lab), ref.connected_components_ref(n, edges))
+
+
+def test_theorem1_iteration_bound_on_paths():
+    """Theorem 1: MM^2 converges within ceil(log_1.5(d)) + 1 iterations.
+    A path of n vertices has diameter n-1 — the adversarial case."""
+    for n in (2, 3, 5, 17, 64, 200):
+        _, iters = ref.contour_run_ref(n, [(i, i + 1) for i in range(n - 1)], hops=2)
+        bound = int(np.ceil(np.log(max(n - 1, 2)) / np.log(1.5))) + 1
+        # +1: our count includes the final no-change detection pass.
+        assert iters <= bound + 1, (n, iters, bound)
+
+
+def test_contour_run_respects_max_iters():
+    n = 64
+    src, dst = _path_edges(n)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    lab, iters = model.contour_run(labels, src, dst, hops=1, max_iters=2, use_pallas=False)
+    assert int(iters) == 2
+    assert (np.asarray(lab) != 0).any()  # genuinely truncated
+
+
+# ------------------------------------------------------------- fastsv_iter
+
+
+def test_fastsv_matches_ref():
+    rng = np.random.default_rng(5)
+    n, m = 64, 128
+    labels = jnp.asarray(np.minimum(rng.integers(0, n, n), np.arange(n)), dtype=jnp.int32)
+    src, dst = _random_graph(rng, n, m)
+    got, _ = model.fastsv_iter(labels, src, dst)
+    want = ref.fastsv_iter_ref(labels, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 64), m=st.integers(1, 128), seed=st.integers(0, 2**31))
+def test_fastsv_converges_to_components(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src, dst = _random_graph(rng, n, m)
+    edges = list(zip(np.asarray(src), np.asarray(dst)))
+    lab = jnp.arange(n, dtype=jnp.int32)
+    for _ in range(4 * int(np.ceil(np.log2(n))) + 8):
+        nxt, changed = model.fastsv_iter(lab, src, dst)
+        if int(changed) == 0:
+            break
+        lab = nxt
+    np.testing.assert_array_equal(np.asarray(lab), ref.connected_components_ref(n, edges))
+
+
+# ----------------------------------------------------- compress + counting
+
+
+def test_compress_to_stars():
+    # Chain pointer graph 7->6->...->0: compression needs ceil(log2(7)) jumps.
+    labels = jnp.asarray([0, 0, 1, 2, 3, 4, 5, 6], dtype=jnp.int32)
+    lab, rounds = model.compress_to_stars(labels, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(lab), np.zeros(8, dtype=np.int32))
+    assert 1 <= int(rounds) <= 3
+
+
+def test_compress_pallas_matches_jnp():
+    rng = np.random.default_rng(11)
+    n = 64
+    labels = jnp.asarray(np.minimum(rng.integers(0, n, n), np.arange(n)), dtype=jnp.int32)
+    a, _ = model.compress_to_stars(labels, use_pallas=True)
+    b, _ = model.compress_to_stars(labels, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_count_components():
+    labels = jnp.asarray([0, 0, 0, 3, 3, 5], dtype=jnp.int32)
+    assert int(model.count_components(labels)) == 3
+    labels = jnp.arange(7, dtype=jnp.int32)
+    assert int(model.count_components(labels)) == 7

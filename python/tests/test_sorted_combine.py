@@ -1,0 +1,65 @@
+"""The sort-based combine (TPU-idiomatic conflict-free alternative to
+scatter-min) must be numerically identical to the scatter path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _case(seed, n, m):
+    rng = np.random.default_rng(seed)
+    labels = jnp.asarray(np.minimum(rng.integers(0, n, n), np.arange(n)), dtype=jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, m), dtype=jnp.int32)
+    return labels, src, dst
+
+
+@pytest.mark.parametrize("hops", [1, 2, 4])
+@pytest.mark.parametrize("n,m", [(16, 8), (128, 256), (512, 1024)])
+def test_sort_combine_matches_scatter(hops, n, m):
+    labels, src, dst = _case(n * m + hops, n, m)
+    a, ca = model.contour_iter(labels, src, dst, hops=hops, use_pallas=False,
+                               combine="scatter")
+    b, cb = model.contour_iter(labels, src, dst, hops=hops, use_pallas=False,
+                               combine="sort")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(ca) == int(cb)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 100), m=st.integers(1, 200), hops=st.integers(1, 3),
+       seed=st.integers(0, 2**31))
+def test_sort_combine_property(n, m, hops, seed):
+    labels, src, dst = _case(seed, n, m)
+    a, _ = model.contour_iter(labels, src, dst, hops=hops, use_pallas=False,
+                              combine="scatter")
+    b, _ = model.contour_iter(labels, src, dst, hops=hops, use_pallas=False,
+                              combine="sort")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sort_combine_full_run_converges():
+    n = 64
+    edges = [(i, i + 1) for i in range(n - 1)]
+    labels = np.arange(n, dtype=np.int32)
+    src = jnp.asarray([e[0] for e in edges], dtype=jnp.int32)
+    dst = jnp.asarray([e[1] for e in edges], dtype=jnp.int32)
+    lab = jnp.asarray(labels)
+    for _ in range(64):
+        lab, changed = model.contour_iter(lab, src, dst, hops=2,
+                                          use_pallas=False, combine="sort")
+        if int(changed) == 0:
+            break
+    np.testing.assert_array_equal(
+        np.asarray(lab), ref.connected_components_ref(n, edges)
+    )
+
+
+def test_unknown_combine_rejected():
+    labels, src, dst = _case(1, 8, 4)
+    with pytest.raises(ValueError):
+        model.contour_iter(labels, src, dst, combine="nope")

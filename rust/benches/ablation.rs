@@ -1,0 +1,103 @@
+//! `cargo bench --bench ablation` — design-choice ablations DESIGN.md
+//! calls out:
+//!
+//! 1. the ConnectIt design space (sampling × find × unite — the paper's
+//!    comparator is itself a framework; we sweep all 18 points),
+//! 2. Contour schedule parameters (C-11mm warmup length, C-m order),
+//! 3. incremental vs static connectivity,
+//! 4. PJRT per-iteration vs fused dispatch (when artifacts exist).
+
+use contour::bench::{measure, Table};
+use contour::cc::connectit::ConnectItVariant;
+use contour::cc::contour::{Contour, Schedule};
+use contour::cc::incremental::IncrementalCc;
+use contour::cc::Algorithm;
+use contour::graph::gen;
+
+fn main() {
+    let social = gen::rmat(16, 1 << 20, gen::RmatKind::Graph500, 1).into_csr();
+    let road = gen::road(400, 400, 2).into_csr().shuffled_edges(3);
+    println!("social: n={} m={} | road: n={} m={}\n", social.n, social.m(), road.n, road.m());
+
+    // ---- 1. ConnectIt design space.
+    let mut t = Table::new(&["variant", "social_ms", "road_ms"]);
+    for v in ConnectItVariant::design_space() {
+        let s1 = measure(1, 3, || {
+            v.run(&social);
+        });
+        let s2 = measure(1, 3, || {
+            v.run(&road);
+        });
+        t.row(vec![
+            v.short_name(),
+            format!("{:.2}", s1.median_ms),
+            format!("{:.2}", s2.median_ms),
+        ]);
+    }
+    println!("== ConnectIt design space ==\n{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/ablation_connectit.txt", t.render()).ok();
+
+    // ---- 2. Contour schedule parameters.
+    let mut t = Table::new(&["schedule", "graph", "iterations", "median_ms"]);
+    let mut sched = |name: String, schedule: Schedule, gname: &str, g: &contour::graph::Csr| {
+        let alg = Contour::c2();
+        let mut alg = alg;
+        alg.schedule = schedule;
+        let mut iters = 0usize;
+        let s = measure(1, 3, || iters = alg.run_with_stats(g).iterations);
+        t.row(vec![name, gname.into(), iters.to_string(), format!("{:.2}", s.median_ms)]);
+    };
+    for m_order in [4usize, 16, 64, 1024] {
+        sched(format!("C-m(m={m_order})"), Schedule::Fixed(m_order), "road", &road);
+    }
+    for ones in [1usize, 2, 4, 8] {
+        sched(
+            format!("C-11mm(ones={ones})"),
+            Schedule::OnesThenM { ones, m: 1024 },
+            "road",
+            &road,
+        );
+    }
+    for m_order in [16usize, 1024] {
+        sched(format!("C-1m1m(m={m_order})"), Schedule::Alternate { m: m_order }, "road", &road);
+    }
+    println!("== Contour schedule parameters ==\n{}", t.render());
+    std::fs::write("results/ablation_schedule.txt", t.render()).ok();
+
+    // ---- 3. Incremental vs static.
+    let mut t = Table::new(&["mode", "median_ms"]);
+    let s_static = measure(1, 3, || {
+        IncrementalCc::from_graph(&social, 0);
+    });
+    t.row(vec!["bulk-seed".into(), format!("{:.2}", s_static.median_ms)]);
+    let edges: Vec<_> = social.edges().collect();
+    let s_inc = measure(0, 1, || {
+        let idx = IncrementalCc::new(social.n);
+        for &(u, v) in &edges {
+            idx.add_edge(u, v);
+        }
+    });
+    t.row(vec!["online-inserts".into(), format!("{:.2}", s_inc.median_ms)]);
+    println!("== incremental connectivity ==\n{}", t.render());
+    std::fs::write("results/ablation_incremental.txt", t.render()).ok();
+
+    // ---- 4. PJRT dispatch granularity.
+    match contour::runtime::Runtime::from_env() {
+        Ok(rt) => {
+            use contour::coordinator::{PjrtContour, PjrtMode};
+            let g = gen::delaunay(1 << 14, 7).into_csr();
+            let mut t = Table::new(&["engine", "median_ms"]);
+            for mode in [PjrtMode::PerIteration, PjrtMode::FusedRun] {
+                let eng = PjrtContour::new(&rt, 2, mode);
+                let s = measure(1, 3, || {
+                    eng.try_run(&g).unwrap();
+                });
+                t.row(vec![eng.name(), format!("{:.2}", s.median_ms)]);
+            }
+            println!("== PJRT dispatch granularity (delaunay n14) ==\n{}", t.render());
+            std::fs::write("results/ablation_pjrt.txt", t.render()).ok();
+        }
+        Err(e) => println!("PJRT ablation skipped: {e}"),
+    }
+}

@@ -1,0 +1,44 @@
+//! `cargo bench --bench figures` — regenerates every table and figure of
+//! the paper (§IV) and writes them under `results/`.
+//!
+//! By default runs the *quick* corpus (a few minutes); set
+//! `CONTOUR_BENCH_FULL=1` for the full 32-graph Table I corpus.
+//! (The image has no criterion; this is a `harness = false` driver over
+//! the crate's own measurement harness.)
+
+use std::path::Path;
+
+use contour::bench::figures;
+
+fn main() {
+    let full = std::env::var("CONTOUR_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let quick = !full;
+    let out = Path::new("results");
+    let threads = 0; // all cores
+    println!(
+        "regenerating paper tables/figures ({} corpus) into {}/",
+        if quick { "quick" } else { "full" },
+        out.display()
+    );
+    for (name, f) in [
+        ("table1", Box::new(|| figures::table1(out, quick)) as Box<dyn Fn() -> anyhow::Result<String>>),
+        ("fig1 (iterations)", Box::new(move || figures::fig1(out, quick, threads))),
+        ("fig2 (time)", Box::new(move || figures::fig2(out, quick, threads))),
+        ("fig3 (speedup vs FastSV)", Box::new(move || figures::fig3(out, quick, threads))),
+        ("fig4 (speedup vs ConnectIt)", Box::new(move || figures::fig4(out, quick, threads))),
+        ("delaunay scaling", Box::new(move || figures::delaunay_scaling(out, quick, threads))),
+        ("distsim (§IV-G)", Box::new(move || figures::distsim_report(out, quick))),
+    ] {
+        println!("\n==== {name} ====");
+        match f() {
+            Ok(text) => println!("{text}"),
+            Err(e) => println!("FAILED: {e:#}"),
+        }
+    }
+    // PJRT path needs artifacts; report rather than fail without them.
+    println!("\n==== pjrt engine ====");
+    match figures::pjrt_report(out) {
+        Ok(text) => println!("{text}"),
+        Err(e) => println!("skipped: {e:#}"),
+    }
+}

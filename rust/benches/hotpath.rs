@@ -1,0 +1,70 @@
+//! `cargo bench --bench hotpath` — microbenchmarks of the per-edge hot
+//! path: operator order, write mode (plain vs CAS, §III-B.3), update
+//! mode (async vs sync, §III-B.1), early-check cost (§III-B.2), and
+//! thread scaling. This is the profile the §Perf optimization loop in
+//! EXPERIMENTS.md iterates on.
+
+use contour::bench::{measure, Table};
+use contour::cc::contour::{Contour, UpdateMode, WriteMode};
+use contour::cc::Algorithm;
+use contour::graph::gen;
+
+fn main() {
+    let g = gen::rmat(18, 1 << 22, gen::RmatKind::Graph500, 1).into_csr();
+    let road = gen::road(700, 700, 2).into_csr().shuffled_edges(3);
+    println!("rmat: n={} m={} | road: n={} m={}\n", g.n, g.m(), road.n, road.m());
+
+    let mut t = Table::new(&["bench", "graph", "median_ms", "medges_per_s"]);
+    let mut bench = |name: &str, gname: &str, graph: &contour::graph::Csr, alg: Contour| {
+        let mut iters = 0usize;
+        let s = measure(1, 3, || iters = alg.run_with_stats(graph).iterations);
+        let medges = graph.m() as f64 * iters as f64 / s.median_ms / 1e3;
+        t.row(vec![
+            name.into(),
+            gname.into(),
+            format!("{:.2}", s.median_ms),
+            format!("{medges:.1}"),
+        ]);
+    };
+
+    // Operator order (ablation for Fig. 1's cost story).
+    for (name, alg) in [
+        ("order/C-1", Contour::c1()),
+        ("order/C-2", Contour::c2()),
+        ("order/C-m", Contour::cm()),
+        ("order/C-11mm", Contour::c11mm()),
+    ] {
+        bench(name, "rmat", &g, alg.clone());
+        bench(name, "road", &road, alg);
+    }
+    // Write mode (§III-B.3: plain stores vs CAS).
+    bench("write/plain", "rmat", &g, Contour::c2().with_write(WriteMode::Plain));
+    bench("write/cas", "rmat", &g, Contour::c2().with_write(WriteMode::Cas));
+    // Update mode (§III-B.1: async vs sync L_u).
+    bench("update/async", "rmat", &g, Contour::c2());
+    bench("update/sync", "rmat", &g, Contour::c2().with_update(UpdateMode::Sync).with_write(WriteMode::Cas));
+    // Early check (§III-B.2).
+    bench("early/on", "road", &road, Contour::c2().with_early_check(true));
+    bench("early/off", "road", &road, Contour::c2().with_early_check(false));
+    // Thread scaling.
+    for threads in [1usize, 2, 4, 8, 16] {
+        bench(&format!("threads/{threads}"), "rmat", &g, Contour::c2().with_threads(threads));
+    }
+    // Baselines for context.
+    for name in ["FastSV", "ConnectIt"] {
+        let alg = contour::coordinator::algorithm_by_name(name, 0).unwrap();
+        let mut iters = 0usize;
+        let s = measure(1, 3, || iters = alg.run_with_stats(&g).iterations);
+        t.row(vec![
+            format!("baseline/{name}"),
+            "rmat".into(),
+            format!("{:.2}", s.median_ms),
+            format!("{:.1}", g.m() as f64 * iters as f64 / s.median_ms / 1e3),
+        ]);
+    }
+
+    println!("{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/hotpath.txt", t.render()).ok();
+    std::fs::write("results/hotpath.csv", t.csv()).ok();
+}

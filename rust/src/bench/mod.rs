@@ -1,0 +1,144 @@
+//! Benchmark harness (the image has no `criterion`): warmup + repeated
+//! measurement with robust summaries, a fixed-width table printer, and
+//! the experiment suite + figure drivers that regenerate every table and
+//! figure of the paper (see DESIGN.md §4).
+
+pub mod figures;
+pub mod suite;
+
+use crate::util::Timer;
+
+/// Robust summary of repeated measurements (milliseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub reps: usize,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub mean_ms: f64,
+    /// Median absolute deviation — stability indicator.
+    pub mad_ms: f64,
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `reps` recorded runs.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        f();
+        times.push(t.ms());
+    }
+    summarize(&times)
+}
+
+pub fn summarize(times: &[f64]) -> Sample {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    let mut devs: Vec<f64> = sorted.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        reps: times.len(),
+        median_ms: median,
+        min_ms: sorted[0],
+        mean_ms: times.iter().sum::<f64>() / times.len() as f64,
+        mad_ms: devs[devs.len() / 2],
+    }
+}
+
+/// Fixed-width ASCII table writer used by every figure driver.
+#[derive(Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV form (for plotting outside).
+    pub fn csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let s = measure(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.min_ms <= s.median_ms);
+    }
+
+    #[test]
+    fn summarize_median_and_mad() {
+        let s = summarize(&[1.0, 100.0, 3.0, 2.0, 2.5]);
+        assert_eq!(s.median_ms, 2.5);
+        assert!(s.mad_ms <= 1.5 + 1e-9);
+        assert_eq!(s.min_ms, 1.0);
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut t = Table::new(&["graph", "ms"]);
+        t.row(vec!["path".into(), "1.5".into()]);
+        t.row(vec!["a-very-long-name".into(), "20".into()]);
+        let r = t.render();
+        assert!(r.contains("graph"));
+        assert!(r.lines().count() == 4);
+        let csv = t.csv();
+        assert_eq!(csv.lines().next().unwrap(), "graph,ms");
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

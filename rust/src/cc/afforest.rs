@@ -1,0 +1,152 @@
+//! Afforest (Sutton, Ben-Nun & Barak, IPDPS 2018) — subgraph-sampling
+//! connectivity, the related-work extension the paper cites (§V):
+//! union a few neighbors of every vertex first, detect the emerging
+//! giant component by sampling, then only process the remaining edges of
+//! vertices outside it.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::{unionfind::RemConcurrent, Algorithm, RunResult};
+use crate::graph::Csr;
+use crate::par;
+use crate::util::Xoshiro256;
+use crate::VId;
+
+#[derive(Clone, Debug)]
+pub struct Afforest {
+    /// Neighbor rounds in the sampling phase (paper default: 2).
+    pub sample_rounds: usize,
+    /// Vertices sampled to guess the giant component (paper: 1024).
+    pub sample_size: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for Afforest {
+    fn default() -> Self {
+        Self { sample_rounds: 2, sample_size: 1024, threads: 0, seed: 0xAFF0 }
+    }
+}
+
+impl Afforest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn find(p: &[AtomicU32], mut x: VId) -> VId {
+        loop {
+            let px = p[x as usize].load(Ordering::Relaxed);
+            if px == x {
+                return x;
+            }
+            // Path halving.
+            let ppx = p[px as usize].load(Ordering::Relaxed);
+            let _ = p[x as usize].compare_exchange(px, ppx, Ordering::Relaxed, Ordering::Relaxed);
+            x = px;
+        }
+    }
+}
+
+impl Algorithm for Afforest {
+    fn name(&self) -> String {
+        "Afforest".into()
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        let n = g.n;
+        let t = self.threads;
+        let p: Vec<AtomicU32> = (0..n as u32).map(AtomicU32::new).collect();
+        let pr = &p;
+        // Phase 1: union each vertex with its first `sample_rounds`
+        // neighbors (covers most of the giant component cheaply).
+        for r in 0..self.sample_rounds {
+            par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+                for v in range {
+                    let nb = g.neighbors(v as VId);
+                    if let Some(&w) = nb.get(r) {
+                        RemConcurrent::unite(pr, v as VId, w);
+                    }
+                }
+            });
+        }
+        // Phase 2: sample to find the most frequent (giant) root.
+        let mut rng = Xoshiro256::new(self.seed);
+        let mut counts = std::collections::HashMap::<VId, usize>::new();
+        for _ in 0..self.sample_size.min(n.max(1)) {
+            let v = rng.below(n.max(1) as u64) as VId;
+            *counts.entry(Self::find(pr, v)).or_insert(0) += 1;
+        }
+        let giant = counts.into_iter().max_by_key(|&(_, c)| c).map(|(r, _)| r);
+        // Phase 3: finish the remaining adjacency of non-giant vertices.
+        par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+            for v in range {
+                if Some(Self::find(pr, v as VId)) == giant {
+                    continue; // already in the giant component
+                }
+                for (i, &w) in g.neighbors(v as VId).iter().enumerate() {
+                    if i < self.sample_rounds {
+                        continue; // done in phase 1
+                    }
+                    RemConcurrent::unite(pr, v as VId, w);
+                }
+            }
+        });
+        // Flatten.
+        par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+            for v in range {
+                let r = Self::find(pr, v as VId);
+                pr[v].store(r, Ordering::Relaxed);
+            }
+        });
+        RunResult {
+            labels: p.into_iter().map(|x| x.into_inner()).collect(),
+            iterations: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{ground_truth, Algorithm};
+    use crate::graph::gen;
+
+    #[test]
+    fn correct_on_suite() {
+        for e in [
+            gen::path(300),
+            gen::star(128),
+            gen::component_soup(7, 40, 3),
+            gen::erdos_renyi(1000, 2000, 4),
+            gen::rmat(11, 10_000, gen::RmatKind::Graph500, 5),
+            gen::delaunay(500, 6),
+        ] {
+            let g = e.into_csr();
+            assert_eq!(Afforest::new().run(&g), ground_truth(&g), "n={}", g.n);
+        }
+    }
+
+    #[test]
+    fn giant_component_skip_does_not_skip_merges() {
+        // Two equal halves: the "giant" guess covers only one; the other
+        // must still be completed by phase 3.
+        let mut e = gen::path(100);
+        e.n = 200;
+        for i in 101..200 {
+            e.push((i - 1) as VId, i as VId);
+        }
+        let g = e.into_csr();
+        assert_eq!(Afforest::new().run(&g), ground_truth(&g));
+    }
+
+    #[test]
+    fn across_thread_counts() {
+        let g = gen::barabasi_albert(3000, 3, 8).into_csr();
+        let want = ground_truth(&g);
+        for t in [1, 4, 8] {
+            let alg = Afforest { threads: t, ..Default::default() };
+            assert_eq!(alg.run(&g), want, "t={t}");
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! BFS-based connected components — the graph-traversal baseline of §I,
+//! in sequential and frontier-parallel forms.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::{Algorithm, RunResult};
+use crate::graph::Csr;
+use crate::par;
+use crate::VId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BfsMode {
+    Sequential,
+    /// Level-synchronous frontier parallelism within each component.
+    Parallel,
+}
+
+#[derive(Clone, Debug)]
+pub struct BfsCc {
+    pub mode: BfsMode,
+    pub threads: usize,
+}
+
+impl BfsCc {
+    pub fn sequential() -> Self {
+        Self { mode: BfsMode::Sequential, threads: 0 }
+    }
+
+    pub fn parallel() -> Self {
+        Self { mode: BfsMode::Parallel, threads: 0 }
+    }
+
+    fn run_sequential(&self, g: &Csr) -> (Vec<VId>, usize) {
+        let n = g.n;
+        let mut labels = vec![VId::MAX; n];
+        let mut q = VecDeque::new();
+        let mut rounds = 0usize;
+        for v in 0..n {
+            if labels[v] != VId::MAX {
+                continue;
+            }
+            // v is the smallest unvisited vertex => component minimum.
+            labels[v] = v as VId;
+            q.push_back(v as VId);
+            while let Some(u) = q.pop_front() {
+                rounds += 1;
+                for &w in g.neighbors(u) {
+                    if labels[w as usize] == VId::MAX {
+                        labels[w as usize] = v as VId;
+                        q.push_back(w);
+                    }
+                }
+            }
+        }
+        (labels, rounds)
+    }
+
+    fn run_parallel(&self, g: &Csr) -> (Vec<VId>, usize) {
+        let n = g.n;
+        let t = self.threads;
+        let labels: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(VId::MAX)).collect();
+        let mut max_depth = 0usize;
+        for v in 0..n {
+            if labels[v].load(Ordering::Relaxed) != VId::MAX {
+                continue;
+            }
+            let root = v as VId;
+            labels[v].store(root, Ordering::Relaxed);
+            let mut frontier = vec![root];
+            let mut depth = 0usize;
+            while !frontier.is_empty() {
+                depth += 1;
+                let lr = &labels;
+                let fr = &frontier;
+                // Expand the frontier in parallel; claim via CAS so each
+                // vertex joins the next frontier exactly once.
+                let next = par::par_map_reduce(
+                    fr.len(),
+                    t,
+                    64,
+                    Vec::new,
+                    |acc: &mut Vec<VId>, range| {
+                        for i in range {
+                            for &w in g.neighbors(fr[i]) {
+                                if lr[w as usize]
+                                    .compare_exchange(
+                                        VId::MAX,
+                                        root,
+                                        Ordering::Relaxed,
+                                        Ordering::Relaxed,
+                                    )
+                                    .is_ok()
+                                {
+                                    acc.push(w);
+                                }
+                            }
+                        }
+                    },
+                    |mut a, mut b| {
+                        a.append(&mut b);
+                        a
+                    },
+                );
+                frontier = next;
+            }
+            max_depth = max_depth.max(depth);
+        }
+        (labels.into_iter().map(|x| x.into_inner()).collect(), max_depth)
+    }
+}
+
+impl Algorithm for BfsCc {
+    fn name(&self) -> String {
+        match self.mode {
+            BfsMode::Sequential => "BFS-seq".into(),
+            BfsMode::Parallel => "BFS-par".into(),
+        }
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        let (labels, rounds) = match self.mode {
+            BfsMode::Sequential => self.run_sequential(g),
+            BfsMode::Parallel => self.run_parallel(g),
+        };
+        RunResult { labels, iterations: rounds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::same_partition;
+    use crate::graph::gen;
+
+    #[test]
+    fn sequential_labels_are_component_minima() {
+        let g = gen::component_soup(4, 10, 2).into_csr();
+        let labels = BfsCc::sequential().run(&g);
+        for (v, &l) in labels.iter().enumerate() {
+            assert!(l <= v as VId);
+            assert_eq!(labels[l as usize], l, "label must be its own root");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        for e in [
+            gen::path(300),
+            gen::grid(20, 20),
+            gen::erdos_renyi(500, 800, 4),
+            gen::rmat(10, 3000, gen::RmatKind::Graph500, 5),
+        ] {
+            let g = e.into_csr();
+            let a = BfsCc::sequential().run(&g);
+            let b = BfsCc::parallel().run(&g);
+            assert_eq!(a, b);
+            assert!(same_partition(&a, &b));
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_self_labelled() {
+        let g = crate::graph::EdgeList::new(5).into_csr();
+        assert_eq!(BfsCc::sequential().run(&g), vec![0, 1, 2, 3, 4]);
+        assert_eq!(BfsCc::parallel().run(&g), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_depth_close_to_diameter() {
+        let g = gen::path(100).into_csr();
+        let r = BfsCc::parallel().run_with_stats(&g);
+        assert!(r.iterations >= 99, "depth {} < diameter", r.iterations);
+    }
+}

@@ -1,0 +1,333 @@
+//! A ConnectIt-style composable connectivity framework.
+//!
+//! Dhulipala, Hong & Shun's ConnectIt (the comparator of §IV-F) is not a
+//! single algorithm but a *design space*: `sampling strategy × find
+//! variant × unite variant`, yielding hundreds of combinations, of which
+//! Rem's-with-splicing was the winner the paper benchmarks. This module
+//! reproduces that framework shape so the ablation benches can sweep the
+//! space like ConnectIt does:
+//!
+//! * **Sampling** (first phase, cheap, discovers the giant component):
+//!   none / k-out (first k neighbors, as in Afforest) / BFS seed.
+//! * **Find** (compression inside unite): naive root-chasing /
+//!   path-halving / full path-splitting.
+//! * **Unite**: Rem-CAS splicing / atomic hook-to-min.
+//!
+//! Every combination links toward smaller ids, so labels are min-id
+//! canonical and directly comparable to the other algorithms.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::{Algorithm, RunResult};
+use crate::graph::Csr;
+use crate::par;
+use crate::util::Xoshiro256;
+use crate::VId;
+
+/// First-phase sampling strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    /// Process every edge in the unite phase (no sampling).
+    None,
+    /// Afforest-style: unite each vertex with its first k neighbors,
+    /// then skip the discovered giant component's internal edges.
+    KOut(usize),
+    /// BFS from a few random seeds marks a candidate giant component.
+    BfsSeed { seeds: usize },
+}
+
+/// Find/compression variant used inside unite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Find {
+    /// Chase parents without writing.
+    Naive,
+    /// Path halving: every other node repointed to its grandparent.
+    Halve,
+    /// Path splitting: every node on the path repointed.
+    Split,
+}
+
+/// Unite variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unite {
+    /// Rem's algorithm with CAS splicing (ConnectIt's overall winner).
+    RemCas,
+    /// Find both roots, CAS-hook the larger root under the smaller.
+    HookMin,
+}
+
+/// A point in the ConnectIt design space.
+#[derive(Clone, Debug)]
+pub struct ConnectItVariant {
+    pub sampling: Sampling,
+    pub find: Find,
+    pub unite: Unite,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for ConnectItVariant {
+    fn default() -> Self {
+        // The configuration the paper benchmarks as "ConnectIt".
+        Self { sampling: Sampling::None, find: Find::Split, unite: Unite::RemCas, threads: 0, seed: 0xC011 }
+    }
+}
+
+impl ConnectItVariant {
+    /// All combinations for the ablation sweep.
+    pub fn design_space() -> Vec<ConnectItVariant> {
+        let mut v = Vec::new();
+        for sampling in [Sampling::None, Sampling::KOut(2), Sampling::BfsSeed { seeds: 4 }] {
+            for find in [Find::Naive, Find::Halve, Find::Split] {
+                for unite in [Unite::RemCas, Unite::HookMin] {
+                    v.push(ConnectItVariant { sampling, find, unite, ..Default::default() });
+                }
+            }
+        }
+        v
+    }
+
+    pub fn short_name(&self) -> String {
+        let s = match self.sampling {
+            Sampling::None => "none",
+            Sampling::KOut(k) => return format!("kout{k}-{:?}-{:?}", self.find, self.unite).to_lowercase(),
+            Sampling::BfsSeed { .. } => "bfs",
+        };
+        format!("{s}-{:?}-{:?}", self.find, self.unite).to_lowercase()
+    }
+
+    #[inline]
+    fn find_root(&self, p: &[AtomicU32], mut x: VId) -> VId {
+        match self.find {
+            Find::Naive => loop {
+                let px = p[x as usize].load(Ordering::Relaxed);
+                if px == x {
+                    return x;
+                }
+                x = px;
+            },
+            Find::Halve => loop {
+                let px = p[x as usize].load(Ordering::Relaxed);
+                if px == x {
+                    return x;
+                }
+                let ppx = p[px as usize].load(Ordering::Relaxed);
+                let _ =
+                    p[x as usize].compare_exchange(px, ppx, Ordering::Relaxed, Ordering::Relaxed);
+                x = px;
+            },
+            Find::Split => {
+                // First pass: find the root; second: repoint the path.
+                let mut r = x;
+                loop {
+                    let pr = p[r as usize].load(Ordering::Relaxed);
+                    if pr == r {
+                        break;
+                    }
+                    r = pr;
+                }
+                while x != r {
+                    let px = p[x as usize].load(Ordering::Relaxed);
+                    if px == x {
+                        break;
+                    }
+                    // Only lower pointers (keeps the decreasing invariant
+                    // under races).
+                    if r < px {
+                        let _ = p[x as usize].compare_exchange(
+                            px,
+                            r,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                    }
+                    x = px;
+                }
+                r
+            }
+        }
+    }
+
+    #[inline]
+    fn unite(&self, p: &[AtomicU32], u: VId, v: VId) {
+        match self.unite {
+            Unite::RemCas => super::unionfind::RemConcurrent::unite(p, u, v),
+            Unite::HookMin => loop {
+                let ru = self.find_root(p, u);
+                let rv = self.find_root(p, v);
+                if ru == rv {
+                    return;
+                }
+                let (hi, lo) = if ru > rv { (ru, rv) } else { (rv, ru) };
+                if p[hi as usize]
+                    .compare_exchange(hi, lo, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    return;
+                }
+                // Root moved under us; retry with fresh roots.
+            },
+        }
+    }
+}
+
+impl Algorithm for ConnectItVariant {
+    fn name(&self) -> String {
+        format!("ConnectIt[{}]", self.short_name())
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        let n = g.n;
+        let t = self.threads;
+        let p: Vec<AtomicU32> = (0..n as u32).map(AtomicU32::new).collect();
+        let pr = &p;
+        // ---- Sampling phase: cheaply connect most of the giant component.
+        let giant = match self.sampling {
+            Sampling::None => None,
+            Sampling::KOut(k) => {
+                for round in 0..k {
+                    par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+                        for v in range {
+                            if let Some(&w) = g.neighbors(v as VId).get(round) {
+                                self.unite(pr, v as VId, w);
+                            }
+                        }
+                    });
+                }
+                self.sample_giant(pr, n)
+            }
+            Sampling::BfsSeed { seeds } => {
+                let mut rng = Xoshiro256::new(self.seed);
+                for _ in 0..seeds {
+                    let root = rng.below(n.max(1) as u64) as VId;
+                    // Bounded BFS: unite a frontier neighborhood.
+                    let mut frontier = vec![root];
+                    for _ in 0..3 {
+                        let mut next = Vec::new();
+                        for &v in &frontier {
+                            for &w in g.neighbors(v) {
+                                self.unite(pr, v, w);
+                                next.push(w);
+                            }
+                        }
+                        frontier = next;
+                        if frontier.len() > n / 4 {
+                            break;
+                        }
+                    }
+                }
+                self.sample_giant(pr, n)
+            }
+        };
+        // ---- Finish phase: remaining edges (skipping the giant's own).
+        let src = &g.src;
+        let dst = &g.dst;
+        par::par_for(g.m(), t, par::DEFAULT_GRAIN, |range| {
+            for e in range {
+                let (u, v) = (src[e], dst[e]);
+                if let Some(c) = giant {
+                    if self.find_root(pr, u) == c && self.find_root(pr, v) == c {
+                        continue;
+                    }
+                }
+                self.unite(pr, u, v);
+            }
+        });
+        // ---- Flatten to stars.
+        par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+            for v in range {
+                let r = self.find_root(pr, v as VId);
+                pr[v].store(r, Ordering::Relaxed);
+            }
+        });
+        RunResult { labels: p.into_iter().map(|x| x.into_inner()).collect(), iterations: 1 }
+    }
+}
+
+impl ConnectItVariant {
+    /// Sample vertices to guess the most frequent (giant) root.
+    fn sample_giant(&self, p: &[AtomicU32], n: usize) -> Option<VId> {
+        if n == 0 {
+            return None;
+        }
+        let mut rng = Xoshiro256::new(self.seed ^ 0x5A);
+        let mut counts = std::collections::HashMap::<VId, usize>::new();
+        for _ in 0..512.min(n) {
+            let v = rng.below(n as u64) as VId;
+            *counts.entry(self.find_root(p, v)).or_insert(0) += 1;
+        }
+        counts.into_iter().max_by_key(|&(_, c)| c).map(|(r, _)| r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{ground_truth, Algorithm};
+    use crate::graph::gen;
+
+    fn suite() -> Vec<Csr> {
+        vec![
+            gen::path(400).into_csr().shuffled_edges(1),
+            gen::star(300).into_csr(),
+            gen::component_soup(8, 40, 2).into_csr(),
+            gen::rmat(11, 8_000, gen::RmatKind::Graph500, 3).into_csr(),
+            gen::delaunay(700, 4).into_csr(),
+        ]
+    }
+
+    /// Sweep the entire design space (18 combinations) on every family.
+    #[test]
+    fn whole_design_space_is_correct() {
+        for g in suite() {
+            let want = ground_truth(&g);
+            for variant in ConnectItVariant::design_space() {
+                let got = variant.run(&g);
+                assert_eq!(got, want, "{} on n={} m={}", variant.name(), g.n, g.m());
+            }
+        }
+    }
+
+    #[test]
+    fn default_is_rem_splicing() {
+        let v = ConnectItVariant::default();
+        assert_eq!(v.unite, Unite::RemCas);
+        assert_eq!(v.run_with_stats(&gen::path(50).into_csr()).iterations, 1);
+    }
+
+    #[test]
+    fn design_space_has_expected_size() {
+        assert_eq!(ConnectItVariant::design_space().len(), 3 * 3 * 2);
+        // Names must be unique.
+        let names: std::collections::HashSet<String> =
+            ConnectItVariant::design_space().iter().map(|v| v.short_name()).collect();
+        assert_eq!(names.len(), 18);
+    }
+
+    #[test]
+    fn sampling_skips_giant_but_stays_correct() {
+        // One giant component plus satellites — the case sampling helps.
+        let mut e = gen::barabasi_albert(3_000, 3, 7);
+        let base = e.n;
+        e.n += 100;
+        for i in 0..99u32 {
+            e.push(base as VId + i, base as VId + i + 1);
+        }
+        let g = e.into_csr();
+        let want = ground_truth(&g);
+        for sampling in [Sampling::KOut(2), Sampling::BfsSeed { seeds: 4 }] {
+            let v = ConnectItVariant { sampling, ..Default::default() };
+            assert_eq!(v.run(&g), want, "{:?}", sampling);
+        }
+    }
+
+    #[test]
+    fn concurrent_correctness_under_threads() {
+        let g = gen::erdos_renyi(5_000, 9_000, 5).into_csr();
+        let want = ground_truth(&g);
+        for t in [2usize, 8] {
+            let v = ConnectItVariant { threads: t, ..Default::default() };
+            assert_eq!(v.run(&g), want, "threads {t}");
+        }
+    }
+}

@@ -1,0 +1,627 @@
+//! The Contour algorithm (Alg. 1) and its six variants (§III-B.4).
+//!
+//! The per-edge operator is MM^h (Definition 3): compute
+//! `z = min(L^h[w], L^h[v])` by chasing up to `h` pointer hops from each
+//! endpoint, then conditionally lower the labels of the up-to-2h touched
+//! vertices to `z`. Because labels only ever decrease and `L[x] <= x` is
+//! an invariant, pointer chains strictly descend — chases terminate and
+//! racy (asynchronous) execution stays correct, exactly the argument the
+//! paper makes for its Chapel implementation.
+//!
+//! Every §III-B optimization is an independent switch on [`Contour`]:
+//! update mode (sync = Alg. 1 with the `L_u` array / async = in-place),
+//! write mode (CAS per Eq. 4 / plain racy store), and the early
+//! convergence check of §III-B.2.
+
+use super::{Algorithm, AtomicLabels, RunResult};
+use crate::graph::Csr;
+use crate::par;
+use crate::VId;
+
+/// Operator schedule across iterations (which MM order each iteration
+/// uses). `C-2` is `Fixed(2)`, `C-m` is `Fixed(M_ORDER)`, etc.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// The same MM^h every iteration.
+    Fixed(usize),
+    /// C-11mm: `ones` iterations of MM^1, then MM^m until convergence.
+    OnesThenM { ones: usize, m: usize },
+    /// C-1m1m: alternate MM^1 and MM^m.
+    Alternate { m: usize },
+}
+
+impl Schedule {
+    /// The operator order for iteration `k` (0-based).
+    #[inline]
+    pub fn order_at(self, k: usize) -> usize {
+        match self {
+            Schedule::Fixed(h) => h,
+            Schedule::OnesThenM { ones, m } => {
+                if k < ones {
+                    1
+                } else {
+                    m
+                }
+            }
+            Schedule::Alternate { m } => {
+                if k % 2 == 0 {
+                    1
+                } else {
+                    m
+                }
+            }
+        }
+    }
+}
+
+/// Label-update visibility (§III-B.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// Alg. 1 as written: read L, write L_u, swap at iteration end.
+    Sync,
+    /// In-place updates, immediately visible to other edges/workers.
+    Async,
+}
+
+/// How conditional assignments are written (§III-B.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteMode {
+    /// Plain racy store (lost updates cost iterations, not correctness).
+    Plain,
+    /// Hardware fetch-min — the CAS loop of Eq. 4.
+    Cas,
+}
+
+/// Default "m" for the high-order variants, following §IV-C (m = 1024).
+pub const M_ORDER: usize = 1024;
+
+/// Configurable Contour runner; use the constructors for the paper's
+/// named variants.
+#[derive(Clone, Debug)]
+pub struct Contour {
+    pub schedule: Schedule,
+    pub update: UpdateMode,
+    pub write: WriteMode,
+    /// Early convergence check (§III-B.2).
+    pub early_check: bool,
+    /// Worker threads (0 = [`par::num_threads`]).
+    pub threads: usize,
+    pub max_iters: usize,
+    name: String,
+}
+
+impl Contour {
+    fn new(name: &str, schedule: Schedule, update: UpdateMode, write: WriteMode) -> Self {
+        Self {
+            schedule,
+            update,
+            write,
+            early_check: true,
+            threads: 0,
+            max_iters: 100_000,
+            name: name.to_string(),
+        }
+    }
+
+    /// C-1: one-order operator (≈ label propagation over edges).
+    pub fn c1() -> Self {
+        Self::new("C-1", Schedule::Fixed(1), UpdateMode::Async, WriteMode::Plain)
+    }
+
+    /// C-2: the paper's default (fast convergence, cheap operator).
+    pub fn c2() -> Self {
+        Self::new("C-2", Schedule::Fixed(2), UpdateMode::Async, WriteMode::Plain)
+    }
+
+    /// C-m: high-order operator for large-diameter graphs.
+    pub fn cm() -> Self {
+        Self::cm_order(M_ORDER)
+    }
+
+    pub fn cm_order(m: usize) -> Self {
+        Self::new("C-m", Schedule::Fixed(m), UpdateMode::Async, WriteMode::Plain)
+    }
+
+    /// C-Syn: Alg. 1 verbatim — synchronous, atomic, no early check.
+    pub fn csyn() -> Self {
+        let mut c = Self::new("C-Syn", Schedule::Fixed(2), UpdateMode::Sync, WriteMode::Cas);
+        c.early_check = false;
+        c
+    }
+
+    /// C-11mm: MM^1 warmup then MM^m until convergence.
+    pub fn c11mm() -> Self {
+        Self::new(
+            "C-11mm",
+            Schedule::OnesThenM { ones: 2, m: M_ORDER },
+            UpdateMode::Async,
+            WriteMode::Plain,
+        )
+    }
+
+    /// C-1m1m: alternate MM^1 / MM^m.
+    pub fn c1m1m() -> Self {
+        Self::new("C-1m1m", Schedule::Alternate { m: M_ORDER }, UpdateMode::Async, WriteMode::Plain)
+    }
+
+    /// All six paper variants, in the figures' legend order.
+    pub fn all_variants() -> Vec<Contour> {
+        vec![Self::c1(), Self::c2(), Self::cm(), Self::c11mm(), Self::c1m1m(), Self::csyn()]
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+
+    pub fn with_early_check(mut self, on: bool) -> Self {
+        self.early_check = on;
+        self
+    }
+
+    pub fn with_write(mut self, w: WriteMode) -> Self {
+        self.write = w;
+        self
+    }
+
+    pub fn with_update(mut self, u: UpdateMode) -> Self {
+        self.update = u;
+        self
+    }
+
+    pub fn renamed(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        name.clone_into(&mut self.name);
+        self
+    }
+}
+
+/// Chase up to `h` pointer hops from `x` on `labels`, stopping early at a
+/// fixpoint. Returns `L^h[x]` (with early stop, the same value).
+#[inline]
+fn chase(labels: &AtomicLabels, x: VId, h: usize) -> VId {
+    let mut cur = labels.load(x);
+    for _ in 1..h {
+        let nxt = labels.load(cur);
+        if nxt == cur {
+            break;
+        }
+        cur = nxt;
+    }
+    cur
+}
+
+impl Contour {
+    /// One iteration of MM^h over all edges. `read` is the array gathers
+    /// go through; `write_to` receives conditional assignments (same
+    /// array for async, the `L_u` array for sync). Returns whether any
+    /// label changed.
+    fn edge_pass(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels, h: usize) -> bool {
+        // Fast path for the paper's default operator: MM^2 with plain
+        // stores reuses the labels loaded during the chase instead of
+        // re-walking the chain (≈ halves loads per edge; EXPERIMENTS.md
+        // §Perf step 8). Semantics match Definition 2/3 exactly: the
+        // target set {w, v, L[w], L[v]} is evaluated at operator entry.
+        match (self.write, h) {
+            (WriteMode::Plain, 1) => return self.edge_pass_h1(g, read, write_to),
+            (WriteMode::Plain, 2) => return self.edge_pass_h2(g, read, write_to),
+            (WriteMode::Plain, _) => return self.edge_pass_hm(g, read, write_to, h),
+            _ => {}
+        }
+        let store = |arr: &AtomicLabels, i: VId, z: VId| -> bool {
+            match self.write {
+                WriteMode::Plain => arr.store_min_plain(i, z),
+                WriteMode::Cas => arr.store_min_cas(i, z),
+            }
+        };
+        let src = &g.src;
+        let dst = &g.dst;
+        par::par_map_reduce(
+            g.m(),
+            self.threads,
+            par::DEFAULT_GRAIN,
+            || false,
+            |acc, range| {
+                for e in range {
+                    let (w, v) = (src[e], dst[e]);
+                    let zw = chase(read, w, h);
+                    let zv = chase(read, v, h);
+                    let z = zw.min(zv);
+                    // Conditional vector assignment along both chains:
+                    // targets w, L[w], ..., L^{h-1}[w] and the v side.
+                    for mut x in [w, v] {
+                        for _ in 0..h {
+                            let nxt = read.load(x);
+                            *acc |= store(write_to, x, z);
+                            if nxt == x {
+                                break;
+                            }
+                            x = nxt;
+                        }
+                    }
+                }
+            },
+            |a, b| a || b,
+        )
+    }
+
+    /// MM^1 fast path (plain stores): z = min(L[w], L[v]); lower the
+    /// larger side. 2 loads + at most 1 store per edge.
+    fn edge_pass_h1(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels) -> bool {
+        let src = &g.src;
+        let dst = &g.dst;
+        par::par_map_reduce(
+            g.m(),
+            self.threads,
+            par::DEFAULT_GRAIN,
+            || false,
+            |acc, range| {
+                for e in range {
+                    let (w, v) = (src[e], dst[e]);
+                    let lw = read.load(w);
+                    let lv = read.load(v);
+                    if lw == lv {
+                        continue;
+                    }
+                    *acc |= if lw > lv {
+                        write_to.store_min_plain(w, lv)
+                    } else {
+                        write_to.store_min_plain(v, lw)
+                    };
+                }
+            },
+            |a, b| a || b,
+        )
+    }
+
+    /// MM^2 fast path (plain stores): 4 loads + up to 4 conditional
+    /// stores per edge, everything reused from registers.
+    fn edge_pass_h2(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels) -> bool {
+        let src = &g.src;
+        let dst = &g.dst;
+        par::par_map_reduce(
+            g.m(),
+            self.threads,
+            par::DEFAULT_GRAIN,
+            || false,
+            |acc, range| {
+                for e in range {
+                    let (w, v) = (src[e], dst[e]);
+                    let lw = read.load(w);
+                    let lv = read.load(v);
+                    let llw = read.load(lw);
+                    let llv = read.load(lv);
+                    let z = llw.min(llv);
+                    // Conditional vector assignment over {w, v, L[w], L[v]}
+                    // with the comparison values already in registers.
+                    if lw > z {
+                        write_to.store_min_plain(w, z);
+                        *acc = true;
+                    }
+                    if lv > z {
+                        write_to.store_min_plain(v, z);
+                        *acc = true;
+                    }
+                    if llw > z {
+                        write_to.store_min_plain(lw, z);
+                        *acc = true;
+                    }
+                    if llv > z {
+                        write_to.store_min_plain(lv, z);
+                        *acc = true;
+                    }
+                }
+            },
+            |a, b| a || b,
+        )
+    }
+
+    /// MM^h fast path for h > 2 (plain stores): records the pointer chain
+    /// during the chase so the conditional-assignment phase needs no
+    /// re-loads. Chains longer than the record buffer (rare: the
+    /// compression effect keeps chains near-flat after the first
+    /// iteration) fall back to re-walking with loads.
+    fn edge_pass_hm(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels, h: usize) -> bool {
+        const CAP: usize = 32;
+        let src = &g.src;
+        let dst = &g.dst;
+        par::par_map_reduce(
+            g.m(),
+            self.threads,
+            par::DEFAULT_GRAIN,
+            || false,
+            |acc, range| {
+                // (chain nodes, current label of the last node, length)
+                let mut chains = [[0 as VId; CAP]; 2];
+                let mut vals = [0 as VId; 2];
+                let mut lens = [0usize; 2];
+                for e in range {
+                    let ends = [src[e], dst[e]];
+                    for side in 0..2 {
+                        let mut cur = ends[side];
+                        let chain = &mut chains[side];
+                        let mut len = 0usize;
+                        let val = loop {
+                            if len < CAP {
+                                chain[len] = cur;
+                            }
+                            len += 1;
+                            let nxt = read.load(cur);
+                            if nxt == cur || len >= h {
+                                break nxt;
+                            }
+                            cur = nxt;
+                        };
+                        vals[side] = val;
+                        lens[side] = len;
+                    }
+                    let z = vals[0].min(vals[1]);
+                    for side in 0..2 {
+                        let len = lens[side];
+                        let recorded = len.min(CAP);
+                        if len > CAP {
+                            // Rare long chain: re-walk the unrecorded tail
+                            // *before* the stores below can clobber the
+                            // pointers the walk follows.
+                            let mut x = chains[side][CAP - 1];
+                            for _ in CAP - 1..len {
+                                let nxt = read.load(x);
+                                *acc |= write_to.store_min_plain(x, z);
+                                if nxt == x {
+                                    break;
+                                }
+                                x = nxt;
+                            }
+                        }
+                        for i in 0..recorded {
+                            // Current label of chain[i] is chain[i+1]
+                            // (or the chased value for the last node).
+                            let label =
+                                if i + 1 < recorded { chains[side][i + 1] } else { vals[side] };
+                            if label > z {
+                                write_to.store_min_plain(chains[side][i], z);
+                                *acc = true;
+                            }
+                        }
+                    }
+                }
+            },
+            |a, b| a || b,
+        )
+    }
+
+    /// §III-B.2 early convergence check, evaluated on the *settled* label
+    /// array after a pass: converged iff for every edge (w, v)
+    /// `L[w] == L²[w] && L[v] == L²[v] && L[w] == L[v]`.
+    ///
+    /// (The check must run post-pass: evaluating it per edge while other
+    /// edges still update labels can report convergence for a state that
+    /// a later update then invalidates — under-merging the result.)
+    fn check_converged(&self, g: &Csr, labels: &AtomicLabels) -> bool {
+        let src = &g.src;
+        let dst = &g.dst;
+        par::par_map_reduce(
+            g.m(),
+            self.threads,
+            par::DEFAULT_GRAIN,
+            || true,
+            |acc, range| {
+                if !*acc {
+                    return;
+                }
+                for e in range {
+                    let lw = labels.load(src[e]);
+                    let lv = labels.load(dst[e]);
+                    if lw != lv || labels.load(lw) != lw || labels.load(lv) != lv {
+                        *acc = false;
+                        return;
+                    }
+                }
+            },
+            |a, b| a && b,
+        )
+    }
+}
+
+impl Algorithm for Contour {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        let n = g.n;
+        let labels = AtomicLabels::identity(n);
+        // Sync mode keeps the L_u array of Alg. 1.
+        let shadow = match self.update {
+            UpdateMode::Sync => Some(AtomicLabels::identity(n)),
+            UpdateMode::Async => None,
+        };
+        let mut iters = 0usize;
+        loop {
+            let h = self.schedule.order_at(iters).max(1);
+            iters += 1;
+            let changed = match &shadow {
+                None => self.edge_pass(g, &labels, &labels, h),
+                Some(lu) => {
+                    lu.copy_from(&labels);
+                    let f = self.edge_pass(g, &labels, lu, h);
+                    labels.copy_from(lu); // L = L_u (line 9 of Alg. 1)
+                    f
+                }
+            };
+            let converged = !changed
+                || (self.early_check && changed && self.check_converged(g, &labels));
+            if converged || iters >= self.max_iters {
+                break;
+            }
+        }
+        // The early check can exit with star-compression still pending
+        // (labels point at roots transitively); finish with pointer
+        // jumping so labels are the canonical min-id form.
+        finalize_stars(&labels, self.threads);
+        RunResult { labels: labels.to_vec(), iterations: iters }
+    }
+}
+
+/// Pointer-jump until the forest is stars: L[v] = root(v). O(n log h).
+fn finalize_stars(labels: &AtomicLabels, threads: usize) {
+    loop {
+        let changed = par::par_map_reduce(
+            labels.len(),
+            threads,
+            par::DEFAULT_GRAIN,
+            || false,
+            |acc, range| {
+                for v in range {
+                    let l = labels.load(v as VId);
+                    let ll = labels.load(l);
+                    if ll < l {
+                        labels.store_min_cas(v as VId, ll);
+                        *acc = true;
+                    }
+                }
+            },
+            |a, b| a || b,
+        );
+        if !changed {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{ground_truth, same_partition};
+    use crate::graph::gen;
+
+    fn check_all_variants(g: &crate::graph::Csr) {
+        let want = ground_truth(g);
+        for alg in Contour::all_variants() {
+            let got = alg.run(g);
+            assert!(
+                same_partition(&got, &want),
+                "{} wrong on n={} m={}",
+                alg.name(),
+                g.n,
+                g.m()
+            );
+            // Labels must be exactly min-id form after finalize.
+            assert_eq!(got, want, "{} labels not canonical", alg.name());
+        }
+    }
+
+    #[test]
+    fn variants_on_structured_graphs() {
+        for e in [
+            gen::path(50),
+            gen::cycle(33),
+            gen::star(40),
+            gen::complete(12),
+            gen::grid(7, 9),
+            gen::binary_tree(6),
+            gen::comb(10, 6),
+            gen::component_soup(8, 12, 3),
+        ] {
+            check_all_variants(&e.into_csr());
+        }
+    }
+
+    #[test]
+    fn variants_on_random_graphs() {
+        for seed in 0..5 {
+            check_all_variants(&gen::erdos_renyi(200, 300, seed).into_csr());
+            check_all_variants(&gen::rmat(9, 2000, gen::RmatKind::Graph500, seed).into_csr());
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let g = gen::path(1).into_csr();
+        let r = Contour::c2().run_with_stats(&g);
+        assert_eq!(r.labels, vec![0]);
+        let g = crate::graph::EdgeList::new(4).into_csr();
+        let r = Contour::c2().run_with_stats(&g);
+        assert_eq!(r.labels, vec![0, 1, 2, 3]);
+        assert_eq!(r.iterations, 1);
+    }
+
+    #[test]
+    fn schedule_orders() {
+        assert_eq!(Schedule::Fixed(2).order_at(7), 2);
+        let s = Schedule::OnesThenM { ones: 2, m: 64 };
+        assert_eq!(s.order_at(0), 1);
+        assert_eq!(s.order_at(1), 1);
+        assert_eq!(s.order_at(2), 64);
+        let a = Schedule::Alternate { m: 8 };
+        assert_eq!(a.order_at(0), 1);
+        assert_eq!(a.order_at(1), 8);
+        assert_eq!(a.order_at(2), 1);
+    }
+
+    #[test]
+    fn iteration_counts_ordered_on_long_path() {
+        // §IV-C: iterations(C-m) <= iterations(C-2) <= iterations(C-1).
+        // Shuffled edge order: sequential order lets an async sweep carry
+        // label 0 down the whole path in one pass, hiding the contrast.
+        let g = gen::path(2000).into_csr().shuffled_edges(17);
+        let i1 = Contour::c1().run_with_stats(&g).iterations;
+        let i2 = Contour::c2().run_with_stats(&g).iterations;
+        let im = Contour::cm().run_with_stats(&g).iterations;
+        assert!(im <= i2, "C-m {im} > C-2 {i2}");
+        assert!(i2 <= i1, "C-2 {i2} > C-1 {i1}");
+        assert!(i1 > i2, "C-1 ({i1}) should need more iterations than C-2 ({i2})");
+    }
+
+    #[test]
+    fn theorem1_bound_for_sync_c2() {
+        // Synchronous MM^2 must converge within ceil(log_1.5 d) + 1
+        // iterations (+1 for the final no-change detection pass).
+        for n in [10usize, 100, 500] {
+            let g = gen::path(n).into_csr();
+            let alg = Contour::csyn().with_early_check(false);
+            let r = alg.run_with_stats(&g);
+            let d = (n - 1) as f64;
+            let bound = d.log(1.5).ceil() as usize + 1;
+            assert!(
+                r.iterations <= bound + 1,
+                "n={n}: {} iters > bound {bound}+1",
+                r.iterations
+            );
+        }
+    }
+
+    #[test]
+    fn async_not_slower_than_sync_in_iterations() {
+        let g = gen::path(1000).into_csr();
+        let sync = Contour::csyn().run_with_stats(&g).iterations;
+        let asy = Contour::c2().run_with_stats(&g).iterations;
+        assert!(asy <= sync + 1, "async {asy} vs sync {sync}");
+    }
+
+    #[test]
+    fn cas_and_plain_both_correct() {
+        let g = gen::rmat(10, 4000, gen::RmatKind::Graph500, 5).into_csr();
+        let want = ground_truth(&g);
+        for w in [WriteMode::Plain, WriteMode::Cas] {
+            let got = Contour::c2().with_write(w).run(&g);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn early_check_does_not_change_result() {
+        let g = gen::delaunay(512, 3).into_csr();
+        let a = Contour::c2().with_early_check(true).run(&g);
+        let b = Contour::c2().with_early_check(false).run(&g);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_thread_matches_parallel() {
+        let g = gen::barabasi_albert(3000, 3, 9).into_csr();
+        let seq = Contour::c2().with_threads(1).run(&g);
+        let par = Contour::c2().with_threads(8).run(&g);
+        assert_eq!(seq, par);
+    }
+}

@@ -1,0 +1,152 @@
+//! FastSV (Zhang, Azad & Hu, SIAM PP 2020) — the state-of-the-art
+//! large-scale parallel baseline the paper compares against in Figs. 1–3.
+//!
+//! Per iteration, with parent array `f` and grandparent `gf = f[f]`:
+//!   1. *stochastic hooking*:  f_next[f[u]] min= gf[v]  (both directions)
+//!   2. *aggressive hooking*:  f_next[u]    min= gf[v]  (both directions)
+//!   3. *shortcutting*:        f_next[u]    min= gf[u]
+//! then `f = f_next`, repeating until no label changes. The explicit
+//! synchronization between phases and the `f = f_next` copy are exactly
+//! the costs §III-C argues Contour's minimum-mapping operator avoids.
+
+use super::{Algorithm, AtomicLabels, RunResult};
+use crate::graph::Csr;
+use crate::par;
+use crate::VId;
+
+#[derive(Clone, Debug, Default)]
+pub struct FastSv {
+    /// Worker threads (0 = default).
+    pub threads: usize,
+}
+
+impl FastSv {
+    pub fn new() -> Self {
+        Self { threads: 0 }
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+}
+
+impl Algorithm for FastSv {
+    fn name(&self) -> String {
+        "FastSV".into()
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        let n = g.n;
+        let t = self.threads;
+        let f = AtomicLabels::identity(n);
+        let fnext = AtomicLabels::identity(n);
+        let mut gf: Vec<VId> = (0..n as VId).collect();
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            // gf = f[f] (parallel gather).
+            {
+                let fr = &f;
+                let slots = par::SyncSlice::new(&mut gf);
+                par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+                    for v in range {
+                        // SAFETY: disjoint ranges.
+                        unsafe { slots.write(v, fr.load(fr.load(v as VId))) };
+                    }
+                });
+            }
+            let gf_ref = &gf;
+            // Phases 1+2 fused over the edge list (all are min-scatters
+            // into f_next; fusing them keeps one edge sweep per iteration).
+            let src = &g.src;
+            let dst = &g.dst;
+            let fr = &f;
+            let fx = &fnext;
+            par::par_for(g.m(), t, par::DEFAULT_GRAIN, |range| {
+                for e in range {
+                    let (u, v) = (src[e], dst[e]);
+                    let gfu = gf_ref[u as usize];
+                    let gfv = gf_ref[v as usize];
+                    // stochastic hooking
+                    fx.store_min_cas(fr.load(u), gfv);
+                    fx.store_min_cas(fr.load(v), gfu);
+                    // aggressive hooking
+                    fx.store_min_cas(u, gfv);
+                    fx.store_min_cas(v, gfu);
+                }
+            });
+            // Phase 3: shortcutting + change detection + f = f_next.
+            let changed = par::par_map_reduce(
+                n,
+                t,
+                par::DEFAULT_GRAIN,
+                || false,
+                |acc, range| {
+                    for v in range {
+                        let v = v as VId;
+                        fx.store_min_cas(v, gf_ref[v as usize]);
+                        let nv = fx.load(v);
+                        if nv != fr.load(v) {
+                            *acc = true;
+                        }
+                    }
+                },
+                |a, b| a || b,
+            );
+            f.copy_from(&fnext);
+            if !changed {
+                break;
+            }
+        }
+        RunResult { labels: f.to_vec(), iterations: iters }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{ground_truth, Algorithm};
+    use crate::graph::gen;
+
+    #[test]
+    fn correct_on_suite() {
+        for e in [
+            gen::path(100),
+            gen::star(64),
+            gen::grid(8, 8),
+            gen::component_soup(6, 20, 1),
+            gen::erdos_renyi(300, 500, 2),
+            gen::rmat(10, 4000, gen::RmatKind::Graph500, 3),
+        ] {
+            let g = e.into_csr();
+            let got = FastSv::new().run(&g);
+            assert_eq!(got, ground_truth(&g));
+        }
+    }
+
+    #[test]
+    fn logarithmic_iterations_on_path() {
+        // SV-family convergence is O(log n) on a path, not O(n).
+        let g = gen::path(4096).into_csr();
+        let r = FastSv::new().run_with_stats(&g);
+        assert!(r.iterations <= 30, "iters {}", r.iterations);
+        assert!(r.iterations >= 5);
+    }
+
+    #[test]
+    fn single_iteration_on_trivial() {
+        let g = crate::graph::EdgeList::new(8).into_csr();
+        let r = FastSv::new().run_with_stats(&g);
+        assert_eq!(r.iterations, 1);
+        assert_eq!(r.labels, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let g = gen::barabasi_albert(2000, 3, 4).into_csr();
+        let a = FastSv::new().with_threads(1).run(&g);
+        let b = FastSv::new().with_threads(8).run(&g);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,188 @@
+//! Incremental connectivity — ConnectIt's second mode ("a framework for
+//! static and *incremental* parallel graph connectivity", §III-C): edges
+//! arrive online, connectivity queries interleave with insertions.
+//!
+//! Backed by the same lock-free Rem-CAS union-find as the static path,
+//! so concurrent `add_edge` calls from the coordinator's workers are
+//! safe, and queries are wait-free root comparisons.
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+use super::unionfind::RemConcurrent;
+use crate::graph::Csr;
+use crate::par;
+use crate::VId;
+
+/// An online connectivity index over a fixed vertex universe.
+pub struct IncrementalCc {
+    parent: Vec<AtomicU32>,
+    edges_added: AtomicUsize,
+}
+
+impl IncrementalCc {
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n as u32).map(AtomicU32::new).collect(),
+            edges_added: AtomicUsize::new(0),
+        }
+    }
+
+    /// Seed from an existing graph (bulk static phase, parallel).
+    pub fn from_graph(g: &Csr, threads: usize) -> Self {
+        let idx = Self::new(g.n);
+        let src = &g.src;
+        let dst = &g.dst;
+        let p = &idx.parent;
+        par::par_for(g.m(), threads, par::DEFAULT_GRAIN, |range| {
+            for e in range {
+                RemConcurrent::unite(p, src[e], dst[e]);
+            }
+        });
+        idx.edges_added.store(g.m(), Ordering::Relaxed);
+        idx
+    }
+
+    pub fn n(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn edges_added(&self) -> usize {
+        self.edges_added.load(Ordering::Relaxed)
+    }
+
+    /// Insert an edge (thread-safe; concurrent calls race benignly).
+    pub fn add_edge(&self, u: VId, v: VId) {
+        assert!((u as usize) < self.n() && (v as usize) < self.n());
+        RemConcurrent::unite(&self.parent, u, v);
+        self.edges_added.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Root of `v` with path halving (wait-free progress under races).
+    pub fn find(&self, mut v: VId) -> VId {
+        loop {
+            let p = self.parent[v as usize].load(Ordering::Relaxed);
+            if p == v {
+                return v;
+            }
+            let gp = self.parent[p as usize].load(Ordering::Relaxed);
+            let _ = self.parent[v as usize].compare_exchange(
+                p,
+                gp,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            v = p;
+        }
+    }
+
+    /// Are `u` and `v` currently connected?
+    pub fn connected(&self, u: VId, v: VId) -> bool {
+        // Standard concurrent-UF query loop: re-check when roots move.
+        loop {
+            let ru = self.find(u);
+            let rv = self.find(v);
+            if ru == rv {
+                return true;
+            }
+            // Roots are stable if still self-parented.
+            if self.parent[ru as usize].load(Ordering::Relaxed) == ru {
+                return false;
+            }
+        }
+    }
+
+    /// Snapshot the current min-id labelling (parallel flatten + relabel).
+    pub fn labels(&self, threads: usize) -> Vec<VId> {
+        let n = self.n();
+        let mut out = vec![0 as VId; n];
+        {
+            let slots = par::SyncSlice::new(&mut out);
+            par::par_for(n, threads, par::DEFAULT_GRAIN, |range| {
+                for v in range {
+                    // SAFETY: disjoint ranges.
+                    unsafe { slots.write(v, self.find(v as VId)) };
+                }
+            });
+        }
+        // Rem links toward smaller ids, so roots are component minima.
+        out
+    }
+
+    pub fn num_components(&self) -> usize {
+        (0..self.n() as VId).filter(|&v| self.find(v) == v).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc;
+    use crate::graph::gen;
+
+    #[test]
+    fn online_insertions_and_queries() {
+        let idx = IncrementalCc::new(6);
+        assert_eq!(idx.num_components(), 6);
+        assert!(!idx.connected(0, 1));
+        idx.add_edge(0, 1);
+        idx.add_edge(2, 3);
+        assert!(idx.connected(0, 1));
+        assert!(!idx.connected(1, 2));
+        idx.add_edge(1, 2);
+        assert!(idx.connected(0, 3));
+        assert_eq!(idx.num_components(), 3); // {0..3}, {4}, {5}
+        assert_eq!(idx.labels(1), vec![0, 0, 0, 0, 4, 5]);
+        assert_eq!(idx.edges_added(), 3);
+    }
+
+    #[test]
+    fn bulk_seed_matches_static_algorithms() {
+        let g = gen::rmat(11, 6_000, gen::RmatKind::Graph500, 3).into_csr();
+        let idx = IncrementalCc::from_graph(&g, 0);
+        assert_eq!(idx.labels(0), cc::ground_truth(&g));
+    }
+
+    #[test]
+    fn incremental_equals_batch_at_every_prefix() {
+        let g = gen::erdos_renyi(300, 450, 7).into_csr();
+        let idx = IncrementalCc::new(g.n);
+        let edges: Vec<_> = g.edges().collect();
+        for (k, &(u, v)) in edges.iter().enumerate() {
+            idx.add_edge(u, v);
+            if k % 90 == 0 || k + 1 == edges.len() {
+                // Rebuild a static baseline from the prefix.
+                let prefix =
+                    crate::graph::EdgeList::from_pairs(g.n, &edges[..=k]).into_csr();
+                assert_eq!(idx.labels(1), cc::ground_truth(&prefix), "prefix {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_insertions() {
+        let n = 10_000usize;
+        let idx = IncrementalCc::new(n);
+        // 8 threads insert interleaved path edges: the final structure is
+        // one path => one component.
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let idx = &idx;
+                s.spawn(move || {
+                    let mut i = t;
+                    while i + 1 < n {
+                        idx.add_edge(i as VId, (i + 1) as VId);
+                        i += 8;
+                    }
+                });
+            }
+        });
+        assert_eq!(idx.num_components(), 1);
+        assert!(idx.connected(0, (n - 1) as VId));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        IncrementalCc::new(3).add_edge(0, 9);
+    }
+}

@@ -1,0 +1,182 @@
+//! Connected-components algorithms.
+//!
+//! Everything the paper evaluates, behind one [`Algorithm`] trait:
+//!
+//! * [`contour`] — the paper's contribution: minimum-mapping Contour with
+//!   the six variants of §III-B.4 (C-1, C-2, C-m, C-Syn, C-11mm, C-1m1m)
+//!   and the §III-B optimizations (async updates, early convergence
+//!   check, atomic-free writes) as independent switches.
+//! * [`fastsv`] — FastSV (Zhang, Azad & Hu 2020), the large-scale
+//!   parallel baseline of Figs. 1–3.
+//! * [`sv`] — classic Shiloach–Vishkin hooking + shortcutting.
+//! * [`unionfind`] — Rem's algorithm with splicing, sequential and
+//!   concurrent (the ConnectIt winner the paper compares against).
+//! * [`bfs`], [`labelprop`] — the traversal-based baselines of §I.
+//! * [`afforest`] — Afforest subgraph sampling (related-work extension).
+//!
+//! Labels converge to the **minimum vertex id** of each component for
+//! every algorithm here, so outputs are directly comparable.
+
+pub mod afforest;
+pub mod bfs;
+pub mod connectit;
+pub mod contour;
+pub mod fastsv;
+pub mod incremental;
+pub mod labelprop;
+pub mod sv;
+pub mod unionfind;
+pub mod verify;
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::graph::Csr;
+use crate::VId;
+
+/// Component labels: `labels[v]` = min vertex id in v's component.
+pub type Labels = Vec<VId>;
+
+/// Outcome of one connectivity run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub labels: Labels,
+    /// Iterations to convergence, counted the way the paper's Fig. 1
+    /// counts (union-find algorithms report 1).
+    pub iterations: usize,
+}
+
+/// A connectivity algorithm. `run_with_stats` is the canonical entry;
+/// `run` is the convenience wrapper.
+pub trait Algorithm {
+    /// Display name matching the paper's figure legends (e.g. "C-2").
+    fn name(&self) -> String;
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult;
+
+    fn run(&self, g: &Csr) -> Labels {
+        self.run_with_stats(g).labels
+    }
+}
+
+/// Number of components = number of self-labelled roots.
+pub fn num_components(labels: &Labels) -> usize {
+    labels.iter().enumerate().filter(|&(i, &l)| i as VId == l).count()
+}
+
+/// Canonicalize an arbitrary component labelling to min-vertex-id form
+/// (used to compare algorithms whose raw labels differ).
+pub fn canonicalize(labels: &Labels) -> Labels {
+    let n = labels.len();
+    let mut min_of = vec![VId::MAX; n];
+    for (v, &l) in labels.iter().enumerate() {
+        let slot = &mut min_of[l as usize];
+        *slot = (*slot).min(v as VId);
+    }
+    labels.iter().map(|&l| min_of[l as usize]).collect()
+}
+
+/// True iff two labellings induce the same partition of vertices.
+pub fn same_partition(a: &Labels, b: &Labels) -> bool {
+    a.len() == b.len() && canonicalize(a) == canonicalize(b)
+}
+
+/// Label array shared across workers. Relaxed atomics: the paper's
+/// Chapel implementation races plain writes on purpose (§III-B.3 —
+/// affects iteration count, never correctness); in Rust the same
+/// "don't-care race" is expressed as relaxed load/store, and the
+/// guaranteed-minimum path as `fetch_min`.
+pub struct AtomicLabels(Vec<AtomicU32>);
+
+impl AtomicLabels {
+    pub fn identity(n: usize) -> Self {
+        Self((0..n as VId).map(AtomicU32::new).collect())
+    }
+
+    pub fn from_labels(labels: &[VId]) -> Self {
+        Self(labels.iter().map(|&l| AtomicU32::new(l)).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    #[inline]
+    pub fn load(&self, i: VId) -> VId {
+        self.0[i as usize].load(Ordering::Relaxed)
+    }
+
+    /// Plain (racy-by-design) conditional store: the paper's
+    /// "eliminating atomic operations" optimization.
+    #[inline]
+    pub fn store_min_plain(&self, i: VId, val: VId) -> bool {
+        if self.load(i) > val {
+            self.0[i as usize].store(val, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Guaranteed minimum via hardware atomic (the CAS loop of Eq. 4).
+    #[inline]
+    pub fn store_min_cas(&self, i: VId, val: VId) -> bool {
+        self.0[i as usize].fetch_min(val, Ordering::Relaxed) > val
+    }
+
+    pub fn copy_from(&self, other: &AtomicLabels) {
+        for (dst, src) in self.0.iter().zip(other.0.iter()) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    pub fn to_vec(&self) -> Labels {
+        self.0.iter().map(|x| x.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Ground truth for tests: sequential BFS labelling (min-id form).
+pub fn ground_truth(g: &Csr) -> Labels {
+    bfs::BfsCc::sequential().run(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalize_remaps_to_min() {
+        // Partition {0,2}, {1,3} labelled by arbitrary representatives.
+        let raw = vec![2, 3, 2, 3];
+        assert_eq!(canonicalize(&raw), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn same_partition_ignores_representative_choice() {
+        let a = vec![0, 0, 2, 2];
+        let b = vec![1, 1, 3, 3];
+        let c = vec![0, 0, 0, 2];
+        assert!(same_partition(&a, &b));
+        assert!(!same_partition(&a, &c));
+        assert!(!same_partition(&a, &vec![0, 0, 2]));
+    }
+
+    #[test]
+    fn num_components_counts_roots() {
+        assert_eq!(num_components(&vec![0, 0, 2, 2, 4]), 3);
+        assert_eq!(num_components(&vec![0, 1, 2]), 3);
+    }
+
+    #[test]
+    fn atomic_labels_min_ops() {
+        let l = AtomicLabels::identity(4);
+        assert!(l.store_min_plain(3, 1));
+        assert!(!l.store_min_plain(3, 2)); // already 1
+        assert!(l.store_min_cas(2, 0));
+        assert!(!l.store_min_cas(2, 0));
+        assert_eq!(l.to_vec(), vec![0, 1, 0, 1]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Classic Shiloach–Vishkin (1982): the seminal hooking + shortcutting
+//! algorithm FastSV descends from (§V). Kept as a second baseline and as
+//! the reference point for the ablation benches.
+
+use super::{Algorithm, AtomicLabels, RunResult};
+use crate::graph::Csr;
+use crate::par;
+
+#[derive(Clone, Debug, Default)]
+pub struct ShiloachVishkin {
+    pub threads: usize,
+}
+
+impl ShiloachVishkin {
+    pub fn new() -> Self {
+        Self { threads: 0 }
+    }
+}
+
+impl Algorithm for ShiloachVishkin {
+    fn name(&self) -> String {
+        "SV".into()
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        let n = g.n;
+        let t = self.threads;
+        let p = AtomicLabels::identity(n);
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            // Hook: for each edge (u, v), roots hook onto smaller labels.
+            let src = &g.src;
+            let dst = &g.dst;
+            let pr = &p;
+            let hooked = par::par_map_reduce(
+                g.m(),
+                t,
+                par::DEFAULT_GRAIN,
+                || false,
+                |acc, range| {
+                    for e in range {
+                        let (u, v) = (src[e], dst[e]);
+                        let pu = pr.load(u);
+                        let pv = pr.load(v);
+                        // Hook the root of the larger onto the smaller.
+                        if pu < pv && pv == pr.load(pv) {
+                            *acc |= pr.store_min_cas(pv, pu);
+                        } else if pv < pu && pu == pr.load(pu) {
+                            *acc |= pr.store_min_cas(pu, pv);
+                        }
+                    }
+                },
+                |a, b| a || b,
+            );
+            // Shortcut: p[v] = p[p[v]] until the forest is stars.
+            let mut shortcutted = true;
+            while shortcutted {
+                shortcutted = par::par_map_reduce(
+                    n,
+                    t,
+                    par::DEFAULT_GRAIN,
+                    || false,
+                    |acc, range| {
+                        for v in range {
+                            let v = v as crate::VId;
+                            let pv = pr.load(v);
+                            let ppv = pr.load(pv);
+                            if ppv < pv {
+                                *acc |= pr.store_min_cas(v, ppv);
+                            }
+                        }
+                    },
+                    |a, b| a || b,
+                );
+            }
+            if !hooked {
+                break;
+            }
+        }
+        RunResult { labels: p.to_vec(), iterations: iters }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{ground_truth, Algorithm};
+    use crate::graph::gen;
+
+    #[test]
+    fn correct_on_suite() {
+        for e in [
+            gen::path(200),
+            gen::cycle(99),
+            gen::component_soup(5, 25, 7),
+            gen::rmat(10, 3000, gen::RmatKind::Web, 1),
+            gen::delaunay(400, 2),
+        ] {
+            let g = e.into_csr();
+            assert_eq!(ShiloachVishkin::new().run(&g), ground_truth(&g));
+        }
+    }
+
+    #[test]
+    fn logarithmic_iterations() {
+        let g = gen::path(4096).into_csr();
+        let r = ShiloachVishkin::new().run_with_stats(&g);
+        assert!(r.iterations <= 32, "iters {}", r.iterations);
+    }
+}

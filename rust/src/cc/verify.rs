@@ -1,0 +1,126 @@
+//! Result verification: every algorithm's output is checked against a
+//! BFS ground truth and against the structural invariants a min-id
+//! component labelling must satisfy.
+
+use super::{ground_truth, Labels};
+use crate::graph::Csr;
+use crate::VId;
+
+/// A violation found by [`check_labels`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// `labels.len() != g.n`.
+    WrongLength { expected: usize, got: usize },
+    /// `labels[v] > v` for the component minimum, or label out of range.
+    NotMinId { vertex: VId, label: VId },
+    /// A label that is not itself a root (`labels[l] != l`).
+    DanglingLabel { vertex: VId, label: VId },
+    /// Edge endpoints with different labels.
+    EdgeSplit { u: VId, v: VId, lu: VId, lv: VId },
+    /// Two vertices labelled together that BFS says are separate.
+    OverMerged { u: VId, v: VId },
+}
+
+/// Full structural + ground-truth check. Returns all violations (empty =
+/// valid). O(n + m) plus one BFS sweep.
+pub fn check_labels(g: &Csr, labels: &Labels) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if labels.len() != g.n {
+        out.push(Violation::WrongLength { expected: g.n, got: labels.len() });
+        return out;
+    }
+    for (v, &l) in labels.iter().enumerate() {
+        if (l as usize) >= g.n {
+            out.push(Violation::NotMinId { vertex: v as VId, label: l });
+        } else if labels[l as usize] != l {
+            out.push(Violation::DanglingLabel { vertex: v as VId, label: l });
+        }
+        if out.len() > 16 {
+            return out; // enough evidence
+        }
+    }
+    // No edge may cross label classes (under-merge check).
+    for (u, v) in g.edges() {
+        if labels[u as usize] != labels[v as usize] {
+            out.push(Violation::EdgeSplit {
+                u,
+                v,
+                lu: labels[u as usize],
+                lv: labels[v as usize],
+            });
+            if out.len() > 16 {
+                return out;
+            }
+        }
+    }
+    // Exact match with BFS ground truth (catches over-merge + non-min ids).
+    let truth = ground_truth(g);
+    for v in 0..g.n {
+        if labels[v] != truth[v] {
+            // Distinguish over-merge from a non-canonical representative.
+            if truth[labels[v] as usize] != truth[v] {
+                out.push(Violation::OverMerged { u: v as VId, v: labels[v] });
+            } else {
+                out.push(Violation::NotMinId { vertex: v as VId, label: labels[v] });
+            }
+            if out.len() > 16 {
+                return out;
+            }
+        }
+    }
+    out
+}
+
+/// Panic with diagnostics unless `labels` is a valid min-id labelling.
+pub fn assert_valid(g: &Csr, labels: &Labels, who: &str) {
+    let violations = check_labels(g, labels);
+    assert!(
+        violations.is_empty(),
+        "{who}: invalid labelling, first violations: {:?}",
+        &violations[..violations.len().min(5)]
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn accepts_ground_truth() {
+        let g = gen::component_soup(5, 20, 1).into_csr();
+        let labels = ground_truth(&g);
+        assert!(check_labels(&g, &labels).is_empty());
+    }
+
+    #[test]
+    fn catches_wrong_length() {
+        let g = gen::path(5).into_csr();
+        let v = check_labels(&g, &vec![0, 0, 0]);
+        assert!(matches!(v[0], Violation::WrongLength { .. }));
+    }
+
+    #[test]
+    fn catches_under_merge() {
+        let g = gen::path(4).into_csr();
+        // Splitting the path in half leaves edge (1,2) crossing classes.
+        let v = check_labels(&g, &vec![0, 0, 2, 2]);
+        assert!(v.iter().any(|x| matches!(x, Violation::EdgeSplit { u: 1, v: 2, .. })));
+    }
+
+    #[test]
+    fn catches_over_merge() {
+        // Two separate edges labelled as one component.
+        let g = crate::graph::EdgeList::from_pairs(4, &[(0, 1), (2, 3)]).into_csr();
+        let v = check_labels(&g, &vec![0, 0, 0, 0]);
+        assert!(v.iter().any(|x| matches!(x, Violation::OverMerged { .. })), "{v:?}");
+    }
+
+    #[test]
+    fn catches_dangling_label() {
+        let g = gen::path(3).into_csr();
+        // 2 -> 1 but 1 -> 0: label 1 is not a root.
+        let v = check_labels(&g, &vec![0, 0, 1]);
+        assert!(v.iter().any(|x| matches!(x, Violation::DanglingLabel { .. })));
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal CLI argument parser (the image has no `clap`): positional
+//! subcommand plus `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (first is usually the subcommand).
+    pub positional: Vec<String>,
+    /// `--key value` pairs; bare `--flag` maps to "true".
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (e.g. `std::env::args().skip(1)`).
+    /// A `--key` followed by another `--...` or end-of-args is a boolean
+    /// flag; otherwise it consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| n.starts_with("--")).unwrap_or(true) {
+                    out.options.insert(key.to_string(), "true".to_string());
+                } else {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("bench fig1 --threads 8 --out results");
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert_eq!(a.positional, vec!["bench", "fig1"]);
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
+        assert_eq!(a.get_or("out", "x"), "results");
+    }
+
+    #[test]
+    fn boolean_flags_and_equals() {
+        let a = parse("run --quick --alg=C-2 --verbose --n 10");
+        assert!(a.flag("quick"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("alg"), Some("C-2"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 10);
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+        let a = parse("x --n ten");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+}

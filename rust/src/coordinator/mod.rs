@@ -1,0 +1,311 @@
+//! L3 coordination: the engine abstraction over native and PJRT
+//! execution, the §IV-E operator-selection policy, an algorithm factory,
+//! and a job coordinator that drives batches of connectivity requests
+//! across a worker pool with metrics.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::cc::{self, contour::Contour, Algorithm, RunResult};
+use crate::graph::{stats::GraphStats, Csr};
+use crate::runtime::{PaddedGraph, Runtime};
+use crate::util::Timer;
+
+// ---------------------------------------------------------------- PJRT engine
+
+/// How the PJRT engine drives iterations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PjrtMode {
+    /// One `contour_iter` dispatch per iteration; the Rust coordinator
+    /// owns the convergence loop (inspectable, schedulable).
+    PerIteration,
+    /// One `contour_run` dispatch: the while-loop runs on-device and only
+    /// the converged labels come back (minimal dispatch overhead).
+    FusedRun,
+}
+
+/// Contour executed through the AOT HLO artifacts (L2+L1) on the PJRT CPU
+/// client. Demonstrates the accelerator formulation; the native engine
+/// remains the CPU performance path.
+pub struct PjrtContour<'rt> {
+    rt: &'rt Runtime,
+    pub hops: usize,
+    pub mode: PjrtMode,
+    pub max_iters: usize,
+}
+
+impl<'rt> PjrtContour<'rt> {
+    pub fn new(rt: &'rt Runtime, hops: usize, mode: PjrtMode) -> Self {
+        // PerIteration loops in Rust, so it can afford C-1-style iteration
+        // counts; FusedRun is bounded by the artifact's on-device
+        // `max_iters` (64 — ample for h >= 2 by Theorem 1, but C-1 on a
+        // large-diameter graph needs PerIteration).
+        let max_iters = match mode {
+            PjrtMode::PerIteration => 100_000,
+            PjrtMode::FusedRun => 64,
+        };
+        Self { rt, hops, mode, max_iters }
+    }
+}
+
+impl Algorithm for PjrtContour<'_> {
+    fn name(&self) -> String {
+        match self.mode {
+            PjrtMode::PerIteration => format!("PJRT-C{}-step", self.hops),
+            PjrtMode::FusedRun => format!("PJRT-C{}-run", self.hops),
+        }
+    }
+
+    fn run_with_stats(&self, g: &Csr) -> RunResult {
+        self.try_run(g).expect("PJRT execution failed")
+    }
+}
+
+impl PjrtContour<'_> {
+    pub fn try_run(&self, g: &Csr) -> Result<RunResult> {
+        let (iter_name, run_name) =
+            (format!("contour_iter_h{}", self.hops), format!("contour_run_h{}", self.hops));
+        match self.mode {
+            PjrtMode::FusedRun => {
+                let art = self
+                    .rt
+                    .registry()
+                    .select(&run_name, g.n, g.m())
+                    .ok_or_else(|| anyhow!("no bucket fits n={} m={} for {run_name}", g.n, g.m()))?;
+                let p = PaddedGraph::new(g, art.n, art.m)?;
+                let out = self.rt.exec_i32(art, &[p.labels.clone(), p.src.clone(), p.dst.clone()])?;
+                Ok(RunResult { labels: p.unpad(&out[0]), iterations: out[1][0].max(1) as usize })
+            }
+            PjrtMode::PerIteration => {
+                let art = self
+                    .rt
+                    .registry()
+                    .select(&iter_name, g.n, g.m())
+                    .ok_or_else(|| anyhow!("no bucket fits n={} m={} for {iter_name}", g.n, g.m()))?;
+                let p = PaddedGraph::new(g, art.n, art.m)?;
+                let mut labels = p.labels.clone();
+                let mut iters = 0usize;
+                loop {
+                    iters += 1;
+                    let out = self.rt.exec_i32(art, &[labels, p.src.clone(), p.dst.clone()])?;
+                    let changed = out[1][0] != 0;
+                    labels = out.into_iter().next().unwrap();
+                    if !changed || iters >= self.max_iters {
+                        break;
+                    }
+                }
+                Ok(RunResult { labels: p.unpad(&labels), iterations: iters })
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- policy
+
+/// §IV-E operator-selection guidance as an executable policy:
+/// small low-diameter graphs → C-1; mixed-diameter component soups →
+/// C-11mm; large diameter → C-m; everything else → C-2 ("a stable and
+/// simple operator that fits well in most cases").
+pub fn auto_select(stats: &GraphStats) -> Contour {
+    let small = stats.m < 200_000;
+    let low_diameter = stats.pseudo_diameter <= 16;
+    let huge_diameter = stats.pseudo_diameter >= 256;
+    // "Mixed": a sizable fraction of vertices lives outside the largest
+    // component (not just isolated-vertex dust), alongside a big one.
+    let mixed = stats.num_components > 8
+        && stats.largest_component * 2 > stats.n
+        && (stats.n - stats.largest_component) * 20 > stats.n;
+    if small && low_diameter {
+        Contour::c1()
+    } else if huge_diameter {
+        Contour::cm()
+    } else if mixed {
+        Contour::c11mm()
+    } else {
+        Contour::c2()
+    }
+}
+
+// ------------------------------------------------------------------ factory
+
+/// Algorithm registry by figure-legend name. `threads` = 0 for default.
+pub fn algorithm_by_name(name: &str, threads: usize) -> Result<Box<dyn Algorithm + Send + Sync>> {
+    let alg: Box<dyn Algorithm + Send + Sync> = match name {
+        "C-1" => Box::new(Contour::c1().with_threads(threads)),
+        "C-2" => Box::new(Contour::c2().with_threads(threads)),
+        "C-m" => Box::new(Contour::cm().with_threads(threads)),
+        "C-11mm" => Box::new(Contour::c11mm().with_threads(threads)),
+        "C-1m1m" => Box::new(Contour::c1m1m().with_threads(threads)),
+        "C-Syn" => Box::new(Contour::csyn().with_threads(threads)),
+        "FastSV" => Box::new(cc::fastsv::FastSv::new().with_threads(threads)),
+        "SV" => Box::new(cc::sv::ShiloachVishkin::new()),
+        "ConnectIt" => Box::new(cc::unionfind::RemConcurrent::new().with_threads(threads)),
+        "Rem-seq" => Box::new(cc::unionfind::RemSequential),
+        "UF-rank" => Box::new(cc::unionfind::RankUnionFind),
+        "BFS-seq" => Box::new(cc::bfs::BfsCc::sequential()),
+        "BFS-par" => Box::new(cc::bfs::BfsCc::parallel()),
+        "LabelProp" => Box::new(cc::labelprop::LabelPropagation::new()),
+        "Afforest" => Box::new(cc::afforest::Afforest { threads, ..Default::default() }),
+        other => return Err(anyhow!("unknown algorithm {other:?} (see `contour list`)")),
+    };
+    Ok(alg)
+}
+
+/// Names accepted by [`algorithm_by_name`], figure-legend order first.
+pub const ALGORITHM_NAMES: &[&str] = &[
+    "C-1", "C-2", "C-m", "C-11mm", "C-1m1m", "C-Syn", "FastSV", "ConnectIt", "SV", "Rem-seq",
+    "UF-rank", "BFS-seq", "BFS-par", "LabelProp", "Afforest",
+];
+
+// -------------------------------------------------------------- coordinator
+
+/// One connectivity request.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: usize,
+    /// Algorithm name ([`ALGORITHM_NAMES`]) or "auto" for the §IV-E policy.
+    pub algorithm: String,
+    pub graph_name: String,
+}
+
+/// Completed job metrics.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub id: usize,
+    pub algorithm: String,
+    pub graph_name: String,
+    pub components: usize,
+    pub iterations: usize,
+    pub millis: f64,
+}
+
+/// Batch coordinator: drains a job queue across `workers` threads, each
+/// job running its algorithm (itself parallel — worker count × algorithm
+/// threads is the caller's budget to split).
+pub struct Coordinator {
+    pub workers: usize,
+    pub algorithm_threads: usize,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self { workers: 1, algorithm_threads: 0 }
+    }
+}
+
+impl Coordinator {
+    /// Run all jobs against graphs resolved by `lookup`. Jobs execute in
+    /// queue order per worker; reports return in completion order.
+    pub fn run_batch<'g, F>(&self, jobs: Vec<Job>, lookup: F) -> Result<Vec<JobReport>>
+    where
+        F: Fn(&str) -> Option<&'g Csr> + Sync,
+    {
+        let queue = Mutex::new(jobs.into_iter().collect::<std::collections::VecDeque<_>>());
+        let reports = Mutex::new(Vec::new());
+        let errors = Mutex::new(Vec::<String>::new());
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.max(1) {
+                s.spawn(|| loop {
+                    let job = match queue.lock().unwrap().pop_front() {
+                        Some(j) => j,
+                        None => break,
+                    };
+                    let Some(g) = lookup(&job.graph_name) else {
+                        errors.lock().unwrap().push(format!("job {}: unknown graph {}", job.id, job.graph_name));
+                        continue;
+                    };
+                    let alg: Box<dyn Algorithm + Send + Sync> = if job.algorithm == "auto" {
+                        Box::new(auto_select(&crate::graph::stats::stats(g))
+                            .with_threads(self.algorithm_threads))
+                    } else {
+                        match algorithm_by_name(&job.algorithm, self.algorithm_threads) {
+                            Ok(a) => a,
+                            Err(e) => {
+                                errors.lock().unwrap().push(format!("job {}: {e}", job.id));
+                                continue;
+                            }
+                        }
+                    };
+                    let t = Timer::start();
+                    let result = alg.run_with_stats(g);
+                    reports.lock().unwrap().push(JobReport {
+                        id: job.id,
+                        algorithm: alg.name(),
+                        graph_name: job.graph_name.clone(),
+                        components: cc::num_components(&result.labels),
+                        iterations: result.iterations,
+                        millis: t.ms(),
+                    });
+                });
+            }
+        });
+        let errors = errors.into_inner().unwrap();
+        if !errors.is_empty() {
+            return Err(anyhow!("coordinator errors: {}", errors.join("; ")));
+        }
+        Ok(reports.into_inner().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, stats};
+
+    #[test]
+    fn policy_follows_paper_guidance() {
+        let small_low = stats::stats(&gen::star(500).into_csr());
+        assert_eq!(auto_select(&small_low).name(), "C-1");
+        let huge_diam = stats::stats(&gen::path(5000).into_csr());
+        assert_eq!(auto_select(&huge_diam).name(), "C-m");
+        let soup = stats::stats(&gen::component_soup(20, 100, 1).into_csr());
+        // soup: many comps but no dominant one -> falls through to C-2/C-m
+        let chosen = auto_select(&soup).name();
+        assert!(chosen == "C-2" || chosen == "C-m" || chosen == "C-11mm", "{chosen}");
+        let mid = stats::stats(&gen::erdos_renyi(300_000, 900_000, 2).into_csr());
+        assert_eq!(auto_select(&mid).name(), "C-2");
+    }
+
+    #[test]
+    fn factory_knows_every_name() {
+        for name in ALGORITHM_NAMES {
+            let alg = algorithm_by_name(name, 1).unwrap();
+            assert_eq!(&alg.name(), name);
+        }
+        assert!(algorithm_by_name("nope", 1).is_err());
+    }
+
+    #[test]
+    fn batch_runs_jobs_and_reports() {
+        let g1 = gen::path(200).into_csr();
+        let g2 = gen::component_soup(3, 50, 2).into_csr();
+        let lookup = |name: &str| match name {
+            "path" => Some(&g1),
+            "soup" => Some(&g2),
+            _ => None,
+        };
+        let jobs = vec![
+            Job { id: 0, algorithm: "C-2".into(), graph_name: "path".into() },
+            Job { id: 1, algorithm: "ConnectIt".into(), graph_name: "soup".into() },
+            Job { id: 2, algorithm: "auto".into(), graph_name: "path".into() },
+        ];
+        let coord = Coordinator { workers: 2, algorithm_threads: 1 };
+        let mut reports = coord.run_batch(jobs, lookup).unwrap();
+        reports.sort_by_key(|r| r.id);
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].components, 1);
+        assert_eq!(reports[1].components, 3);
+        assert!(reports[1].iterations == 1);
+    }
+
+    #[test]
+    fn batch_surfaces_errors() {
+        let g = gen::path(10).into_csr();
+        let jobs = vec![Job { id: 0, algorithm: "bogus".into(), graph_name: "g".into() }];
+        let coord = Coordinator::default();
+        assert!(coord.run_batch(jobs, |_| Some(&g)).is_err());
+        let jobs = vec![Job { id: 0, algorithm: "C-2".into(), graph_name: "missing".into() }];
+        assert!(coord.run_batch(jobs, |_| None).is_err());
+    }
+}

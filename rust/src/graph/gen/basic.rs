@@ -1,0 +1,237 @@
+//! Deterministic structured generators: paths, cycles, stars, grids,
+//! trees and filament ("k-mer") graphs — the extreme-topology cases the
+//! paper's iteration-count analysis (§IV-C) turns on.
+
+use crate::graph::EdgeList;
+use crate::util::Xoshiro256;
+use crate::VId;
+
+/// Path 0-1-2-...-(n-1): diameter n-1, the adversarial case for C-1 and
+/// the construction of Lemmas 1-2.
+pub fn path(n: usize) -> EdgeList {
+    let mut e = EdgeList::with_capacity(n, n.saturating_sub(1));
+    for i in 1..n {
+        e.push((i - 1) as VId, i as VId);
+    }
+    e
+}
+
+/// Cycle of n vertices (diameter ~ n/2).
+pub fn cycle(n: usize) -> EdgeList {
+    let mut e = path(n);
+    if n > 2 {
+        e.push((n - 1) as VId, 0);
+    }
+    e
+}
+
+/// Star with vertex 0 at the center: diameter 2, one iteration for all
+/// Contour variants — the best case.
+pub fn star(n: usize) -> EdgeList {
+    let mut e = EdgeList::with_capacity(n, n.saturating_sub(1));
+    for i in 1..n {
+        e.push(0, i as VId);
+    }
+    e
+}
+
+/// Complete graph K_n (dense small graphs for correctness checks).
+pub fn complete(n: usize) -> EdgeList {
+    let mut e = EdgeList::with_capacity(n, n * (n - 1) / 2);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            e.push(u as VId, v as VId);
+        }
+    }
+    e
+}
+
+/// Perfect binary tree with `depth` levels (n = 2^depth - 1).
+pub fn binary_tree(depth: u32) -> EdgeList {
+    let n = (1usize << depth) - 1;
+    let mut e = EdgeList::with_capacity(n, n - 1);
+    for i in 1..n {
+        e.push(((i - 1) / 2) as VId, i as VId);
+    }
+    e
+}
+
+/// rows x cols 4-neighbor lattice: the high-diameter, constant-degree
+/// regime of `road_usa`.
+pub fn grid(rows: usize, cols: usize) -> EdgeList {
+    let n = rows * cols;
+    let mut e = EdgeList::with_capacity(n, 2 * n);
+    let id = |r: usize, c: usize| (r * cols + c) as VId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                e.push(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows {
+                e.push(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    e
+}
+
+/// Road-network analog: lattice with a fraction of edges removed and a
+/// few random diagonal shortcuts, keeping the giant component and the
+/// large diameter (matches `road_usa`'s m/n ~ 1.2 regime).
+pub fn road(rows: usize, cols: usize, seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256::new(seed);
+    let base = grid(rows, cols);
+    let n = base.n;
+    let mut e = EdgeList::with_capacity(n, base.len());
+    for (u, v) in base.iter() {
+        // Drop 15% of lattice edges (dead ends, rivers).
+        if rng.f64() >= 0.15 {
+            e.push(u, v);
+        }
+    }
+    // Sparse diagonal shortcuts (~2% of n): highway links.
+    let id = |r: usize, c: usize| (r * cols + c) as VId;
+    for _ in 0..n / 50 {
+        let r = rng.below(rows.saturating_sub(1).max(1) as u64) as usize;
+        let c = rng.below(cols.saturating_sub(1).max(1) as u64) as usize;
+        e.push(id(r, c), id(r + 1, (c + 1).min(cols - 1)));
+    }
+    e
+}
+
+/// Comb graph: a spine of length `spine` with a tooth path of length
+/// `tooth` at every spine vertex. High diameter with branching.
+pub fn comb(spine: usize, tooth: usize) -> EdgeList {
+    let n = spine * (tooth + 1);
+    let mut e = EdgeList::with_capacity(n, n);
+    for s in 1..spine {
+        e.push((s - 1) as VId, s as VId);
+    }
+    let mut next = spine;
+    for s in 0..spine {
+        let mut prev = s;
+        for _ in 0..tooth {
+            e.push(prev as VId, next as VId);
+            prev = next;
+            next += 1;
+        }
+    }
+    e
+}
+
+/// k-mer-graph analog (`kmer_A2a`, `kmer_V1r`): a soup of long filaments
+/// (paths) with occasional branches — near-degree-2, huge vertex count,
+/// many components, large component diameters.
+pub fn kmer_chains(chains: usize, chain_len: usize, seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256::new(seed);
+    let n = chains * chain_len;
+    let mut e = EdgeList::with_capacity(n, n);
+    for c in 0..chains {
+        let base = c * chain_len;
+        for i in 1..chain_len {
+            e.push((base + i - 1) as VId, (base + i) as VId);
+        }
+        // 10% of chains get one branch point linking into a random offset
+        // of the same chain (a bubble, as in assembly graphs).
+        if chain_len > 4 && rng.f64() < 0.10 {
+            let a = base + rng.below(chain_len as u64 / 2) as usize;
+            let b = base + chain_len / 2 + rng.below(chain_len as u64 / 2) as usize;
+            e.push(a as VId, b as VId);
+        }
+    }
+    e
+}
+
+/// Union of disjoint pieces with mixed topologies — exercises the
+/// "many components, mixed diameters" case that motivates C-11mm.
+pub fn component_soup(pieces: usize, piece_size: usize, seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256::new(seed);
+    let n = pieces * piece_size;
+    let mut e = EdgeList::with_capacity(n, 2 * n);
+    for p in 0..pieces {
+        let base = (p * piece_size) as VId;
+        match rng.below(3) {
+            0 => {
+                // path piece
+                for i in 1..piece_size {
+                    e.push(base + (i - 1) as VId, base + i as VId);
+                }
+            }
+            1 => {
+                // star piece
+                for i in 1..piece_size {
+                    e.push(base, base + i as VId);
+                }
+            }
+            _ => {
+                // sparse random connected piece: random spanning chain + extras
+                for i in 1..piece_size {
+                    let j = rng.below(i as u64) as usize;
+                    e.push(base + j as VId, base + i as VId);
+                }
+                for _ in 0..piece_size / 2 {
+                    let a = rng.below(piece_size as u64) as VId;
+                    let b = rng.below(piece_size as u64) as VId;
+                    e.push(base + a, base + b);
+                }
+            }
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn basic_shapes() {
+        assert_eq!(path(5).len(), 4);
+        assert_eq!(cycle(5).len(), 5);
+        assert_eq!(star(5).len(), 4);
+        assert_eq!(complete(5).len(), 10);
+        assert_eq!(binary_tree(4).len(), 14);
+        assert_eq!(grid(3, 4).len(), 3 * 3 + 2 * 4);
+    }
+
+    #[test]
+    fn grid_is_connected_with_right_diameter() {
+        let g = grid(5, 7).into_csr();
+        let s = stats::stats(&g);
+        assert_eq!(s.num_components, 1);
+        assert_eq!(s.pseudo_diameter, 4 + 6);
+    }
+
+    #[test]
+    fn comb_structure() {
+        let g = comb(10, 5).into_csr();
+        let s = stats::stats(&g);
+        assert_eq!(g.n, 60);
+        assert_eq!(s.num_components, 1);
+        assert!(s.pseudo_diameter >= 9 + 2 * 5);
+    }
+
+    #[test]
+    fn kmer_chains_are_many_long_components() {
+        let g = kmer_chains(20, 50, 7).into_csr();
+        let s = stats::stats(&g);
+        assert_eq!(s.num_components, 20);
+        assert!(s.pseudo_diameter >= 40);
+    }
+
+    #[test]
+    fn component_soup_has_exactly_pieces_components() {
+        let g = component_soup(13, 17, 3).into_csr();
+        let s = stats::stats(&g);
+        assert_eq!(s.num_components, 13);
+    }
+
+    #[test]
+    fn road_keeps_big_component() {
+        let g = road(40, 40, 11).into_csr();
+        let s = stats::stats(&g);
+        assert!(s.largest_component as f64 > 0.8 * g.n as f64);
+        assert!(s.pseudo_diameter >= 40);
+    }
+}

@@ -1,0 +1,294 @@
+//! Delaunay triangulation graphs (the paper's `delaunay_n10..n24` family,
+//! SuiteSparse DIMACS10 construction: Delaunay triangulation of n random
+//! points in the unit square).
+//!
+//! Implementation: incremental Bowyer–Watson with triangle adjacency,
+//! point location by straight walk, and Morton-order insertion so the
+//! walk from the previous insertion is O(1) amortized — overall
+//! ~O(n log n), comfortably building n = 2^18 in seconds.
+//!
+//! Predicates are plain f64 determinants (not exact arithmetic): inputs
+//! are seeded uniform random points, which keeps configurations far from
+//! degeneracy; a tiny deterministic jitter breaks exact duplicates/ties.
+
+use crate::graph::EdgeList;
+use crate::util::Xoshiro256;
+use crate::VId;
+
+#[derive(Clone, Copy, Debug)]
+struct Tri {
+    /// Vertex ids (CCW). Super-triangle vertices are `n..n+3`.
+    v: [u32; 3],
+    /// `nb[i]` = triangle sharing the edge opposite `v[i]` (-1 = hull).
+    nb: [i32; 3],
+    alive: bool,
+}
+
+#[inline]
+fn orient(a: (f64, f64), b: (f64, f64), c: (f64, f64)) -> f64 {
+    (b.0 - a.0) * (c.1 - a.1) - (b.1 - a.1) * (c.0 - a.0)
+}
+
+/// > 0 iff `d` lies inside the circumcircle of CCW triangle (a, b, c).
+#[inline]
+fn in_circle(a: (f64, f64), b: (f64, f64), c: (f64, f64), d: (f64, f64)) -> f64 {
+    let (adx, ady) = (a.0 - d.0, a.1 - d.1);
+    let (bdx, bdy) = (b.0 - d.0, b.1 - d.1);
+    let (cdx, cdy) = (c.0 - d.0, c.1 - d.1);
+    let ad = adx * adx + ady * ady;
+    let bd = bdx * bdx + bdy * bdy;
+    let cd = cdx * cdx + cdy * cdy;
+    adx * (bdy * cd - bd * cdy) - ady * (bdx * cd - bd * cdx) + ad * (bdx * cdy - bdy * cdx)
+}
+
+/// Interleave 16-bit x/y into a Morton code for insertion locality.
+fn morton(x: f64, y: f64) -> u32 {
+    let spread = |mut v: u32| {
+        v &= 0xFFFF;
+        v = (v | (v << 8)) & 0x00FF00FF;
+        v = (v | (v << 4)) & 0x0F0F0F0F;
+        v = (v | (v << 2)) & 0x33333333;
+        v = (v | (v << 1)) & 0x55555555;
+        v
+    };
+    let xi = (x * 65535.0) as u32;
+    let yi = (y * 65535.0) as u32;
+    spread(xi) | (spread(yi) << 1)
+}
+
+struct Triangulator {
+    pts: Vec<(f64, f64)>,
+    tris: Vec<Tri>,
+    /// Hint triangle for the next locate walk.
+    last: usize,
+}
+
+impl Triangulator {
+    fn new(pts: Vec<(f64, f64)>) -> Self {
+        let n = pts.len();
+        let mut pts = pts;
+        // Super-triangle comfortably containing the unit square.
+        pts.push((-10.0, -10.0));
+        pts.push((30.0, -10.0));
+        pts.push((-10.0, 30.0));
+        let tris = vec![Tri { v: [n as u32, n as u32 + 1, n as u32 + 2], nb: [-1, -1, -1], alive: true }];
+        Self { pts, tris, last: 0 }
+    }
+
+    #[inline]
+    fn p(&self, v: u32) -> (f64, f64) {
+        self.pts[v as usize]
+    }
+
+    /// Straight walk from `self.last` to a triangle containing `q`.
+    fn locate(&self, q: (f64, f64)) -> usize {
+        let mut t = self.last;
+        if !self.tris[t].alive {
+            t = self.tris.iter().rposition(|x| x.alive).expect("no live triangle");
+        }
+        let mut steps = 0usize;
+        'walk: loop {
+            steps += 1;
+            debug_assert!(steps <= self.tris.len() + 16, "locate walk did not terminate");
+            let tri = &self.tris[t];
+            for i in 0..3 {
+                let a = tri.v[(i + 1) % 3];
+                let b = tri.v[(i + 2) % 3];
+                // q strictly outside edge (a,b) => move to that neighbor.
+                if orient(self.p(a), self.p(b), q) < 0.0 {
+                    let nb = tri.nb[i];
+                    debug_assert!(nb >= 0, "walked off the super-triangle hull");
+                    t = nb as usize;
+                    continue 'walk;
+                }
+            }
+            return t;
+        }
+    }
+
+    /// Insert point with id `pid` at `q` (Bowyer–Watson cavity step).
+    fn insert(&mut self, pid: u32, q: (f64, f64)) {
+        let seed = self.locate(q);
+        // Grow the cavity: BFS over triangles whose circumcircle holds q.
+        let mut bad = vec![seed];
+        let mut in_bad = std::collections::HashSet::from([seed]);
+        let mut stack = vec![seed];
+        while let Some(t) = stack.pop() {
+            for i in 0..3 {
+                let nb = self.tris[t].nb[i];
+                if nb < 0 {
+                    continue;
+                }
+                let nb = nb as usize;
+                if in_bad.contains(&nb) {
+                    continue;
+                }
+                let tv = self.tris[nb].v;
+                if in_circle(self.p(tv[0]), self.p(tv[1]), self.p(tv[2]), q) > 0.0 {
+                    in_bad.insert(nb);
+                    bad.push(nb);
+                    stack.push(nb);
+                }
+            }
+        }
+        // Cavity boundary: edges of bad triangles whose neighbor is good.
+        // Each entry: (a, b, outer neighbor) with (a, b) CCW on the cavity.
+        let mut boundary = Vec::new();
+        for &t in &bad {
+            let tri = self.tris[t];
+            for i in 0..3 {
+                let nb = tri.nb[i];
+                if nb < 0 || !in_bad.contains(&(nb as usize)) {
+                    boundary.push((tri.v[(i + 1) % 3], tri.v[(i + 2) % 3], nb));
+                }
+            }
+        }
+        for &t in &bad {
+            self.tris[t].alive = false;
+        }
+        // Fan of new triangles (pid, a, b); link via the shared-edge map.
+        let base = self.tris.len();
+        let mut edge_owner = std::collections::HashMap::new();
+        for (k, &(a, b, outer)) in boundary.iter().enumerate() {
+            let idx = base + k;
+            self.tris.push(Tri { v: [pid, a, b], nb: [outer, -1, -1], alive: true });
+            if outer >= 0 {
+                // Fix the outer triangle's back-pointer: its edge (b, a)
+                // (reversed orientation) now borders the new triangle.
+                let o = &mut self.tris[outer as usize];
+                for i in 0..3 {
+                    if (o.v[(i + 1) % 3], o.v[(i + 2) % 3]) == (b, a) {
+                        o.nb[i] = idx as i32;
+                    }
+                }
+            }
+            // Spoke edges (pid,a) and (b,pid) pair up between new triangles.
+            for (key, slot) in [((pid.min(a), pid.max(a)), 2usize), ((pid.min(b), pid.max(b)), 1usize)] {
+                if let Some((other_idx, other_slot)) = edge_owner.insert(key, (idx, slot)) {
+                    self.tris[idx].nb[slot] = other_idx as i32;
+                    self.tris[other_idx].nb[other_slot] = idx as i32;
+                }
+            }
+        }
+        self.last = base;
+    }
+}
+
+/// Delaunay triangulation of `n` seeded uniform points; the graph's edges
+/// are the triangulation edges (SuiteSparse `delaunay_n*` construction).
+pub fn delaunay(n: usize, seed: u64) -> EdgeList {
+    assert!(n >= 3, "need at least 3 points");
+    let mut rng = Xoshiro256::new(seed);
+    let mut pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    // Deterministic sub-ulp-ish jitter to break duplicates / cocircularity.
+    for p in pts.iter_mut() {
+        p.0 += (rng.f64() - 0.5) * 1e-9;
+        p.1 += (rng.f64() - 0.5) * 1e-9;
+    }
+    // Morton-order insertion for O(1) locate walks.
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by_key(|&i| morton(pts[i as usize].0, pts[i as usize].1));
+
+    let mut tr = Triangulator::new(pts);
+    for &pid in &order {
+        let q = tr.p(pid);
+        tr.insert(pid, q);
+    }
+    // Emit unique edges between real vertices.
+    let mut e = EdgeList::with_capacity(n, 3 * n);
+    for tri in tr.tris.iter().filter(|t| t.alive) {
+        for i in 0..3 {
+            let a = tri.v[i];
+            let b = tri.v[(i + 1) % 3];
+            if a < b && (b as usize) < n {
+                e.push(a as VId, b as VId);
+            }
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn predicates() {
+        // CCW unit right triangle; (0.25, 0.25) inside its circumcircle.
+        let a = (0.0, 0.0);
+        let b = (1.0, 0.0);
+        let c = (0.0, 1.0);
+        assert!(orient(a, b, c) > 0.0);
+        assert!(in_circle(a, b, c, (0.25, 0.25)) > 0.0);
+        assert!(in_circle(a, b, c, (5.0, 5.0)) < 0.0);
+    }
+
+    #[test]
+    fn tiny_triangulations() {
+        let g = delaunay(3, 1).into_csr();
+        assert_eq!(g.m(), 3); // a single triangle
+        let g = delaunay(4, 1).into_csr();
+        assert!(g.m() == 5 || g.m() == 6, "4 points: 5 (convex) or 6 edges, got {}", g.m());
+    }
+
+    /// Euler's formula for Delaunay: m = 3n - 3 - h where h = hull size.
+    #[test]
+    fn euler_bound_holds() {
+        for (n, seed) in [(64usize, 2u64), (256, 3), (1024, 4)] {
+            let g = delaunay(n, seed).into_csr();
+            assert!(g.m() <= 3 * n - 6, "n={n}: m={} > 3n-6", g.m());
+            assert!(g.m() >= 2 * n - 3, "n={n}: m={} too small", g.m());
+            let s = stats::stats(&g);
+            assert_eq!(s.num_components, 1, "triangulation must be connected");
+        }
+    }
+
+    /// Empty-circumcircle property, checked exhaustively on a small case.
+    #[test]
+    fn delaunay_property_small() {
+        let n = 48;
+        let seed = 9;
+        let mut rng = Xoshiro256::new(seed);
+        let mut pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+        for p in pts.iter_mut() {
+            p.0 += (rng.f64() - 0.5) * 1e-9;
+            p.1 += (rng.f64() - 0.5) * 1e-9;
+        }
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by_key(|&i| morton(pts[i as usize].0, pts[i as usize].1));
+        let mut tr = Triangulator::new(pts.clone());
+        for &pid in &order {
+            let q = tr.p(pid);
+            tr.insert(pid, q);
+        }
+        for tri in tr.tris.iter().filter(|t| t.alive) {
+            if tri.v.iter().any(|&v| v as usize >= n) {
+                continue; // super-triangle fans are not Delaunay-constrained
+            }
+            let (a, b, c) = (tr.p(tri.v[0]), tr.p(tri.v[1]), tr.p(tri.v[2]));
+            for (i, &p) in pts.iter().enumerate() {
+                if tri.v.contains(&(i as u32)) {
+                    continue;
+                }
+                assert!(
+                    in_circle(a, b, c, p) <= 1e-12,
+                    "point {i} inside circumcircle of {:?}",
+                    tri.v
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_mid_scale() {
+        let a = delaunay(4096, 7).into_csr();
+        let b = delaunay(4096, 7).into_csr();
+        assert_eq!(a.src, b.src);
+        let s = stats::stats(&a);
+        assert_eq!(s.num_components, 1);
+        // Planar: average degree < 6.
+        assert!(s.avg_degree < 6.0);
+        assert!(s.pseudo_diameter > 20, "delaunay diameter grows like sqrt(n)");
+    }
+}

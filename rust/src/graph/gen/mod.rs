@@ -1,0 +1,20 @@
+//! Synthetic graph generators.
+//!
+//! The sandbox has no network access to SNAP/SuiteSparse, so the paper's
+//! Table I corpus is substituted with seeded synthetic analogs (DESIGN.md
+//! §5): power-law families (RMAT / Barabási–Albert) for the social and
+//! collaboration networks, lattice road graphs for `road_usa`, chain
+//! "k-mer" filaments for `kmer_*`, and true Delaunay triangulations for
+//! the `delaunay_n*` family.
+
+mod basic;
+mod delaunay;
+mod random;
+mod rmat;
+
+pub use basic::{
+    binary_tree, comb, complete, component_soup, cycle, grid, kmer_chains, path, road, star,
+};
+pub use delaunay::delaunay;
+pub use random::{barabasi_albert, erdos_renyi};
+pub use rmat::{kronecker, rmat, RmatKind};

@@ -1,0 +1,96 @@
+//! Random graph families: Erdős–Rényi G(n, m) and Barabási–Albert
+//! preferential attachment (the power-law degree regime of the paper's
+//! social / collaboration graphs).
+
+use crate::graph::EdgeList;
+use crate::util::Xoshiro256;
+use crate::VId;
+
+/// G(n, m): m edges sampled uniformly (with replacement; dedup happens in
+/// `into_csr`). Low diameter once m ≳ n ln n / 2.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256::new(seed);
+    let mut e = EdgeList::with_capacity(n, m);
+    for _ in 0..m {
+        let u = rng.below(n as u64) as VId;
+        let v = rng.below(n as u64) as VId;
+        e.push(u, v);
+    }
+    e
+}
+
+/// Barabási–Albert: each new vertex attaches `k` edges preferentially to
+/// high-degree targets (implemented with the repeated-endpoint trick: the
+/// target list holds every edge endpoint, so sampling from it is
+/// degree-proportional). Produces the power-law degree distribution of
+/// real-world social graphs.
+pub fn barabasi_albert(n: usize, k: usize, seed: u64) -> EdgeList {
+    assert!(k >= 1, "attachment degree must be >= 1");
+    let n0 = (k + 1).min(n);
+    let mut rng = Xoshiro256::new(seed);
+    let mut e = EdgeList::with_capacity(n, n * k);
+    // Seed clique among the first n0 vertices.
+    let mut endpoints: Vec<VId> = Vec::with_capacity(2 * n * k);
+    for u in 0..n0 {
+        for v in (u + 1)..n0 {
+            e.push(u as VId, v as VId);
+            endpoints.push(u as VId);
+            endpoints.push(v as VId);
+        }
+    }
+    for v in n0..n {
+        for _ in 0..k {
+            let t = if endpoints.is_empty() {
+                rng.below(v as u64) as VId
+            } else {
+                endpoints[rng.below(endpoints.len() as u64) as usize]
+            };
+            e.push(v as VId, t);
+            endpoints.push(v as VId);
+            endpoints.push(t);
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn er_sizes() {
+        let g = erdos_renyi(100, 300, 1);
+        assert_eq!(g.n, 100);
+        assert_eq!(g.len(), 300);
+        let c = g.into_csr();
+        assert!(c.m() <= 300);
+        assert!(c.m() > 200); // few dups at this density
+    }
+
+    #[test]
+    fn er_deterministic_per_seed() {
+        let a = erdos_renyi(50, 100, 9).into_csr();
+        let b = erdos_renyi(50, 100, 9).into_csr();
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.dst, b.dst);
+    }
+
+    #[test]
+    fn ba_connected_and_skewed() {
+        let g = barabasi_albert(2000, 3, 5).into_csr();
+        let s = stats::stats(&g);
+        assert_eq!(s.num_components, 1, "BA is connected by construction");
+        // Power-law: max degree far above average.
+        assert!(s.max_degree as f64 > 8.0 * s.avg_degree, "max {} avg {}", s.max_degree, s.avg_degree);
+        // Low diameter.
+        assert!(s.pseudo_diameter <= 12);
+    }
+
+    #[test]
+    fn ba_small_n_edge_cases() {
+        assert_eq!(barabasi_albert(1, 2, 0).len(), 0);
+        let g = barabasi_albert(5, 2, 0).into_csr();
+        assert_eq!(stats::stats(&g).num_components, 1);
+    }
+}

@@ -1,0 +1,121 @@
+//! RMAT / stochastic-Kronecker generator (Chakrabarti et al.; the
+//! Graph500 parameterization). This is the standard stand-in for scale-free
+//! web/social graphs (`soc-*`, `com-*`, `uk_2002` analogs in our suite).
+
+use crate::graph::EdgeList;
+use crate::util::Xoshiro256;
+use crate::VId;
+
+/// Quadrant probability presets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RmatKind {
+    /// Graph500 reference: (a,b,c,d) = (0.57, 0.19, 0.19, 0.05); heavy skew.
+    Graph500,
+    /// Milder skew (0.45, 0.22, 0.22, 0.11) — web-graph-like.
+    Web,
+    /// Uniform (0.25, 0.25, 0.25, 0.25) — degenerates to Erdős–Rényi.
+    Uniform,
+    /// Custom quadrant probabilities (a, b, c); d = 1 - a - b - c.
+    Custom(f64, f64, f64),
+}
+
+impl RmatKind {
+    fn probs(self) -> (f64, f64, f64) {
+        match self {
+            RmatKind::Graph500 => (0.57, 0.19, 0.19),
+            RmatKind::Web => (0.45, 0.22, 0.22),
+            RmatKind::Uniform => (0.25, 0.25, 0.25),
+            RmatKind::Custom(a, b, c) => {
+                assert!(a + b + c <= 1.0 + 1e-9, "quadrant probs exceed 1");
+                (a, b, c)
+            }
+        }
+    }
+}
+
+/// RMAT graph over n = 2^scale vertices with `m` sampled edges. Quadrant
+/// probabilities are perturbed ±10% per level (standard noise to avoid
+/// grid artifacts), seeded deterministically.
+pub fn rmat(scale: u32, m: usize, kind: RmatKind, seed: u64) -> EdgeList {
+    let n = 1usize << scale;
+    let (a, b, c) = kind.probs();
+    let mut rng = Xoshiro256::new(seed);
+    let mut e = EdgeList::with_capacity(n, m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            u <<= 1;
+            v <<= 1;
+            // Per-level ±10% noise, renormalized implicitly by branching.
+            let noise = 0.9 + 0.2 * rng.f64();
+            let (aa, bb, cc) = (a * noise, b * noise, c * noise);
+            let r = rng.f64();
+            if r < aa {
+                // top-left
+            } else if r < aa + bb {
+                v |= 1;
+            } else if r < aa + bb + cc {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        e.push(u as VId, v as VId);
+    }
+    e
+}
+
+/// Stochastic Kronecker with the Graph500 edge factor convention:
+/// n = 2^scale, m = edge_factor * n.
+pub fn kronecker(scale: u32, edge_factor: usize, seed: u64) -> EdgeList {
+    rmat(scale, edge_factor << scale, RmatKind::Graph500, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn rmat_shape() {
+        let g = rmat(10, 8192, RmatKind::Graph500, 42);
+        assert_eq!(g.n, 1024);
+        assert_eq!(g.len(), 8192);
+    }
+
+    #[test]
+    fn rmat_deterministic() {
+        let a = rmat(8, 1000, RmatKind::Web, 7);
+        let b = rmat(8, 1000, RmatKind::Web, 7);
+        assert_eq!(a.src, b.src);
+        let c = rmat(8, 1000, RmatKind::Web, 8);
+        assert_ne!(a.src, c.src);
+    }
+
+    #[test]
+    fn graph500_is_skewed_uniform_is_not() {
+        let skew = rmat(12, 1 << 15, RmatKind::Graph500, 3).into_csr();
+        let flat = rmat(12, 1 << 15, RmatKind::Uniform, 3).into_csr();
+        let ss = stats::stats(&skew);
+        let sf = stats::stats(&flat);
+        assert!(
+            ss.max_degree > 3 * sf.max_degree,
+            "graph500 max {} vs uniform max {}",
+            ss.max_degree,
+            sf.max_degree
+        );
+    }
+
+    #[test]
+    fn kronecker_edge_factor() {
+        let g = kronecker(8, 16, 1);
+        assert_eq!(g.len(), 16 * 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed 1")]
+    fn custom_probs_validated() {
+        rmat(4, 10, RmatKind::Custom(0.6, 0.3, 0.2), 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Graph file I/O: MatrixMarket (`.mtx`, the SuiteSparse format the paper's
+//! Table I graphs ship in) and SNAP whitespace edge lists.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::EdgeList;
+use crate::VId;
+
+/// Parse a MatrixMarket coordinate file as an undirected graph.
+///
+/// Accepts `%%MatrixMarket matrix coordinate <field> <symmetry>`; entry
+/// values (if present) are ignored — only the sparsity pattern matters for
+/// connectivity. Indices are 1-based per the format.
+pub fn read_mtx(path: &Path) -> Result<EdgeList> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    parse_mtx(BufReader::new(f))
+}
+
+pub fn parse_mtx<R: BufRead>(reader: R) -> Result<EdgeList> {
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if l.starts_with("%%MatrixMarket") {
+                    break l;
+                } else if !l.trim().is_empty() {
+                    bail!("missing %%MatrixMarket header");
+                }
+            }
+            None => bail!("empty mtx file"),
+        }
+    };
+    let lower = header.to_ascii_lowercase();
+    if !lower.contains("coordinate") {
+        bail!("only coordinate (sparse) MatrixMarket supported: {header}");
+    }
+    // Dimensions line: first non-comment line.
+    let dims = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if !t.is_empty() && !t.starts_with('%') {
+                    break t.to_string();
+                }
+            }
+            None => bail!("mtx file has no dimensions line"),
+        }
+    };
+    let mut it = dims.split_whitespace();
+    let rows: usize = it.next().context("rows")?.parse()?;
+    let cols: usize = it.next().context("cols")?.parse()?;
+    let nnz: usize = it.next().context("nnz")?.parse()?;
+    let n = rows.max(cols);
+    let mut edges = EdgeList::with_capacity(n, nnz);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut fields = t.split_whitespace();
+        let i: usize = fields.next().context("row index")?.parse()?;
+        let j: usize = fields.next().context("col index")?.parse()?;
+        if i == 0 || j == 0 || i > n || j > n {
+            bail!("mtx index out of range: {i} {j} (n = {n})");
+        }
+        edges.push((i - 1) as VId, (j - 1) as VId);
+    }
+    if edges.len() != nnz {
+        bail!("mtx declared {nnz} entries, found {}", edges.len());
+    }
+    Ok(edges)
+}
+
+/// Write a pattern symmetric MatrixMarket file.
+pub fn write_mtx(path: &Path, g: &EdgeList) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate pattern symmetric")?;
+    writeln!(w, "{} {} {}", g.n, g.n, g.len())?;
+    for (u, v) in g.iter() {
+        writeln!(w, "{} {}", u + 1, v + 1)?;
+    }
+    Ok(())
+}
+
+/// Parse a SNAP-style edge list: `#` comment lines, then one
+/// whitespace-separated vertex pair per line. Vertex ids may be arbitrary
+/// (non-contiguous); they are compacted to `0..n` preserving order of
+/// first appearance.
+pub fn read_snap(path: &Path) -> Result<EdgeList> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    parse_snap(BufReader::new(f))
+}
+
+pub fn parse_snap<R: BufRead>(reader: R) -> Result<EdgeList> {
+    let mut remap = std::collections::HashMap::<u64, VId>::new();
+    let mut pairs = Vec::<(VId, VId)>::new();
+    let intern = |raw: u64, remap: &mut std::collections::HashMap<u64, VId>| -> VId {
+        let next = remap.len() as VId;
+        *remap.entry(raw).or_insert(next)
+    };
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut fields = t.split_whitespace();
+        let a: u64 = fields.next().context("src")?.parse()?;
+        let b: u64 = match fields.next() {
+            Some(x) => x.parse()?,
+            None => bail!("edge line with a single field: {t}"),
+        };
+        let u = intern(a, &mut remap);
+        let v = intern(b, &mut remap);
+        pairs.push((u, v));
+    }
+    Ok(EdgeList::from_pairs(remap.len(), &pairs))
+}
+
+/// Write a SNAP-style edge list.
+pub fn write_snap(path: &Path, g: &EdgeList) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# contour edge list: n={} m={}", g.n, g.len())?;
+    for (u, v) in g.iter() {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+/// Load by extension: `.mtx` => MatrixMarket, `.bin` => the fast binary
+/// cache format, anything else => SNAP.
+pub fn read_auto(path: &Path) -> Result<EdgeList> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => read_mtx(path),
+        Some("bin") => read_bin(path),
+        _ => read_snap(path),
+    }
+}
+
+const BIN_MAGIC: &[u8; 8] = b"CONTOUR1";
+
+/// Fast binary edge-list cache (used by the bench suite so large
+/// generated graphs build once): magic, n: u64, m: u64, src[u32; m],
+/// dst[u32; m], little-endian.
+pub fn write_bin(path: &Path, g: &EdgeList) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.n as u64).to_le_bytes())?;
+    w.write_all(&(g.len() as u64).to_le_bytes())?;
+    for &x in &g.src {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for &x in &g.dst {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_bin(path: &Path) -> Result<EdgeList> {
+    let data = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if data.len() < 24 || &data[..8] != BIN_MAGIC {
+        bail!("{}: not a contour binary graph", path.display());
+    }
+    let n = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(data[16..24].try_into().unwrap()) as usize;
+    if data.len() != 24 + 8 * m {
+        bail!("{}: truncated binary graph", path.display());
+    }
+    let words = |off: usize| -> Vec<VId> {
+        data[off..off + 4 * m]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    let src = words(24);
+    let dst = words(24 + 4 * m);
+    if src.iter().chain(&dst).any(|&x| x as usize >= n) {
+        bail!("{}: vertex id out of range", path.display());
+    }
+    Ok(EdgeList { n, src, dst })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn mtx_round_trip() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n% comment\n4 4 3\n1 2\n2 3\n4 1\n";
+        let g = parse_mtx(Cursor::new(text)).unwrap();
+        assert_eq!(g.n, 4);
+        let pairs: Vec<_> = g.iter().collect();
+        assert_eq!(pairs, vec![(0, 1), (1, 2), (3, 0)]);
+    }
+
+    #[test]
+    fn mtx_with_values_field() {
+        let text = "%%MatrixMarket matrix coordinate real general\n3 3 2\n1 2 0.5\n3 1 1.5\n";
+        let g = parse_mtx(Cursor::new(text)).unwrap();
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn mtx_rejects_bad_header_and_indices() {
+        assert!(parse_mtx(Cursor::new("garbage\n1 1 0\n")).is_err());
+        let bad = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n3 1\n";
+        assert!(parse_mtx(Cursor::new(bad)).is_err());
+        let short = "%%MatrixMarket matrix coordinate pattern general\n2 2 5\n1 2\n";
+        assert!(parse_mtx(Cursor::new(short)).is_err());
+    }
+
+    #[test]
+    fn snap_compacts_ids() {
+        let text = "# a comment\n100 200\n200 300\n100\t300\n";
+        let g = parse_snap(Cursor::new(text)).unwrap();
+        assert_eq!(g.n, 3);
+        let pairs: Vec<_> = g.iter().collect();
+        assert_eq!(pairs, vec![(0, 1), (1, 2), (0, 2)]);
+    }
+
+    #[test]
+    fn snap_rejects_single_field() {
+        assert!(parse_snap(Cursor::new("1\n")).is_err());
+    }
+
+    #[test]
+    fn file_round_trips() {
+        let dir = std::env::temp_dir().join("contour_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = EdgeList::from_pairs(5, &[(0, 1), (2, 3), (3, 4)]);
+
+        let mtx = dir.join("g.mtx");
+        write_mtx(&mtx, &g).unwrap();
+        let back = read_auto(&mtx).unwrap();
+        assert_eq!(back.iter().collect::<Vec<_>>(), g.iter().collect::<Vec<_>>());
+
+        let snap = dir.join("g.txt");
+        write_snap(&snap, &g).unwrap();
+        let back = read_auto(&snap).unwrap();
+        assert_eq!(back.len(), g.len());
+    }
+
+    #[test]
+    fn bin_round_trip_and_validation() {
+        let dir = std::env::temp_dir().join("contour_io_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = EdgeList::from_pairs(1000, &[(0, 999), (5, 7), (999, 0)]);
+        let p = dir.join("g.bin");
+        write_bin(&p, &g).unwrap();
+        let back = read_auto(&p).unwrap();
+        assert_eq!(back.n, g.n);
+        assert_eq!(back.src, g.src);
+        assert_eq!(back.dst, g.dst);
+        // Corrupt: truncate.
+        std::fs::write(dir.join("bad.bin"), b"CONTOUR1short").unwrap();
+        assert!(read_bin(&dir.join("bad.bin")).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Graph substrate: edge lists, CSR adjacency, loaders, generators and
+//! statistics.
+//!
+//! The Contour family and FastSV iterate over an *edge list* (the paper's
+//! `forall e in E`); BFS / Afforest / statistics need CSR adjacency. A
+//! [`Csr`] carries both views over the same deduplicated undirected edge
+//! set.
+
+pub mod gen;
+pub mod io;
+pub mod stats;
+pub mod transform;
+
+use crate::VId;
+
+/// An undirected multigraph as a raw edge list (possibly with duplicates
+/// and self-loops); the mutable construction stage.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    /// Number of vertices (ids are `0..n`).
+    pub n: usize,
+    pub src: Vec<VId>,
+    pub dst: Vec<VId>,
+}
+
+impl EdgeList {
+    pub fn new(n: usize) -> Self {
+        Self { n, src: Vec::new(), dst: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize, m: usize) -> Self {
+        Self { n, src: Vec::with_capacity(m), dst: Vec::with_capacity(m) }
+    }
+
+    pub fn from_pairs(n: usize, pairs: &[(VId, VId)]) -> Self {
+        let mut e = Self::with_capacity(n, pairs.len());
+        for &(u, v) in pairs {
+            e.push(u, v);
+        }
+        e
+    }
+
+    #[inline]
+    pub fn push(&mut self, u: VId, v: VId) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        self.src.push(u);
+        self.dst.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (VId, VId)> + '_ {
+        self.src.iter().copied().zip(self.dst.iter().copied())
+    }
+
+    /// Canonicalize: drop self-loops, orient u < v, sort, dedup.
+    pub fn dedup(mut self) -> Self {
+        let mut pairs: Vec<(VId, VId)> = self
+            .iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        self.src.clear();
+        self.dst.clear();
+        for (u, v) in pairs {
+            self.src.push(u);
+            self.dst.push(v);
+        }
+        self
+    }
+
+    /// Build the CSR (symmetrized) view; implies [`EdgeList::dedup`].
+    pub fn into_csr(self) -> Csr {
+        Csr::from_edges(self.dedup())
+    }
+}
+
+/// Deduplicated undirected graph: edge list + symmetrized CSR adjacency.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    /// Unique undirected edges, oriented `src[i] < dst[i]`, sorted.
+    pub src: Vec<VId>,
+    pub dst: Vec<VId>,
+    /// CSR offsets over the symmetrized adjacency, `offsets.len() == n+1`.
+    pub offsets: Vec<usize>,
+    /// Symmetrized neighbor array, `adj.len() == 2 * m`.
+    pub adj: Vec<VId>,
+}
+
+impl Csr {
+    /// Build from a canonical (deduped) edge list.
+    fn from_edges(e: EdgeList) -> Self {
+        let n = e.n;
+        let m = e.len();
+        let mut degree = vec![0usize; n];
+        for (u, v) in e.iter() {
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut adj = vec![0 as VId; 2 * m];
+        for (u, v) in e.iter() {
+            adj[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        Csr { n, src: e.src, dst: e.dst, offsets, adj }
+    }
+
+    /// Number of unique undirected edges.
+    pub fn m(&self) -> usize {
+        self.src.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VId) -> &[VId] {
+        &self.adj[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (VId, VId)> + '_ {
+        self.src.iter().copied().zip(self.dst.iter().copied())
+    }
+
+    /// Deterministically shuffle the *edge-list view* (adjacency is
+    /// untouched). `into_csr` sorts edges during dedup, which makes
+    /// sequential-id generators (paths, grids) artificially easy for
+    /// asynchronous edge-sweep algorithms; benchmarks shuffle to measure
+    /// the representative case.
+    pub fn shuffled_edges(mut self, seed: u64) -> Self {
+        let mut rng = crate::util::Xoshiro256::new(seed);
+        let mut perm: Vec<usize> = (0..self.src.len()).collect();
+        rng.shuffle(&mut perm);
+        self.src = perm.iter().map(|&i| self.src[i]).collect();
+        self.dst = perm.iter().map(|&i| self.dst[i]).collect();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_isolate() -> Csr {
+        // 0-1, 1-2, 0-2 and isolated vertex 3; duplicates + loop thrown in.
+        EdgeList::from_pairs(4, &[(0, 1), (1, 0), (1, 2), (2, 0), (2, 2), (0, 1)]).into_csr()
+    }
+
+    #[test]
+    fn dedup_canonicalizes() {
+        let g = triangle_plus_isolate();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.m(), 3);
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn csr_adjacency_symmetric() {
+        let g = triangle_plus_isolate();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+        let mut n1: Vec<_> = g.neighbors(1).to_vec();
+        n1.sort_unstable();
+        assert_eq!(n1, vec![0, 2]);
+        // Sum of degrees = 2m.
+        let total: usize = (0..g.n).map(|v| g.degree(v as VId)).sum();
+        assert_eq!(total, 2 * g.m());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = EdgeList::new(5).into_csr();
+        assert_eq!(g.n, 5);
+        assert_eq!(g.m(), 0);
+        assert!(g.neighbors(2).is_empty());
+    }
+
+    #[test]
+    fn self_loops_removed() {
+        let g = EdgeList::from_pairs(3, &[(0, 0), (1, 1), (2, 2)]).into_csr();
+        assert_eq!(g.m(), 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Graph statistics: degree distribution, component census, and the
+//! pseudo-diameter estimate used to check the paper's iteration bounds
+//! (Theorem 1 needs d_max, the largest component diameter).
+
+use std::collections::VecDeque;
+
+use super::Csr;
+use crate::VId;
+
+/// Summary statistics for one graph (regenerates Table I rows + the
+/// topology columns the paper discusses in §IV-A).
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub n: usize,
+    pub m: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    pub num_components: usize,
+    pub largest_component: usize,
+    /// Lower bound on the largest component diameter (double-sweep BFS).
+    pub pseudo_diameter: usize,
+    pub isolated_vertices: usize,
+}
+
+/// BFS from `start` over `g`; returns (visited set as component ids
+/// written into `comp`, farthest vertex, eccentricity estimate).
+fn bfs_far(g: &Csr, start: VId, comp: &mut [u32], id: u32) -> (VId, usize, usize) {
+    let mut q = VecDeque::new();
+    let mut dist = 0usize;
+    let mut far = start;
+    let mut size = 1usize;
+    comp[start as usize] = id;
+    q.push_back((start, 0usize));
+    while let Some((v, d)) = q.pop_front() {
+        if d > dist {
+            dist = d;
+            far = v;
+        }
+        for &w in g.neighbors(v) {
+            if comp[w as usize] != id {
+                comp[w as usize] = id;
+                size += 1;
+                q.push_back((w, d + 1));
+            }
+        }
+    }
+    (far, dist, size)
+}
+
+/// Double-sweep BFS pseudo-diameter of the component containing `start`.
+/// Returns (component size, diameter lower bound). `comp` must carry the
+/// component-id scratch from previous sweeps.
+fn component_pseudo_diameter(g: &Csr, start: VId, comp: &mut [u32], id: u32) -> (usize, usize) {
+    let (far, d1, size) = bfs_far(g, start, comp, id);
+    // Second sweep from the farthest vertex, marking with a fresh id so
+    // the component can be re-traversed without clearing the scratch.
+    let id2 = id ^ 0x8000_0000;
+    let (_, d2, _) = bfs_far(g, far, comp, id2);
+    (size, d1.max(d2))
+}
+
+/// Compute full statistics. O(n + m); the diameter estimate double-sweeps
+/// only the largest few components.
+pub fn stats(g: &Csr) -> GraphStats {
+    let n = g.n;
+    let mut comp = vec![u32::MAX; n];
+    let mut sizes: Vec<(usize, VId)> = Vec::new(); // (size, representative)
+    let mut id = 0u32;
+    for v in 0..n {
+        if comp[v] == u32::MAX {
+            let (_, _, size) = bfs_far(g, v as VId, &mut comp, id);
+            sizes.push((size, v as VId));
+            id += 1;
+        }
+    }
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    // Pseudo-diameter over the largest 3 components (d_max in practice
+    // lives in a big component; tiny ones cannot beat them).
+    let mut pseudo = 0usize;
+    let mut scratch = vec![u32::MAX; n];
+    for (k, &(_, rep)) in sizes.iter().take(3).enumerate() {
+        let (_, d) = component_pseudo_diameter(g, rep, &mut scratch, u32::MAX - 1 - k as u32);
+        pseudo = pseudo.max(d);
+    }
+    let max_degree = (0..n).map(|v| g.degree(v as VId)).max().unwrap_or(0);
+    let isolated = (0..n).filter(|&v| g.degree(v as VId) == 0).count();
+    GraphStats {
+        n,
+        m: g.m(),
+        max_degree,
+        avg_degree: if n == 0 { 0.0 } else { 2.0 * g.m() as f64 / n as f64 },
+        num_components: sizes.len(),
+        largest_component: sizes.first().map(|&(s, _)| s).unwrap_or(0),
+        pseudo_diameter: pseudo,
+        isolated_vertices: isolated,
+    }
+}
+
+/// Log-binned degree histogram: `hist[k]` = #vertices with degree in
+/// `[2^k, 2^{k+1})`; `hist[0]` counts degree 0 and 1 together at index 0/1.
+pub fn degree_histogram(g: &Csr) -> Vec<usize> {
+    let mut hist = vec![0usize; 34];
+    for v in 0..g.n {
+        let d = g.degree(v as VId);
+        let bin = if d == 0 { 0 } else { 64 - (d as u64).leading_zeros() as usize };
+        hist[bin.min(33)] += 1;
+    }
+    while hist.len() > 1 && *hist.last().unwrap() == 0 {
+        hist.pop();
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn path_stats() {
+        let g = gen::path(10).into_csr();
+        let s = stats(&g);
+        assert_eq!(s.n, 10);
+        assert_eq!(s.m, 9);
+        assert_eq!(s.num_components, 1);
+        assert_eq!(s.largest_component, 10);
+        assert_eq!(s.pseudo_diameter, 9);
+        assert_eq!(s.max_degree, 2);
+        assert_eq!(s.isolated_vertices, 0);
+    }
+
+    #[test]
+    fn two_components_and_isolate() {
+        // path(4): 0-1-2-3, separate edge 4-5, isolated 6.
+        let mut e = gen::path(4);
+        e.n = 7;
+        e.push(4, 5);
+        let g = e.into_csr();
+        let s = stats(&g);
+        assert_eq!(s.num_components, 3);
+        assert_eq!(s.largest_component, 4);
+        assert_eq!(s.pseudo_diameter, 3);
+        assert_eq!(s.isolated_vertices, 1);
+    }
+
+    #[test]
+    fn star_diameter_two() {
+        let g = gen::star(50).into_csr();
+        let s = stats(&g);
+        assert_eq!(s.pseudo_diameter, 2);
+        assert_eq!(s.max_degree, 49);
+    }
+
+    #[test]
+    fn cycle_pseudo_diameter_at_least_half() {
+        let g = gen::cycle(32).into_csr();
+        let s = stats(&g);
+        assert!(s.pseudo_diameter >= 16, "pseudo {}", s.pseudo_diameter);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let g = gen::star(9).into_csr(); // center degree 8, leaves degree 1
+        let h = degree_histogram(&g);
+        assert_eq!(h[1], 8); // 8 leaves with degree 1 -> bin [1,2)
+        assert_eq!(h[4], 1); // center degree 8 -> bin [8,16)
+    }
+}

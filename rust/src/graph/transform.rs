@@ -1,0 +1,119 @@
+//! Graph transformations built on connectivity results: component
+//! extraction, induced subgraphs and relabelling — the utilities an
+//! Arachne user chains after `graph_cc` (and what Afforest-style
+//! sampling uses internally).
+
+use std::collections::HashMap;
+
+use super::{Csr, EdgeList};
+use crate::cc::Labels;
+use crate::VId;
+
+/// Sizes of each component, keyed by root label.
+pub fn component_sizes(labels: &Labels) -> HashMap<VId, usize> {
+    let mut sizes = HashMap::new();
+    for &l in labels {
+        *sizes.entry(l).or_insert(0) += 1;
+    }
+    sizes
+}
+
+/// Root label of the largest component (ties broken by smaller label).
+pub fn largest_component(labels: &Labels) -> Option<VId> {
+    component_sizes(labels)
+        .into_iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+        .map(|(l, _)| l)
+}
+
+/// Induced subgraph on the vertices where `keep` is true; vertices are
+/// compacted to `0..k` preserving order. Returns the subgraph and the
+/// old→new id map (new id of dropped vertices = `VId::MAX`).
+pub fn induced_subgraph(g: &Csr, keep: impl Fn(VId) -> bool) -> (EdgeList, Vec<VId>) {
+    let mut remap = vec![VId::MAX; g.n];
+    let mut next = 0 as VId;
+    for v in 0..g.n {
+        if keep(v as VId) {
+            remap[v] = next;
+            next += 1;
+        }
+    }
+    let mut out = EdgeList::new(next as usize);
+    for (u, v) in g.edges() {
+        let (ru, rv) = (remap[u as usize], remap[v as usize]);
+        if ru != VId::MAX && rv != VId::MAX {
+            out.push(ru, rv);
+        }
+    }
+    (out, remap)
+}
+
+/// Extract one component as a standalone graph (compacted ids).
+pub fn extract_component(g: &Csr, labels: &Labels, root: VId) -> EdgeList {
+    induced_subgraph(g, |v| labels[v as usize] == root).0
+}
+
+/// Split a graph into its components, largest first (root, subgraph).
+pub fn split_components(g: &Csr, labels: &Labels) -> Vec<(VId, EdgeList)> {
+    let mut sizes: Vec<(usize, VId)> =
+        component_sizes(labels).into_iter().map(|(l, s)| (s, l)).collect();
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    sizes.into_iter().map(|(_, root)| (root, extract_component(g, labels, root))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{self, contour::Contour, Algorithm};
+    use crate::graph::gen;
+
+    fn soup() -> (Csr, Labels) {
+        let g = gen::component_soup(4, 25, 9).into_csr();
+        let labels = Contour::c2().run(&g);
+        (g, labels)
+    }
+
+    #[test]
+    fn sizes_and_largest() {
+        let (_, labels) = soup();
+        let sizes = component_sizes(&labels);
+        assert_eq!(sizes.len(), 4);
+        assert_eq!(sizes.values().sum::<usize>(), labels.len());
+        let big = largest_component(&labels).unwrap();
+        assert!(sizes[&big] >= *sizes.values().max().unwrap());
+    }
+
+    #[test]
+    fn extract_preserves_structure() {
+        let (g, labels) = soup();
+        let comp = extract_component(&g, &labels, 0);
+        let cg = comp.into_csr();
+        // The extracted piece is connected and has 25 vertices.
+        assert_eq!(cg.n, 25);
+        let sub_labels = Contour::c2().run(&cg);
+        assert_eq!(cc::num_components(&sub_labels), 1);
+    }
+
+    #[test]
+    fn split_covers_everything() {
+        let (g, labels) = soup();
+        let parts = split_components(&g, &labels);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(|(_, e)| e.n).sum::<usize>(), g.n);
+        // Largest first.
+        assert!(parts.windows(2).all(|w| w[0].1.n >= w[1].1.n));
+        // Edge counts add up (no cross-component edges exist).
+        assert_eq!(parts.iter().map(|(_, e)| e.len()).sum::<usize>(), g.m());
+    }
+
+    #[test]
+    fn induced_subgraph_remap() {
+        let g = gen::path(6).into_csr();
+        // Keep even vertices: 0,2,4 -> 0,1,2 with no surviving edges.
+        let (sub, remap) = induced_subgraph(&g, |v| v % 2 == 0);
+        assert_eq!(sub.n, 3);
+        assert_eq!(sub.len(), 0);
+        assert_eq!(remap[2], 1);
+        assert_eq!(remap[3], VId::MAX);
+    }
+}

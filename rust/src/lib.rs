@@ -1,0 +1,43 @@
+//! # contour — Minimum-Mapping Connectivity (Contour algorithm)
+//!
+//! A from-scratch reproduction of *“Contour Algorithm for Connectivity”*
+//! (Du, Alvarado Rodriguez, Li, Dindoost & Bader, 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination layer: graph substrate,
+//!   native parallel implementations of every algorithm the paper
+//!   evaluates (Contour variants C-1/C-2/C-m/C-Syn/C-11mm/C-1m1m, FastSV,
+//!   Shiloach–Vishkin, ConnectIt-style union-find, BFS, label
+//!   propagation, Afforest), the iteration driver, a distributed-memory
+//!   simulator, and the benchmark harness that regenerates every table
+//!   and figure in the paper.
+//! * **L2/L1 (python/, build-time only)** — the same iteration expressed
+//!   as a JAX graph whose per-edge hot spot is a Pallas kernel,
+//!   AOT-lowered to HLO text and executed from Rust through the PJRT CPU
+//!   client ([`runtime`]). Python is never on the request path.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use contour::graph::gen;
+//! use contour::cc::{self, Algorithm};
+//!
+//! let g = gen::rmat(16, 1 << 18, gen::RmatKind::Graph500, 1).into_csr();
+//! let labels = cc::contour::Contour::c2().run(&g);
+//! println!("{} components", cc::num_components(&labels));
+//! ```
+
+pub mod bench;
+pub mod cc;
+pub mod cli;
+pub mod coordinator;
+pub mod distsim;
+pub mod graph;
+pub mod par;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+/// Vertex id. Graphs up to 2^32 vertices; labels are vertex ids, so the
+/// label array is `Vec<u32>` / `Vec<AtomicU32>`.
+pub type VId = u32;

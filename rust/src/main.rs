@@ -1,0 +1,262 @@
+//! `contour` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   run       — one connectivity run on a file or generated graph
+//!   batch     — drive a job batch through the coordinator
+//!   bench     — regenerate the paper's tables/figures (table1, fig1..4,
+//!               distsim, delaunay-scaling, pjrt, all)
+//!   stats     — graph statistics (Table I row for one graph)
+//!   list      — algorithms and artifacts available
+//!
+//! Examples:
+//!   contour run --gen rmat:18:16 --alg C-2
+//!   contour run --graph data/road.mtx --alg auto
+//!   contour bench fig1 --out results
+//!   contour bench all --quick --out results
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use contour::bench::figures;
+use contour::cc::{self, Algorithm};
+use contour::cli::Args;
+use contour::coordinator::{self, algorithm_by_name, Coordinator, Job};
+use contour::graph::{gen, io, stats, Csr, EdgeList};
+use contour::util::Timer;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("run") => cmd_run(args),
+        Some("batch") => cmd_batch(args),
+        Some("bench") => cmd_bench(args),
+        Some("stats") => cmd_stats(args),
+        Some("serve") => cmd_serve(args),
+        Some("list") => cmd_list(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "contour — minimum-mapping connectivity (Contour algorithm reproduction)\n\n\
+         usage:\n\
+         \x20 contour run   [--graph FILE | --gen SPEC] [--alg NAME|auto] [--threads T] [--engine native|pjrt-step|pjrt-run]\n\
+         \x20 contour batch [--graph FILE | --gen SPEC] --algs A,B,C [--workers W]\n\
+         \x20 contour bench TARGET [--quick] [--out DIR] [--threads T]\n\
+         \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt all\n\
+         \x20 contour stats [--graph FILE | --gen SPEC]\n\
+         \x20 contour list\n\n\
+         graph SPECs: path:N cycle:N star:N grid:R:C road:R:C tree:D comb:S:T\n\
+         \x20            kmer:CHAINS:LEN er:N:M ba:N:K rmat:SCALE:EDGEFACTOR delaunay:N soup:P:S"
+    );
+}
+
+/// Build a graph from `--graph FILE` or `--gen SPEC`.
+fn load_graph(args: &Args) -> Result<(String, Csr)> {
+    if let Some(file) = args.get("graph") {
+        let e = io::read_auto(Path::new(file))?;
+        return Ok((file.to_string(), e.into_csr()));
+    }
+    let spec = args.get("gen").unwrap_or("rmat:14:16");
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |i: usize| -> Result<usize> {
+        parts
+            .get(i)
+            .ok_or_else(|| anyhow!("spec {spec:?}: missing field {i}"))?
+            .parse::<usize>()
+            .with_context(|| format!("spec {spec:?} field {i}"))
+    };
+    let seed = 42u64;
+    let e: EdgeList = match parts[0] {
+        "path" => gen::path(num(1)?),
+        "cycle" => gen::cycle(num(1)?),
+        "star" => gen::star(num(1)?),
+        "complete" => gen::complete(num(1)?),
+        "grid" => gen::grid(num(1)?, num(2)?),
+        "road" => gen::road(num(1)?, num(2)?, seed),
+        "tree" => gen::binary_tree(num(1)? as u32),
+        "comb" => gen::comb(num(1)?, num(2)?),
+        "kmer" => gen::kmer_chains(num(1)?, num(2)?, seed),
+        "er" => gen::erdos_renyi(num(1)?, num(2)?, seed),
+        "ba" => gen::barabasi_albert(num(1)?, num(2)?, seed),
+        "rmat" => gen::rmat(num(1)? as u32, num(2)? << num(1)?, gen::RmatKind::Graph500, seed),
+        "delaunay" => gen::delaunay(num(1)?, seed),
+        "soup" => gen::component_soup(num(1)?, num(2)?, seed),
+        other => bail!("unknown generator {other:?} (see `contour` usage)"),
+    };
+    Ok((spec.to_string(), e.into_csr().shuffled_edges(seed)))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", 0)?;
+    let (name, g) = load_graph(args)?;
+    let alg_name = args.get_or("alg", "C-2");
+    let engine = args.get_or("engine", "native");
+    println!("graph {name}: n={} m={}", g.n, g.m());
+    let t = Timer::start();
+    let result = match engine {
+        "native" => {
+            let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
+                let s = stats::stats(&g);
+                let chosen = coordinator::auto_select(&s);
+                println!(
+                    "auto-selected {} (diam~{} comps={})",
+                    chosen.name(),
+                    s.pseudo_diameter,
+                    s.num_components
+                );
+                Box::new(chosen.with_threads(threads))
+            } else {
+                algorithm_by_name(alg_name, threads)?
+            };
+            alg.run_with_stats(&g)
+        }
+        "pjrt-step" | "pjrt-run" => {
+            let rt = contour::runtime::Runtime::from_env()?;
+            let mode = if engine == "pjrt-step" {
+                coordinator::PjrtMode::PerIteration
+            } else {
+                coordinator::PjrtMode::FusedRun
+            };
+            let hops = args.get_usize("hops", 2)?;
+            coordinator::PjrtContour::new(&rt, hops, mode).try_run(&g)?
+        }
+        other => bail!("unknown engine {other:?}"),
+    };
+    let ms = t.ms();
+    println!(
+        "{}: {} components in {} iterations, {:.2} ms ({:.1} Medges/s)",
+        alg_name,
+        cc::num_components(&result.labels),
+        result.iterations,
+        ms,
+        g.m() as f64 * result.iterations as f64 / ms / 1e3
+    );
+    if args.flag("verify") {
+        cc::verify::assert_valid(&g, &result.labels, alg_name);
+        println!("verification: OK");
+    }
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let (name, g) = load_graph(args)?;
+    let algs = args.get_or("algs", "C-2,FastSV,ConnectIt");
+    let jobs: Vec<Job> = algs
+        .split(',')
+        .enumerate()
+        .map(|(id, a)| Job { id, algorithm: a.trim().to_string(), graph_name: name.clone() })
+        .collect();
+    let coord = Coordinator {
+        workers: args.get_usize("workers", 1)?,
+        algorithm_threads: args.get_usize("threads", 0)?,
+    };
+    let mut reports = coord.run_batch(jobs, |_| Some(&g))?;
+    reports.sort_by_key(|r| r.id);
+    println!("{:>10} {:>12} {:>10} {:>12}", "algorithm", "components", "iters", "ms");
+    for r in reports {
+        println!(
+            "{:>10} {:>12} {:>10} {:>12.2}",
+            r.algorithm, r.components, r.iterations, r.millis
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let out = Path::new(args.get_or("out", "results")).to_path_buf();
+    let quick = args.flag("quick");
+    let threads = args.get_usize("threads", 0)?;
+    let target = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let t = Timer::start();
+    let mut run = |name: &str| -> Result<()> {
+        println!("=== {name} ===");
+        let text = match name {
+            "table1" => figures::table1(&out, quick)?,
+            "fig1" => figures::fig1(&out, quick, threads)?,
+            "fig2" => figures::fig2(&out, quick, threads)?,
+            "fig3" => figures::fig3(&out, quick, threads)?,
+            "fig4" => figures::fig4(&out, quick, threads)?,
+            "distsim" => figures::distsim_report(&out, quick)?,
+            "delaunay-scaling" => figures::delaunay_scaling(&out, quick, threads)?,
+            "pjrt" => figures::pjrt_report(&out)?,
+            other => bail!("unknown bench target {other:?}"),
+        };
+        println!("{text}");
+        Ok(())
+    };
+    if target == "all" {
+        for name in
+            ["table1", "fig1", "fig2", "fig3", "fig4", "delaunay-scaling", "distsim", "pjrt"]
+        {
+            run(name)?;
+        }
+    } else {
+        run(target)?;
+    }
+    println!("bench done in {:.1}s; outputs in {}", t.secs(), out.display());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let (name, g) = load_graph(args)?;
+    let s = stats::stats(&g);
+    println!("graph {name}");
+    println!("  vertices          {}", s.n);
+    println!("  edges             {}", s.m);
+    println!("  max degree        {}", s.max_degree);
+    println!("  avg degree        {:.2}", s.avg_degree);
+    println!("  components        {}", s.num_components);
+    println!("  largest component {}", s.largest_component);
+    println!("  pseudo-diameter   {}", s.pseudo_diameter);
+    println!("  isolated vertices {}", s.isolated_vertices);
+    Ok(())
+}
+
+/// The Arkouda/Arachne-style interactive server (§III-A): Python (or any
+/// line-protocol client) sends graph + `graph_cc` requests, the Rust back
+/// end computes. See python/client/contour_client.py.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7021").to_string();
+    let threads = args.get_usize("threads", 0)?;
+    let state = std::sync::Arc::new(contour::server::ServerState::new(threads));
+    let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    println!("contour server on {addr} (Ctrl-C to stop)");
+    contour::server::serve(&addr, state, shutdown)
+}
+
+fn cmd_list() -> Result<()> {
+    println!("algorithms:");
+    for name in coordinator::ALGORITHM_NAMES {
+        println!("  {name}");
+    }
+    match contour::runtime::Runtime::from_env() {
+        Ok(rt) => {
+            println!("\nPJRT platform: {}", rt.platform());
+            println!("artifacts:");
+            for a in rt.registry().iter() {
+                println!("  {} (n={}, m={})", a.name, a.n, a.m);
+            }
+        }
+        Err(e) => println!("\nPJRT runtime unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,229 @@
+//! Parallel-for substrate.
+//!
+//! The image has no `rayon`, so this module provides the crate's parallel
+//! loops on top of `std::thread::scope`: dynamically-scheduled chunked
+//! iteration (the analog of Chapel's `forall` the paper's implementation
+//! uses) plus a map-reduce combinator. Workers pull chunks off an atomic
+//! cursor, so skewed per-edge work (power-law graphs) load-balances.
+//!
+//! Threads are spawned per call; for the edge-loop sizes the algorithms
+//! run on (>= tens of thousands of edges) the spawn cost is noise, and
+//! [`par_for`] degrades to a plain sequential loop below
+//! [`SEQ_CUTOFF`] items so small graphs pay nothing.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Below this many items a parallel loop runs inline on the caller.
+pub const SEQ_CUTOFF: usize = 1 << 14;
+
+/// Default chunk size pulled by each worker per cursor bump: large enough
+/// to amortize the atomic, small enough to balance skew.
+pub const DEFAULT_GRAIN: usize = 1 << 12;
+
+/// Number of worker threads: `CONTOUR_THREADS` env override, else the
+/// machine's available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("CONTOUR_THREADS") {
+        if let Ok(t) = v.parse::<usize>() {
+            return t.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Dynamically-scheduled parallel for over `0..len` with `threads` workers
+/// (0 = [`num_threads`]). `f` receives disjoint subranges covering `0..len`
+/// exactly once.
+pub fn par_for<F>(len: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let threads = if threads == 0 { num_threads() } else { threads };
+    let grain = grain.max(1);
+    if threads <= 1 || len <= SEQ_CUTOFF.min(grain) {
+        if len > 0 {
+            f(0..len);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let worker = |_wid: usize| loop {
+        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+        if start >= len {
+            break;
+        }
+        f(start..(start + grain).min(len));
+    };
+    std::thread::scope(|s| {
+        for w in 1..threads {
+            let worker = &worker;
+            s.spawn(move || worker(w));
+        }
+        worker(0);
+    });
+}
+
+/// Parallel map-reduce: each worker folds its chunks into a local
+/// accumulator (`init`/`fold`), then accumulators are combined on the
+/// caller with `combine`.
+pub fn par_map_reduce<R, I, F, C>(
+    len: usize,
+    threads: usize,
+    grain: usize,
+    init: I,
+    fold: F,
+    combine: C,
+) -> R
+where
+    R: Send,
+    I: Fn() -> R + Sync,
+    F: Fn(&mut R, Range<usize>) + Sync,
+    C: Fn(R, R) -> R,
+{
+    let threads = if threads == 0 { num_threads() } else { threads };
+    let grain = grain.max(1);
+    if threads <= 1 || len <= SEQ_CUTOFF.min(grain) {
+        let mut acc = init();
+        if len > 0 {
+            fold(&mut acc, 0..len);
+        }
+        return acc;
+    }
+    let cursor = AtomicUsize::new(0);
+    let worker = || {
+        let mut acc = init();
+        loop {
+            let start = cursor.fetch_add(grain, Ordering::Relaxed);
+            if start >= len {
+                break;
+            }
+            fold(&mut acc, start..(start + grain).min(len));
+        }
+        acc
+    };
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (1..threads)
+            .map(|_| {
+                let worker = &worker;
+                s.spawn(move || worker())
+            })
+            .collect();
+        let mut acc = worker();
+        for h in handles {
+            acc = combine(acc, h.join().expect("worker panicked"));
+        }
+        acc
+    })
+}
+
+/// Parallel initialization of a `Vec<T>` by index (used for label arrays).
+pub fn par_tabulate<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Sync + Copy + Default,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); len];
+    {
+        let slots = SyncSlice::new(&mut out);
+        par_for(len, threads, DEFAULT_GRAIN, |r| {
+            for i in r {
+                // SAFETY: ranges from par_for are disjoint.
+                unsafe { slots.write(i, f(i)) };
+            }
+        });
+    }
+    out
+}
+
+/// Shared mutable slice wrapper for writes to *disjoint* indices from
+/// multiple workers (the standard trick rayon hides behind chunks_mut).
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `val` at `i`. Caller must guarantee no concurrent access to
+    /// the same index (disjoint ranges).
+    ///
+    /// # Safety
+    /// `i < len` and no other thread reads or writes index `i` concurrently.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, val: T) {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).write(val) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_each_index_once() {
+        let n = 100_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, 4, 1000, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_for_zero_len_and_one_thread() {
+        par_for(0, 4, 16, |_| panic!("must not run"));
+        let mut seen = 0usize;
+        let cell = std::sync::Mutex::new(&mut seen);
+        par_for(10, 1, 16, |r| **cell.lock().unwrap() += r.len());
+        assert_eq!(seen, 10);
+    }
+
+    #[test]
+    fn map_reduce_sums() {
+        let n = 1 << 18;
+        let total = par_map_reduce(
+            n,
+            8,
+            1 << 10,
+            || 0u64,
+            |acc, r| *acc += r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn tabulate_matches_sequential() {
+        let v = par_tabulate(50_000, 4, |i| (i * 3) as u64);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == (i * 3) as u64));
+    }
+
+    #[test]
+    fn num_threads_env_override() {
+        // Note: mutates process env; fine inside the test binary.
+        std::env::set_var("CONTOUR_THREADS", "3");
+        assert_eq!(num_threads(), 3);
+        std::env::remove_var("CONTOUR_THREADS");
+        assert!(num_threads() >= 1);
+    }
+}

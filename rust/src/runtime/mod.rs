@@ -1,0 +1,174 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the
+//! CPU PJRT client from the Rust hot path (Python is never involved).
+//!
+//! Pipeline per artifact: HLO text → `HloModuleProto::from_text_file` →
+//! `XlaComputation` → `PjRtClient::compile` (cached) → `execute`.
+//! Interchange is HLO *text* because jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects in serialized protos.
+
+pub mod registry;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use registry::{Artifact, Registry};
+
+use crate::VId;
+
+/// A PJRT CPU execution context with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory (default
+    /// `artifacts/`, or `$CONTOUR_ARTIFACTS`).
+    pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let registry = Registry::load(artifact_dir)?;
+        Ok(Self { client, registry, compiled: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("CONTOUR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(std::path::Path::new(&dir))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    fn ensure_compiled(&self, art: &Artifact) -> Result<()> {
+        if self.compiled.borrow().contains_key(&art.key()) {
+            return Ok(());
+        }
+        let path_str = art
+            .path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {}", art.path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parse HLO {}: {e:?}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", art.key()))?;
+        self.compiled.borrow_mut().insert(art.key(), exe);
+        Ok(())
+    }
+
+    /// Execute `art` with 1-D i32 inputs; returns the flattened tuple of
+    /// i32 outputs. All our artifacts are (i32[...], ...) -> tuple.
+    pub fn exec_i32(&self, art: &Artifact, inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        self.ensure_compiled(art)?;
+        let compiled = self.compiled.borrow();
+        let exe = compiled.get(&art.key()).expect("just compiled");
+        let literals: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", art.key()))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", art.key()))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Padded problem instance matching an artifact's (n, m) bucket.
+#[derive(Clone, Debug)]
+pub struct PaddedGraph {
+    /// Real vertex count (labels beyond this are padding).
+    pub n_real: usize,
+    pub labels: Vec<i32>,
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+}
+
+impl PaddedGraph {
+    /// Pad `g` to the bucket (n_pad, m_pad): padding vertices are
+    /// self-labelled singletons, padding edges are (0, 0) self-loops —
+    /// both correctness-neutral (python/compile/model.py docstring).
+    pub fn new(g: &crate::graph::Csr, n_pad: usize, m_pad: usize) -> Result<Self> {
+        anyhow::ensure!(g.n <= n_pad, "graph n {} exceeds bucket {}", g.n, n_pad);
+        anyhow::ensure!(g.m() <= m_pad, "graph m {} exceeds bucket {}", g.m(), m_pad);
+        let labels: Vec<i32> = (0..n_pad as i32).collect();
+        let mut src: Vec<i32> = g.src.iter().map(|&x| x as i32).collect();
+        let mut dst: Vec<i32> = g.dst.iter().map(|&x| x as i32).collect();
+        src.resize(m_pad, 0);
+        dst.resize(m_pad, 0);
+        Ok(Self { n_real: g.n, labels, src, dst })
+    }
+
+    /// Strip padding and convert labels back to `VId`.
+    pub fn unpad(&self, labels: &[i32]) -> Vec<VId> {
+        labels[..self.n_real].iter().map(|&x| x as VId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn runtime() -> Option<Runtime> {
+        // Integration-level tests need built artifacts; skip quietly when
+        // `make artifacts` has not run (pure-unit CI).
+        Runtime::from_env().ok()
+    }
+
+    #[test]
+    fn padded_graph_layout() {
+        let g = gen::path(5).into_csr();
+        let p = PaddedGraph::new(&g, 8, 16).unwrap();
+        assert_eq!(p.labels, (0..8).collect::<Vec<i32>>());
+        assert_eq!(&p.src[..4], &[0, 1, 2, 3]);
+        assert_eq!(&p.src[4..], &[0; 12]);
+        assert_eq!(p.unpad(&p.labels), vec![0, 1, 2, 3, 4]);
+        assert!(PaddedGraph::new(&g, 4, 16).is_err());
+        assert!(PaddedGraph::new(&g, 8, 2).is_err());
+    }
+
+    #[test]
+    fn contour_iter_artifact_executes() {
+        let Some(rt) = runtime() else { return };
+        let g = gen::path(100).into_csr();
+        let art = rt.registry().select("contour_iter_h2", g.n, g.m()).expect("bucket");
+        let p = PaddedGraph::new(&g, art.n, art.m).unwrap();
+        let out = rt
+            .exec_i32(art, &[p.labels.clone(), p.src.clone(), p.dst.clone()])
+            .expect("execute");
+        assert_eq!(out.len(), 2, "(labels, changed)");
+        assert_eq!(out[0].len(), art.n);
+        assert_eq!(out[1], vec![1], "first iteration must report change");
+        // Labels must only decrease.
+        assert!(out[0].iter().zip(&p.labels).all(|(&a, &b)| a <= b));
+    }
+
+    #[test]
+    fn contour_run_artifact_converges() {
+        let Some(rt) = runtime() else { return };
+        let g = gen::path(64).into_csr();
+        let art = rt.registry().select("contour_run_h2", g.n, g.m()).expect("bucket");
+        let p = PaddedGraph::new(&g, art.n, art.m).unwrap();
+        let out =
+            rt.exec_i32(art, &[p.labels.clone(), p.src.clone(), p.dst.clone()]).expect("execute");
+        let labels = p.unpad(&out[0]);
+        assert!(labels.iter().all(|&l| l == 0), "path must collapse to 0");
+        let iters = out[1][0];
+        assert!((1..=64).contains(&iters), "iters {iters}");
+    }
+}

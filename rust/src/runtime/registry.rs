@@ -1,0 +1,156 @@
+//! Artifact registry: discovers the AOT-compiled HLO artifacts emitted by
+//! `python/compile/aot.py` and selects size buckets.
+//!
+//! `artifacts/manifest.txt` has one line per artifact:
+//! `<name> n=<n> m=<m> file=<file>` (m=0 for vertex-only artifacts).
+//! HLO modules are shape-specialized, so the runtime picks the smallest
+//! bucket that fits the live graph and pads (see python/compile/model.py
+//! for why padding is correctness-neutral).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT artifact (a size-specialized HLO module on disk).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    /// Logical computation name, e.g. `contour_iter_h2`.
+    pub name: String,
+    /// Vertex-bucket size (label array length).
+    pub n: usize,
+    /// Edge-bucket size (0 for vertex-only computations).
+    pub m: usize,
+    pub path: PathBuf,
+}
+
+impl Artifact {
+    /// Cache key unique per (name, bucket).
+    pub fn key(&self) -> String {
+        format!("{}_n{}_m{}", self.name, self.n, self.m)
+    }
+}
+
+/// Parsed manifest over one artifact directory.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    artifacts: Vec<Artifact>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.txt`. Missing files referenced by the
+    /// manifest are an error (stale manifest).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split_whitespace();
+            let name = fields.next().context("artifact name")?.to_string();
+            let mut n = None;
+            let mut m = None;
+            let mut file = None;
+            for f in fields {
+                match f.split_once('=') {
+                    Some(("n", v)) => n = Some(v.parse::<usize>()?),
+                    Some(("m", v)) => m = Some(v.parse::<usize>()?),
+                    Some(("file", v)) => file = Some(v.to_string()),
+                    _ => bail!("manifest line {}: bad field {f:?}", lineno + 1),
+                }
+            }
+            let (n, m, file) = match (n, m, file) {
+                (Some(n), Some(m), Some(f)) => (n, m, f),
+                _ => bail!("manifest line {}: missing n=/m=/file=", lineno + 1),
+            };
+            let path = dir.join(&file);
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            artifacts.push(Artifact { name, n, m, path });
+        }
+        // Sort so `select` finds the smallest fitting bucket first.
+        artifacts.sort_by_key(|a| (a.name.clone(), a.n, a.m));
+        Ok(Self { artifacts })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.dedup();
+        names
+    }
+
+    /// Smallest bucket of `name` with capacity for `n` vertices and `m`
+    /// edges. `None` if the graph exceeds every bucket.
+    pub fn select(&self, name: &str, n: usize, m: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name == name && a.n >= n && a.m >= m)
+            .min_by_key(|a| (a.n, a.m))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Artifact> {
+        self.artifacts.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_dir(files: &[&str]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("contour_registry_{:p}", &files));
+        std::fs::create_dir_all(&dir).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn parses_and_selects_smallest_fitting() {
+        let dir = fake_dir(&["a_small.hlo.txt", "a_big.hlo.txt"]);
+        let text = "contour_iter_h2 n=1024 m=4096 file=a_small.hlo.txt\n\
+                    contour_iter_h2 n=16384 m=65536 file=a_big.hlo.txt\n";
+        let r = Registry::parse(text, &dir).unwrap();
+        assert_eq!(r.len(), 2);
+        let a = r.select("contour_iter_h2", 1000, 4000).unwrap();
+        assert_eq!(a.n, 1024);
+        let a = r.select("contour_iter_h2", 1000, 5000).unwrap();
+        assert_eq!(a.n, 16384, "edge overflow must bump the bucket");
+        assert!(r.select("contour_iter_h2", 1 << 20, 1).is_none());
+        assert!(r.select("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_missing_file_and_bad_lines() {
+        let dir = fake_dir(&[]);
+        assert!(Registry::parse("x n=1 m=1 file=gone.hlo.txt", &dir).is_err());
+        let dir = fake_dir(&["ok.hlo.txt"]);
+        assert!(Registry::parse("x n=1 file=ok.hlo.txt", &dir).is_err());
+        assert!(Registry::parse("x n=1 m=2 file=ok.hlo.txt junk", &dir).is_err());
+    }
+
+    #[test]
+    fn vertex_only_artifacts() {
+        let dir = fake_dir(&["c.hlo.txt"]);
+        let r = Registry::parse("compress n=1024 m=0 file=c.hlo.txt", &dir).unwrap();
+        assert!(r.select("compress", 512, 0).is_some());
+        assert_eq!(r.names(), vec!["compress"]);
+    }
+}

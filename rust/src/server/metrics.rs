@@ -1,0 +1,77 @@
+//! Server/coordinator metrics: lock-free counters rendered in a
+//! `key=value` line (scrape-friendly, no external deps).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The server's counter set.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    pub requests: Counter,
+    pub errors: Counter,
+    pub graphs_loaded: Counter,
+    pub cc_runs: Counter,
+    /// Total milliseconds spent inside connectivity runs.
+    pub cc_millis: Counter,
+}
+
+impl Metrics {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={}",
+            self.requests.get(),
+            self.errors.get(),
+            self.graphs_loaded.get(),
+            self.cc_runs.get(),
+            self.cc_millis.get()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_count() {
+        let m = Metrics::default();
+        m.requests.inc();
+        m.requests.inc();
+        m.cc_millis.add(120);
+        assert_eq!(m.requests.get(), 2);
+        assert!(m.render().contains("requests=2"));
+        assert!(m.render().contains("cc_millis=120"));
+    }
+
+    #[test]
+    fn counters_are_thread_safe() {
+        let c = Counter::default();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,439 @@
+//! Interactive analytics server — the Arkouda/Arachne integration analog.
+//!
+//! The paper's system is not a batch binary: Arachne extends Arkouda, an
+//! *interactive* server where a Python client sends messages (over ZMQ)
+//! to a parallel Chapel back end that holds graphs in memory and answers
+//! `graph_cc(G)` queries (§III-A). This module reproduces that
+//! architecture with the Rust coordinator as the back end:
+//!
+//! * line-oriented TCP protocol (ZMQ stand-in; one request per line,
+//!   one response per line — trivially scriptable from any language);
+//! * an in-memory session store of named graphs;
+//! * commands: upload/generate/load graphs, run connectivity with any
+//!   algorithm (or the §IV-E auto policy), stats, metrics, listing.
+//!
+//! `python/client/contour_client.py` is the Arkouda-style Python client.
+//! Python remains off the compute path — it only ships messages, exactly
+//! like Arkouda's front end.
+//!
+//! Protocol (request → response, all single lines):
+//!   GEN name SPEC              → OK n m
+//!   UPLOAD name m              → READY, then m lines "u v", → OK n m
+//!   LOAD name PATH             → OK n m
+//!   CC name ALG                → OK components iterations millis
+//!   LABELS name ALG            → OK l0 l1 l2 ... (first 10k labels)
+//!   STATS name                 → OK n m comps diam maxdeg
+//!   LIST                       → OK name:n:m ...
+//!   DROP name                  → OK
+//!   METRICS                    → OK requests=.. cc_runs=.. ...
+//!   PING                       → PONG
+//!   QUIT                       → BYE (closes connection)
+
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cc::{self, Algorithm};
+use crate::coordinator::{algorithm_by_name, auto_select};
+use crate::graph::{gen, io, stats, Csr, EdgeList};
+use crate::util::Timer;
+use crate::VId;
+
+use metrics::Metrics;
+
+/// Shared server state: the graph store plus counters.
+pub struct ServerState {
+    graphs: RwLock<HashMap<String, Arc<Csr>>>,
+    pub metrics: Metrics,
+    /// Worker threads each algorithm run may use (0 = all).
+    pub threads: usize,
+}
+
+impl ServerState {
+    pub fn new(threads: usize) -> Self {
+        Self { graphs: RwLock::new(HashMap::new()), metrics: Metrics::default(), threads }
+    }
+
+    pub fn insert(&self, name: &str, g: Csr) {
+        self.graphs.write().unwrap().insert(name.to_string(), Arc::new(g));
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<Csr>> {
+        self.graphs.read().unwrap().get(name).cloned()
+    }
+
+    pub fn drop_graph(&self, name: &str) -> bool {
+        self.graphs.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn list(&self) -> Vec<(String, usize, usize)> {
+        let mut v: Vec<_> = self
+            .graphs
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), g.n, g.m()))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Parse a generator SPEC (same grammar as the CLI: `rmat:14:16`, ...).
+pub fn graph_from_spec(spec: &str) -> Result<EdgeList> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |i: usize| -> Result<usize> {
+        parts
+            .get(i)
+            .ok_or_else(|| anyhow!("spec {spec:?}: missing field {i}"))?
+            .parse::<usize>()
+            .map_err(|e| anyhow!("spec {spec:?} field {i}: {e}"))
+    };
+    let seed = 42u64;
+    Ok(match parts[0] {
+        "path" => gen::path(num(1)?),
+        "cycle" => gen::cycle(num(1)?),
+        "star" => gen::star(num(1)?),
+        "complete" => gen::complete(num(1)?),
+        "grid" => gen::grid(num(1)?, num(2)?),
+        "road" => gen::road(num(1)?, num(2)?, seed),
+        "tree" => gen::binary_tree(num(1)? as u32),
+        "comb" => gen::comb(num(1)?, num(2)?),
+        "kmer" => gen::kmer_chains(num(1)?, num(2)?, seed),
+        "er" => gen::erdos_renyi(num(1)?, num(2)?, seed),
+        "ba" => gen::barabasi_albert(num(1)?, num(2)?, seed),
+        "rmat" => gen::rmat(num(1)? as u32, num(2)? << num(1)?, gen::RmatKind::Graph500, seed),
+        "delaunay" => gen::delaunay(num(1)?, seed),
+        "soup" => gen::component_soup(num(1)?, num(2)?, seed),
+        other => bail!("unknown generator {other:?}"),
+    })
+}
+
+/// One client session over any line-based transport.
+pub struct Session<'s> {
+    state: &'s ServerState,
+}
+
+impl<'s> Session<'s> {
+    pub fn new(state: &'s ServerState) -> Self {
+        Self { state }
+    }
+
+    /// Handle one request line; `read_extra` supplies follow-up lines for
+    /// multi-line commands (UPLOAD). Returns the response line, or None
+    /// for QUIT.
+    pub fn handle<R: FnMut() -> Result<String>>(
+        &mut self,
+        line: &str,
+        mut read_extra: R,
+    ) -> Option<String> {
+        self.state.metrics.requests.inc();
+        let mut fields = line.split_whitespace();
+        let cmd = fields.next().unwrap_or("").to_ascii_uppercase();
+        let rest: Vec<&str> = fields.collect();
+        let reply = match cmd.as_str() {
+            "PING" => Ok("PONG".to_string()),
+            "QUIT" => return None,
+            "GEN" => self.cmd_gen(&rest),
+            "UPLOAD" => self.cmd_upload(&rest, &mut read_extra),
+            "LOAD" => self.cmd_load(&rest),
+            "CC" => self.cmd_cc(&rest),
+            "LABELS" => self.cmd_labels(&rest),
+            "STATS" => self.cmd_stats(&rest),
+            "LIST" => Ok(format!(
+                "OK {}",
+                self.state
+                    .list()
+                    .iter()
+                    .map(|(n, v, m)| format!("{n}:{v}:{m}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            )),
+            "DROP" => match rest.first() {
+                Some(name) if self.state.drop_graph(name) => Ok("OK".into()),
+                Some(name) => Err(anyhow!("no graph {name:?}")),
+                None => Err(anyhow!("DROP needs a name")),
+            },
+            "METRICS" => Ok(format!("OK {}", self.state.metrics.render())),
+            other => Err(anyhow!("unknown command {other:?}")),
+        };
+        Some(match reply {
+            Ok(r) => r,
+            Err(e) => {
+                self.state.metrics.errors.inc();
+                format!("ERR {e}")
+            }
+        })
+    }
+
+    fn cmd_gen(&self, rest: &[&str]) -> Result<String> {
+        let (name, spec) = match rest {
+            [name, spec] => (*name, *spec),
+            _ => bail!("usage: GEN name SPEC"),
+        };
+        let g = graph_from_spec(spec)?.into_csr().shuffled_edges(7);
+        let (n, m) = (g.n, g.m());
+        self.state.insert(name, g);
+        self.state.metrics.graphs_loaded.inc();
+        Ok(format!("OK {n} {m}"))
+    }
+
+    fn cmd_upload<R: FnMut() -> Result<String>>(
+        &self,
+        rest: &[&str],
+        read_extra: &mut R,
+    ) -> Result<String> {
+        let (name, m) = match rest {
+            [name, m] => (*name, m.parse::<usize>()?),
+            _ => bail!("usage: UPLOAD name edge_count"),
+        };
+        anyhow::ensure!(m <= 50_000_000, "refusing upload of {m} edges");
+        let mut pairs = Vec::with_capacity(m);
+        let mut max_v = 0u64;
+        for _ in 0..m {
+            let line = read_extra()?;
+            let mut f = line.split_whitespace();
+            let u: u64 = f.next().ok_or_else(|| anyhow!("bad edge line"))?.parse()?;
+            let v: u64 = f.next().ok_or_else(|| anyhow!("bad edge line"))?.parse()?;
+            max_v = max_v.max(u).max(v);
+            pairs.push((u as VId, v as VId));
+        }
+        let g = EdgeList::from_pairs(max_v as usize + 1, &pairs).into_csr();
+        let (n, mm) = (g.n, g.m());
+        self.state.insert(name, g);
+        self.state.metrics.graphs_loaded.inc();
+        Ok(format!("OK {n} {mm}"))
+    }
+
+    fn cmd_load(&self, rest: &[&str]) -> Result<String> {
+        let (name, path) = match rest {
+            [name, path] => (*name, *path),
+            _ => bail!("usage: LOAD name PATH"),
+        };
+        let g = io::read_auto(std::path::Path::new(path))?.into_csr();
+        let (n, m) = (g.n, g.m());
+        self.state.insert(name, g);
+        self.state.metrics.graphs_loaded.inc();
+        Ok(format!("OK {n} {m}"))
+    }
+
+    fn resolve_alg(&self, g: &Csr, alg: &str) -> Result<Box<dyn Algorithm + Send + Sync>> {
+        if alg == "auto" {
+            Ok(Box::new(auto_select(&stats::stats(g)).with_threads(self.state.threads)))
+        } else {
+            algorithm_by_name(alg, self.state.threads)
+        }
+    }
+
+    fn cmd_cc(&self, rest: &[&str]) -> Result<String> {
+        let (name, alg_name) = match rest {
+            [name] => (*name, "C-2"),
+            [name, alg] => (*name, *alg),
+            _ => bail!("usage: CC name [alg]"),
+        };
+        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+        let alg = self.resolve_alg(&g, alg_name)?;
+        let t = Timer::start();
+        let r = alg.run_with_stats(&g);
+        let ms = t.ms();
+        self.state.metrics.cc_runs.inc();
+        self.state.metrics.cc_millis.add(ms as u64);
+        Ok(format!("OK {} {} {:.3}", cc::num_components(&r.labels), r.iterations, ms))
+    }
+
+    fn cmd_labels(&self, rest: &[&str]) -> Result<String> {
+        let (name, alg_name) = match rest {
+            [name] => (*name, "C-2"),
+            [name, alg] => (*name, *alg),
+            _ => bail!("usage: LABELS name [alg]"),
+        };
+        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+        let alg = self.resolve_alg(&g, alg_name)?;
+        let labels = alg.run(&g);
+        self.state.metrics.cc_runs.inc();
+        let shown = labels.len().min(10_000);
+        let body: Vec<String> = labels[..shown].iter().map(|l| l.to_string()).collect();
+        Ok(format!("OK {}", body.join(" ")))
+    }
+
+    fn cmd_stats(&self, rest: &[&str]) -> Result<String> {
+        let name = rest.first().ok_or_else(|| anyhow!("usage: STATS name"))?;
+        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+        let s = stats::stats(&g);
+        Ok(format!(
+            "OK n={} m={} components={} diameter={} max_degree={}",
+            s.n, s.m, s.num_components, s.pseudo_diameter, s.max_degree
+        ))
+    }
+}
+
+/// Serve on `addr` until `shutdown` flips true. Each connection gets a
+/// thread (interactive clients are few; algorithm runs parallelize
+/// internally).
+pub fn serve(addr: &str, state: Arc<ServerState>, shutdown: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    crate::info!("contour server listening on {addr}");
+    std::thread::scope(|scope| {
+        loop {
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = Arc::clone(&state);
+                    scope.spawn(move || {
+                        let _ = handle_conn(stream, &state);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => {
+                    crate::info!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut session = Session::new(state);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client hung up
+        }
+        let trimmed = line.trim().to_string();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = session.handle(&trimmed, || {
+            let mut extra = String::new();
+            reader.read_line(&mut extra)?;
+            Ok(extra.trim().to_string())
+        });
+        match reply {
+            Some(r) => {
+                writer.write_all(r.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            None => {
+                writer.write_all(b"BYE\n")?;
+                writer.flush()?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session_roundtrip(lines: &[(&str, Vec<&str>)]) -> Vec<String> {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut out = Vec::new();
+        for (line, extra) in lines {
+            let mut extra_iter = extra.iter();
+            let reply = s.handle(line, || {
+                Ok(extra_iter.next().expect("ran out of extra lines").to_string())
+            });
+            out.push(reply.unwrap_or_else(|| "BYE".into()));
+        }
+        out
+    }
+
+    #[test]
+    fn ping_and_unknown() {
+        let r = session_roundtrip(&[("PING", vec![]), ("NOPE", vec![])]);
+        assert_eq!(r[0], "PONG");
+        assert!(r[1].starts_with("ERR"));
+    }
+
+    #[test]
+    fn gen_cc_stats_flow() {
+        let r = session_roundtrip(&[
+            ("GEN g soup:4:25", vec![]),
+            ("CC g C-2", vec![]),
+            ("CC g auto", vec![]),
+            ("STATS g", vec![]),
+            ("LIST", vec![]),
+            ("DROP g", vec![]),
+            ("CC g C-2", vec![]),
+        ]);
+        assert!(r[0].starts_with("OK 100 "), "{}", r[0]);
+        let m: usize = r[0].split_whitespace().nth(2).unwrap().parse().unwrap();
+        assert!(r[1].starts_with("OK 4 "), "{}", r[1]);
+        assert!(r[2].starts_with("OK 4 "), "{}", r[2]);
+        assert!(r[3].contains("components=4"), "{}", r[3]);
+        assert!(r[4].contains(&format!("g:100:{m}")), "{}", r[4]);
+        assert_eq!(r[5], "OK");
+        assert!(r[6].starts_with("ERR"), "{}", r[6]);
+    }
+
+    #[test]
+    fn upload_flow() {
+        let r = session_roundtrip(&[
+            ("UPLOAD u 3", vec!["0 1", "1 2", "5 6"]),
+            ("CC u ConnectIt", vec![]),
+            ("LABELS u C-2", vec![]),
+        ]);
+        assert_eq!(r[0], "OK 7 3");
+        // Components: {0,1,2}, {3}, {4}, {5,6} = 4.
+        assert!(r[1].starts_with("OK 4 1 "), "{}", r[1]);
+        assert_eq!(r[2], "OK 0 0 0 3 4 5 5");
+    }
+
+    #[test]
+    fn quit_ends_session() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        assert!(s.handle("QUIT", || unreachable!()).is_none());
+    }
+
+    #[test]
+    fn tcp_server_end_to_end() {
+        let state = Arc::new(ServerState::new(1));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let addr = "127.0.0.1:39183";
+        let s2 = Arc::clone(&state);
+        let sd2 = Arc::clone(&shutdown);
+        let handle = std::thread::spawn(move || serve(addr, s2, sd2));
+        std::thread::sleep(std::time::Duration::from_millis(120));
+
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let mut ask = |msg: &str| -> String {
+            writer.write_all(msg.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            writer.flush().unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            reply.trim().to_string()
+        };
+        assert_eq!(ask("PING"), "PONG");
+        assert_eq!(ask("GEN t path:50"), "OK 50 49");
+        assert!(ask("CC t C-m").starts_with("OK 1 "));
+        assert!(ask("METRICS").contains("cc_runs=1"));
+        assert_eq!(ask("QUIT"), "BYE");
+
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,72 @@
+//! Small substrates the sandbox image lacks crates for: a deterministic
+//! PRNG family (no `rand`), wall-clock timing helpers, and a leveled
+//! stderr logger.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::{SplitMix64, Xoshiro256};
+pub use timer::Timer;
+
+/// Log level, controlled by `CONTOUR_LOG` (error|warn|info|debug).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+fn log_level() -> Level {
+    match std::env::var("CONTOUR_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    }
+}
+
+/// Leveled log to stderr; cheap enough for the coordinator, never used
+/// inside per-edge hot loops.
+pub fn log(level: Level, msg: std::fmt::Arguments) {
+    if level <= log_level() {
+        eprintln!("[contour:{:?}] {}", level, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Debug, format_args!($($t)*)) };
+}
+
+/// Human-readable engineering notation for counts (1.2K, 3.4M, ...).
+pub fn human_count(x: u64) -> String {
+    match x {
+        0..=999 => format!("{x}"),
+        1_000..=999_999 => format!("{:.1}K", x as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.1}M", x as f64 / 1e6),
+        _ => format!("{:.1}G", x as f64 / 1e9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_counts() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(12_300), "12.3K");
+        assert_eq!(human_count(2_500_000), "2.5M");
+        assert_eq!(human_count(30_000_000_000), "30.0G");
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Debug);
+    }
+}

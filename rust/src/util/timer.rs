@@ -1,0 +1,48 @@
+//! Wall-clock timing helper used by the bench harness and the coordinator.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.ms() >= 1.0);
+        let e = t.restart();
+        assert!(e.as_millis() >= 1);
+        assert!(t.ms() < e.as_secs_f64() * 1e3 + 100.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Cross-module integration tests: every algorithm against every graph
+//! family, coordinator batches, io round trips through real files, and
+//! the figure pipeline on a miniature corpus.
+
+use contour::cc::{self, Algorithm};
+use contour::coordinator::{algorithm_by_name, auto_select, Coordinator, Job, ALGORITHM_NAMES};
+use contour::graph::{gen, io, stats, Csr, EdgeList};
+
+fn family() -> Vec<(String, Csr)> {
+    vec![
+        ("path".into(), gen::path(700).into_csr().shuffled_edges(1)),
+        ("cycle".into(), gen::cycle(512).into_csr().shuffled_edges(2)),
+        ("star".into(), gen::star(600).into_csr()),
+        ("grid".into(), gen::grid(25, 25).into_csr().shuffled_edges(3)),
+        ("tree".into(), gen::binary_tree(9).into_csr().shuffled_edges(4)),
+        ("comb".into(), gen::comb(40, 12).into_csr().shuffled_edges(5)),
+        ("soup".into(), gen::component_soup(12, 60, 6).into_csr()),
+        ("er".into(), gen::erdos_renyi(2_000, 3_500, 7).into_csr()),
+        ("ba".into(), gen::barabasi_albert(2_500, 4, 8).into_csr()),
+        ("rmat".into(), gen::rmat(12, 30_000, gen::RmatKind::Graph500, 9).into_csr()),
+        ("delaunay".into(), gen::delaunay(3_000, 10).into_csr().shuffled_edges(11)),
+        ("kmer".into(), gen::kmer_chains(30, 80, 12).into_csr().shuffled_edges(13)),
+        ("road".into(), gen::road(40, 40, 14).into_csr().shuffled_edges(15)),
+    ]
+}
+
+/// The central correctness matrix: 15 algorithms x 13 graph families,
+/// all validated against BFS ground truth via the verifier.
+#[test]
+fn every_algorithm_on_every_family() {
+    for (gname, g) in family() {
+        let truth = cc::ground_truth(&g);
+        for &aname in ALGORITHM_NAMES {
+            let alg = algorithm_by_name(aname, 0).unwrap();
+            let labels = alg.run(&g);
+            assert_eq!(labels, truth, "{aname} on {gname}");
+        }
+        cc::verify::assert_valid(&g, &truth, &format!("truth/{gname}"));
+    }
+}
+
+/// Iteration-count shape from §IV-C, on the graph where it's starkest.
+#[test]
+fn iteration_shape_on_high_diameter() {
+    let g = gen::road(80, 80, 1).into_csr().shuffled_edges(7);
+    let iters = |name: &str| {
+        algorithm_by_name(name, 0).unwrap().run_with_stats(&g).iterations
+    };
+    let (i1, i2, im, isyn, ifsv) =
+        (iters("C-1"), iters("C-2"), iters("C-m"), iters("C-Syn"), iters("FastSV"));
+    assert!(im <= i2 && i2 <= i1, "C-m {im} <= C-2 {i2} <= C-1 {i1}");
+    assert!(i1 >= 3 * i2, "C-1 {i1} must blow up vs C-2 {i2} on road graphs");
+    assert!(isyn + 2 >= i2, "sync C-Syn {isyn} should not beat async C-2 {i2} by much");
+    assert!(ifsv > 1, "FastSV iterates ({ifsv})");
+    assert_eq!(iters("ConnectIt"), 1);
+}
+
+/// Coordinator batch over a mixed job set with the auto policy.
+#[test]
+fn coordinator_batch_mixed() {
+    let graphs = family();
+    let lookup = |name: &str| graphs.iter().find(|(n, _)| n == name).map(|(_, g)| g);
+    let jobs: Vec<Job> = graphs
+        .iter()
+        .enumerate()
+        .map(|(id, (name, _))| Job {
+            id,
+            algorithm: if id % 2 == 0 { "auto".into() } else { "C-2".into() },
+            graph_name: name.clone(),
+        })
+        .collect();
+    let coord = Coordinator { workers: 4, algorithm_threads: 1 };
+    let reports = coord.run_batch(jobs, lookup).unwrap();
+    assert_eq!(reports.len(), graphs.len());
+    for r in &reports {
+        let g = lookup(&r.graph_name).unwrap();
+        let want = cc::num_components(&cc::ground_truth(g));
+        assert_eq!(r.components, want, "{} via {}", r.graph_name, r.algorithm);
+    }
+}
+
+/// Policy sanity on the class extremes.
+#[test]
+fn auto_policy_class_extremes() {
+    let road = stats::stats(&gen::road(200, 200, 2).into_csr());
+    assert_eq!(auto_select(&road).name(), "C-m");
+    let social = stats::stats(&gen::rmat(12, 40_000, gen::RmatKind::Graph500, 3).into_csr());
+    assert!(matches!(auto_select(&social).name().as_str(), "C-1" | "C-2"));
+}
+
+/// Real files through the io layer feed the algorithms end to end.
+#[test]
+fn file_to_labels_pipeline() {
+    let dir = std::env::temp_dir().join("contour_integration_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    let e = gen::component_soup(5, 40, 3);
+    let mtx = dir.join("soup.mtx");
+    io::write_mtx(&mtx, &e).unwrap();
+    let g = io::read_auto(&mtx).unwrap().into_csr();
+    let labels = cc::contour::Contour::c2().run(&g);
+    assert_eq!(cc::num_components(&labels), 5);
+
+    let bin = dir.join("soup.bin");
+    io::write_bin(&bin, &e).unwrap();
+    let g2 = io::read_auto(&bin).unwrap().into_csr();
+    assert_eq!(cc::contour::Contour::cm().run(&g2), labels);
+}
+
+/// EdgeList dedup + CSR invariants on messy input.
+#[test]
+fn messy_input_normalization() {
+    let mut e = EdgeList::new(50);
+    // Duplicates, reversed duplicates, self loops.
+    for i in 0..49u32 {
+        e.push(i, i + 1);
+        e.push(i + 1, i);
+        e.push(i, i);
+    }
+    let g = e.into_csr();
+    assert_eq!(g.m(), 49);
+    let labels = cc::contour::Contour::c2().run(&g);
+    assert!(labels.iter().all(|&l| l == 0));
+}
+
+/// Figure drivers produce files on a quick corpus (uses the suite with
+/// a temp cache; this is the `bench` pipeline smoke test).
+#[test]
+fn figure_pipeline_quick_smoke() {
+    std::env::set_var("CONTOUR_CACHE", std::env::temp_dir().join("contour_fig_cache"));
+    let out = std::env::temp_dir().join("contour_fig_out");
+    let _ = std::fs::remove_dir_all(&out);
+    // Only the cheapest driver here (full sweeps live in `cargo bench`):
+    let rendered = contour::bench::figures::table1(&out, true).unwrap();
+    assert!(rendered.contains("delaunay_n10"));
+    assert!(out.join("table1.csv").exists());
+    assert!(out.join("table1.txt").exists());
+    std::env::remove_var("CONTOUR_CACHE");
+}
+
+/// Distributed simulator trends (§IV-G) on a mid-size delaunay.
+#[test]
+fn distsim_trends() {
+    use contour::distsim::{simulate, CostModel, DistAlgorithm};
+    let g = gen::delaunay(4_000, 4).into_csr().shuffled_edges(5);
+    let cost = CostModel::default();
+    let c1 = simulate(&g, 8, DistAlgorithm::Contour { hops: 1 }, cost);
+    let c2 = simulate(&g, 8, DistAlgorithm::Contour { hops: 2 }, cost);
+    let uf = simulate(&g, 8, DistAlgorithm::UnionFind, cost);
+    assert!(c2.supersteps < c1.supersteps);
+    assert!(
+        c1.remote_reads / c1.supersteps as u64 <= c2.remote_reads / c2.supersteps as u64,
+        "C-1 locality"
+    );
+    assert_eq!(uf.supersteps, 1);
+}

@@ -1,0 +1,216 @@
+//! Property-based tests over randomly generated graphs (the image has no
+//! `proptest`, so this file carries a miniature property-test driver:
+//! seeded case generation, a fixed case budget, and failing-seed
+//! reporting — rerun any failure with its printed seed).
+
+use contour::cc::{self, contour::Contour, Algorithm};
+use contour::coordinator::{algorithm_by_name, ALGORITHM_NAMES};
+use contour::graph::{gen, Csr, EdgeList};
+use contour::util::Xoshiro256;
+use contour::VId;
+
+/// Mini property-test driver: runs `prop` on `cases` random seeds,
+/// reporting every failing seed before panicking.
+fn check_property<F: Fn(u64) -> Result<(), String>>(name: &str, cases: u64, prop: F) {
+    let mut failures = Vec::new();
+    for seed in 0..cases {
+        if let Err(msg) = prop(seed) {
+            failures.push(format!("seed {seed}: {msg}"));
+            if failures.len() >= 3 {
+                break;
+            }
+        }
+    }
+    assert!(failures.is_empty(), "property {name} failed:\n{}", failures.join("\n"));
+}
+
+/// Random graph with size/topology drawn from the seed: mixes sparse and
+/// dense, connected and fragmented, plus degenerate corner cases.
+fn random_graph(seed: u64) -> Csr {
+    let mut rng = Xoshiro256::new(seed.wrapping_mul(0x9E37_79B9));
+    match seed % 7 {
+        0 => gen::erdos_renyi(1 + rng.below(800) as usize, rng.below(1_200) as usize, seed),
+        1 => gen::barabasi_albert(2 + rng.below(700) as usize, 1 + rng.below(5) as usize, seed),
+        2 => gen::rmat(6 + (seed % 5) as u32, 100 + rng.below(4_000) as usize,
+                       gen::RmatKind::Graph500, seed),
+        3 => gen::component_soup(1 + rng.below(12) as usize, 2 + rng.below(50) as usize, seed),
+        4 => gen::kmer_chains(1 + rng.below(15) as usize, 2 + rng.below(60) as usize, seed),
+        5 => {
+            // Degenerate families: empty, singleton, no-edge, tiny.
+            match seed % 4 {
+                0 => EdgeList::new(1),
+                1 => EdgeList::new(17),
+                2 => gen::path(2),
+                _ => gen::complete(3),
+            }
+        }
+        _ => gen::delaunay(3 + rng.below(600) as usize, seed),
+    }
+    .into_csr()
+    .shuffled_edges(seed)
+}
+
+/// INVARIANT: all 15 algorithms produce the identical min-id labelling.
+#[test]
+fn prop_all_algorithms_agree() {
+    check_property("all_algorithms_agree", 60, |seed| {
+        let g = random_graph(seed);
+        let want = cc::ground_truth(&g);
+        for &name in ALGORITHM_NAMES {
+            let got = algorithm_by_name(name, 0).unwrap().run(&g);
+            if got != want {
+                return Err(format!("{name} diverges on n={} m={}", g.n, g.m()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT: labels are idempotent under re-running (a converged
+/// labelling is a fixed point) and canonicalize is idempotent.
+#[test]
+fn prop_fixed_point_and_canonical_idempotent() {
+    check_property("fixed_point", 40, |seed| {
+        let g = random_graph(seed);
+        let labels = Contour::c2().run(&g);
+        let again = Contour::c2().run(&g);
+        if labels != again {
+            return Err("rerun changed labels".into());
+        }
+        let c1 = cc::canonicalize(&labels);
+        let c2 = cc::canonicalize(&c1);
+        if c1 != c2 {
+            return Err("canonicalize not idempotent".into());
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT (Theorem 1): synchronous MM^2 converges within
+/// ceil(log_1.5(d_max)) + 1 iterations (+1 detection pass).
+#[test]
+fn prop_theorem1_bound() {
+    check_property("theorem1_bound", 30, |seed| {
+        let g = random_graph(seed);
+        if g.m() == 0 {
+            return Ok(());
+        }
+        let s = contour::graph::stats::stats(&g);
+        let d = s.pseudo_diameter.max(1) as f64;
+        let bound = d.log(1.5).ceil() as usize + 2; // +1 detection pass
+        let r = Contour::csyn().run_with_stats(&g);
+        if r.iterations > bound {
+            return Err(format!(
+                "sync C-2 took {} iters > bound {bound} (diam {})",
+                r.iterations, s.pseudo_diameter
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT: component count equals the number of label roots, and
+/// every label is a component minimum.
+#[test]
+fn prop_label_structure() {
+    check_property("label_structure", 40, |seed| {
+        let g = random_graph(seed);
+        let labels = Contour::c11mm().run(&g);
+        for (v, &l) in labels.iter().enumerate() {
+            if l > v as VId {
+                return Err(format!("label {l} above vertex {v}"));
+            }
+            if labels[l as usize] != l {
+                return Err(format!("label {l} is not a root"));
+            }
+        }
+        let viols = cc::verify::check_labels(&g, &labels);
+        if !viols.is_empty() {
+            return Err(format!("{viols:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT: edge-order shuffling never changes the partition (only
+/// the iteration count may differ).
+#[test]
+fn prop_edge_order_invariance() {
+    check_property("edge_order_invariance", 30, |seed| {
+        let g = random_graph(seed);
+        let a = Contour::c2().run(&g);
+        let g2 = g.clone().shuffled_edges(seed ^ 0xDEAD);
+        let b = Contour::c2().run(&g2);
+        if a != b {
+            return Err("shuffle changed the partition".into());
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT: thread count never changes the result (races affect
+/// schedules, not outcomes — §III-B.3's correctness claim).
+#[test]
+fn prop_thread_count_invariance() {
+    check_property("thread_invariance", 25, |seed| {
+        let g = random_graph(seed | 1); // skip the heaviest seeds
+        let want = Contour::c2().with_threads(1).run(&g);
+        for t in [2usize, 4, 8] {
+            let got = Contour::c2().with_threads(t).run(&g);
+            if got != want {
+                return Err(format!("threads={t} diverges"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT: generator determinism — same seed, same graph; and CSR
+/// canonical form (sorted unique oriented edges, symmetric adjacency).
+#[test]
+fn prop_generator_and_csr_invariants() {
+    check_property("generator_csr", 50, |seed| {
+        let a = random_graph(seed);
+        let b = random_graph(seed);
+        if a.src != b.src || a.dst != b.dst {
+            return Err("generator not deterministic".into());
+        }
+        // Oriented + unique.
+        let mut seen = std::collections::HashSet::new();
+        for (u, v) in a.edges() {
+            if u >= v {
+                return Err(format!("edge ({u},{v}) not oriented"));
+            }
+            if !seen.insert((u, v)) {
+                return Err(format!("duplicate edge ({u},{v})"));
+            }
+        }
+        // Degree sum == 2m.
+        let total: usize = (0..a.n).map(|v| a.degree(v as VId)).sum();
+        if total != 2 * a.m() {
+            return Err("degree sum != 2m".into());
+        }
+        Ok(())
+    });
+}
+
+/// INVARIANT: the distributed simulator computes the same partition as
+/// the shared-memory algorithms (it runs the real algorithm).
+#[test]
+fn prop_distsim_iterations_match_sync() {
+    use contour::distsim::{simulate, CostModel, DistAlgorithm};
+    check_property("distsim_supersteps", 15, |seed| {
+        let g = random_graph(seed);
+        if g.m() == 0 {
+            return Ok(());
+        }
+        let r = simulate(&g, 4, DistAlgorithm::Contour { hops: 2 }, CostModel::default());
+        let sync = Contour::csyn().with_early_check(false).run_with_stats(&g);
+        // Same synchronous schedule => same superstep count (±1 for the
+        // detection pass accounting).
+        if r.supersteps.abs_diff(sync.iterations) > 1 {
+            return Err(format!("distsim {} vs sync {}", r.supersteps, sync.iterations));
+        }
+        Ok(())
+    });
+}
