@@ -15,6 +15,20 @@ Usage:
         c.gen("g", "rmat:16:16")        # or c.upload("g", edges)
         comps, iters, ms = c.graph_cc("g", alg="C-2")
         print(c.stats("g"))
+
+Streaming quickstart (live edge feed with epoch snapshots; see the
+``STREAM*`` verbs in the server protocol):
+
+    with ContourClient("127.0.0.1", 7021) as c:
+        c.stream("live", n=1_000_000, wal="/tmp/live.wal")
+        c.stream_add("live", [(0, 1), (1, 2), (5, 9)])   # batched ingest
+        epoch, comps = c.stream_epoch("live")            # seal a snapshot
+        c.same_comp("live", 0, 2)                        # -> True
+        c.comp_size("live", 0)                           # -> 3
+        c.num_comps("live", epoch=epoch)                 # time-travel
+        c.stream_save("live", "/tmp/live.snap")          # durable snapshot
+        # after a restart:
+        c.stream_load("live2", "/tmp/live.snap", wal="/tmp/live.wal")
 """
 
 from __future__ import annotations
@@ -114,10 +128,33 @@ class ContourClient:
         _, comps, iters, ms = self._request(f"CC {name} {alg}").split()
         return int(comps), int(iters), float(ms)
 
-    def labels(self, name: str, alg: str = "C-2") -> List[int]:
-        """Component labels (first 10k vertices)."""
-        parts = self._request(f"LABELS {name} {alg}").split()[1:]
-        return [int(x) for x in parts]
+    def labels(self, name: str, alg: str = "C-2",
+               offset: int = 0, count: Optional[int] = None) -> List[int]:
+        """One page of component labels (server default: 10k per page)."""
+        _, page = self.labels_page(name, alg, offset, count)
+        return page
+
+    def labels_page(self, name: str, alg: str = "C-2", offset: int = 0,
+                    count: Optional[int] = None) -> Tuple[int, List[int]]:
+        """Page through the label array: returns (total, labels[offset:
+        offset+count]). Iterate until offset reaches total."""
+        req = f"LABELS {name} {alg} {offset}"
+        if count is not None:
+            req += f" {count}"
+        parts = self._request(req).split()[1:]
+        return int(parts[0]), [int(x) for x in parts[1:]]
+
+    def all_labels(self, name: str, alg: str = "C-2",
+                   page_size: int = 10_000) -> List[int]:
+        """Every label, fetched page by page."""
+        out: List[int] = []
+        total = 1
+        while len(out) < total:
+            total, page = self.labels_page(name, alg, len(out), page_size)
+            if not page and len(out) < total:
+                raise ContourError("label paging stalled")
+            out.extend(page)
+        return out
 
     def stats(self, name: str) -> dict:
         parts = self._request(f"STATS {name}").split()[1:]
@@ -126,6 +163,89 @@ class ContourClient:
     def metrics(self) -> dict:
         parts = self._request("METRICS").split()[1:]
         return {k: int(v) for k, v in (p.split("=") for p in parts)}
+
+    # ------------------------------------------------------------ streaming
+    #
+    # Epoch-based streaming connectivity: edges are ingested in batches,
+    # SEPOCH seals an immutable min-vertex-id label snapshot (bit-equal
+    # to a static C-2 run on the same graph), and queries answer from a
+    # snapshot — the current epoch by default, or any retained past one.
+
+    def stream(self, name: str, n: int, wal: Optional[str] = None,
+               max_history: Optional[int] = None) -> Tuple[int, int]:
+        """Create a streaming session over ``n`` vertices. ``wal`` is a
+        server-side write-ahead-log path: if the file exists the stream
+        is recovered from it (one live stream per WAL file).
+        ``max_history`` caps retained epoch snapshots server-side.
+        Returns (n, current_epoch)."""
+        req = f"STREAM {name} {n}"
+        if wal:
+            req += f" {wal}"
+        if max_history is not None:
+            req += f" {max_history}"
+        _, rn, epoch = self._request(req).split()
+        return int(rn), int(epoch)
+
+    def stream_add(self, name: str, edges: Iterable[Tuple[int, int]]) -> Tuple[int, int]:
+        """Ingest a batch of edges. Returns (edges_added, current_epoch).
+        The batch lands in the *next* sealed epoch. An empty batch is a
+        no-op."""
+        edges = list(edges)
+        if not edges:
+            _, epoch = self._squery(name, "COMPS")
+            return 0, epoch
+        flat = " ".join(f"{u} {v}" for u, v in edges)
+        _, added, epoch = self._request(f"SADD {name} {flat}").split()
+        return int(added), int(epoch)
+
+    def stream_epoch(self, name: str) -> Tuple[int, int]:
+        """Seal the current epoch (re-contour compaction + snapshot
+        publish). Returns (epoch, num_components)."""
+        _, epoch, comps = self._request(f"SEPOCH {name}").split()
+        return int(epoch), int(comps)
+
+    def _squery(self, name: str, op: str, *args: int,
+                epoch: Optional[int] = None) -> Tuple[int, int]:
+        req = f"SQUERY {name} {op} " + " ".join(str(a) for a in args)
+        if epoch is not None:
+            req += f" {epoch}"
+        _, value, at = self._request(req.rstrip()).split()
+        return int(value), int(at)
+
+    def same_comp(self, name: str, u: int, v: int,
+                  epoch: Optional[int] = None) -> bool:
+        """Are u and v in the same component (at ``epoch``, default
+        current)? Wait-free server-side: never blocks on ingestion."""
+        value, _ = self._squery(name, "SAME", u, v, epoch=epoch)
+        return bool(value)
+
+    def comp_size(self, name: str, v: int, epoch: Optional[int] = None) -> int:
+        """Size of v's component at the given (default current) epoch."""
+        value, _ = self._squery(name, "SIZE", v, epoch=epoch)
+        return value
+
+    def num_comps(self, name: str, epoch: Optional[int] = None) -> int:
+        """Number of components at the given (default current) epoch."""
+        value, _ = self._squery(name, "COMPS", epoch=epoch)
+        return value
+
+    def stream_label(self, name: str, v: int, epoch: Optional[int] = None) -> int:
+        """Component label (min vertex id) of v."""
+        value, _ = self._squery(name, "LABEL", v, epoch=epoch)
+        return value
+
+    def stream_save(self, name: str, path: str) -> int:
+        """Write a binary snapshot server-side. Returns the epoch saved."""
+        _, epoch = self._request(f"SSAVE {name} {path}").split()
+        return int(epoch)
+
+    def stream_load(self, name: str, snapshot: str,
+                    wal: Optional[str] = None) -> Tuple[int, int]:
+        """Recover a stream from a snapshot file (plus optional WAL to
+        replay the suffix). Returns (n, current_epoch)."""
+        req = f"SLOAD {name} {snapshot}" + (f" {wal}" if wal else "")
+        _, n, epoch = self._request(req).split()
+        return int(n), int(epoch)
 
 
 def graph_cc(graph_name: str, host: str = "127.0.0.1", port: int = 7021,

@@ -97,6 +97,52 @@ def test_error_paths(server):
             c.gen("bad", "nosuchgen:10")
 
 
+def test_streaming_session(server):
+    import tempfile
+
+    with ContourClient(port=PORT) as c:
+        n, epoch = c.stream("live", 100)
+        assert (n, epoch) == (100, 0)
+        added, _ = c.stream_add("live", [(0, 1), (1, 2), (10, 11)])
+        assert added == 3
+        # Epoch 0 predates the batch; sealing publishes it.
+        assert not c.same_comp("live", 0, 2, epoch=0)
+        epoch, comps = c.stream_epoch("live")
+        assert epoch == 1
+        assert comps == 100 - 3  # three merges
+        assert c.same_comp("live", 0, 2)
+        assert c.comp_size("live", 1) == 3
+        assert c.comp_size("live", 10) == 2
+        assert c.num_comps("live") == comps
+        assert c.num_comps("live", epoch=0) == 100
+        assert c.stream_label("live", 2) == 0
+        assert c.stream_add("live", []) == (0, 1)  # empty batch is a no-op
+        # Durability round trip through SSAVE/SLOAD (the server reads
+        # and writes the path, so it just needs to be shared-host).
+        with tempfile.TemporaryDirectory(prefix="contour_client_") as td:
+            snap = f"{td}/live.snap"
+            assert c.stream_save("live", snap) == 1
+            n2, epoch2 = c.stream_load("live_restored", snap)
+            assert n2 == 100 and epoch2 > 1
+            assert c.same_comp("live_restored", 0, 2)
+        c.drop("live")
+        c.drop("live_restored")
+
+    with ContourClient(port=PORT) as c:
+        with pytest.raises(ContourError):
+            c.stream_add("nosuchstream", [(0, 1)])
+
+
+def test_labels_paging(server):
+    with ContourClient(port=PORT) as c:
+        c.gen("pg", "path:50")
+        total, page = c.labels_page("pg", "C-2", offset=10, count=5)
+        assert total == 50
+        assert page == [0] * 5
+        assert c.all_labels("pg", page_size=7) == [0] * 50
+        c.drop("pg")
+
+
 def test_multiple_clients(server):
     with ContourClient(port=PORT) as a, ContourClient(port=PORT) as b:
         a.gen("shared", "soup:3:20")

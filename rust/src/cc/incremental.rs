@@ -42,8 +42,54 @@ impl IncrementalCc {
         idx
     }
 
+    /// Rebuild an index from a canonical min-id labelling (streaming
+    /// snapshot recovery): every vertex is parented directly on its
+    /// component minimum, which respects Rem's link-to-smaller invariant.
+    pub fn from_labels(labels: &[VId]) -> Self {
+        let parent: Vec<AtomicU32> = labels
+            .iter()
+            .enumerate()
+            .map(|(v, &l)| {
+                assert!(
+                    (l as usize) <= v && labels[l as usize] == l,
+                    "labels not canonical at vertex {v}"
+                );
+                AtomicU32::new(l)
+            })
+            .collect();
+        Self { parent, edges_added: AtomicUsize::new(0) }
+    }
+
     pub fn n(&self) -> usize {
         self.parent.len()
+    }
+
+    /// Snapshot the union-find forest as `(child, parent)` edges — the
+    /// input the streaming layer's re-contour compaction runs the
+    /// Contour operator over. Concurrent `add_edge` calls may or may not
+    /// be captured (parent pointers only ever move toward smaller roots
+    /// within a component, so any interleaving yields a valid forest of
+    /// the edges inserted so far).
+    pub fn forest_edges(&self, threads: usize) -> Vec<(VId, VId)> {
+        let p = &self.parent;
+        par::par_map_reduce(
+            self.n(),
+            threads,
+            par::DEFAULT_GRAIN,
+            Vec::new,
+            |acc: &mut Vec<(VId, VId)>, range| {
+                for v in range {
+                    let pv = p[v].load(Ordering::Relaxed);
+                    if pv != v as VId {
+                        acc.push((v as VId, pv));
+                    }
+                }
+            },
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        )
     }
 
     pub fn edges_added(&self) -> usize {
@@ -184,5 +230,96 @@ mod tests {
     #[should_panic]
     fn out_of_range_panics() {
         IncrementalCc::new(3).add_edge(0, 9);
+    }
+
+    #[test]
+    fn from_labels_round_trips_through_forest() {
+        let g = gen::component_soup(7, 25, 4).into_csr();
+        let idx = IncrementalCc::from_graph(&g, 1);
+        let labels = idx.labels(1);
+        // Rebuild from the labelling: same partition, flat forest.
+        let rebuilt = IncrementalCc::from_labels(&labels);
+        assert_eq!(rebuilt.labels(1), labels);
+        // forest_edges links every non-root to its parent: one edge per
+        // non-root vertex, and re-uniting them reproduces the partition.
+        let forest = rebuilt.forest_edges(1);
+        assert_eq!(forest.len(), g.n - cc::num_components(&labels));
+        let again = IncrementalCc::new(g.n);
+        for (u, v) in forest {
+            again.add_edge(u, v);
+        }
+        assert_eq!(again.labels(1), labels);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_labels_rejects_non_canonical() {
+        // 1 is not a root (labels[1] = 2 > 1 violates min-id form).
+        IncrementalCc::from_labels(&[0, 2, 2]);
+    }
+
+    /// Concurrent `add_edge` from multiple writer threads interleaved
+    /// with `connected` queries from reader threads. Two checks: (a) the
+    /// final structure matches a static union-find ground truth, and
+    /// (b) connectivity is monotone — any pair a reader observed as
+    /// connected mid-stream must be connected in the final graph.
+    #[test]
+    fn concurrent_insertions_interleaved_with_queries() {
+        use crate::cc::unionfind::RemSequential;
+        use crate::cc::Algorithm;
+        use crate::util::SplitMix64;
+
+        let g = gen::erdos_renyi(4_000, 8_000, 11).into_csr();
+        let edges: Vec<(VId, VId)> = g.edges().collect();
+        let idx = IncrementalCc::new(g.n);
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let mut observed = Vec::new();
+        std::thread::scope(|s| {
+            let readers: Vec<_> = (0..3u64)
+                .map(|r| {
+                    let idx = &idx;
+                    let done = &done;
+                    let n = g.n as u64;
+                    s.spawn(move || {
+                        let mut rng = SplitMix64::new(100 + r);
+                        let mut positives = Vec::new();
+                        while !done.load(Ordering::Relaxed) {
+                            let u = (rng.next_u64() % n) as VId;
+                            let v = (rng.next_u64() % n) as VId;
+                            if idx.connected(u, v) {
+                                positives.push((u, v));
+                            }
+                        }
+                        positives
+                    })
+                })
+                .collect();
+            std::thread::scope(|w| {
+                for t in 0..4usize {
+                    let idx = &idx;
+                    let edges = &edges;
+                    w.spawn(move || {
+                        for (u, v) in edges.iter().skip(t).step_by(4) {
+                            idx.add_edge(*u, *v);
+                        }
+                    });
+                }
+            });
+            done.store(true, Ordering::Relaxed);
+            for h in readers {
+                observed.extend(h.join().unwrap());
+            }
+        });
+        // (a) final structure == static union-find ground truth.
+        let want = RemSequential.run(&g);
+        assert_eq!(idx.labels(1), want);
+        assert_eq!(idx.edges_added(), edges.len());
+        // (b) mid-stream positives still hold in the final graph.
+        for (u, v) in observed {
+            assert_eq!(
+                want[u as usize], want[v as usize],
+                "reader saw {u}~{v} connected but the final graph disagrees"
+            );
+        }
     }
 }

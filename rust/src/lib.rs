@@ -36,6 +36,7 @@ pub mod graph;
 pub mod par;
 pub mod runtime;
 pub mod server;
+pub mod stream;
 pub mod util;
 
 /// Vertex id. Graphs up to 2^32 vertices; labels are vertex ids, so the

@@ -7,6 +7,12 @@
 //! ids that xla_extension 0.5.1 rejects in serialized protos.
 
 pub mod registry;
+mod xla_stub;
+
+// The image carries no XLA/PJRT binding crate, so the runtime compiles
+// against the API-compatible stub (see xla_stub.rs). To use a real
+// binding: add the dependency and replace this alias with `use xla;`.
+use xla_stub as xla;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,0 +1,101 @@
+//! API-compatible stand-in for the `xla` PJRT binding crate.
+//!
+//! The sandbox image has no XLA/PJRT Rust binding in its crate cache, so
+//! the runtime compiles against this stub instead of an external `xla`
+//! dependency (`runtime/mod.rs` does `use xla_stub as xla;`). The stub
+//! mirrors exactly the API surface the runtime touches; every entry
+//! point fails at `PjRtClient::cpu()` with a clear error, which callers
+//! already treat as "PJRT unavailable" (tests skip, `contour list`
+//! prints the reason). Swapping in a real binding is a two-line change
+//! at the top of `runtime/mod.rs` plus a Cargo dependency.
+//!
+//! Types that can never be constructed here carry an
+//! [`std::convert::Infallible`] field, so the methods unreachable
+//! without a client are still fully type-checked (`match self.0 {}`).
+
+use std::convert::Infallible;
+
+/// Error type matching how the runtime consumes binding errors: opaque,
+/// formatted with `{:?}`.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT runtime unavailable: built against the xla stub (no XLA binding crate in \
+         this image); run the native engine instead"
+            .to_string(),
+    )
+}
+
+/// Stand-in for the PJRT CPU client. Never constructible.
+pub struct PjRtClient(Infallible);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        match self.0 {}
+    }
+}
+
+/// Stand-in for a compiled executable. Never constructible.
+pub struct PjRtLoadedExecutable(Infallible);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        match self.0 {}
+    }
+}
+
+/// Stand-in for a device buffer. Never constructible.
+pub struct PjRtBuffer(Infallible);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        match self.0 {}
+    }
+}
+
+/// Stand-in for a parsed HLO module. Never constructible.
+pub struct HloModuleProto(Infallible);
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for an XLA computation. Never constructible.
+pub struct XlaComputation(Infallible);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        match proto.0 {}
+    }
+}
+
+/// Host literal. Constructible (it wraps host data in the real binding)
+/// but inert: the stub never executes, so conversions are unreachable in
+/// practice and report unavailability if ever called directly.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[i32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}

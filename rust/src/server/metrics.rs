@@ -30,17 +30,30 @@ pub struct Metrics {
     pub cc_runs: Counter,
     /// Total milliseconds spent inside connectivity runs.
     pub cc_millis: Counter,
+    /// Streaming sessions created (STREAM + SLOAD).
+    pub streams_created: Counter,
+    /// Edges ingested through SADD across all streams.
+    pub stream_edges: Counter,
+    /// Epochs sealed (SEPOCH, plus implicit seals on recovery).
+    pub stream_epochs: Counter,
+    /// SQUERY requests served.
+    pub stream_queries: Counter,
 }
 
 impl Metrics {
     pub fn render(&self) -> String {
         format!(
-            "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={}",
+            "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} streams={} \
+             stream_edges={} stream_epochs={} stream_queries={}",
             self.requests.get(),
             self.errors.get(),
             self.graphs_loaded.get(),
             self.cc_runs.get(),
-            self.cc_millis.get()
+            self.cc_millis.get(),
+            self.streams_created.get(),
+            self.stream_edges.get(),
+            self.stream_epochs.get(),
+            self.stream_queries.get()
         )
     }
 }

@@ -16,40 +16,71 @@
 //! Python remains off the compute path — it only ships messages, exactly
 //! like Arkouda's front end.
 //!
-//! Protocol (request → response, all single lines):
-//!   GEN name SPEC              → OK n m
-//!   UPLOAD name m              → READY, then m lines "u v", → OK n m
-//!   LOAD name PATH             → OK n m
-//!   CC name ALG                → OK components iterations millis
-//!   LABELS name ALG            → OK l0 l1 l2 ... (first 10k labels)
-//!   STATS name                 → OK n m comps diam maxdeg
-//!   LIST                       → OK name:n:m ...
-//!   DROP name                  → OK
-//!   METRICS                    → OK requests=.. cc_runs=.. ...
-//!   PING                       → PONG
-//!   QUIT                       → BYE (closes connection)
+//! Protocol (request → response, all single lines). Static graphs:
+//!   GEN name SPEC                  → OK n m
+//!   UPLOAD name m                  → then m lines "u v", → OK n m
+//!   LOAD name PATH                 → OK n m
+//!   CC name [ALG]                  → OK components iterations millis
+//!   LABELS name [ALG] [off [cnt]]  → OK total l_off .. l_{off+cnt-1}
+//!                                    (cnt defaults to 10000; page with
+//!                                    off/cnt, total = label count)
+//!   STATS name                     → OK n=.. m=.. components=.. ...
+//!   LIST                           → OK name:n:m ... stream/name:n:m ...
+//!   DROP name                      → OK       (graph or stream)
+//!   METRICS                        → OK requests=.. cc_runs=.. ...
+//!   PING                           → PONG
+//!   QUIT                           → BYE (closes connection)
+//!
+//! Streaming connectivity (see [`crate::stream`]; epochs are sealed
+//! label snapshots, `e` defaults to the current epoch):
+//!   STREAM name N [WALPATH] [HIST] → OK n epoch   (create; recover-on-open
+//!                                    if WALPATH already exists; a WAL may
+//!                                    back only one live stream; numeric
+//!                                    HIST caps retained epoch snapshots)
+//!   SADD name u v [u v ...]        → OK added epoch
+//!   SEPOCH name                    → OK epoch components  (seal epoch)
+//!   SQUERY name SAME u v [e]       → OK 0|1 epoch
+//!   SQUERY name SIZE v [e]         → OK size epoch
+//!   SQUERY name COMPS [e]          → OK components epoch
+//!   SQUERY name LABEL v [e]        → OK label epoch
+//!   SSAVE name PATH                → OK epoch    (write binary snapshot)
+//!   SLOAD name SNAPPATH [WALPATH]  → OK n epoch  (recover from disk)
 
 pub mod metrics;
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::cc::{self, Algorithm};
 use crate::coordinator::{algorithm_by_name, auto_select};
 use crate::graph::{gen, io, stats, Csr, EdgeList};
+use crate::stream::StreamingCc;
 use crate::util::Timer;
 use crate::VId;
 
 use metrics::Metrics;
 
-/// Shared server state: the graph store plus counters.
+/// Shared server state: the graph and stream stores plus counters.
 pub struct ServerState {
     graphs: RwLock<HashMap<String, Arc<Csr>>>,
+    streams: RwLock<HashMap<String, Arc<StreamingCc>>>,
+    /// Label arrays already computed for (graph, alg) — LABELS paging
+    /// would otherwise rerun connectivity once per page. Purged when
+    /// the graph is replaced or dropped.
+    labels_cache: RwLock<HashMap<(String, String), Arc<cc::Labels>>>,
+    /// WAL files claimed by streams that may still be alive — the map
+    /// entry or an in-flight verb holding the Arc. A claim dies with
+    /// its last Arc, so DROP + recreate on the same WAL is refused
+    /// until in-flight operations on the dropped stream finish (a
+    /// second appender would interleave frames, and recovery's
+    /// torn-tail repair could truncate a frame mid-write).
+    wal_claims: Mutex<HashMap<std::path::PathBuf, Weak<StreamingCc>>>,
     pub metrics: Metrics,
     /// Worker threads each algorithm run may use (0 = all).
     pub threads: usize,
@@ -57,19 +88,77 @@ pub struct ServerState {
 
 impl ServerState {
     pub fn new(threads: usize) -> Self {
-        Self { graphs: RwLock::new(HashMap::new()), metrics: Metrics::default(), threads }
+        Self {
+            graphs: RwLock::new(HashMap::new()),
+            streams: RwLock::new(HashMap::new()),
+            labels_cache: RwLock::new(HashMap::new()),
+            wal_claims: Mutex::new(HashMap::new()),
+            metrics: Metrics::default(),
+            threads,
+        }
     }
 
     pub fn insert(&self, name: &str, g: Csr) {
         self.graphs.write().unwrap().insert(name.to_string(), Arc::new(g));
+        self.labels_cache.write().unwrap().retain(|k, _| k.0 != name);
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<Csr>> {
         self.graphs.read().unwrap().get(name).cloned()
     }
 
+    /// Create (or recover) a stream and register it under `name`,
+    /// holding the stream-store lock across the uniqueness checks AND
+    /// the build: check-then-insert outside one critical section would
+    /// let two racing creations double-claim a name or — worse — attach
+    /// two WAL appenders to the same file, corrupting the log. Building
+    /// under the lock stalls other stream verbs during a long recovery;
+    /// that is the price of the invariant.
+    pub fn create_stream<F>(
+        &self,
+        name: &str,
+        wal: Option<&Path>,
+        build: F,
+    ) -> Result<Arc<StreamingCc>>
+    where
+        F: FnOnce() -> Result<StreamingCc>,
+    {
+        let mut map = self.streams.write().unwrap();
+        anyhow::ensure!(
+            !map.contains_key(name),
+            "stream {name:?} already exists (DROP it first)"
+        );
+        if let Some(w) = wal {
+            let cand = canonical_wal(w);
+            let mut claims = self.wal_claims.lock().unwrap();
+            claims.retain(|_, s| s.strong_count() > 0);
+            if claims.contains_key(&cand) {
+                bail!(
+                    "WAL {w:?} already backs a live stream (DROP it and let in-flight \
+                     operations finish)"
+                );
+            }
+        }
+        let s = Arc::new(build()?);
+        if let Some(p) = s.wal_path() {
+            self.wal_claims.lock().unwrap().insert(canonical_wal(p), Arc::downgrade(&s));
+        }
+        map.insert(name.to_string(), Arc::clone(&s));
+        self.metrics.streams_created.inc();
+        Ok(s)
+    }
+
+    pub fn get_stream(&self, name: &str) -> Option<Arc<StreamingCc>> {
+        self.streams.read().unwrap().get(name).cloned()
+    }
+
+    /// Drop a graph or stream by name (graphs take precedence).
     pub fn drop_graph(&self, name: &str) -> bool {
-        self.graphs.write().unwrap().remove(name).is_some()
+        if self.graphs.write().unwrap().remove(name).is_some() {
+            self.labels_cache.write().unwrap().retain(|k, _| k.0 != name);
+            return true;
+        }
+        self.streams.write().unwrap().remove(name).is_some()
     }
 
     pub fn list(&self) -> Vec<(String, usize, usize)> {
@@ -80,8 +169,30 @@ impl ServerState {
             .iter()
             .map(|(k, g)| (k.clone(), g.n, g.m()))
             .collect();
+        v.extend(
+            self.streams
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(k, s)| (format!("stream/{k}"), s.n(), s.edges_ingested())),
+        );
         v.sort();
         v
+    }
+}
+
+/// Best-effort canonical form of a WAL path for the one-appender check:
+/// resolves symlinks/relative segments when the file (or its directory)
+/// exists, falls back to the textual path otherwise.
+fn canonical_wal(p: &Path) -> std::path::PathBuf {
+    if let Ok(c) = p.canonicalize() {
+        return c;
+    }
+    match (p.parent(), p.file_name()) {
+        (Some(dir), Some(f)) if !dir.as_os_str().is_empty() => {
+            dir.canonicalize().map(|d| d.join(f)).unwrap_or_else(|_| p.to_path_buf())
+        }
+        _ => p.to_path_buf(),
     }
 }
 
@@ -146,6 +257,12 @@ impl<'s> Session<'s> {
             "CC" => self.cmd_cc(&rest),
             "LABELS" => self.cmd_labels(&rest),
             "STATS" => self.cmd_stats(&rest),
+            "STREAM" => self.cmd_stream(&rest),
+            "SADD" => self.cmd_sadd(&rest),
+            "SEPOCH" => self.cmd_sepoch(&rest),
+            "SQUERY" => self.cmd_squery(&rest),
+            "SSAVE" => self.cmd_ssave(&rest),
+            "SLOAD" => self.cmd_sload(&rest),
             "LIST" => Ok(format!(
                 "OK {}",
                 self.state
@@ -157,7 +274,7 @@ impl<'s> Session<'s> {
             )),
             "DROP" => match rest.first() {
                 Some(name) if self.state.drop_graph(name) => Ok("OK".into()),
-                Some(name) => Err(anyhow!("no graph {name:?}")),
+                Some(name) => Err(anyhow!("no graph or stream {name:?}")),
                 None => Err(anyhow!("DROP needs a name")),
             },
             "METRICS" => Ok(format!("OK {}", self.state.metrics.render())),
@@ -247,19 +364,53 @@ impl<'s> Session<'s> {
         Ok(format!("OK {} {} {:.3}", cc::num_components(&r.labels), r.iterations, ms))
     }
 
+    /// `LABELS name [alg] [offset [count]]` — pages through the label
+    /// array instead of silently truncating. The reply leads with the
+    /// total label count so clients know when they have everything.
     fn cmd_labels(&self, rest: &[&str]) -> Result<String> {
-        let (name, alg_name) = match rest {
-            [name] => (*name, "C-2"),
-            [name, alg] => (*name, *alg),
-            _ => bail!("usage: LABELS name [alg]"),
-        };
+        let mut it = rest.iter();
+        let name = *it.next().ok_or_else(|| anyhow!("usage: LABELS name [alg] [off [cnt]]"))?;
+        let mut alg_name: Option<&str> = None;
+        let mut nums: Vec<usize> = Vec::new();
+        for &tok in it {
+            if let Ok(x) = tok.parse::<usize>() {
+                nums.push(x);
+            } else if nums.is_empty() && alg_name.is_none() {
+                alg_name = Some(tok);
+            } else {
+                bail!("usage: LABELS name [alg] [offset [count]], got {tok:?}");
+            }
+        }
+        let alg_name = alg_name.unwrap_or("C-2");
+        anyhow::ensure!(nums.len() <= 2, "usage: LABELS name [alg] [offset [count]]");
+        let offset = nums.first().copied().unwrap_or(0);
+        let count = nums.get(1).copied().unwrap_or(10_000);
         let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
-        let alg = self.resolve_alg(&g, alg_name)?;
-        let labels = alg.run(&g);
-        self.state.metrics.cc_runs.inc();
-        let shown = labels.len().min(10_000);
-        let body: Vec<String> = labels[..shown].iter().map(|l| l.to_string()).collect();
-        Ok(format!("OK {}", body.join(" ")))
+        // Serve every page of one (graph, alg) from a single run —
+        // paging clients would otherwise trigger a full connectivity
+        // run per page.
+        let key = (name.to_string(), alg_name.to_string());
+        let cached = self.state.labels_cache.read().unwrap().get(&key).cloned();
+        let labels = match cached {
+            Some(l) => l,
+            None => {
+                let alg = self.resolve_alg(&g, alg_name)?;
+                let l = Arc::new(alg.run(&g));
+                self.state.metrics.cc_runs.inc();
+                self.state.labels_cache.write().unwrap().insert(key, Arc::clone(&l));
+                l
+            }
+        };
+        let total = labels.len();
+        let lo = offset.min(total);
+        let hi = lo.saturating_add(count).min(total);
+        let mut out = String::with_capacity(8 + 8 * (hi - lo));
+        out.push_str(&format!("OK {total}"));
+        for l in &labels[lo..hi] {
+            out.push(' ');
+            out.push_str(&l.to_string());
+        }
+        Ok(out)
     }
 
     fn cmd_stats(&self, rest: &[&str]) -> Result<String> {
@@ -270,6 +421,128 @@ impl<'s> Session<'s> {
             "OK n={} m={} components={} diameter={} max_degree={}",
             s.n, s.m, s.num_components, s.pseudo_diameter, s.max_degree
         ))
+    }
+
+    // ------------------------------------------------- streaming verbs
+
+    fn stream(&self, name: &str) -> Result<Arc<StreamingCc>> {
+        self.state.get_stream(name).ok_or_else(|| anyhow!("no stream {name:?}"))
+    }
+
+    fn cmd_stream(&self, rest: &[&str]) -> Result<String> {
+        let (name, n, extra) = match rest {
+            [name, n, extra @ ..] if extra.len() <= 2 => (*name, n.parse::<usize>()?, extra),
+            _ => bail!("usage: STREAM name n [walpath] [maxhist]"),
+        };
+        // Extras in either order: a number is the history cap, anything
+        // else is the WAL path.
+        let mut wal: Option<&str> = None;
+        let mut hist: Option<usize> = None;
+        for tok in extra {
+            if let Ok(h) = tok.parse::<usize>() {
+                anyhow::ensure!(hist.is_none(), "duplicate maxhist argument");
+                hist = Some(h);
+            } else {
+                anyhow::ensure!(wal.is_none(), "duplicate WAL path argument");
+                wal = Some(*tok);
+            }
+        }
+        let threads = self.state.threads;
+        let s = self.state.create_stream(name, wal.map(Path::new), || {
+            let mut s = StreamingCc::open(n, threads, wal.map(Path::new))?;
+            if let Some(h) = hist {
+                s = s.with_max_history(h);
+            }
+            Ok(s)
+        })?;
+        if s.epoch() > 0 {
+            // Recovery-on-open sealed an implicit epoch, same as SLOAD.
+            self.state.metrics.stream_epochs.inc();
+        }
+        Ok(format!("OK {n} {}", s.epoch()))
+    }
+
+    fn cmd_sadd(&self, rest: &[&str]) -> Result<String> {
+        let name = rest.first().ok_or_else(|| anyhow!("usage: SADD name u v [u v ...]"))?;
+        let ids: Vec<VId> = rest[1..]
+            .iter()
+            .map(|t| t.parse::<VId>().map_err(|e| anyhow!("bad vertex id {t:?}: {e}")))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(
+            !ids.is_empty() && ids.len() % 2 == 0,
+            "SADD needs one or more u v pairs"
+        );
+        let edges: Vec<(VId, VId)> = ids.chunks_exact(2).map(|p| (p[0], p[1])).collect();
+        let s = self.stream(name)?;
+        let added = s.add_edges(&edges)?;
+        self.state.metrics.stream_edges.add(added as u64);
+        Ok(format!("OK {added} {}", s.epoch()))
+    }
+
+    fn cmd_sepoch(&self, rest: &[&str]) -> Result<String> {
+        let name = rest.first().ok_or_else(|| anyhow!("usage: SEPOCH name"))?;
+        let snap = self.stream(name)?.seal_epoch()?;
+        self.state.metrics.stream_epochs.inc();
+        Ok(format!("OK {} {}", snap.epoch, snap.num_components))
+    }
+
+    fn cmd_squery(&self, rest: &[&str]) -> Result<String> {
+        let (name, op, args) = match rest {
+            [name, op, args @ ..] => (*name, op.to_ascii_uppercase(), args),
+            _ => bail!("usage: SQUERY name SAME|SIZE|COMPS|LABEL args... [epoch]"),
+        };
+        let nums: Vec<u64> = args
+            .iter()
+            .map(|t| t.parse::<u64>().map_err(|e| anyhow!("bad number {t:?}: {e}")))
+            .collect::<Result<_>>()?;
+        let s = self.stream(name)?;
+        self.state.metrics.stream_queries.inc();
+        let vid = |x: u64| -> Result<VId> {
+            VId::try_from(x).map_err(|_| anyhow!("vertex id {x} out of range"))
+        };
+        match (op.as_str(), nums.as_slice()) {
+            ("SAME", [u, v]) | ("SAME", [u, v, _]) => {
+                let snap = s.snapshot_at(nums.get(2).copied())?;
+                let same = snap.same_comp(vid(*u)?, vid(*v)?)?;
+                Ok(format!("OK {} {}", same as u8, snap.epoch))
+            }
+            ("SIZE", [v]) | ("SIZE", [v, _]) => {
+                let snap = s.snapshot_at(nums.get(1).copied())?;
+                Ok(format!("OK {} {}", snap.comp_size(vid(*v)?)?, snap.epoch))
+            }
+            ("COMPS", []) | ("COMPS", [_]) => {
+                let snap = s.snapshot_at(nums.first().copied())?;
+                Ok(format!("OK {} {}", snap.num_components, snap.epoch))
+            }
+            ("LABEL", [v]) | ("LABEL", [v, _]) => {
+                let snap = s.snapshot_at(nums.get(1).copied())?;
+                Ok(format!("OK {} {}", snap.label(vid(*v)?)?, snap.epoch))
+            }
+            _ => bail!("usage: SQUERY name SAME u v [e] | SIZE v [e] | COMPS [e] | LABEL v [e]"),
+        }
+    }
+
+    fn cmd_ssave(&self, rest: &[&str]) -> Result<String> {
+        let (name, path) = match rest {
+            [name, path] => (*name, *path),
+            _ => bail!("usage: SSAVE name PATH"),
+        };
+        let epoch = self.stream(name)?.save_snapshot(Path::new(path))?;
+        Ok(format!("OK {epoch}"))
+    }
+
+    fn cmd_sload(&self, rest: &[&str]) -> Result<String> {
+        let (name, snap, wal) = match rest {
+            [name, snap] => (*name, *snap, None),
+            [name, snap, wal] => (*name, *snap, Some(*wal)),
+            _ => bail!("usage: SLOAD name SNAPPATH [WALPATH]"),
+        };
+        let threads = self.state.threads;
+        let s = self.state.create_stream(name, wal.map(Path::new), || {
+            StreamingCc::recover(Some(Path::new(snap)), wal.map(Path::new), threads)
+        })?;
+        self.state.metrics.stream_epochs.inc();
+        Ok(format!("OK {} {}", s.n(), s.epoch()))
     }
 }
 
@@ -396,7 +669,25 @@ mod tests {
         assert_eq!(r[0], "OK 7 3");
         // Components: {0,1,2}, {3}, {4}, {5,6} = 4.
         assert!(r[1].starts_with("OK 4 1 "), "{}", r[1]);
-        assert_eq!(r[2], "OK 0 0 0 3 4 5 5");
+        // Reply leads with the total, then the requested page.
+        assert_eq!(r[2], "OK 7 0 0 0 3 4 5 5");
+    }
+
+    #[test]
+    fn labels_paging() {
+        let r = session_roundtrip(&[
+            ("UPLOAD p 3", vec!["0 1", "1 2", "5 6"]),
+            ("LABELS p C-2 2 3", vec![]),
+            ("LABELS p 5", vec![]),
+            ("LABELS p C-2 100 5", vec![]),
+            ("LABELS p C-2 1 2 3", vec![]),
+            ("LABELS p C-2 FastSV", vec![]),
+        ]);
+        assert_eq!(r[1], "OK 7 0 3 4", "offset 2, count 3");
+        assert_eq!(r[2], "OK 7 5 5", "offset 5 with default count, default alg");
+        assert_eq!(r[3], "OK 7", "offset past the end pages empty");
+        assert!(r[4].starts_with("ERR"), "three numeric args rejected: {}", r[4]);
+        assert!(r[5].starts_with("ERR"), "two algorithm args rejected: {}", r[5]);
     }
 
     #[test]

@@ -1,0 +1,469 @@
+//! Streaming connectivity — the epoch-based online service.
+//!
+//! The paper positions Contour inside an *interactive* Arkouda/Arachne
+//! server, and ConnectIt (PAPERS.md) frames connectivity as both a
+//! static and an incremental problem where insertions interleave with
+//! queries. This module is that service for our stack:
+//!
+//! * **Ingestion** — [`StreamingCc::add_edges`] applies whole batches to
+//!   the lock-free Rem-CAS union-find ([`crate::cc::incremental`])
+//!   FastSV-style: the batch is one grouped parallel edge sweep, not m
+//!   serialized inserts. Edges are WAL-logged *before* they are applied.
+//! * **Re-contour compaction** — [`StreamingCc::seal_epoch`] snapshots
+//!   the union-find forest and runs the paper's Contour operator (C-2)
+//!   over it, re-canonicalizing every label to min-vertex-id form. The
+//!   forest has ≤ n−1 edges, so compaction costs O(n) regardless of how
+//!   many edges streamed in — and the published labels are bit-identical
+//!   to what static [`crate::cc::contour::Contour::c2`] computes on the
+//!   same graph.
+//! * **Online queries** — each seal publishes an immutable
+//!   [`Snapshot`] behind an `Arc` swap. `SAME_COMP` / `COMP_SIZE` /
+//!   `NUM_COMPS` resolve against a snapshot (current or any retained
+//!   past epoch) and never block on in-flight ingestion batches: the
+//!   only lock a query touches is a read-lock on the snapshot table,
+//!   whose writers hold it for a single O(1) pointer push.
+//! * **Durability** — a write-ahead edge log ([`wal`]) plus a binary
+//!   snapshot format ([`snapshot`]). [`StreamingCc::recover`] seeds the
+//!   union-find from the latest snapshot, replays the WAL suffix past
+//!   the snapshot's seal marker (full replay if the marker is gone —
+//!   edge re-insertion is idempotent), and seals a fresh epoch so the
+//!   recovered state is immediately queryable.
+//!
+//! Consistency model: a sealed epoch is a *consistent cut*. An
+//! ingestion gate (reader side: `add_edges`; writer side: the seal's
+//! forest capture) guarantees the captured forest contains exactly the
+//! batches acknowledged before the capture began — and the WAL seal
+//! marker is written inside the same critical section, so recovery
+//! skips exactly the edges a snapshot already covers. The gate pauses
+//! ingestion only for the O(n) capture and the buffered seal-marker
+//! append — the WAL fsync and the Contour compaction both run off the
+//! gate; queries touch neither lock and keep answering from the
+//! published snapshots throughout.
+
+pub mod snapshot;
+pub mod wal;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::cc::contour::Contour;
+use crate::cc::incremental::IncrementalCc;
+use crate::cc::{Algorithm, Labels};
+use crate::graph::EdgeList;
+use crate::par;
+use crate::VId;
+
+pub use snapshot::Snapshot;
+pub use wal::{Wal, WalRecord};
+
+/// Epoch snapshots retained for time-travel queries before the oldest
+/// is evicted. Each snapshot holds a full O(n) label array, so the
+/// default stays small; raise per stream via
+/// [`StreamingCc::with_max_history`] (or the server's `STREAM ... HIST`
+/// argument) when deeper time travel is worth the memory.
+pub const DEFAULT_MAX_HISTORY: usize = 64;
+
+/// The streaming connectivity service over a fixed vertex universe.
+pub struct StreamingCc {
+    inc: IncrementalCc,
+    threads: usize,
+    wal: Option<Mutex<Wal>>,
+    /// Where the WAL lives, when attached — exposed so owners (e.g. the
+    /// server) can refuse to attach a second appender to the same file.
+    wal_path: Option<std::path::PathBuf>,
+    /// Published snapshots, ascending by epoch. Non-empty from
+    /// construction on; the last entry is the current epoch.
+    history: RwLock<Vec<Arc<Snapshot>>>,
+    last_epoch: AtomicU64,
+    edges_ingested: AtomicUsize,
+    /// Serializes compactions (ingestion and queries never take it).
+    seal: Mutex<()>,
+    /// Ingestion gate: `add_edges` holds the read side while logging and
+    /// applying a batch; the seal's forest capture takes the write side
+    /// so each epoch is a consistent cut of acknowledged batches.
+    gate: RwLock<()>,
+    max_history: usize,
+}
+
+impl StreamingCc {
+    /// In-memory service (no durability) over `n` vertices.
+    pub fn new(n: usize, threads: usize) -> Self {
+        let identity: Labels = (0..n as VId).collect();
+        Self {
+            inc: IncrementalCc::new(n),
+            threads,
+            wal: None,
+            wal_path: None,
+            history: RwLock::new(vec![Arc::new(Snapshot::from_labels(0, 0, identity))]),
+            last_epoch: AtomicU64::new(0),
+            edges_ingested: AtomicUsize::new(0),
+            seal: Mutex::new(()),
+            gate: RwLock::new(()),
+            max_history: DEFAULT_MAX_HISTORY,
+        }
+    }
+
+    /// Durable open: attach a WAL at `wal`, recovering from it if the
+    /// file already exists (recovery-on-open) and creating it fresh
+    /// otherwise. `wal = None` degrades to [`StreamingCc::new`].
+    pub fn open(n: usize, threads: usize, wal: Option<&Path>) -> Result<Self> {
+        match wal {
+            None => Ok(Self::new(n, threads)),
+            Some(p) if p.exists() => {
+                // Validate the header before recovery: recovering seals
+                // a fresh epoch (a WAL write), which must not happen for
+                // a mismatched universe.
+                let wn = Wal::universe(p)?;
+                ensure!(
+                    wn == n,
+                    "WAL {} holds a universe of n={wn} but n={n} was requested",
+                    p.display()
+                );
+                Self::recover(None, Some(p), threads)
+            }
+            Some(p) => {
+                let mut s = Self::new(n, threads);
+                s.wal = Some(Mutex::new(Wal::create(p, n)?));
+                s.wal_path = Some(p.to_path_buf());
+                Ok(s)
+            }
+        }
+    }
+
+    /// Rebuild a service from durable state: an optional snapshot file
+    /// and/or an optional WAL (at least one required). Ends by sealing a
+    /// fresh epoch covering everything recovered, and re-attaches the
+    /// WAL for continued appends.
+    pub fn recover(snapshot: Option<&Path>, wal: Option<&Path>, threads: usize) -> Result<Self> {
+        ensure!(
+            snapshot.is_some() || wal.is_some(),
+            "recover needs a snapshot file and/or a WAL"
+        );
+        let snap = snapshot.map(Snapshot::load).transpose()?;
+        let mut records = Vec::new();
+        let mut wal_n = None;
+        if let Some(p) = wal {
+            // replay_and_repair truncates a torn tail frame (crash
+            // mid-append) so the appender re-attached below starts at a
+            // clean frame boundary.
+            let (n, recs) = Wal::replay_and_repair(p)?;
+            wal_n = Some(n);
+            records = recs;
+        }
+        let (inc, base_epoch, base_edges) = match &snap {
+            Some(s) => {
+                if let Some(wn) = wal_n {
+                    ensure!(
+                        wn == s.n(),
+                        "snapshot holds n={} but the WAL holds n={wn}",
+                        s.n()
+                    );
+                }
+                (IncrementalCc::from_labels(&s.labels), s.epoch, s.edges_ingested)
+            }
+            None => (IncrementalCc::new(wal_n.expect("ensured above")), 0, 0),
+        };
+        // Skip WAL records already folded into the snapshot: everything
+        // up to and including the seal marker for its epoch. If that
+        // marker is absent (older snapshot, rotated log), replay the
+        // whole log — re-inserting known edges is idempotent.
+        let start = match &snap {
+            Some(s) => records
+                .iter()
+                .position(|r| matches!(r, WalRecord::EpochSeal(e) if *e == s.epoch))
+                .map(|i| i + 1)
+                .unwrap_or(0),
+            None => 0,
+        };
+        let mut last_epoch = base_epoch;
+        let mut replayed = 0usize;
+        for rec in &records[start..] {
+            match rec {
+                WalRecord::Edges(batch) => {
+                    for &(u, v) in batch {
+                        inc.add_edge(u, v);
+                    }
+                    replayed += batch.len();
+                }
+                WalRecord::EpochSeal(e) => last_epoch = last_epoch.max(*e),
+            }
+        }
+        let s = Self {
+            inc,
+            threads,
+            wal: wal
+                .map(|p| Wal::append_to(p).map(|(w, _)| Mutex::new(w)))
+                .transpose()?,
+            wal_path: wal.map(|p| p.to_path_buf()),
+            history: RwLock::new(snap.into_iter().map(Arc::new).collect()),
+            last_epoch: AtomicU64::new(last_epoch),
+            edges_ingested: AtomicUsize::new(base_edges + replayed),
+            seal: Mutex::new(()),
+            gate: RwLock::new(()),
+            max_history: DEFAULT_MAX_HISTORY,
+        };
+        s.seal_epoch()?;
+        Ok(s)
+    }
+
+    /// Cap the number of retained epoch snapshots.
+    pub fn with_max_history(mut self, cap: usize) -> Self {
+        self.max_history = cap.max(1);
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.inc.n()
+    }
+
+    /// Current (latest sealed) epoch number.
+    pub fn epoch(&self) -> u64 {
+        self.last_epoch.load(Ordering::Relaxed)
+    }
+
+    /// Edge insertions acknowledged so far (duplicates counted).
+    pub fn edges_ingested(&self) -> usize {
+        self.edges_ingested.load(Ordering::Relaxed)
+    }
+
+    /// The attached WAL's path, if durable. A WAL file must back at
+    /// most one live service — a second appender would interleave
+    /// frames and corrupt the log.
+    pub fn wal_path(&self) -> Option<&Path> {
+        self.wal_path.as_deref()
+    }
+
+    /// Ingest one batch: WAL-log it, then apply it to the union-find as
+    /// a grouped parallel sweep. Returns the number of edges accepted.
+    /// Safe to call from many threads at once.
+    pub fn add_edges(&self, edges: &[(VId, VId)]) -> Result<usize> {
+        let n = self.n();
+        for &(u, v) in edges {
+            ensure!(
+                (u as usize) < n && (v as usize) < n,
+                "edge ({u}, {v}) out of range (n = {n})"
+            );
+        }
+        // Hold the ingestion gate (read side, so batches still run in
+        // parallel with each other) across log + apply + acknowledge:
+        // a seal either sees this whole batch or none of it.
+        let _ingest = self.gate.read().unwrap();
+        if let Some(w) = &self.wal {
+            w.lock().unwrap().append_edges(edges)?;
+        }
+        let inc = &self.inc;
+        par::par_for(edges.len(), self.threads, par::DEFAULT_GRAIN, |range| {
+            for e in range {
+                inc.add_edge(edges[e].0, edges[e].1);
+            }
+        });
+        self.edges_ingested.fetch_add(edges.len(), Ordering::Relaxed);
+        Ok(edges.len())
+    }
+
+    /// Live (pre-seal) connectivity probe against the union-find —
+    /// sees edges the next epoch will publish.
+    pub fn connected_live(&self, u: VId, v: VId) -> Result<bool> {
+        let n = self.n();
+        ensure!((u as usize) < n && (v as usize) < n, "vertex out of range (n = {n})");
+        Ok(self.inc.connected(u, v))
+    }
+
+    /// Seal the current epoch: run the re-contour compaction over the
+    /// union-find forest, publish the resulting snapshot, and append a
+    /// seal marker to the WAL (fsynced). Returns the new snapshot.
+    pub fn seal_epoch(&self) -> Result<Arc<Snapshot>> {
+        let _guard = self.seal.lock().unwrap();
+        let epoch = self.last_epoch.load(Ordering::Relaxed) + 1;
+        // Consistent cut: with the gate held exclusively, no batch is
+        // mid-application, so the forest is exactly the acknowledged
+        // state, and the WAL seal marker written inside the same
+        // critical section cleanly partitions the log at this epoch.
+        let (edges, forest) = {
+            let _cut = self.gate.write().unwrap();
+            let edges = self.edges_ingested.load(Ordering::Relaxed);
+            let forest = self.inc.forest_edges(self.threads);
+            if let Some(w) = &self.wal {
+                // Buffered marker append only — it fixes the log order.
+                w.lock().unwrap().seal_epoch(epoch)?;
+            }
+            (edges, forest)
+        };
+        // Durability fsync off the gate: ingestion resumes while the
+        // disk syncs (frames appended meanwhile simply ride along).
+        if let Some(w) = &self.wal {
+            w.lock().unwrap().sync()?;
+        }
+        // Re-contour compaction, off the gate so ingestion resumes while
+        // labels are recanonicalized: the forest is itself a graph with
+        // the same components, so the paper's operator over it yields
+        // the canonical min-id labelling of everything ingested so far.
+        let g = EdgeList::from_pairs(self.n(), &forest).into_csr();
+        let labels = Contour::c2().with_threads(self.threads).run(&g);
+        let snap = Arc::new(Snapshot::from_labels(epoch, edges, labels));
+        {
+            let mut h = self.history.write().unwrap();
+            h.push(Arc::clone(&snap));
+            if h.len() > self.max_history {
+                h.remove(0);
+            }
+        }
+        self.last_epoch.store(epoch, Ordering::Relaxed);
+        Ok(snap)
+    }
+
+    /// The current epoch's snapshot (wait-free for practical purposes:
+    /// the read-lock's writers hold it only for an O(1) push).
+    pub fn current(&self) -> Arc<Snapshot> {
+        let h = self.history.read().unwrap();
+        Arc::clone(h.last().expect("history is never empty"))
+    }
+
+    /// The snapshot sealed as `epoch`, if still retained.
+    pub fn at_epoch(&self, epoch: u64) -> Option<Arc<Snapshot>> {
+        let h = self.history.read().unwrap();
+        h.binary_search_by_key(&epoch, |s| s.epoch).ok().map(|i| Arc::clone(&h[i]))
+    }
+
+    /// Resolve a query target: `None` = current epoch, `Some(e)` = that
+    /// sealed epoch (error if never sealed or already evicted).
+    pub fn snapshot_at(&self, epoch: Option<u64>) -> Result<Arc<Snapshot>> {
+        match epoch {
+            None => Ok(self.current()),
+            Some(e) => self.at_epoch(e).ok_or_else(|| {
+                let h = self.history.read().unwrap();
+                let span = match (h.first(), h.last()) {
+                    (Some(a), Some(b)) => format!("{}..={}", a.epoch, b.epoch),
+                    _ => "∅".to_string(),
+                };
+                anyhow!("epoch {e} not retained (history spans {span})")
+            }),
+        }
+    }
+
+    /// Persist the current snapshot to `path`; returns its epoch.
+    pub fn save_snapshot(&self, path: &Path) -> Result<u64> {
+        let snap = self.current();
+        snap.save(path)?;
+        Ok(snap.epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc;
+    use crate::graph::gen;
+
+    #[test]
+    fn epochs_publish_min_id_labels() {
+        // Universe of 6; edges arrive in two epochs.
+        let s = StreamingCc::new(6, 1);
+        assert_eq!(s.epoch(), 0);
+        assert_eq!(s.current().labels, vec![0, 1, 2, 3, 4, 5]);
+
+        s.add_edges(&[(0, 1), (2, 3)]).unwrap();
+        let e1 = s.seal_epoch().unwrap();
+        assert_eq!(e1.epoch, 1);
+        assert_eq!(e1.labels, vec![0, 0, 2, 2, 4, 5]);
+        assert_eq!(e1.num_components, 4);
+        assert_eq!(e1.edges_ingested, 2);
+
+        s.add_edges(&[(1, 2), (4, 5)]).unwrap();
+        let e2 = s.seal_epoch().unwrap();
+        assert_eq!(e2.labels, vec![0, 0, 0, 0, 4, 4]);
+        assert_eq!(e2.num_components, 2);
+
+        // Past epochs stay queryable and immutable.
+        let back = s.at_epoch(1).unwrap();
+        assert_eq!(back.labels, vec![0, 0, 2, 2, 4, 5]);
+        assert!(!back.same_comp(0, 3).unwrap());
+        assert!(s.snapshot_at(Some(2)).unwrap().same_comp(0, 3).unwrap());
+        assert!(s.snapshot_at(Some(9)).is_err());
+        assert!(s.at_epoch(9).is_none());
+    }
+
+    #[test]
+    fn streamed_equals_static_contour() {
+        let g = gen::rmat(10, 3_000, gen::RmatKind::Graph500, 5).into_csr();
+        let s = StreamingCc::new(g.n, 0);
+        let edges: Vec<(VId, VId)> = g.edges().collect();
+        for chunk in edges.chunks(137) {
+            s.add_edges(chunk).unwrap();
+        }
+        let fin = s.seal_epoch().unwrap();
+        let want = Contour::c2().run(&g);
+        assert_eq!(fin.labels, want);
+        assert_eq!(fin.labels, cc::ground_truth(&g));
+        assert_eq!(s.edges_ingested(), edges.len());
+    }
+
+    #[test]
+    fn live_probe_sees_unsealed_edges() {
+        let s = StreamingCc::new(4, 1);
+        s.add_edges(&[(0, 3)]).unwrap();
+        assert!(s.connected_live(0, 3).unwrap());
+        // The published snapshot (epoch 0) predates the edge.
+        assert!(!s.current().same_comp(0, 3).unwrap());
+        assert!(s.connected_live(0, 9).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_edges() {
+        let s = StreamingCc::new(3, 1);
+        assert!(s.add_edges(&[(0, 1), (1, 7)]).is_err());
+        // The bad batch must not have been partially counted.
+        assert_eq!(s.edges_ingested(), 0);
+    }
+
+    #[test]
+    fn history_eviction_keeps_the_newest() {
+        let s = StreamingCc::new(8, 1).with_max_history(3);
+        for i in 0..6u32 {
+            s.add_edges(&[(i % 7, i % 7 + 1)]).unwrap();
+            s.seal_epoch().unwrap();
+        }
+        assert_eq!(s.epoch(), 6);
+        assert!(s.at_epoch(2).is_none(), "old epochs evicted");
+        assert!(s.at_epoch(4).is_some());
+        assert!(s.at_epoch(6).is_some());
+    }
+
+    #[test]
+    fn concurrent_ingestion_and_sealing() {
+        let n = 30_000usize;
+        let s = StreamingCc::new(n, 1);
+        std::thread::scope(|sc| {
+            for t in 0..4usize {
+                let s = &s;
+                sc.spawn(move || {
+                    let edges: Vec<(VId, VId)> = (t..n - 1)
+                        .step_by(4)
+                        .map(|i| (i as VId, (i + 1) as VId))
+                        .collect();
+                    for chunk in edges.chunks(256) {
+                        s.add_edges(chunk).unwrap();
+                    }
+                });
+            }
+            let s = &s;
+            sc.spawn(move || {
+                for _ in 0..5 {
+                    s.seal_epoch().unwrap();
+                }
+            });
+        });
+        let fin = s.seal_epoch().unwrap();
+        assert_eq!(fin.num_components, 1);
+        assert!(fin.labels.iter().all(|&l| l == 0));
+        // Components can only merge over epochs.
+        let h: Vec<usize> = (1..=s.epoch())
+            .filter_map(|e| s.at_epoch(e))
+            .map(|snap| snap.num_components)
+            .collect();
+        assert!(h.windows(2).all(|w| w[1] <= w[0]), "components must be non-increasing: {h:?}");
+    }
+}

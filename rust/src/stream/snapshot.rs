@@ -1,0 +1,194 @@
+//! Immutable per-epoch label snapshots and their binary on-disk format.
+//!
+//! A [`Snapshot`] is what the streaming service publishes at each epoch
+//! seal: the canonical min-vertex-id labelling produced by the
+//! re-contour compaction, plus the derived component-size table. Once
+//! built it is never mutated — readers hold it through an `Arc` and
+//! answer `SAME_COMP` / `COMP_SIZE` / `NUM_COMPS` without touching the
+//! ingestion path.
+//!
+//! Disk layout (little-endian):
+//!
+//! ```text
+//!   "CONTRSS1"  epoch: u64  edges_ingested: u64  n: u64  labels: u32 × n
+//! ```
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cc::Labels;
+use crate::VId;
+
+const SNAP_MAGIC: &[u8; 8] = b"CONTRSS1";
+
+/// One epoch's immutable connectivity view.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Epoch number (0 is the empty pre-ingestion epoch).
+    pub epoch: u64,
+    /// Edge insertions acknowledged up to the seal (duplicates counted).
+    pub edges_ingested: usize,
+    /// Canonical labelling: `labels[v]` = min vertex id in v's component.
+    pub labels: Labels,
+    pub num_components: usize,
+    sizes: HashMap<VId, u32>,
+}
+
+impl Snapshot {
+    /// Build from a canonical min-id labelling (O(n): derives the
+    /// component-size table and count).
+    pub fn from_labels(epoch: u64, edges_ingested: usize, labels: Labels) -> Self {
+        let mut sizes: HashMap<VId, u32> = HashMap::new();
+        for &l in &labels {
+            *sizes.entry(l).or_insert(0) += 1;
+        }
+        let num_components = sizes.len();
+        Self { epoch, edges_ingested, labels, num_components, sizes }
+    }
+
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    fn check(&self, v: VId) -> Result<()> {
+        ensure!((v as usize) < self.labels.len(), "vertex {v} out of range (n = {})", self.n());
+        Ok(())
+    }
+
+    /// Component label (= min vertex id of the component) of `v`.
+    pub fn label(&self, v: VId) -> Result<VId> {
+        self.check(v)?;
+        Ok(self.labels[v as usize])
+    }
+
+    /// Are `u` and `v` in the same component at this epoch?
+    pub fn same_comp(&self, u: VId, v: VId) -> Result<bool> {
+        Ok(self.label(u)? == self.label(v)?)
+    }
+
+    /// Size of `v`'s component at this epoch.
+    pub fn comp_size(&self, v: VId) -> Result<usize> {
+        let l = self.label(v)?;
+        Ok(self.sizes[&l] as usize)
+    }
+
+    /// Write the snapshot to `path` (fsynced).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create snapshot dir {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("create snapshot {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(SNAP_MAGIC)?;
+        w.write_all(&self.epoch.to_le_bytes())?;
+        w.write_all(&(self.edges_ingested as u64).to_le_bytes())?;
+        w.write_all(&(self.labels.len() as u64).to_le_bytes())?;
+        for &l in &self.labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    }
+
+    /// Load and validate a snapshot written by [`Snapshot::save`].
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let data =
+            std::fs::read(path).with_context(|| format!("read snapshot {}", path.display()))?;
+        ensure!(
+            data.len() >= 32 && &data[..8] == SNAP_MAGIC,
+            "{}: not a contour snapshot",
+            path.display()
+        );
+        let epoch = u64::from_le_bytes(data[8..16].try_into().unwrap());
+        let edges = u64::from_le_bytes(data[16..24].try_into().unwrap()) as usize;
+        let n = u64::from_le_bytes(data[24..32].try_into().unwrap()) as usize;
+        ensure!(
+            data.len() == 32 + 4 * n,
+            "{}: truncated snapshot (declares n = {n})",
+            path.display()
+        );
+        let labels: Labels = data[32..]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        for (v, &l) in labels.iter().enumerate() {
+            ensure!(
+                (l as usize) <= v && labels[l as usize] == l,
+                "{}: label table not canonical at vertex {v}",
+                path.display()
+            );
+        }
+        Ok(Snapshot::from_labels(epoch, edges, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("contour_snapshot_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn query_api_over_a_labelling() {
+        // Components {0,1,2}, {3}, {4,5}.
+        let s = Snapshot::from_labels(3, 9, vec![0, 0, 0, 3, 4, 4]);
+        assert_eq!(s.epoch, 3);
+        assert_eq!(s.num_components, 3);
+        assert!(s.same_comp(1, 2).unwrap());
+        assert!(!s.same_comp(2, 3).unwrap());
+        assert_eq!(s.comp_size(1).unwrap(), 3);
+        assert_eq!(s.comp_size(3).unwrap(), 1);
+        assert_eq!(s.label(5).unwrap(), 4);
+        assert!(s.label(6).is_err());
+        assert!(s.same_comp(0, 99).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = temp("round_trip.snap");
+        let s = Snapshot::from_labels(7, 42, vec![0, 0, 2, 2, 2, 5]);
+        s.save(&p).unwrap();
+        let back = Snapshot::load(&p).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.edges_ingested, 42);
+        assert_eq!(back.labels, s.labels);
+        assert_eq!(back.num_components, 3);
+        assert_eq!(back.comp_size(4).unwrap(), 3);
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_non_canonical_tables() {
+        let p = temp("garbage.snap");
+        std::fs::write(&p, b"not a snapshot at all........").unwrap();
+        assert!(Snapshot::load(&p).is_err());
+
+        // Valid header, non-canonical labels (vertex 1 labelled above itself).
+        let q = temp("non_canonical.snap");
+        let s = Snapshot::from_labels(1, 1, vec![0, 0, 2]);
+        s.save(&q).unwrap();
+        let mut data = std::fs::read(&q).unwrap();
+        data[32 + 4..32 + 8].copy_from_slice(&2u32.to_le_bytes()); // labels[1] = 2
+        std::fs::write(&q, &data).unwrap();
+        assert!(Snapshot::load(&q).is_err());
+
+        // Truncated payload.
+        let r = temp("truncated.snap");
+        s.save(&r).unwrap();
+        let data = std::fs::read(&r).unwrap();
+        std::fs::write(&r, &data[..data.len() - 2]).unwrap();
+        assert!(Snapshot::load(&r).is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! Streaming-subsystem integration tests: streamed labels against
+//! static Contour on the same final graph across graph families, WAL +
+//! snapshot crash-recovery round trips, non-blocking concurrent
+//! queries, and the server's STREAM* verbs end to end.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use contour::cc::{self, contour::Contour, Algorithm};
+use contour::graph::{gen, Csr};
+use contour::server::{ServerState, Session};
+use contour::stream::{Snapshot, StreamingCc, Wal, WalRecord};
+use contour::VId;
+
+fn families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("path", gen::path(900).into_csr().shuffled_edges(1)),
+        ("star", gen::star(700).into_csr().shuffled_edges(2)),
+        ("rmat", gen::rmat(11, 9_000, gen::RmatKind::Graph500, 3).into_csr()),
+        ("soup", gen::component_soup(15, 50, 4).into_csr().shuffled_edges(5)),
+    ]
+}
+
+/// ACCEPTANCE: streamed labels equal static `Contour::c2()` labels
+/// (min-vertex-id canonical form) on the same final graph, for every
+/// family, at every intermediate epoch (vs. static run on the prefix).
+#[test]
+fn streamed_labels_match_static_contour_per_family() {
+    for (name, g) in families() {
+        let s = StreamingCc::new(g.n, 0);
+        let edges: Vec<(VId, VId)> = g.edges().collect();
+        let mut fed = 0usize;
+        for chunk in edges.chunks(251) {
+            s.add_edges(chunk).unwrap();
+            fed += chunk.len();
+            // Spot-check a prefix epoch halfway through the feed.
+            if fed >= edges.len() / 2 && fed - chunk.len() < edges.len() / 2 {
+                let snap = s.seal_epoch().unwrap();
+                let prefix =
+                    contour::graph::EdgeList::from_pairs(g.n, &edges[..fed]).into_csr();
+                assert_eq!(
+                    snap.labels,
+                    Contour::c2().run(&prefix),
+                    "{name}: prefix epoch diverges"
+                );
+            }
+        }
+        let fin = s.seal_epoch().unwrap();
+        let want = Contour::c2().run(&g);
+        assert_eq!(fin.labels, want, "{name}: final labels diverge from static C-2");
+        assert_eq!(fin.num_components, cc::num_components(&want), "{name}");
+        assert_eq!(fin.labels, cc::ground_truth(&g), "{name}: not min-id canonical");
+    }
+}
+
+/// ACCEPTANCE: WAL + snapshot crash-recovery round trip reproduces the
+/// static labelling — with the snapshot + WAL suffix, with the WAL
+/// alone, and through a second-generation recovery.
+#[test]
+fn crash_recovery_round_trip() {
+    let dir = std::env::temp_dir().join("contour_stream_recovery_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal = dir.join("g.wal");
+    let snap = dir.join("g.snap");
+    let _ = std::fs::remove_file(&wal);
+
+    let g = gen::rmat(10, 4_000, gen::RmatKind::Graph500, 9).into_csr();
+    let edges: Vec<(VId, VId)> = g.edges().collect();
+    let half = edges.len() / 2;
+    {
+        let s = StreamingCc::open(g.n, 1, Some(wal.as_path())).unwrap();
+        s.add_edges(&edges[..half]).unwrap();
+        s.seal_epoch().unwrap();
+        s.save_snapshot(&snap).unwrap();
+        s.add_edges(&edges[half..]).unwrap();
+        // "Crash": dropped with the second half only in the WAL.
+    }
+    let want = Contour::c2().run(&g);
+
+    // Snapshot + WAL suffix.
+    let r = StreamingCc::recover(Some(snap.as_path()), Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r.current().labels, want);
+    assert_eq!(r.edges_ingested(), edges.len());
+    assert!(r.epoch() >= 2, "recovery seals a fresh epoch");
+
+    // WAL alone (full replay; recovery above appended its own seal —
+    // harmless on replay).
+    let r2 = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r2.current().labels, want);
+
+    // Recovered streams stay usable and durable: keep ingesting through
+    // the re-attached WAL, then recover once more.
+    r2.add_edges(&[(0, (g.n - 1) as VId)]).unwrap();
+    let sealed = r2.seal_epoch().unwrap();
+    drop(r2);
+    let r3 = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r3.current().labels, sealed.labels);
+    assert!(r3.current().same_comp(0, (g.n - 1) as VId).unwrap());
+
+    // The raw log really is the full edge history.
+    let (wn, records) = Wal::replay(&wal).unwrap();
+    assert_eq!(wn, g.n);
+    let logged: usize = records
+        .iter()
+        .map(|rec| match rec {
+            WalRecord::Edges(b) => b.len(),
+            WalRecord::EpochSeal(_) => 0,
+        })
+        .sum();
+    assert_eq!(logged, edges.len() + 1);
+}
+
+/// `open` with an existing WAL path is recovery-on-open.
+#[test]
+fn open_recovers_existing_wal() {
+    let dir = std::env::temp_dir().join("contour_stream_open_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal = dir.join("reopen.wal");
+    let _ = std::fs::remove_file(&wal);
+
+    let g = gen::component_soup(6, 30, 2).into_csr();
+    let edges: Vec<(VId, VId)> = g.edges().collect();
+    {
+        let s = StreamingCc::open(g.n, 1, Some(wal.as_path())).unwrap();
+        s.add_edges(&edges).unwrap();
+    }
+    let s = StreamingCc::open(g.n, 1, Some(wal.as_path())).unwrap();
+    assert_eq!(s.current().labels, Contour::c2().run(&g));
+    // Mismatched universe is refused.
+    assert!(StreamingCc::open(g.n + 5, 1, Some(wal.as_path())).is_err());
+}
+
+/// ACCEPTANCE: concurrent SQUERY-style reads never block on ingestion
+/// batches — readers make continuous progress against immutable
+/// snapshots while writers ingest and seal, and every positive
+/// connectivity observation stays true in the final graph.
+#[test]
+fn concurrent_queries_during_ingestion() {
+    let n = 40_000usize;
+    let s = StreamingCc::new(n, 1);
+    let done = AtomicBool::new(false);
+    std::thread::scope(|sc| {
+        let readers: Vec<_> = (0..4u64)
+            .map(|r| {
+                let s = &s;
+                let done = &done;
+                sc.spawn(move || {
+                    let mut rng = contour::util::SplitMix64::new(77 + r);
+                    let mut queries = 0u64;
+                    let mut positives = Vec::new();
+                    while !done.load(Ordering::Relaxed) {
+                        let snap = s.current();
+                        let u = (rng.next_u64() % n as u64) as VId;
+                        let v = (rng.next_u64() % n as u64) as VId;
+                        if snap.same_comp(u, v).unwrap() && u != v {
+                            positives.push((u, v));
+                        }
+                        assert!(snap.comp_size(u).unwrap() >= 1);
+                        queries += 1;
+                    }
+                    assert!(queries > 0, "reader starved");
+                    positives
+                })
+            })
+            .collect();
+        std::thread::scope(|wc| {
+            for t in 0..3usize {
+                let s = &s;
+                wc.spawn(move || {
+                    let edges: Vec<(VId, VId)> = (t..n - 1)
+                        .step_by(3)
+                        .map(|i| (i as VId, (i + 1) as VId))
+                        .collect();
+                    for chunk in edges.chunks(512) {
+                        s.add_edges(chunk).unwrap();
+                    }
+                });
+            }
+            let s = &s;
+            wc.spawn(move || {
+                for _ in 0..6 {
+                    s.seal_epoch().unwrap();
+                    std::thread::yield_now();
+                }
+            });
+        });
+        done.store(true, Ordering::Relaxed);
+        let fin = s.seal_epoch().unwrap();
+        assert!(fin.labels.iter().all(|&l| l == 0), "path must collapse to one component");
+        for h in readers {
+            for (u, v) in h.join().unwrap() {
+                assert_eq!(fin.labels[u as usize], fin.labels[v as usize]);
+            }
+        }
+    });
+}
+
+/// The server's streaming verbs, driven through a Session exactly like
+/// a TCP client would.
+#[test]
+fn server_stream_verbs_end_to_end() {
+    let dir = std::env::temp_dir().join("contour_server_stream_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("srv.snap");
+    let wal = dir.join("srv.wal");
+    let _ = std::fs::remove_file(&wal);
+
+    let state = ServerState::new(1);
+    let mut session = Session::new(&state);
+    let mut ask = |line: String| session.handle(&line, || unreachable!()).unwrap();
+
+    assert_eq!(ask(format!("STREAM st 6 {}", wal.display())), "OK 6 0");
+    assert_eq!(ask("SADD st 0 1 2 3".into()), "OK 2 0");
+    // Epoch 0 predates the batch.
+    assert_eq!(ask("SQUERY st SAME 0 1".into()), "OK 0 0");
+    assert_eq!(ask("SEPOCH st".into()), "OK 1 4");
+    assert_eq!(ask("SQUERY st SAME 0 1".into()), "OK 1 1");
+    assert_eq!(ask("SQUERY st SIZE 0".into()), "OK 2 1");
+    assert_eq!(ask("SQUERY st COMPS".into()), "OK 4 1");
+    assert_eq!(ask("SQUERY st LABEL 3".into()), "OK 2 1");
+    // Time travel to the sealed-but-empty epoch 0.
+    assert_eq!(ask("SQUERY st SAME 0 1 0".into()), "OK 0 0");
+    assert_eq!(ask("SQUERY st COMPS 0".into()), "OK 6 0");
+    assert!(ask("SQUERY st COMPS 99".into()).starts_with("ERR"));
+    assert!(ask("SQUERY st SAME 0 9".into()).starts_with("ERR"));
+    assert!(ask("SADD st 5".into()).starts_with("ERR"), "odd id count");
+    assert!(ask("SADD st 0 42".into()).starts_with("ERR"), "out of range");
+
+    // Durability verbs.
+    assert_eq!(ask(format!("SSAVE st {}", snap.display())), "OK 1");
+    assert!(ask(format!("SLOAD st {}", snap.display())).starts_with("ERR"), "name taken");
+    // The live stream still owns its WAL: a second appender is refused.
+    assert!(
+        ask(format!("SLOAD st2 {} {}", snap.display(), wal.display())).starts_with("ERR"),
+        "one WAL, one stream"
+    );
+    assert!(ask(format!("STREAM st3 6 {}", wal.display())).starts_with("ERR"));
+    // Snapshot-only recovery is fine alongside the live stream.
+    let reply = ask(format!("SLOAD st2 {}", snap.display()));
+    assert!(reply.starts_with("OK 6 "), "{reply}");
+    assert_eq!(ask("SQUERY st2 SAME 0 1".into()), format!("OK 1 {}", &reply[5..]));
+
+    // LIST shows streams; DROP removes them.
+    let list = ask("LIST".into());
+    assert!(list.contains("stream/st:6:2"), "{list}");
+    assert!(list.contains("stream/st2:6:2"), "{list}");
+    assert_eq!(ask("DROP st2".into()), "OK");
+    assert!(ask("SQUERY st2 COMPS".into()).starts_with("ERR"));
+
+    // Metrics picked up the streaming counters.
+    let metrics = ask("METRICS".into());
+    assert!(metrics.contains("streams=2"), "{metrics}");
+    assert!(metrics.contains("stream_edges=2"), "{metrics}");
+    assert!(metrics.contains("stream_queries="), "{metrics}");
+
+    // A numeric extra on STREAM caps the retained epoch history.
+    assert_eq!(ask("STREAM hist 5 2".into()), "OK 5 0");
+    assert_eq!(ask("SADD hist 0 1".into()), "OK 1 0");
+    assert_eq!(ask("SEPOCH hist".into()), "OK 1 4");
+    assert_eq!(ask("SEPOCH hist".into()), "OK 2 4");
+    assert_eq!(ask("SEPOCH hist".into()), "OK 3 4");
+    assert!(ask("SQUERY hist COMPS 1".into()).starts_with("ERR"), "epoch 1 evicted");
+    assert_eq!(ask("SQUERY hist COMPS 3".into()), "OK 4 3");
+}
+
+/// Snapshots on disk are validated, versioned artifacts.
+#[test]
+fn snapshot_files_round_trip_through_disk() {
+    let dir = std::env::temp_dir().join("contour_stream_snapfile_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("roundtrip.snap");
+
+    let g = gen::erdos_renyi(400, 700, 3).into_csr();
+    let s = StreamingCc::new(g.n, 1);
+    s.add_edges(&g.edges().collect::<Vec<_>>()).unwrap();
+    s.seal_epoch().unwrap();
+    s.save_snapshot(&p).unwrap();
+
+    let loaded = Snapshot::load(&p).unwrap();
+    assert_eq!(loaded.labels, Contour::c2().run(&g));
+    assert_eq!(loaded.epoch, 1);
+
+    // Recovery from the snapshot alone (no WAL) restores the state.
+    let r = StreamingCc::recover(Some(p.as_path()), None, 1).unwrap();
+    assert_eq!(r.current().labels, loaded.labels);
+    assert_eq!(r.n(), g.n);
+}
