@@ -8,6 +8,7 @@ use contour::bench::{measure, Table};
 use contour::cc::contour::{Contour, UpdateMode, WriteMode};
 use contour::cc::Algorithm;
 use contour::graph::gen;
+use contour::par;
 
 fn main() {
     let g = gen::rmat(18, 1 << 22, gen::RmatKind::Graph500, 1).into_csr();
@@ -50,6 +51,26 @@ fn main() {
     for threads in [1usize, 2, 4, 8, 16] {
         bench(&format!("threads/{threads}"), "rmat", &g, Contour::c2().with_threads(threads));
     }
+    // Parallel substrate (pool PR): persistent worker pool vs the old
+    // spawn-per-call scoped threads, same C-2 runs on three shapes with
+    // different pass profiles — rmat (few heavy passes), shuffled path
+    // (many passes, so spawn/join churn is paid O(log d) times), road
+    // (mid-diameter). The pool amortizes thread startup across passes.
+    let pathg = gen::path(1 << 19).into_csr().shuffled_edges(9);
+    for (mode, label) in
+        [(par::ExecMode::SpawnPerCall, "spawn"), (par::ExecMode::Pooled, "pool")]
+    {
+        par::set_exec_mode(mode);
+        bench(&format!("exec/{label}"), "rmat", &g, Contour::c2());
+        bench(&format!("exec/{label}"), "path", &pathg, Contour::c2());
+        bench(&format!("exec/{label}"), "road", &road, Contour::c2());
+    }
+    par::set_exec_mode(par::ExecMode::Pooled);
+    let pool = par::pool::stats();
+    println!(
+        "pool: workers={} jobs={} pulls={} parks={} wakes={}\n",
+        pool.workers, pool.jobs, pool.pulls, pool.parks, pool.wakes
+    );
     // Baselines for context.
     for name in ["FastSV", "ConnectIt"] {
         let alg = contour::coordinator::algorithm_by_name(name, 0).unwrap();

@@ -61,7 +61,7 @@ impl Algorithm for Afforest {
         // Phase 1: union each vertex with its first `sample_rounds`
         // neighbors (covers most of the giant component cheaply).
         for r in 0..self.sample_rounds {
-            par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+            par::par_for(n, t, par::AUTO_GRAIN, |range| {
                 for v in range {
                     let nb = g.neighbors(v as VId);
                     if let Some(&w) = nb.get(r) {
@@ -79,7 +79,7 @@ impl Algorithm for Afforest {
         }
         let giant = counts.into_iter().max_by_key(|&(_, c)| c).map(|(r, _)| r);
         // Phase 3: finish the remaining adjacency of non-giant vertices.
-        par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+        par::par_for(n, t, par::AUTO_GRAIN, |range| {
             for v in range {
                 if Some(Self::find(pr, v as VId)) == giant {
                     continue; // already in the giant component
@@ -93,7 +93,7 @@ impl Algorithm for Afforest {
             }
         });
         // Flatten.
-        par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+        par::par_for(n, t, par::AUTO_GRAIN, |range| {
             for v in range {
                 let r = Self::find(pr, v as VId);
                 pr[v].store(r, Ordering::Relaxed);

@@ -186,7 +186,7 @@ impl Algorithm for ConnectItVariant {
             Sampling::None => None,
             Sampling::KOut(k) => {
                 for round in 0..k {
-                    par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+                    par::par_for(n, t, par::AUTO_GRAIN, |range| {
                         for v in range {
                             if let Some(&w) = g.neighbors(v as VId).get(round) {
                                 self.unite(pr, v as VId, w);
@@ -222,7 +222,7 @@ impl Algorithm for ConnectItVariant {
         // ---- Finish phase: remaining edges (skipping the giant's own).
         let src = &g.src;
         let dst = &g.dst;
-        par::par_for(g.m(), t, par::DEFAULT_GRAIN, |range| {
+        par::par_for(g.m(), t, par::AUTO_GRAIN, |range| {
             for e in range {
                 let (u, v) = (src[e], dst[e]);
                 if let Some(c) = giant {
@@ -234,7 +234,7 @@ impl Algorithm for ConnectItVariant {
             }
         });
         // ---- Flatten to stars.
-        par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+        par::par_for(n, t, par::AUTO_GRAIN, |range| {
             for v in range {
                 let r = self.find_root(pr, v as VId);
                 pr[v].store(r, Ordering::Relaxed);

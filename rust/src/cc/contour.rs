@@ -219,7 +219,7 @@ impl Contour {
         par::par_map_reduce(
             g.m(),
             self.threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             || false,
             |acc, range| {
                 for e in range {
@@ -253,7 +253,7 @@ impl Contour {
         par::par_map_reduce(
             g.m(),
             self.threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             || false,
             |acc, range| {
                 for e in range {
@@ -282,7 +282,7 @@ impl Contour {
         par::par_map_reduce(
             g.m(),
             self.threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             || false,
             |acc, range| {
                 for e in range {
@@ -328,7 +328,7 @@ impl Contour {
         par::par_map_reduce(
             g.m(),
             self.threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             || false,
             |acc, range| {
                 // (chain nodes, current label of the last node, length)
@@ -403,7 +403,7 @@ impl Contour {
         par::par_map_reduce(
             g.m(),
             self.threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             || true,
             |acc, range| {
                 if !*acc {
@@ -469,7 +469,7 @@ fn finalize_stars(labels: &AtomicLabels, threads: usize) {
         let changed = par::par_map_reduce(
             labels.len(),
             threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             || false,
             |acc, range| {
                 for v in range {

@@ -49,7 +49,7 @@ impl Algorithm for FastSv {
             {
                 let fr = &f;
                 let slots = par::SyncSlice::new(&mut gf);
-                par::par_for(n, t, par::DEFAULT_GRAIN, |range| {
+                par::par_for(n, t, par::AUTO_GRAIN, |range| {
                     for v in range {
                         // SAFETY: disjoint ranges.
                         unsafe { slots.write(v, fr.load(fr.load(v as VId))) };
@@ -63,7 +63,7 @@ impl Algorithm for FastSv {
             let dst = &g.dst;
             let fr = &f;
             let fx = &fnext;
-            par::par_for(g.m(), t, par::DEFAULT_GRAIN, |range| {
+            par::par_for(g.m(), t, par::AUTO_GRAIN, |range| {
                 for e in range {
                     let (u, v) = (src[e], dst[e]);
                     let gfu = gf_ref[u as usize];
@@ -80,7 +80,7 @@ impl Algorithm for FastSv {
             let changed = par::par_map_reduce(
                 n,
                 t,
-                par::DEFAULT_GRAIN,
+                par::AUTO_GRAIN,
                 || false,
                 |acc, range| {
                     for v in range {

@@ -33,7 +33,7 @@ impl IncrementalCc {
         let src = &g.src;
         let dst = &g.dst;
         let p = &idx.parent;
-        par::par_for(g.m(), threads, par::DEFAULT_GRAIN, |range| {
+        par::par_for(g.m(), threads, par::AUTO_GRAIN, |range| {
             for e in range {
                 RemConcurrent::unite(p, src[e], dst[e]);
             }
@@ -75,7 +75,7 @@ impl IncrementalCc {
         par::par_map_reduce(
             self.n(),
             threads,
-            par::DEFAULT_GRAIN,
+            par::AUTO_GRAIN,
             Vec::new,
             |acc: &mut Vec<(VId, VId)>, range| {
                 for v in range {
@@ -143,7 +143,7 @@ impl IncrementalCc {
         let mut out = vec![0 as VId; n];
         {
             let slots = par::SyncSlice::new(&mut out);
-            par::par_for(n, threads, par::DEFAULT_GRAIN, |range| {
+            par::par_for(n, threads, par::AUTO_GRAIN, |range| {
                 for v in range {
                     // SAFETY: disjoint ranges.
                     unsafe { slots.write(v, self.find(v as VId)) };

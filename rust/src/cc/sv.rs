@@ -36,7 +36,7 @@ impl Algorithm for ShiloachVishkin {
             let hooked = par::par_map_reduce(
                 g.m(),
                 t,
-                par::DEFAULT_GRAIN,
+                par::AUTO_GRAIN,
                 || false,
                 |acc, range| {
                     for e in range {
@@ -59,7 +59,7 @@ impl Algorithm for ShiloachVishkin {
                 shortcutted = par::par_map_reduce(
                     n,
                     t,
-                    par::DEFAULT_GRAIN,
+                    par::AUTO_GRAIN,
                     || false,
                     |acc, range| {
                         for v in range {

@@ -137,13 +137,13 @@ impl Algorithm for RemConcurrent {
         let src = &g.src;
         let dst = &g.dst;
         let pr = &p;
-        par::par_for(g.m(), self.threads, par::DEFAULT_GRAIN, |range| {
+        par::par_for(g.m(), self.threads, par::AUTO_GRAIN, |range| {
             for e in range {
                 Self::unite(pr, src[e], dst[e]);
             }
         });
         // Parallel flatten: pointer-jump every vertex to its root.
-        par::par_for(n, self.threads, par::DEFAULT_GRAIN, |range| {
+        par::par_for(n, self.threads, par::AUTO_GRAIN, |range| {
             for v in range {
                 let mut r = pr[v].load(Ordering::Relaxed);
                 loop {

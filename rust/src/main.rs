@@ -243,8 +243,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?;
     let state = std::sync::Arc::new(contour::server::ServerState::new(threads));
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    println!("contour server on {addr} (Ctrl-C to stop)");
-    contour::server::serve(&addr, state, shutdown)
+    // Bind before announcing: with `--addr host:0` the OS assigns the
+    // port, and the printed address is the one clients can reach.
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("contour server on {} (Ctrl-C to stop)", listener.local_addr()?);
+    contour::server::serve_listener(listener, state, shutdown)
 }
 
 /// Streaming-connectivity driver: replays a graph's edges as a live

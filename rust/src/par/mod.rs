@@ -1,18 +1,25 @@
 //! Parallel-for substrate.
 //!
 //! The image has no `rayon`, so this module provides the crate's parallel
-//! loops on top of `std::thread::scope`: dynamically-scheduled chunked
-//! iteration (the analog of Chapel's `forall` the paper's implementation
-//! uses) plus a map-reduce combinator. Workers pull chunks off an atomic
-//! cursor, so skewed per-edge work (power-law graphs) load-balances.
+//! loops: dynamically-scheduled chunked iteration (the analog of Chapel's
+//! `forall` the paper's implementation uses) plus a map-reduce
+//! combinator. Workers pull chunks off an atomic cursor, so skewed
+//! per-edge work (power-law graphs) load-balances.
 //!
-//! Threads are spawned per call; for the edge-loop sizes the algorithms
-//! run on (>= tens of thousands of edges) the spawn cost is noise, and
-//! [`par_for`] degrades to a plain sequential loop below
-//! [`SEQ_CUTOFF`] items so small graphs pay nothing.
+//! Passes run on the persistent worker [`pool`] by default: workers are
+//! spawned once, park between jobs, and are woken per pass — a Contour
+//! run issues O(log d_max) passes and the server issues them per
+//! request, so per-call `std::thread::scope` spawning (the previous
+//! substrate, kept as [`ExecMode::SpawnPerCall`] for comparison and as
+//! an escape hatch via `CONTOUR_EXEC=spawn`) paid thread churn on the
+//! hottest path in the crate. [`par_for`] still degrades to a plain
+//! sequential loop for small inputs so tiny graphs pay nothing.
+
+pub mod pool;
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Below this many items a parallel loop runs inline on the caller.
 pub const SEQ_CUTOFF: usize = 1 << 14;
@@ -21,32 +28,153 @@ pub const SEQ_CUTOFF: usize = 1 << 14;
 /// to amortize the atomic, small enough to balance skew.
 pub const DEFAULT_GRAIN: usize = 1 << 12;
 
-/// Number of worker threads: `CONTOUR_THREADS` env override, else the
-/// machine's available parallelism.
-pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("CONTOUR_THREADS") {
-        if let Ok(t) = v.parse::<usize>() {
-            return t.max(1);
+/// Grain sentinel: pick the chunk size adaptively from `(len, threads)`
+/// via [`adaptive_grain`]. This is what the algorithm hot loops pass, so
+/// short late-stage passes (a few surviving edges) are split finely
+/// enough to keep every worker busy while long passes keep big chunks.
+pub const AUTO_GRAIN: usize = 0;
+
+/// How parallel passes execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Persistent worker pool (default): workers park between passes.
+    Pooled,
+    /// Spawn and join scoped threads on every pass (the pre-pool
+    /// substrate; kept for the `hotpath` bench and as an escape hatch).
+    SpawnPerCall,
+}
+
+/// 0 = unresolved, 1 = pooled, 2 = spawn-per-call.
+static EXEC_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Current execution mode; first call consults `CONTOUR_EXEC`
+/// (`spawn` selects [`ExecMode::SpawnPerCall`], anything else pools).
+pub fn exec_mode() -> ExecMode {
+    match EXEC_MODE.load(Ordering::Relaxed) {
+        1 => ExecMode::Pooled,
+        2 => ExecMode::SpawnPerCall,
+        _ => {
+            let m = match std::env::var("CONTOUR_EXEC").as_deref() {
+                Ok("spawn") => ExecMode::SpawnPerCall,
+                _ => ExecMode::Pooled,
+            };
+            set_exec_mode(m);
+            m
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Force an execution mode (used by benches to compare substrates).
+pub fn set_exec_mode(m: ExecMode) {
+    let v = match m {
+        ExecMode::Pooled => 1,
+        ExecMode::SpawnPerCall => 2,
+    };
+    EXEC_MODE.store(v, Ordering::Relaxed);
+}
+
+/// Number of worker threads: `CONTOUR_THREADS` env override, else the
+/// machine's available parallelism. Resolved **once** — the pool sizes
+/// itself from this value, and later env mutations must not change how
+/// many workers a pass believes it has (they used to, which made
+/// concurrent tests racy).
+pub fn num_threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        threads_from_env()
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// Parse the `CONTOUR_THREADS` override from the environment (split out
+/// so tests can exercise the parse without poking the cached value).
+pub(crate) fn threads_from_env() -> Option<usize> {
+    std::env::var("CONTOUR_THREADS").ok()?.parse::<usize>().ok().map(|t| t.max(1))
+}
+
+/// Chunk size targeting ~8 pulls per worker — enough slack for the
+/// dynamic cursor to rebalance skew — clamped so chunks stay big enough
+/// to amortize the cursor atomic and small enough to share.
+pub fn adaptive_grain(len: usize, threads: usize) -> usize {
+    (len / (threads.max(1) * 8)).clamp(1 << 10, 1 << 14)
+}
+
+#[inline]
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        num_threads()
+    } else {
+        threads
+    }
+}
+
+#[inline]
+fn resolve_grain(grain: usize, len: usize, threads: usize) -> usize {
+    if grain == AUTO_GRAIN {
+        adaptive_grain(len, threads)
+    } else {
+        grain.max(1)
+    }
+}
+
+/// Run this pass inline on the caller? Yes when parallelism is off,
+/// when the caller is already inside a pool job (nested pass), or when
+/// the pass is small. For adaptive passes the smallness threshold stays
+/// at [`DEFAULT_GRAIN`] — the pre-pool behavior — even though the
+/// adaptive bottom clamp is finer: waking workers for a few thousand
+/// cheap items costs more than the loop itself.
+#[inline]
+fn run_inline(len: usize, threads: usize, grain_arg: usize, grain: usize) -> bool {
+    let small = if grain_arg == AUTO_GRAIN { DEFAULT_GRAIN } else { grain };
+    threads <= 1 || len <= SEQ_CUTOFF.min(small) || pool::in_job()
 }
 
 /// Dynamically-scheduled parallel for over `0..len` with `threads` workers
 /// (0 = [`num_threads`]). `f` receives disjoint subranges covering `0..len`
-/// exactly once.
+/// exactly once. Nested calls (from inside another parallel pass) run
+/// inline sequentially: the outer pass already owns the workers.
 pub fn par_for<F>(len: usize, threads: usize, grain: usize, f: F)
 where
     F: Fn(Range<usize>) + Sync,
 {
-    let threads = if threads == 0 { num_threads() } else { threads };
-    let grain = grain.max(1);
-    if threads <= 1 || len <= SEQ_CUTOFF.min(grain) {
+    let threads = resolve_threads(threads);
+    let resolved = resolve_grain(grain, len, threads);
+    if run_inline(len, threads, grain, resolved) {
         if len > 0 {
             f(0..len);
         }
         return;
     }
+    let grain = resolved;
+    match exec_mode() {
+        ExecMode::SpawnPerCall => par_for_spawn(len, threads, grain, &f),
+        ExecMode::Pooled => {
+            let p = pool::global();
+            if threads > p.max_threads() {
+                // The pool cannot grow: honor explicit requests beyond
+                // its size (e.g. oversubscription sweeps in benches)
+                // with the spawn-per-call substrate.
+                return par_for_spawn(len, threads, grain, &f);
+            }
+            let metrics = p.metrics();
+            let cursor = AtomicUsize::new(0);
+            p.run(threads - 1, &|| loop {
+                let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                if start >= len {
+                    break;
+                }
+                metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                f(start..(start + grain).min(len));
+            });
+        }
+    }
+}
+
+/// The pre-pool `par_for` body: scoped threads spawned per call.
+fn par_for_spawn<F>(len: usize, threads: usize, grain: usize, f: &F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
     let cursor = AtomicUsize::new(0);
     let worker = |_wid: usize| loop {
         let start = cursor.fetch_add(grain, Ordering::Relaxed);
@@ -81,15 +209,67 @@ where
     F: Fn(&mut R, Range<usize>) + Sync,
     C: Fn(R, R) -> R,
 {
-    let threads = if threads == 0 { num_threads() } else { threads };
-    let grain = grain.max(1);
-    if threads <= 1 || len <= SEQ_CUTOFF.min(grain) {
+    let threads = resolve_threads(threads);
+    let resolved = resolve_grain(grain, len, threads);
+    if run_inline(len, threads, grain, resolved) {
         let mut acc = init();
         if len > 0 {
             fold(&mut acc, 0..len);
         }
         return acc;
     }
+    let grain = resolved;
+    match exec_mode() {
+        ExecMode::SpawnPerCall => par_map_reduce_spawn(len, threads, grain, &init, &fold, &combine),
+        ExecMode::Pooled => {
+            let p = pool::global();
+            if threads > p.max_threads() {
+                // See par_for: over-pool-size requests keep the old
+                // spawn-per-call semantics.
+                return par_map_reduce_spawn(len, threads, grain, &init, &fold, &combine);
+            }
+            let metrics = p.metrics();
+            let cursor = AtomicUsize::new(0);
+            // Each participant parks its local accumulator here; the
+            // caller combines after the pass (so `combine` needs no
+            // `Sync` bound, matching the old signature).
+            let accs: std::sync::Mutex<Vec<R>> = std::sync::Mutex::new(Vec::new());
+            p.run(threads - 1, &|| {
+                let mut acc = init();
+                loop {
+                    let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                    if start >= len {
+                        break;
+                    }
+                    metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                    fold(&mut acc, start..(start + grain).min(len));
+                }
+                accs.lock().unwrap().push(acc);
+            });
+            let mut parts = accs.into_inner().unwrap().into_iter();
+            // The submitting thread always participates, so there is at
+            // least one accumulator.
+            let first = parts.next().unwrap_or_else(&init);
+            parts.fold(first, &combine)
+        }
+    }
+}
+
+/// The pre-pool `par_map_reduce` body: scoped threads per call.
+fn par_map_reduce_spawn<R, I, F, C>(
+    len: usize,
+    threads: usize,
+    grain: usize,
+    init: &I,
+    fold: &F,
+    combine: &C,
+) -> R
+where
+    R: Send,
+    I: Fn() -> R + Sync,
+    F: Fn(&mut R, Range<usize>) + Sync,
+    C: Fn(R, R) -> R,
+{
     let cursor = AtomicUsize::new(0);
     let worker = || {
         let mut acc = init();
@@ -126,7 +306,7 @@ where
     let mut out = vec![T::default(); len];
     {
         let slots = SyncSlice::new(&mut out);
-        par_for(len, threads, DEFAULT_GRAIN, |r| {
+        par_for(len, threads, AUTO_GRAIN, |r| {
             for i in r {
                 // SAFETY: ranges from par_for are disjoint.
                 unsafe { slots.write(i, f(i)) };
@@ -176,6 +356,12 @@ impl<'a, T> SyncSlice<'a, T> {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
+
+    /// Serializes tests that mutate process-wide environment variables
+    /// (`CONTOUR_THREADS`): unsynchronized set/remove while other tests
+    /// read the environment is a race.
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn par_for_covers_each_index_once() {
@@ -213,17 +399,81 @@ mod tests {
     }
 
     #[test]
+    fn map_reduce_sums_via_spawn_substrate() {
+        // The legacy spawn-per-call body stays correct (the hotpath
+        // bench flips to it for comparison).
+        let n = 1 << 18;
+        let total = par_map_reduce_spawn(
+            n,
+            8,
+            1 << 10,
+            &|| 0u64,
+            &|acc: &mut u64, r: Range<usize>| *acc += r.map(|i| i as u64).sum::<u64>(),
+            &|a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+        let hits: Vec<AtomicU64> = (0..50_000).map(|_| AtomicU64::new(0)).collect();
+        par_for_spawn(hits.len(), 4, 1000, &|r: Range<usize>| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
     fn tabulate_matches_sequential() {
         let v = par_tabulate(50_000, 4, |i| (i * 3) as u64);
         assert!(v.iter().enumerate().all(|(i, &x)| x == (i * 3) as u64));
     }
 
     #[test]
+    fn adaptive_grain_clamps() {
+        assert_eq!(adaptive_grain(1 << 30, 8), 1 << 14); // huge: top clamp
+        assert_eq!(adaptive_grain(4096, 8), 1 << 10); // small: bottom clamp
+        assert_eq!(adaptive_grain(0, 0), 1 << 10); // degenerate inputs
+        let mid = 1 << 20;
+        assert_eq!(adaptive_grain(mid, 16), mid / (16 * 8));
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_inline() {
+        // A nested par_for inside a pooled pass must not resubmit to the
+        // pool (single job slot); it runs inline and stays correct.
+        let n = 1 << 16;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, 4, 1 << 12, |outer| {
+            let base = outer.start;
+            let len = outer.len();
+            par_for(len, 4, 16, |inner| {
+                for i in inner {
+                    hits[base + i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
     fn num_threads_env_override() {
-        // Note: mutates process env; fine inside the test binary.
+        // Serialized: mutating CONTOUR_THREADS is process-wide. The
+        // cached num_threads() value is intentionally immune to this
+        // (the pool reads it once at init); we test the parser.
+        let _env = ENV_LOCK.lock().unwrap();
+        // Force the once-cache to fill from the *clean* environment
+        // before mutating it: otherwise a concurrent test triggering
+        // first-time pool init mid-mutation could capture a transient
+        // value for the rest of the process.
+        let cached = num_threads();
         std::env::set_var("CONTOUR_THREADS", "3");
-        assert_eq!(num_threads(), 3);
+        assert_eq!(num_threads(), cached, "cached value must ignore later env changes");
+        assert_eq!(threads_from_env(), Some(3));
+        std::env::set_var("CONTOUR_THREADS", "0");
+        assert_eq!(threads_from_env(), Some(1), "0 clamps to 1");
+        std::env::set_var("CONTOUR_THREADS", "lots");
+        assert_eq!(threads_from_env(), None, "non-numeric ignored");
         std::env::remove_var("CONTOUR_THREADS");
+        assert_eq!(threads_from_env(), None);
         assert!(num_threads() >= 1);
     }
 }

@@ -1,0 +1,311 @@
+//! Persistent worker pool behind the [`crate::par`] substrate.
+//!
+//! The paper's cost story (§III) is that each Contour iteration is one
+//! cheap O(m) sweep of a highly parallel operator, and its Chapel
+//! implementation rides a tasking runtime whose workers live for the
+//! whole program. Our old substrate instead spawned and joined OS
+//! threads on *every* `edge_pass`, `check_converged`, and
+//! `finalize_stars` call — O(log d_max) spawn/join rounds per run, paid
+//! again per server request. This module amortizes that cost the way
+//! Chapel (and ConnectIt's scheduler) do: a process-wide set of workers
+//! that park on a condvar between jobs and are woken by an epoch bump on
+//! a single shared job slot.
+//!
+//! Design:
+//!
+//! * Workers are spawned lazily on the first parallel pass, sized from
+//!   `CONTOUR_THREADS` (read **once**, see [`crate::par::num_threads`])
+//!   or the machine's available parallelism.
+//! * A job is a lifetime-erased `&dyn Fn()` every participating worker
+//!   runs to exhaustion; the closure pulls chunks off the caller's
+//!   atomic cursor, so scheduling stays dynamic exactly as before.
+//! * One job runs at a time; concurrent submitters (server sessions)
+//!   queue on a submit lock. The submitting thread always participates,
+//!   so `threads = 1` or a busy pool still makes progress.
+//! * Nested parallel calls (a `par_for` inside a pool job) run inline
+//!   sequentially — the single job slot cannot be re-entered, and the
+//!   outer pass already owns every worker.
+//! * [`PoolMetrics`] counts jobs, chunk pulls, and park/wake
+//!   transitions; the server `METRICS` verb reports them.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// Lock ignoring poisoning: a panic inside a pool job unwinds through
+/// the submit guard and would otherwise poison it, bricking the pool
+/// for the rest of the process. All pool invariants are restored before
+/// any unwinding can happen, so the poison flag carries no information.
+fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Counters describing pool activity since process start.
+#[derive(Default, Debug)]
+pub struct PoolMetrics {
+    /// Jobs submitted (one per parallel pass that reached the pool).
+    pub jobs: AtomicU64,
+    /// Chunks claimed off job cursors (the dynamic-scheduling analog of
+    /// steal counts: one pull = one grain-sized unit of work).
+    pub pulls: AtomicU64,
+    /// Times a worker blocked waiting for work.
+    pub parks: AtomicU64,
+    /// Times a blocked worker resumed.
+    pub wakes: AtomicU64,
+}
+
+/// Plain-value snapshot of [`PoolMetrics`] for rendering.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Total worker count including the submitting thread.
+    pub workers: usize,
+    pub jobs: u64,
+    pub pulls: u64,
+    pub parks: u64,
+    pub wakes: u64,
+}
+
+#[derive(Clone, Copy)]
+struct Job {
+    /// Lifetime-erased task; valid because [`Pool::run`] does not return
+    /// until every worker that entered it has left.
+    task: &'static (dyn Fn() + Sync),
+    /// Pool workers that may still join this job (the submitter is not
+    /// counted — it always participates).
+    seats: usize,
+}
+
+struct Slot {
+    /// Bumped once per submitted job so workers can tell a fresh job
+    /// from a spurious wakeup or one they already served.
+    epoch: u64,
+    /// Current job; cleared by the submitter before it waits for
+    /// stragglers, so late-waking workers skip it.
+    job: Option<Job>,
+    /// Workers currently inside the job's closure.
+    running: usize,
+    /// A worker's task invocation panicked (re-raised by the submitter).
+    panicked: bool,
+}
+
+struct Inner {
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+    metrics: PoolMetrics,
+}
+
+/// The process-wide pool. Obtain via [`global`].
+pub struct Pool {
+    inner: Arc<Inner>,
+    /// Serializes jobs: the slot holds one job at a time.
+    submit: Mutex<()>,
+    /// Total worker count including the submitting thread.
+    threads: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// True while this thread executes inside a pool job (worker or
+    /// submitter); nested parallel calls check it and run inline.
+    static IN_JOB: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// The global pool, spawning its workers on first use.
+pub fn global() -> &'static Pool {
+    POOL.get_or_init(Pool::start)
+}
+
+/// Pool metrics without forcing pool startup (all-zero before first use).
+pub fn stats() -> PoolStats {
+    match POOL.get() {
+        Some(p) => p.stats(),
+        None => PoolStats::default(),
+    }
+}
+
+/// True while the current thread is executing inside a pool job.
+pub fn in_job() -> bool {
+    IN_JOB.with(|f| f.get())
+}
+
+impl Pool {
+    fn start() -> Self {
+        let threads = super::num_threads();
+        let inner = Arc::new(Inner {
+            slot: Mutex::new(Slot { epoch: 0, job: None, running: 0, panicked: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            metrics: PoolMetrics::default(),
+        });
+        for i in 1..threads {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("contour-pool-{i}"))
+                .spawn(move || worker_loop(&inner))
+                .expect("spawning pool worker");
+        }
+        Self { inner, submit: Mutex::new(()), threads }
+    }
+
+    /// Total worker count including the submitting thread.
+    pub fn max_threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn metrics(&self) -> &PoolMetrics {
+        &self.inner.metrics
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let m = &self.inner.metrics;
+        PoolStats {
+            workers: self.threads,
+            jobs: m.jobs.load(Ordering::Relaxed),
+            pulls: m.pulls.load(Ordering::Relaxed),
+            parks: m.parks.load(Ordering::Relaxed),
+            wakes: m.wakes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `task` on up to `extra` pool workers plus the calling thread,
+    /// returning once every participant has finished. `task` must be
+    /// safe to invoke from several threads at once (each invocation
+    /// pulls disjoint chunks from a shared cursor until it is drained).
+    pub fn run(&self, extra: usize, task: &(dyn Fn() + Sync)) {
+        // SAFETY: the erased borrow never outlives this frame — we do
+        // not return until the slot is cleared and `running == 0`, i.e.
+        // no worker holds or will take the task reference.
+        let task: &'static (dyn Fn() + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(task) };
+        let _turn = lock_pool(&self.submit);
+        self.inner.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut slot = lock_pool(&self.inner.slot);
+            debug_assert_eq!(slot.running, 0, "job slot reused while busy");
+            slot.epoch = slot.epoch.wrapping_add(1);
+            slot.job = Some(Job { task, seats: extra.min(self.threads.saturating_sub(1)) });
+            self.inner.work.notify_all();
+        }
+        // The submitter always participates; catch a panic so workers
+        // still borrowing `task` are waited for before unwinding.
+        let was = IN_JOB.with(|f| f.replace(true));
+        let mine = catch_unwind(AssertUnwindSafe(task));
+        IN_JOB.with(|f| f.set(was));
+        let worker_panicked = {
+            let mut slot = lock_pool(&self.inner.slot);
+            slot.job = None; // no further joins
+            while slot.running > 0 {
+                slot = self.inner.done.wait(slot).unwrap_or_else(PoisonError::into_inner);
+            }
+            std::mem::take(&mut slot.panicked)
+        };
+        if let Err(p) = mine {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("pool worker panicked during parallel pass");
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut slot = lock_pool(&inner.slot);
+            loop {
+                if slot.epoch != seen {
+                    seen = slot.epoch;
+                    match &mut slot.job {
+                        Some(job) if job.seats > 0 => {
+                            job.seats -= 1;
+                            slot.running += 1;
+                            break Some(job.task);
+                        }
+                        // Full (or already-drained) job: sit this one out.
+                        _ => break None,
+                    }
+                }
+                inner.metrics.parks.fetch_add(1, Ordering::Relaxed);
+                slot = inner.work.wait(slot).unwrap_or_else(PoisonError::into_inner);
+                inner.metrics.wakes.fetch_add(1, Ordering::Relaxed);
+            }
+        };
+        if let Some(task) = task {
+            IN_JOB.with(|f| f.set(true));
+            let r = catch_unwind(AssertUnwindSafe(task));
+            IN_JOB.with(|f| f.set(false));
+            let mut slot = lock_pool(&inner.slot);
+            if r.is_err() {
+                slot.panicked = true;
+            }
+            slot.running -= 1;
+            if slot.running == 0 {
+                inner.done.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_executes_on_caller_even_alone() {
+        // Independent of pool size: extra = 0 means the caller does all
+        // the work, and the call still returns.
+        let hits = AtomicUsize::new(0);
+        global().run(0, &|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn jobs_counter_advances() {
+        let before = stats().jobs;
+        global().run(0, &|| {});
+        global().run(0, &|| {});
+        assert!(stats().jobs >= before + 2);
+    }
+
+    #[test]
+    fn cursor_drained_exactly_once_with_workers() {
+        // A realistic job: every participant pulls chunks off one cursor.
+        let n = 1 << 20;
+        let grain = 1 << 10;
+        let cursor = AtomicUsize::new(0);
+        let sum = AtomicU64::new(0);
+        global().run(usize::MAX, &|| loop {
+            let start = cursor.fetch_add(grain, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + grain).min(n);
+            let mut local = 0u64;
+            for i in start..end {
+                local += i as u64;
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn submitter_panic_propagates_after_quiescence() {
+        let caught = std::panic::catch_unwind(|| {
+            global().run(0, &|| panic!("boom"));
+        });
+        assert!(caught.is_err());
+        // The pool remains usable afterwards.
+        let ok = AtomicUsize::new(0);
+        global().run(0, &|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+}

@@ -30,6 +30,8 @@ pub struct Metrics {
     pub cc_runs: Counter,
     /// Total milliseconds spent inside connectivity runs.
     pub cc_millis: Counter,
+    /// CC/LABELS requests answered from the labels cache.
+    pub cc_cache_hits: Counter,
     /// Streaming sessions created (STREAM + SLOAD).
     pub streams_created: Counter,
     /// Edges ingested through SADD across all streams.
@@ -42,18 +44,28 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn render(&self) -> String {
+        // Worker-pool counters ride along so one METRICS scrape covers
+        // both the request layer and the parallel substrate under it.
+        let pool = crate::par::pool::stats();
         format!(
-            "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} streams={} \
-             stream_edges={} stream_epochs={} stream_queries={}",
+            "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
+             streams={} stream_edges={} stream_epochs={} stream_queries={} pool_workers={} \
+             pool_jobs={} pool_pulls={} pool_parks={} pool_wakes={}",
             self.requests.get(),
             self.errors.get(),
             self.graphs_loaded.get(),
             self.cc_runs.get(),
             self.cc_millis.get(),
+            self.cc_cache_hits.get(),
             self.streams_created.get(),
             self.stream_edges.get(),
             self.stream_epochs.get(),
-            self.stream_queries.get()
+            self.stream_queries.get(),
+            pool.workers,
+            pool.jobs,
+            pool.pulls,
+            pool.parks,
+            pool.wakes
         )
     }
 }

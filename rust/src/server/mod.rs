@@ -52,7 +52,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use anyhow::{anyhow, bail, Result};
@@ -66,14 +66,37 @@ use crate::VId;
 
 use metrics::Metrics;
 
+/// Cap on cached connectivity results: label arrays are O(n) each, so
+/// an unbounded cache grows with every (graph, alg) pair ever queried.
+/// Beyond the cap the least recently touched entry is evicted.
+pub const CC_CACHE_CAP: usize = 16;
+
+/// A memoized connectivity run for one (graph, algorithm) pair: what
+/// `CC` reports and what `LABELS` pages through.
+pub struct CcEntry {
+    pub labels: cc::Labels,
+    pub iterations: usize,
+    pub components: usize,
+    /// The exact graph this result was computed on. Hits verify it by
+    /// pointer identity against the request's graph: replacing a name
+    /// purges the cache, but purge and graph-map insert are separate
+    /// critical sections, so a key match alone can be stale.
+    graph: Arc<Csr>,
+    /// Last-touch stamp from [`ServerState::cache_clock`] (LRU order).
+    stamp: AtomicU64,
+}
+
 /// Shared server state: the graph and stream stores plus counters.
 pub struct ServerState {
     graphs: RwLock<HashMap<String, Arc<Csr>>>,
     streams: RwLock<HashMap<String, Arc<StreamingCc>>>,
-    /// Label arrays already computed for (graph, alg) — LABELS paging
-    /// would otherwise rerun connectivity once per page. Purged when
-    /// the graph is replaced or dropped.
-    labels_cache: RwLock<HashMap<(String, String), Arc<cc::Labels>>>,
+    /// Connectivity results already computed for (graph, alg) — both
+    /// `CC` reruns and LABELS paging would otherwise rerun connectivity
+    /// per request. Bounded by [`CC_CACHE_CAP`] with LRU eviction;
+    /// purged when the graph is replaced or dropped.
+    labels_cache: RwLock<HashMap<(String, String), Arc<CcEntry>>>,
+    /// Monotonic clock for LRU stamps in the labels cache.
+    cache_clock: AtomicU64,
     /// WAL files claimed by streams that may still be alive — the map
     /// entry or an in-flight verb holding the Arc. A claim dies with
     /// its last Arc, so DROP + recreate on the same WAL is refused
@@ -88,14 +111,93 @@ pub struct ServerState {
 
 impl ServerState {
     pub fn new(threads: usize) -> Self {
+        // Clamp to the worker pool's size: a `--threads` above it would
+        // silently push every pass onto the spawn-per-call fallback,
+        // losing the pool amortization the server exists to exploit.
+        // (0 = "all" already resolves to the pool size.)
+        let threads = if threads == 0 { 0 } else { threads.min(crate::par::num_threads()) };
         Self {
             graphs: RwLock::new(HashMap::new()),
             streams: RwLock::new(HashMap::new()),
             labels_cache: RwLock::new(HashMap::new()),
+            cache_clock: AtomicU64::new(0),
             wal_claims: Mutex::new(HashMap::new()),
             metrics: Metrics::default(),
             threads,
         }
+    }
+
+    fn touch(&self, e: &CcEntry) {
+        let now = self.cache_clock.fetch_add(1, Ordering::Relaxed) + 1;
+        e.stamp.store(now, Ordering::Relaxed);
+    }
+
+    /// The connectivity result for `(graph, alg)`, served from the
+    /// labels cache or computed by `compute` and admitted (evicting the
+    /// least recently touched entry when the cache is full). Returns
+    /// the entry plus `Some(millis)` when a run actually happened
+    /// (`None` = cache hit); the run is timed and accounted to
+    /// `cc_runs`/`cc_millis` here so CC and LABELS misses are metered
+    /// identically. Two sessions missing concurrently may both compute;
+    /// the results are identical and the last insert wins.
+    pub fn cc_cached<F>(
+        &self,
+        name: &str,
+        alg: &str,
+        g: &Arc<Csr>,
+        compute: F,
+    ) -> Result<(Arc<CcEntry>, Option<f64>)>
+    where
+        F: FnOnce() -> Result<cc::RunResult>,
+    {
+        let key = (name.to_string(), alg.to_string());
+        if let Some(e) = self.labels_cache.read().unwrap().get(&key).cloned() {
+            // Pointer identity, not just key match: a racing replace of
+            // this name may not have purged the old entry yet.
+            if Arc::ptr_eq(&e.graph, g) {
+                self.touch(&e);
+                self.metrics.cc_cache_hits.inc();
+                return Ok((e, None));
+            }
+        }
+        let t = Timer::start();
+        let r = compute()?;
+        let ms = t.ms();
+        self.metrics.cc_runs.inc();
+        self.metrics.cc_millis.add(ms as u64);
+        let entry = Arc::new(CcEntry {
+            components: cc::num_components(&r.labels),
+            labels: r.labels,
+            iterations: r.iterations,
+            graph: Arc::clone(g),
+            stamp: AtomicU64::new(0),
+        });
+        self.touch(&entry);
+        let mut map = self.labels_cache.write().unwrap();
+        // Admit only if `name` still maps to the graph we computed on:
+        // a concurrent GEN/UPLOAD/LOAD may have replaced it (purging
+        // these keys) while we computed, and inserting then would
+        // resurrect labels for a graph that no longer exists.
+        let still_current =
+            self.graphs.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, g));
+        if still_current {
+            if map.len() >= CC_CACHE_CAP && !map.contains_key(&key) {
+                let victim = map
+                    .iter()
+                    .min_by_key(|(_, e)| e.stamp.load(Ordering::Relaxed))
+                    .map(|(k, _)| k.clone());
+                if let Some(v) = victim {
+                    map.remove(&v);
+                }
+            }
+            map.insert(key, Arc::clone(&entry));
+        }
+        Ok((entry, Some(ms)))
+    }
+
+    #[cfg(test)]
+    fn cache_len(&self) -> usize {
+        self.labels_cache.read().unwrap().len()
     }
 
     pub fn insert(&self, name: &str, g: Csr) {
@@ -194,6 +296,20 @@ fn canonical_wal(p: &Path) -> std::path::PathBuf {
         }
         _ => p.to_path_buf(),
     }
+}
+
+/// Parse one `u v` UPLOAD payload line (ids must fit [`VId`]).
+fn parse_edge_line(line: &str) -> Result<(u64, u64)> {
+    let mut f = line.split_whitespace();
+    let mut next = || -> Result<u64> {
+        let tok = f.next().ok_or_else(|| anyhow!("expected `u v`, got {line:?}"))?;
+        let x: u64 = tok.parse().map_err(|e| anyhow!("bad vertex id {tok:?}: {e}"))?;
+        anyhow::ensure!(u64::from(VId::MAX) >= x, "vertex id {x} out of range");
+        Ok(x)
+    };
+    let u = next()?;
+    let v = next()?;
+    Ok((u, v))
 }
 
 /// Parse a generator SPEC (same grammar as the CLI: `rmat:14:16`, ...).
@@ -313,13 +429,27 @@ impl<'s> Session<'s> {
         anyhow::ensure!(m <= 50_000_000, "refusing upload of {m} edges");
         let mut pairs = Vec::with_capacity(m);
         let mut max_v = 0u64;
-        for _ in 0..m {
+        // The client has already committed to sending `m` lines: on a
+        // bad line we must still drain the remainder before replying
+        // ERR, or the leftover edge lines get parsed as commands and
+        // the whole connection desynchronizes. Transport errors (`?` on
+        // read_extra) abort outright — the connection is gone anyway.
+        let mut bad: Option<anyhow::Error> = None;
+        for i in 0..m {
             let line = read_extra()?;
-            let mut f = line.split_whitespace();
-            let u: u64 = f.next().ok_or_else(|| anyhow!("bad edge line"))?.parse()?;
-            let v: u64 = f.next().ok_or_else(|| anyhow!("bad edge line"))?.parse()?;
-            max_v = max_v.max(u).max(v);
-            pairs.push((u as VId, v as VId));
+            if bad.is_some() {
+                continue; // draining the announced payload
+            }
+            match parse_edge_line(&line) {
+                Ok((u, v)) => {
+                    max_v = max_v.max(u).max(v);
+                    pairs.push((u as VId, v as VId));
+                }
+                Err(e) => bad = Some(anyhow!("edge line {i}: {e}")),
+            }
+        }
+        if let Some(e) = bad {
+            return Err(e);
         }
         let g = EdgeList::from_pairs(max_v as usize + 1, &pairs).into_csr();
         let (n, mm) = (g.n, g.m());
@@ -355,13 +485,15 @@ impl<'s> Session<'s> {
             _ => bail!("usage: CC name [alg]"),
         };
         let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
-        let alg = self.resolve_alg(&g, alg_name)?;
-        let t = Timer::start();
-        let r = alg.run_with_stats(&g);
-        let ms = t.ms();
-        self.state.metrics.cc_runs.inc();
-        self.state.metrics.cc_millis.add(ms as u64);
-        Ok(format!("OK {} {} {:.3}", cc::num_components(&r.labels), r.iterations, ms))
+        // Serve repeat CC requests for an unchanged (graph, alg) pair
+        // from the labels cache: graphs are immutable once inserted,
+        // and replacing/dropping a name purges its entries.
+        let (entry, ran_ms) = self.state.cc_cached(name, alg_name, &g, || {
+            let alg = self.resolve_alg(&g, alg_name)?;
+            Ok(alg.run_with_stats(&g))
+        })?;
+        // A cache hit reports 0.000 ms: no connectivity work was done.
+        Ok(format!("OK {} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
     }
 
     /// `LABELS name [alg] [offset [count]]` — pages through the label
@@ -388,19 +520,12 @@ impl<'s> Session<'s> {
         let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
         // Serve every page of one (graph, alg) from a single run —
         // paging clients would otherwise trigger a full connectivity
-        // run per page.
-        let key = (name.to_string(), alg_name.to_string());
-        let cached = self.state.labels_cache.read().unwrap().get(&key).cloned();
-        let labels = match cached {
-            Some(l) => l,
-            None => {
-                let alg = self.resolve_alg(&g, alg_name)?;
-                let l = Arc::new(alg.run(&g));
-                self.state.metrics.cc_runs.inc();
-                self.state.labels_cache.write().unwrap().insert(key, Arc::clone(&l));
-                l
-            }
-        };
+        // run per page. The same cache backs CC.
+        let (entry, _ran_ms) = self.state.cc_cached(name, alg_name, &g, || {
+            let alg = self.resolve_alg(&g, alg_name)?;
+            Ok(alg.run_with_stats(&g))
+        })?;
+        let labels = &entry.labels;
         let total = labels.len();
         let lo = offset.min(total);
         let hi = lo.saturating_add(count).min(total);
@@ -548,9 +673,21 @@ impl<'s> Session<'s> {
 
 /// Serve on `addr` until `shutdown` flips true. Each connection gets a
 /// thread (interactive clients are few; algorithm runs parallelize
-/// internally).
+/// internally). For binds on port 0 use [`serve_listener`] with a
+/// pre-bound listener so the caller can learn the real port first.
 pub fn serve(addr: &str, state: Arc<ServerState>, shutdown: Arc<AtomicBool>) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
+    serve_listener(TcpListener::bind(addr)?, state, shutdown)
+}
+
+/// [`serve`] on an already-bound listener. Binding is the caller's job
+/// so "bind port 0, read `local_addr`, then connect" is race-free —
+/// hardcoded test ports collide under parallel test runs.
+pub fn serve_listener(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
     crate::info!("contour server listening on {addr}");
     std::thread::scope(|scope| {
@@ -697,16 +834,125 @@ mod tests {
         assert!(s.handle("QUIT", || unreachable!()).is_none());
     }
 
+    /// Feed every line — commands and payload alike — through one
+    /// queue, exactly as a TCP connection buffer delivers them. This is
+    /// the shape that exposes protocol desyncs: a command that fails to
+    /// consume its announced payload leaves the tail to be misread as
+    /// commands.
+    fn run_wire(lines: &[&str]) -> Vec<String> {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        while pos < lines.len() {
+            let line = lines[pos];
+            pos += 1;
+            let next = std::cell::Cell::new(pos);
+            let reply = s.handle(line, || {
+                let i = next.get();
+                anyhow::ensure!(i < lines.len(), "connection exhausted mid-payload");
+                next.set(i + 1);
+                Ok(lines[i].to_string())
+            });
+            pos = next.get();
+            out.push(reply.unwrap_or_else(|| "BYE".into()));
+        }
+        out
+    }
+
+    #[test]
+    fn failed_upload_does_not_desync_the_connection() {
+        let r = run_wire(&[
+            "UPLOAD g 4",
+            "0 1",
+            "1 bogus", // bad edge: ERR, but the payload must be drained
+            "2 3",
+            "3 4",
+            "PING", // ...so this parses as a command, not as an edge
+            "UPLOAD g 2",
+            "0 1",
+            "1 2",
+            "CC g C-2",
+        ]);
+        assert_eq!(r.len(), 4, "replies: {r:?}");
+        assert!(r[0].starts_with("ERR"), "{}", r[0]);
+        assert!(r[0].contains("edge line 1"), "{}", r[0]);
+        assert_eq!(r[1], "PONG", "next command after failed UPLOAD must parse");
+        assert_eq!(r[2], "OK 3 2", "connection stays usable for a retry");
+        assert!(r[3].starts_with("OK 1 "), "{}", r[3]);
+    }
+
+    #[test]
+    fn upload_rejects_out_of_range_ids_without_desync() {
+        let too_big = format!("0 {}", u64::from(crate::VId::MAX) + 1);
+        let r = run_wire(&["UPLOAD g 2", &too_big, "1 2", "PING"]);
+        assert!(r[0].starts_with("ERR"), "{}", r[0]);
+        assert!(r[0].contains("out of range"), "{}", r[0]);
+        assert_eq!(r[1], "PONG");
+    }
+
+    #[test]
+    fn cc_reuses_cached_result() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN g soup:4:25").starts_with("OK"));
+        let first = ask("CC g C-2");
+        assert!(first.starts_with("OK 4 "), "{}", first);
+        let again = ask("CC g C-2");
+        assert!(again.starts_with("OK 4 "), "{}", again);
+        // One actual connectivity run; the repeat and the LABELS page
+        // below are all served from the cache.
+        assert!(ask("LABELS g C-2 0 3").starts_with("OK 100 "));
+        let m = ask("METRICS");
+        assert!(m.contains("cc_runs=1"), "{m}");
+        assert!(m.contains("cc_cache_hits=2"), "{m}");
+        // Components and iterations agree between run and cache hit.
+        let f: Vec<&str> = first.split_whitespace().take(3).collect();
+        let a: Vec<&str> = again.split_whitespace().take(3).collect();
+        assert_eq!(f, a);
+        // Replacing the graph invalidates its entries.
+        assert!(ask("GEN g path:10").starts_with("OK"));
+        assert!(ask("CC g C-2").starts_with("OK 1 "), "stale cache served after replace");
+        let m = ask("METRICS");
+        assert!(m.contains("cc_runs=2"), "{m}");
+    }
+
+    #[test]
+    fn labels_cache_is_bounded_with_lru_eviction() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN keep path:6").starts_with("OK"));
+        assert!(ask("CC keep C-2").starts_with("OK"));
+        for i in 0..CC_CACHE_CAP + 4 {
+            assert!(ask(&format!("GEN g{i} path:5")).starts_with("OK"));
+            assert!(ask(&format!("CC g{i} C-2")).starts_with("OK"));
+            // Keep the pinned entry hot so eviction takes the idle ones.
+            assert!(ask("CC keep C-2").starts_with("OK"));
+        }
+        assert!(state.cache_len() <= CC_CACHE_CAP, "cache grew to {}", state.cache_len());
+        let hot = ("keep".to_string(), "C-2".to_string());
+        assert!(
+            state.labels_cache.read().unwrap().contains_key(&hot),
+            "recently-touched entry was evicted"
+        );
+    }
+
     #[test]
     fn tcp_server_end_to_end() {
         let state = Arc::new(ServerState::new(1));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let addr = "127.0.0.1:39183";
+        // Port 0: the OS picks a free port, so parallel test runs (or
+        // anything else on the machine) cannot collide with us.
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("local_addr");
         let s2 = Arc::clone(&state);
         let sd2 = Arc::clone(&shutdown);
-        let handle = std::thread::spawn(move || serve(addr, s2, sd2));
-        std::thread::sleep(std::time::Duration::from_millis(120));
+        let handle = std::thread::spawn(move || serve_listener(listener, s2, sd2));
 
+        // The listener is bound before the thread starts: connecting
+        // immediately is race-free (the backlog holds us until accept).
         let stream = TcpStream::connect(addr).expect("connect");
         let mut reader = BufReader::new(stream.try_clone().unwrap());
         let mut writer = BufWriter::new(stream);

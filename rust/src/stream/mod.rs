@@ -255,7 +255,7 @@ impl StreamingCc {
             w.lock().unwrap().append_edges(edges)?;
         }
         let inc = &self.inc;
-        par::par_for(edges.len(), self.threads, par::DEFAULT_GRAIN, |range| {
+        par::par_for(edges.len(), self.threads, par::AUTO_GRAIN, |range| {
             for e in range {
                 inc.add_edge(edges[e].0, edges[e].1);
             }

@@ -1,0 +1,124 @@
+//! Stress tests for the persistent worker pool behind `contour::par`:
+//! the substrate every parallel pass in the crate now runs on. These
+//! exercise the shapes the server produces in production — concurrent
+//! sessions submitting passes at once, nested parallelism, thousands of
+//! short passes reusing the same workers — and pin down that pooled
+//! execution is bit-identical to sequential execution for every Contour
+//! variant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use contour::cc::contour::Contour;
+use contour::cc::Algorithm;
+use contour::graph::gen;
+use contour::par;
+
+#[test]
+fn nested_parallel_passes_from_a_parallel_pass() {
+    // Outer pass over disjoint ranges; each range runs its own inner
+    // parallel pass. The inner calls must run inline (single job slot)
+    // and still cover every index exactly once.
+    let n = 1 << 17;
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    par::par_for(n, 0, 1 << 12, |outer| {
+        let base = outer.start;
+        par::par_for(outer.len(), 0, 64, |inner| {
+            for i in inner {
+                hits[base + i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+}
+
+#[test]
+fn concurrent_sessions_share_one_pool() {
+    // Several OS threads (the server's one-thread-per-connection model)
+    // submit parallel passes concurrently; the pool serializes jobs but
+    // every session must get exact results.
+    let sessions = 4;
+    let rounds = 25;
+    let n = 1 << 17;
+    let want = (n as u64 - 1) * n as u64 / 2;
+    std::thread::scope(|s| {
+        for _ in 0..sessions {
+            s.spawn(|| {
+                for _ in 0..rounds {
+                    let total = par::par_map_reduce(
+                        n,
+                        0,
+                        par::AUTO_GRAIN,
+                        || 0u64,
+                        |acc, r| *acc += r.map(|i| i as u64).sum::<u64>(),
+                        |a, b| a + b,
+                    );
+                    assert_eq!(total, want);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn pool_reused_across_a_thousand_tiny_passes() {
+    // A C-2 run is a sequence of short passes; the server multiplies
+    // that by requests. 1000 small passes must all hit the same pool
+    // (job counter advances, no spawn-per-pass) and stay correct.
+    let before = par::pool::stats().jobs;
+    let n = 40_000; // above SEQ_CUTOFF at the adaptive bottom grain
+    let want = (n as u64 - 1) * n as u64 / 2;
+    for _ in 0..1000 {
+        let total = par::par_map_reduce(
+            n,
+            0,
+            par::AUTO_GRAIN,
+            || 0u64,
+            |acc, r| *acc += r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(total, want);
+    }
+    if par::num_threads() > 1 && par::exec_mode() == par::ExecMode::Pooled {
+        let after = par::pool::stats().jobs;
+        assert!(after >= before + 1000, "pool jobs {before} -> {after}: passes bypassed the pool");
+    }
+}
+
+#[test]
+fn pooled_labels_bit_identical_to_single_thread_for_all_variants() {
+    // Property pinned by the refactor: for every Contour variant the
+    // pooled parallel run must produce exactly the label array the
+    // threads=1 sequential run produces (both are canonical min-id
+    // labellings, so full Vec equality is the right check).
+    let graphs = vec![
+        gen::rmat(12, 20_000, gen::RmatKind::Graph500, 7).into_csr(),
+        gen::path(30_000).into_csr().shuffled_edges(11),
+        gen::component_soup(12, 2_000, 5).into_csr(),
+    ];
+    for g in &graphs {
+        for alg in Contour::all_variants() {
+            let seq = alg.clone().with_threads(1).run(g);
+            let pooled = alg.clone().with_threads(0).run(g);
+            assert_eq!(seq, pooled, "{} diverges on n={} m={}", alg.name(), g.n, g.m());
+        }
+    }
+}
+
+#[test]
+fn concurrent_contour_runs_share_the_pool() {
+    // Whole algorithm runs (not just single passes) racing through the
+    // pool from separate sessions, as CC requests do.
+    let g = gen::rmat(12, 30_000, gen::RmatKind::Graph500, 3).into_csr();
+    let want = Contour::c2().with_threads(1).run(&g);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let g = &g;
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..3 {
+                    assert_eq!(&Contour::c2().run(g), want);
+                }
+            });
+        }
+    });
+}
