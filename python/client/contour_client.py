@@ -29,6 +29,16 @@ Streaming quickstart (live edge feed with epoch snapshots; see the
         c.stream_save("live", "/tmp/live.snap")          # durable snapshot
         # after a restart:
         c.stream_load("live2", "/tmp/live.snap", wal="/tmp/live.wal")
+
+Sharded connectivity (server-side partitioning; shard-local runs execute
+concurrently as independent pool jobs, then the cross-shard boundary is
+contracted — labels are identical to the single-shard run):
+
+    with ContourClient("127.0.0.1", 7021) as c:
+        c.gen("g", "rmat:18:16")
+        c.shard("g", 8)                       # partition into 8 shards
+        comps, iters, ms = c.pcc("g", "C-2")  # partitioned graph_cc
+        c.shard_stats("g")                    # per-shard topology
 """
 
 from __future__ import annotations
@@ -161,8 +171,53 @@ class ContourClient:
         return {k: int(v) for k, v in (p.split("=") for p in parts)}
 
     def metrics(self) -> dict:
-        parts = self._request("METRICS").split()[1:]
-        return {k: int(v) for k, v in (p.split("=") for p in parts)}
+        """Server counters. Most values are ints; per-graph cache
+        entries (``cache/<name>``) are ``"hits:misses"`` strings."""
+        out: dict = {}
+        for p in self._request("METRICS").split()[1:]:
+            k, v = p.split("=", 1)
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+        return out
+
+    # ------------------------------------------------------------- sharding
+    #
+    # Sharded connectivity: SHARD partitions a stored graph into p
+    # vertex-range shards server-side; PCC runs shard-local connectivity
+    # concurrently (one pool job per shard) and contracts the cross-shard
+    # boundary. Labels are identical to the single-shard run.
+
+    def shard(self, name: str, p: int) -> Tuple[int, int]:
+        """Partition graph ``name`` into ``p`` vertex-range shards.
+        Returns (shards, boundary_edges)."""
+        _, shards, boundary = self._request(f"SHARD {name} {p}").split()
+        return int(shards), int(boundary)
+
+    def pcc(self, name: str, alg: str = "C-2") -> Tuple[int, int, float]:
+        """Partitioned ``graph_cc``: shard-local runs + boundary merge.
+        Returns (components, iterations, server_millis); requires a
+        prior :meth:`shard` call for ``name``."""
+        _, comps, iters, ms = self._request(f"PCC {name} {alg}").split()
+        return int(comps), int(iters), float(ms)
+
+    def shard_stats(self, name: str) -> dict:
+        """Per-shard topology: ``{"p": .., "n": .., "m": ..,
+        "boundary": .., "shards": [{"lo", "hi", "m", "components",
+        "max_degree"}, ...]}``."""
+        parts = self._request(f"SHARDSTATS {name}").split()[1:]
+        out: dict = {"shards": []}
+        for part in parts:
+            k, v = part.split("=", 1)
+            if k.startswith("shard"):
+                lo, hi, m, comps, maxdeg = (int(x) for x in v.split(":"))
+                out["shards"].append(
+                    {"lo": lo, "hi": hi, "m": m, "components": comps, "max_degree": maxdeg}
+                )
+            else:
+                out[k] = int(v)
+        return out
 
     # ------------------------------------------------------------ streaming
     #
@@ -233,6 +288,21 @@ class ContourClient:
         """Component label (min vertex id) of v."""
         value, _ = self._squery(name, "LABEL", v, epoch=epoch)
         return value
+
+    def stream_labels_page(self, name: str, epoch: Optional[int] = None,
+                           offset: int = 0, count: Optional[int] = None
+                           ) -> Tuple[int, List[int]]:
+        """Page a sealed epoch's full labelling (default: current epoch)
+        through the server's labels cache — the streaming counterpart of
+        :meth:`labels_page`. Returns (total, labels[offset:offset+count])."""
+        req = f"LABELS {name}"
+        if epoch is not None:
+            req += f" epoch:{epoch}"
+        req += f" {offset}"
+        if count is not None:
+            req += f" {count}"
+        parts = self._request(req).split()[1:]
+        return int(parts[0]), [int(x) for x in parts[1:]]
 
     def stream_save(self, name: str, path: str) -> int:
         """Write a binary snapshot server-side. Returns the epoch saved."""

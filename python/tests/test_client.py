@@ -143,6 +143,44 @@ def test_labels_paging(server):
         c.drop("pg")
 
 
+def test_sharded_connectivity(server):
+    with ContourClient(port=PORT) as c:
+        c.gen("sg", "er:500:900")
+        with pytest.raises(ContourError):
+            c.pcc("sg")  # not sharded yet
+        shards, boundary = c.shard("sg", 4)
+        assert shards == 4 and boundary >= 0
+        comps, iters, ms = c.pcc("sg", "C-2")
+        want, _, _ = c.graph_cc("sg", "C-2")
+        assert comps == want
+        assert iters >= 1 and ms >= 0.0
+        st = c.shard_stats("sg")
+        assert st["p"] == 4 and st["n"] == 500
+        assert len(st["shards"]) == 4
+        assert st["m"] == sum(s["m"] for s in st["shards"]) + st["boundary"]
+        assert any(name == "shard/sg" for name, _, _ in c.list_graphs())
+        c.drop("sg")
+        with pytest.raises(ContourError):
+            c.shard_stats("sg")
+
+
+def test_stream_labels_and_cache_metrics(server):
+    with ContourClient(port=PORT) as c:
+        c.stream("lcache", 6)
+        c.stream_add("lcache", [(0, 1), (2, 3)])
+        epoch, _ = c.stream_epoch("lcache")
+        total, labels = c.stream_labels_page("lcache", epoch=epoch)
+        assert total == 6
+        assert labels == [0, 0, 2, 2, 4, 5]
+        # Second page of the same epoch is served from the labels cache.
+        assert c.stream_labels_page("lcache", epoch=epoch) == (total, labels)
+        metrics = c.metrics()
+        assert "cache/stream/lcache" in metrics
+        hits, misses = (int(x) for x in metrics["cache/stream/lcache"].split(":"))
+        assert hits >= 1 and misses >= 1
+        c.drop("lcache")
+
+
 def test_multiple_clients(server):
     with ContourClient(port=PORT) as a, ContourClient(port=PORT) as b:
         a.gen("shared", "soup:3:20")

@@ -464,9 +464,157 @@ pub fn pjrt_report(out_dir: &Path) -> Result<String> {
     Ok(t.render())
 }
 
+// ------------------------------------------------- hotpath trajectory
+
+/// One `bench hotpath` measurement for the machine-readable report.
+struct HotpathRecord {
+    bench: String,
+    graph: String,
+    median_ms: f64,
+    medges_per_s: f64,
+}
+
+/// Minimal JSON string escape (the identifiers we emit are plain ASCII,
+/// but a defensive escape keeps the file well-formed whatever lands in
+/// a label).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn hotpath_json_text(quick: bool, threads: usize, records: &[HotpathRecord]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"pool_workers\": {},\n", crate::par::pool::stats().workers));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"bench\": \"{}\", \"graph\": \"{}\", \"median_ms\": {:.3}, \
+             \"medges_per_s\": {:.1}}}{}\n",
+            json_escape(&r.bench),
+            json_escape(&r.graph),
+            r.median_ms,
+            r.medges_per_s,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// `bench hotpath` — the hot-path trajectory the ROADMAP tracks over
+/// time instead of one-off runs: `exec/pool` vs `exec/spawn` (the
+/// worker-pool amortization) plus the `shard/p` sweep (sharded C-2
+/// against shard counts). Writes human-readable `hotpath_trend.{txt,
+/// csv}` *and* machine-readable `BENCH_hotpath.json` (CI uploads the
+/// JSON as an artifact so deltas are diffable across commits).
+pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<String> {
+    use crate::graph::gen;
+
+    let (scale, edges) = if quick { (13, 1 << 17) } else { (18, 1 << 22) };
+    let g = gen::rmat(scale, edges, gen::RmatKind::Graph500, 1).into_csr();
+    let side = if quick { 120 } else { 700 };
+    let road = gen::road(side, side, 2).into_csr().shuffled_edges(3);
+    let mut records: Vec<HotpathRecord> = Vec::new();
+    let mut t = Table::new(&["bench", "graph", "median_ms", "medges_per_s"]);
+
+    let mut bench = |records: &mut Vec<HotpathRecord>,
+                     t: &mut Table,
+                     name: &str,
+                     gname: &str,
+                     graph: &Csr,
+                     run: &mut dyn FnMut() -> usize| {
+        let mut iters = 0usize;
+        let s = measure(1, 3, || iters = run());
+        let medges = graph.m() as f64 * iters.max(1) as f64 / s.median_ms / 1e3;
+        t.row(vec![
+            name.into(),
+            gname.into(),
+            format!("{:.2}", s.median_ms),
+            format!("{medges:.1}"),
+        ]);
+        records.push(HotpathRecord {
+            bench: name.into(),
+            graph: gname.into(),
+            median_ms: s.median_ms,
+            medges_per_s: medges,
+        });
+    };
+
+    // Parallel substrate: persistent pool vs spawn-per-call.
+    for (mode, label) in
+        [(crate::par::ExecMode::SpawnPerCall, "spawn"), (crate::par::ExecMode::Pooled, "pool")]
+    {
+        crate::par::set_exec_mode(mode);
+        for (gname, graph) in [("rmat", &g), ("road", &road)] {
+            let alg = cc::contour::Contour::c2().with_threads(threads);
+            bench(
+                &mut records,
+                &mut t,
+                &format!("exec/{label}"),
+                gname,
+                graph,
+                &mut || alg.run_with_stats(graph).iterations,
+            );
+        }
+    }
+    crate::par::set_exec_mode(crate::par::ExecMode::Pooled);
+
+    // Sharded connectivity: partition once per p, measure the sharded
+    // run (shard-local C-2 jobs in flight + boundary contraction).
+    for p in [1usize, 2, 4, 8] {
+        let sg = crate::shard::ShardedGraph::partition(&g, p);
+        let alg = cc::contour::Contour::c2().with_threads(threads);
+        bench(&mut records, &mut t, &format!("shard/p{p}"), "rmat", &g, &mut || {
+            crate::shard::run_sharded(&sg, &alg, threads).iterations
+        });
+    }
+
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(out_dir.join("BENCH_hotpath.json"), hotpath_json_text(quick, threads, &records))?;
+    write_outputs(out_dir, "hotpath_trend", &t)?;
+    Ok(t.render())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hotpath_json_is_well_formed() {
+        let recs = vec![
+            HotpathRecord {
+                bench: "exec/pool".into(),
+                graph: "rmat".into(),
+                median_ms: 1.5,
+                medges_per_s: 100.0,
+            },
+            HotpathRecord {
+                bench: "shard/p2".into(),
+                graph: "rmat".into(),
+                median_ms: 2.5,
+                medges_per_s: 50.0,
+            },
+        ];
+        let text = hotpath_json_text(true, 4, &recs);
+        assert!(text.contains("\"schema\": 1"));
+        assert!(text.contains("\"quick\": true"));
+        assert!(text.contains("\"bench\": \"shard/p2\""));
+        // One comma between the two records, none after the last.
+        assert_eq!(text.matches("},\n").count(), 1);
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\u000a");
+    }
 
     #[test]
     fn sweep_csv_round_trip() {

@@ -61,6 +61,35 @@ pub fn split_components(g: &Csr, labels: &Labels) -> Vec<(VId, EdgeList)> {
     sizes.into_iter().map(|(_, root)| (root, extract_component(g, labels, root))).collect()
 }
 
+/// Partition machinery for the sharded store ([`crate::shard`]): split
+/// `g`'s canonical edge list into per-shard local edge lists plus the
+/// cross-shard boundary. `bounds` are the `p + 1` range fences — shard
+/// `k` owns global vertices `bounds[k]..bounds[k + 1]` — and `owner`
+/// maps a vertex to its shard index. Shard-local ids are global ids
+/// minus the shard's base, so every part is a standalone compact graph;
+/// boundary edges keep global ids. One O(m) sweep total, versus p
+/// passes of [`induced_subgraph`].
+pub fn partition_edges<F>(g: &Csr, bounds: &[usize], owner: F) -> (Vec<EdgeList>, Vec<(VId, VId)>)
+where
+    F: Fn(VId) -> usize,
+{
+    assert!(bounds.len() >= 2, "need at least one shard");
+    let p = bounds.len() - 1;
+    let mut parts: Vec<EdgeList> =
+        (0..p).map(|k| EdgeList::new(bounds[k + 1] - bounds[k])).collect();
+    let mut boundary = Vec::new();
+    for (u, v) in g.edges() {
+        let (su, sv) = (owner(u), owner(v));
+        if su == sv {
+            let base = bounds[su] as VId;
+            parts[su].push(u - base, v - base);
+        } else {
+            boundary.push((u, v));
+        }
+    }
+    (parts, boundary)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +133,27 @@ mod tests {
         assert!(parts.windows(2).all(|w| w[0].1.n >= w[1].1.n));
         // Edge counts add up (no cross-component edges exist).
         assert_eq!(parts.iter().map(|(_, e)| e.len()).sum::<usize>(), g.m());
+    }
+
+    #[test]
+    fn partition_edges_splits_local_and_boundary() {
+        // path(6) split at vertex 3: edges 0-1, 1-2 local to shard 0,
+        // 3-4, 4-5 local to shard 1, 2-3 on the boundary.
+        let g = gen::path(6).into_csr();
+        let bounds = [0usize, 3, 6];
+        let (parts, boundary) =
+            partition_edges(&g, &bounds, |v| if v < 3 { 0 } else { 1 });
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].n, 3);
+        assert_eq!(parts[1].n, 3);
+        let p0: Vec<_> = parts[0].iter().collect();
+        let p1: Vec<_> = parts[1].iter().collect();
+        assert_eq!(p0, vec![(0, 1), (1, 2)]);
+        // Shard 1 is compacted: global 3,4,5 -> local 0,1,2.
+        assert_eq!(p1, vec![(0, 1), (1, 2)]);
+        assert_eq!(boundary, vec![(2, 3)]);
+        // Edge conservation: locals + boundary = m.
+        assert_eq!(parts.iter().map(|e| e.len()).sum::<usize>() + boundary.len(), g.m());
     }
 
     #[test]

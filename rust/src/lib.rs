@@ -36,6 +36,7 @@ pub mod graph;
 pub mod par;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod stream;
 pub mod util;
 

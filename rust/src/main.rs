@@ -47,6 +47,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("stats") => cmd_stats(args),
         Some("serve") => cmd_serve(args),
         Some("stream") => cmd_stream(args),
+        Some("shard") => cmd_shard(args),
         Some("list") => cmd_list(),
         _ => {
             print_usage();
@@ -62,11 +63,13 @@ fn print_usage() {
          \x20 contour run   [--graph FILE | --gen SPEC] [--alg NAME|auto] [--threads T] [--engine native|pjrt-step|pjrt-run]\n\
          \x20 contour batch [--graph FILE | --gen SPEC] --algs A,B,C [--workers W]\n\
          \x20 contour bench TARGET [--quick] [--out DIR] [--threads T]\n\
-         \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt all\n\
+         \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt hotpath all\n\
          \x20 contour stats [--graph FILE | --gen SPEC]\n\
          \x20 contour serve [--addr HOST:PORT] [--threads T]\n\
          \x20 contour stream [--graph FILE | --gen SPEC] [--batch B] [--epochs K]\n\
          \x20        [--wal PATH] [--snapshot PATH] [--threads T] [--verify]\n\
+         \x20 contour shard [--graph FILE | --gen SPEC] [--alg NAME] [--shards 1,2,4,8]\n\
+         \x20        [--threads T] [--verify]\n\
          \x20 contour list\n\n\
          graph SPECs: path:N cycle:N star:N grid:R:C road:R:C tree:D comb:S:T\n\
          \x20            kmer:CHAINS:LEN er:N:M ba:N:K rmat:SCALE:EDGEFACTOR delaunay:N soup:P:S"
@@ -202,6 +205,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "distsim" => figures::distsim_report(&out, quick)?,
             "delaunay-scaling" => figures::delaunay_scaling(&out, quick, threads)?,
             "pjrt" => figures::pjrt_report(&out)?,
+            "hotpath" => figures::hotpath_json(&out, quick, threads)?,
             other => bail!("unknown bench target {other:?}"),
         };
         println!("{text}");
@@ -305,6 +309,63 @@ fn cmd_stream(args: &Args) -> Result<()> {
             "streamed labels diverge from static Contour C-2"
         );
         println!("verification: streamed labels == static C-2 labels");
+    }
+    Ok(())
+}
+
+/// Sharded-connectivity driver: partition the graph across a sweep of
+/// shard counts, run shard-local connectivity concurrently (one pool
+/// job per shard) plus the boundary-contraction merge, and optionally
+/// cross-check every result against the single-shard run.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", 0)?;
+    let (name, g) = load_graph(args)?;
+    let alg_name = args.get_or("alg", "C-2");
+    let alg = algorithm_by_name(alg_name, threads)?;
+    println!("graph {name}: n={} m={} (alg {alg_name})", g.n, g.m());
+    let t = Timer::start();
+    let single = alg.run_with_stats(&g);
+    let single_ms = t.ms();
+    println!(
+        "single-shard: {} components in {} iterations, {:.2} ms",
+        cc::num_components(&single.labels),
+        single.iterations,
+        single_ms
+    );
+    println!(
+        "{:>6} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8}",
+        "shards", "boundary", "comps", "iters", "part_ms", "run_ms", "speedup"
+    );
+    for tok in args.get_or("shards", "1,2,4,8").split(',') {
+        let p: usize = tok
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--shards expects a comma list of integers, got {tok:?}"))?;
+        let t = Timer::start();
+        let sg = contour::shard::ShardedGraph::partition(&g, p);
+        let part_ms = t.ms();
+        let t = Timer::start();
+        let r = contour::shard::run_sharded(&sg, alg.as_ref(), threads);
+        let run_ms = t.ms();
+        println!(
+            "{:>6} {:>10} {:>10} {:>8} {:>10.2} {:>10.2} {:>7.2}x",
+            sg.p(),
+            r.boundary_edges,
+            cc::num_components(&r.labels),
+            r.iterations,
+            part_ms,
+            run_ms,
+            single_ms / run_ms.max(1e-9)
+        );
+        if args.flag("verify") {
+            anyhow::ensure!(
+                r.labels == single.labels,
+                "sharded labels diverge from single-shard {alg_name} at p={p}"
+            );
+        }
+    }
+    if args.flag("verify") {
+        println!("verification: sharded labels identical to single-shard for every shard count");
     }
     Ok(())
 }

@@ -297,6 +297,61 @@ where
     })
 }
 
+/// Run `count` independent one-shot tasks — `f(i)` invoked **exactly
+/// once** per `i in 0..count` — concurrently. Unlike [`par_for`], each
+/// task becomes its own pool job, so the whole set is in flight at once
+/// (visible in the pool's `inflight` metrics) and overlaps with other
+/// sessions' jobs; this is how the sharded executor runs shard-local
+/// connectivity. Nested calls (from inside a pool job) run inline
+/// sequentially; panics propagate after every task has settled.
+pub fn par_tasks<F>(count: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if count == 0 {
+        return;
+    }
+    if count == 1 || pool::in_job() {
+        for i in 0..count {
+            f(i);
+        }
+        return;
+    }
+    match exec_mode() {
+        ExecMode::SpawnPerCall => {
+            // Clamp the spawn width: `count` can be client-controlled
+            // (SHARD p), and one OS thread per task would let a single
+            // request reserve gigabytes of stacks. Workers drain an
+            // index cursor instead, preserving exactly-once.
+            let width = num_threads().min(count);
+            let cursor = AtomicUsize::new(0);
+            let worker = || {
+                // Spawn-mode task workers are not pool workers, but the
+                // same nesting rule must hold: passes inside a task run
+                // inline, or a p-shard run would spawn ~threads² OS
+                // threads (each task's inner par_for spawning its own
+                // thread set).
+                let _in_job = pool::JobScope::enter();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= count {
+                        break;
+                    }
+                    f(i);
+                }
+            };
+            std::thread::scope(|s| {
+                for _ in 1..width {
+                    let worker = &worker;
+                    s.spawn(move || worker());
+                }
+                worker();
+            });
+        }
+        ExecMode::Pooled => pool::global().run_many(count, &f),
+    }
+}
+
 /// Parallel initialization of a `Vec<T>` by index (used for label arrays).
 pub fn par_tabulate<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
 where
@@ -447,6 +502,33 @@ mod tests {
             let len = outer.len();
             par_for(len, 4, 16, |inner| {
                 for i in inner {
+                    hits[base + i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_tasks_runs_each_exactly_once() {
+        let count = 23;
+        let hits: Vec<AtomicU64> = (0..count).map(|_| AtomicU64::new(0)).collect();
+        par_tasks(count, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        par_tasks(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn par_tasks_nested_inside_a_pass_runs_inline() {
+        let n = 1 << 16;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, 4, 1 << 12, |outer| {
+            let base = outer.start;
+            let len = outer.len();
+            par_tasks(4, |k| {
+                for i in (k..len).step_by(4) {
                     hits[base + i].fetch_add(1, Ordering::Relaxed);
                 }
             });

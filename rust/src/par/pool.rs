@@ -3,39 +3,51 @@
 //! The paper's cost story (§III) is that each Contour iteration is one
 //! cheap O(m) sweep of a highly parallel operator, and its Chapel
 //! implementation rides a tasking runtime whose workers live for the
-//! whole program. Our old substrate instead spawned and joined OS
-//! threads on *every* `edge_pass`, `check_converged`, and
-//! `finalize_stars` call — O(log d_max) spawn/join rounds per run, paid
-//! again per server request. This module amortizes that cost the way
-//! Chapel (and ConnectIt's scheduler) do: a process-wide set of workers
-//! that park on a condvar between jobs and are woken by an epoch bump on
-//! a single shared job slot.
+//! whole program. This module amortizes thread startup the way Chapel
+//! (and ConnectIt's scheduler) do: a process-wide set of workers that
+//! park on a condvar between jobs.
+//!
+//! Since the sharded-connectivity PR the pool runs **multiple jobs in
+//! flight**: the old single epoch-stamped job slot (every submitter
+//! queued on one submit lock, serializing concurrent server requests)
+//! is replaced by **per-worker job queues with stealing**. Two sessions'
+//! `CC`/`PCC` requests now overlap instead of serializing, and the
+//! sharded executor runs one job per shard concurrently.
 //!
 //! Design:
 //!
 //! * Workers are spawned lazily on the first parallel pass, sized from
 //!   `CONTOUR_THREADS` (read **once**, see [`crate::par::num_threads`])
-//!   or the machine's available parallelism.
-//! * A job is a lifetime-erased `&dyn Fn()` every participating worker
-//!   runs to exhaustion; the closure pulls chunks off the caller's
-//!   atomic cursor, so scheduling stays dynamic exactly as before.
-//! * One job runs at a time; concurrent submitters (server sessions)
-//!   queue on a submit lock. The submitting thread always participates,
-//!   so `threads = 1` or a busy pool still makes progress.
-//! * Nested parallel calls (a `par_for` inside a pool job) run inline
-//!   sequentially — the single job slot cannot be re-entered, and the
-//!   outer pass already owns every worker.
-//! * [`PoolMetrics`] counts jobs, chunk pulls, and park/wake
-//!   transitions; the server `METRICS` verb reports them.
+//!   or the machine's available parallelism. Worker `w` owns queue `w`;
+//!   an idle worker pops its own queue front, then steals from the
+//!   back of the others.
+//! * A chunked job ([`Pool::run`]) is a lifetime-erased closure every
+//!   participating worker runs to exhaustion; the closure pulls chunks
+//!   off the caller's atomic cursor, so scheduling stays dynamic. The
+//!   submitting thread always participates, so `threads = 1` or a busy
+//!   pool still makes progress.
+//! * A one-shot job set ([`Pool::run_many`]) runs `task(i)` exactly once
+//!   per index as independent jobs — the sharded executor's shard-local
+//!   runs — with the submitter claiming whatever no worker has taken.
+//! * Each job tracks `(open seats, active participants)` in one packed
+//!   atomic; a claim is a seat decrement + active increment in a single
+//!   CAS, so the submitter's "close seats and wait for quiescence"
+//!   epilogue can never race a late joiner.
+//! * Nested parallel calls (a pass inside a pool job) run inline
+//!   sequentially — the outer pass already owns the workers.
+//! * [`PoolMetrics`] counts jobs, chunk pulls, steals, park/wake
+//!   transitions, and jobs in flight; the server `METRICS` verb reports
+//!   them.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 
 /// Lock ignoring poisoning: a panic inside a pool job unwinds through
-/// the submit guard and would otherwise poison it, bricking the pool
-/// for the rest of the process. All pool invariants are restored before
-/// any unwinding can happen, so the poison flag carries no information.
+/// guards and would otherwise poison them, bricking the pool for the
+/// rest of the process. All pool invariants are restored before any
+/// unwinding can happen, so the poison flag carries no information.
 fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
@@ -43,7 +55,8 @@ fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// Counters describing pool activity since process start.
 #[derive(Default, Debug)]
 pub struct PoolMetrics {
-    /// Jobs submitted (one per parallel pass that reached the pool).
+    /// Jobs submitted (one per parallel pass or one-shot task that
+    /// reached the pool).
     pub jobs: AtomicU64,
     /// Chunks claimed off job cursors (the dynamic-scheduling analog of
     /// steal counts: one pull = one grain-sized unit of work).
@@ -52,6 +65,19 @@ pub struct PoolMetrics {
     pub parks: AtomicU64,
     /// Times a blocked worker resumed.
     pub wakes: AtomicU64,
+    /// Queue entries taken from another worker's queue.
+    pub steals: AtomicU64,
+    /// Jobs currently submitted but not yet drained.
+    pub inflight: AtomicU64,
+    /// High-water mark of `inflight` — ≥ 2 demonstrates jobs overlapping
+    /// (concurrent sessions, or one sharded run's per-shard jobs).
+    pub max_inflight: AtomicU64,
+    /// Participants currently *executing* a task closure.
+    pub exec_active: AtomicU64,
+    /// High-water mark of `exec_active`: unlike `max_inflight` (which
+    /// counts submitted batches), ≥ 2 here proves task bodies actually
+    /// ran concurrently.
+    pub max_exec_active: AtomicU64,
 }
 
 /// Plain-value snapshot of [`PoolMetrics`] for rendering.
@@ -63,34 +89,107 @@ pub struct PoolStats {
     pub pulls: u64,
     pub parks: u64,
     pub wakes: u64,
+    pub steals: u64,
+    pub inflight: u64,
+    pub max_inflight: u64,
+    /// Peak count of concurrently executing task bodies.
+    pub exec_peak: u64,
 }
 
-#[derive(Clone, Copy)]
+/// Lifetime-erased pointer to a submitter's task closure. Raw (not a
+/// reference) on purpose: stale queue entries may outlive the closure,
+/// and a raw pointer held without being dereferenced carries no
+/// validity obligation. It is dereferenced only between a successful
+/// seat claim and the submitting frame's return, during which the
+/// borrow is alive.
+type TaskPtr = *const (dyn Fn() + Sync + 'static);
+
+fn erase(task: &(dyn Fn() + Sync)) -> TaskPtr {
+    // Lifetime erasure only (ref-to-ptr casts may change the trait
+    // object lifetime); validity of later dereferences is argued at the
+    // claim sites.
+    task as TaskPtr
+}
+
+/// Seats live in the low 32 bits of a job's packed state, active
+/// participants in the high 32.
+const ACTIVE_ONE: u64 = 1 << 32;
+const SEATS_MASK: u64 = (1 << 32) - 1;
+
 struct Job {
-    /// Lifetime-erased task; valid because [`Pool::run`] does not return
-    /// until every worker that entered it has left.
-    task: &'static (dyn Fn() + Sync),
-    /// Pool workers that may still join this job (the submitter is not
-    /// counted — it always participates).
-    seats: usize,
+    task: TaskPtr,
+    /// `(active << 32) | seats`: open seats grant entry, active counts
+    /// participants currently inside the closure. The job is drained
+    /// exactly when both halves are zero.
+    state: AtomicU64,
+    /// A participant's task invocation panicked (re-raised by the
+    /// submitter once the job is drained).
+    panicked: AtomicBool,
 }
 
-struct Slot {
-    /// Bumped once per submitted job so workers can tell a fresh job
-    /// from a spurious wakeup or one they already served.
-    epoch: u64,
-    /// Current job; cleared by the submitter before it waits for
-    /// stragglers, so late-waking workers skip it.
-    job: Option<Job>,
-    /// Workers currently inside the job's closure.
-    running: usize,
-    /// A worker's task invocation panicked (re-raised by the submitter).
-    panicked: bool,
+// SAFETY: `task` is only dereferenced under the claim protocol (see
+// `TaskPtr`); everything else is atomics.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn new(task: TaskPtr, seats: usize, submitter_active: bool) -> Arc<Self> {
+        let init = (if submitter_active { ACTIVE_ONE } else { 0 }) | seats as u64;
+        Arc::new(Self {
+            task,
+            state: AtomicU64::new(init),
+            panicked: AtomicBool::new(false),
+        })
+    }
+
+    /// Claim one seat (seats -= 1, active += 1) if any seat is open.
+    fn claim(&self) -> bool {
+        self.state
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |s| {
+                if s & SEATS_MASK == 0 {
+                    None
+                } else {
+                    Some(s - 1 + ACTIVE_ONE)
+                }
+            })
+            .is_ok()
+    }
+
+    /// Leave after running the task; true when the job is now drained
+    /// (no active participants, no open seats).
+    fn finish(&self) -> bool {
+        self.state.fetch_sub(ACTIVE_ONE, Ordering::AcqRel) - ACTIVE_ONE == 0
+    }
+
+    /// Chunked-job submitter epilogue: close the remaining seats and
+    /// drop the submitter's own participation in one atomic step, so no
+    /// late claim can slip in between. True when the job is drained.
+    fn retire_submitter(&self) -> bool {
+        let prev = self
+            .state
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |s| {
+                Some((s & !SEATS_MASK) - ACTIVE_ONE)
+            })
+            .expect("retire never bails");
+        (prev & !SEATS_MASK) - ACTIVE_ONE == 0
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.load(Ordering::Acquire) == 0
+    }
 }
 
 struct Inner {
-    slot: Mutex<Slot>,
+    /// One deque per worker; worker `w` pops queue `w` from the front
+    /// and steals from the others' backs.
+    queues: Vec<Mutex<VecDeque<Arc<Job>>>>,
+    /// Bumped after every enqueue batch so a parked worker can tell new
+    /// work from a spurious wakeup without rescanning under the lock.
+    gen: AtomicU64,
+    park: Mutex<()>,
     work: Condvar,
+    /// Submitters wait here for their jobs to drain.
+    idle: Mutex<()>,
     done: Condvar,
     metrics: PoolMetrics,
 }
@@ -98,10 +197,10 @@ struct Inner {
 /// The process-wide pool. Obtain via [`global`].
 pub struct Pool {
     inner: Arc<Inner>,
-    /// Serializes jobs: the slot holds one job at a time.
-    submit: Mutex<()>,
     /// Total worker count including the submitting thread.
     threads: usize,
+    /// Round-robin cursor over worker queues for enqueues.
+    next_queue: AtomicUsize,
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
@@ -130,23 +229,49 @@ pub fn in_job() -> bool {
     IN_JOB.with(|f| f.get())
 }
 
+/// RAII guard marking the current thread as inside a job so nested
+/// parallel calls run inline. Pool workers set the flag directly; the
+/// spawn-per-call substrate's task workers ([`crate::par::par_tasks`])
+/// are plain scoped threads and use this guard for the same nesting
+/// rule (Drop restores the flag even on unwind).
+pub(crate) struct JobScope {
+    was: bool,
+}
+
+impl JobScope {
+    pub(crate) fn enter() -> Self {
+        Self { was: IN_JOB.with(|c| c.replace(true)) }
+    }
+}
+
+impl Drop for JobScope {
+    fn drop(&mut self) {
+        let was = self.was;
+        IN_JOB.with(|c| c.set(was));
+    }
+}
+
 impl Pool {
     fn start() -> Self {
         let threads = super::num_threads();
+        let workers = threads.saturating_sub(1);
         let inner = Arc::new(Inner {
-            slot: Mutex::new(Slot { epoch: 0, job: None, running: 0, panicked: false }),
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gen: AtomicU64::new(0),
+            park: Mutex::new(()),
             work: Condvar::new(),
+            idle: Mutex::new(()),
             done: Condvar::new(),
             metrics: PoolMetrics::default(),
         });
-        for i in 1..threads {
+        for wid in 0..workers {
             let inner = Arc::clone(&inner);
             std::thread::Builder::new()
-                .name(format!("contour-pool-{i}"))
-                .spawn(move || worker_loop(&inner))
+                .name(format!("contour-pool-{wid}"))
+                .spawn(move || worker_loop(&inner, wid))
                 .expect("spawning pool worker");
         }
-        Self { inner, submit: Mutex::new(()), threads }
+        Self { inner, threads, next_queue: AtomicUsize::new(0) }
     }
 
     /// Total worker count including the submitting thread.
@@ -166,7 +291,49 @@ impl Pool {
             pulls: m.pulls.load(Ordering::Relaxed),
             parks: m.parks.load(Ordering::Relaxed),
             wakes: m.wakes.load(Ordering::Relaxed),
+            steals: m.steals.load(Ordering::Relaxed),
+            inflight: m.inflight.load(Ordering::Relaxed),
+            max_inflight: m.max_inflight.load(Ordering::Relaxed),
+            exec_peak: m.max_exec_active.load(Ordering::Relaxed),
         }
+    }
+
+    /// Push `entries` references to `job` onto distinct worker queues
+    /// (round-robin) and wake the workers.
+    fn enqueue(&self, job: &Arc<Job>, entries: usize) {
+        let n = self.inner.queues.len();
+        if n == 0 || entries == 0 {
+            return;
+        }
+        for _ in 0..entries.min(n) {
+            let q = self.next_queue.fetch_add(1, Ordering::Relaxed) % n;
+            lock_pool(&self.inner.queues[q]).push_back(Arc::clone(job));
+        }
+        self.notify_work();
+    }
+
+    fn notify_work(&self) {
+        self.inner.gen.fetch_add(1, Ordering::Release);
+        // Take the park lock (empty critical section) so the bump
+        // cannot land between a worker's failed scan and its wait.
+        drop(lock_pool(&self.inner.park));
+        self.inner.work.notify_all();
+    }
+
+    /// Block until `job` is drained (every participant left, no open
+    /// seat remains).
+    fn wait_done(&self, job: &Job) {
+        let mut guard = lock_pool(&self.inner.idle);
+        while !job.is_done() {
+            guard = self.inner.done.wait(guard).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn job_submitted(&self, count: u64) {
+        let m = &self.inner.metrics;
+        m.jobs.fetch_add(count, Ordering::Relaxed);
+        let now = m.inflight.fetch_add(count, Ordering::Relaxed) + count;
+        m.max_inflight.fetch_max(now, Ordering::Relaxed);
     }
 
     /// Run `task` on up to `extra` pool workers plus the calling thread,
@@ -174,77 +341,142 @@ impl Pool {
     /// safe to invoke from several threads at once (each invocation
     /// pulls disjoint chunks from a shared cursor until it is drained).
     pub fn run(&self, extra: usize, task: &(dyn Fn() + Sync)) {
+        let seats = extra.min(self.threads.saturating_sub(1));
+        self.job_submitted(1);
         // SAFETY: the erased borrow never outlives this frame — we do
-        // not return until the slot is cleared and `running == 0`, i.e.
-        // no worker holds or will take the task reference.
-        let task: &'static (dyn Fn() + Sync) =
-            unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(task) };
-        let _turn = lock_pool(&self.submit);
-        self.inner.metrics.jobs.fetch_add(1, Ordering::Relaxed);
-        {
-            let mut slot = lock_pool(&self.inner.slot);
-            debug_assert_eq!(slot.running, 0, "job slot reused while busy");
-            slot.epoch = slot.epoch.wrapping_add(1);
-            slot.job = Some(Job { task, seats: extra.min(self.threads.saturating_sub(1)) });
-            self.inner.work.notify_all();
-        }
+        // not return until seats are closed and `active == 0`, i.e. no
+        // worker holds or will take the task pointer.
+        let job = Job::new(erase(task), seats, true);
+        self.enqueue(&job, seats);
         // The submitter always participates; catch a panic so workers
         // still borrowing `task` are waited for before unwinding.
-        let was = IN_JOB.with(|f| f.replace(true));
-        let mine = catch_unwind(AssertUnwindSafe(task));
-        IN_JOB.with(|f| f.set(was));
-        let worker_panicked = {
-            let mut slot = lock_pool(&self.inner.slot);
-            slot.job = None; // no further joins
-            while slot.running > 0 {
-                slot = self.inner.done.wait(slot).unwrap_or_else(PoisonError::into_inner);
-            }
-            std::mem::take(&mut slot.panicked)
+        let mine = {
+            let _in_job = JobScope::enter();
+            count_exec(&self.inner.metrics, || catch_unwind(AssertUnwindSafe(task)))
         };
+        if !job.retire_submitter() {
+            self.wait_done(&job);
+        }
+        self.inner.metrics.inflight.fetch_sub(1, Ordering::Relaxed);
         if let Err(p) = mine {
             resume_unwind(p);
         }
-        if worker_panicked {
+        if job.panicked.load(Ordering::Acquire) {
             panic!("pool worker panicked during parallel pass");
+        }
+    }
+
+    /// Run `count` one-shot tasks — `task(i)` invoked **exactly once**
+    /// per index — as independent jobs all in flight at once. Pool
+    /// workers and the submitting thread claim and run them
+    /// concurrently; the call returns when every task has finished.
+    /// This is the sharded executor's substrate: one job per shard.
+    /// Panics propagate (as one panic) after all tasks settle.
+    pub fn run_many(&self, count: usize, task: &(dyn Fn(usize) + Sync)) {
+        if count == 0 {
+            return;
+        }
+        // One wrapper closure per index, kept alive by this frame until
+        // every job is drained below.
+        let wrappers: Vec<Box<dyn Fn() + Sync + '_>> =
+            (0..count).map(|i| Box::new(move || task(i)) as Box<dyn Fn() + Sync + '_>).collect();
+        self.job_submitted(count as u64);
+        // SAFETY: see `run` — no claim can start after a job's single
+        // seat is taken, and we wait for every job before returning.
+        let jobs: Vec<Arc<Job>> =
+            wrappers.iter().map(|w| Job::new(erase(w.as_ref()), 1, false)).collect();
+        let n = self.inner.queues.len();
+        if n > 0 {
+            for job in &jobs {
+                let q = self.next_queue.fetch_add(1, Ordering::Relaxed) % n;
+                lock_pool(&self.inner.queues[q]).push_back(Arc::clone(job));
+            }
+            self.notify_work();
+        }
+        // The submitter claims whatever no worker has taken yet, so the
+        // set completes even on a single-threaded pool.
+        for job in &jobs {
+            execute(&self.inner, job);
+        }
+        let mut panicked = false;
+        for job in &jobs {
+            self.wait_done(job);
+            panicked |= job.panicked.load(Ordering::Acquire);
+        }
+        self.inner.metrics.inflight.fetch_sub(count as u64, Ordering::Relaxed);
+        if panicked {
+            panic!("pool task panicked");
         }
     }
 }
 
-fn worker_loop(inner: &Inner) {
-    let mut seen = 0u64;
+/// Run `f` counted as an executing participant (drives `exec_active`
+/// and its high-water mark). `f` must not unwind — both callers wrap
+/// the task in `catch_unwind` first.
+fn count_exec<R>(metrics: &PoolMetrics, f: impl FnOnce() -> R) -> R {
+    let now = metrics.exec_active.fetch_add(1, Ordering::Relaxed) + 1;
+    metrics.max_exec_active.fetch_max(now, Ordering::Relaxed);
+    let r = f();
+    metrics.exec_active.fetch_sub(1, Ordering::Relaxed);
+    r
+}
+
+/// Pop work: own queue front first, then steal from the others' backs.
+fn find_work(inner: &Inner, wid: usize) -> Option<Arc<Job>> {
+    let n = inner.queues.len();
+    if n == 0 {
+        return None;
+    }
+    if let Some(j) = lock_pool(&inner.queues[wid]).pop_front() {
+        return Some(j);
+    }
+    for off in 1..n {
+        let idx = (wid + off) % n;
+        if let Some(j) = lock_pool(&inner.queues[idx]).pop_back() {
+            inner.metrics.steals.fetch_add(1, Ordering::Relaxed);
+            return Some(j);
+        }
+    }
+    None
+}
+
+/// Claim a seat on `job` and, on success, run its task once. A failed
+/// claim means the entry is stale (job already full or retired).
+fn execute(inner: &Inner, job: &Job) {
+    if !job.claim() {
+        return;
+    }
+    // SAFETY: a successful claim pins the job open (`active > 0`), and
+    // the submitter does not return — so the closure outlives this call
+    // — until every claimed participant has finished.
+    let task: &(dyn Fn() + Sync) = unsafe { &*job.task };
+    let r = {
+        let _in_job = JobScope::enter();
+        count_exec(&inner.metrics, || catch_unwind(AssertUnwindSafe(task)))
+    };
+    if r.is_err() {
+        job.panicked.store(true, Ordering::Release);
+    }
+    if job.finish() {
+        // Serialize with a submitter between its is_done check and its
+        // wait, so the notification cannot be lost.
+        drop(lock_pool(&inner.idle));
+        inner.done.notify_all();
+    }
+}
+
+fn worker_loop(inner: &Inner, wid: usize) {
     loop {
-        let task = {
-            let mut slot = lock_pool(&inner.slot);
-            loop {
-                if slot.epoch != seen {
-                    seen = slot.epoch;
-                    match &mut slot.job {
-                        Some(job) if job.seats > 0 => {
-                            job.seats -= 1;
-                            slot.running += 1;
-                            break Some(job.task);
-                        }
-                        // Full (or already-drained) job: sit this one out.
-                        _ => break None,
-                    }
-                }
-                inner.metrics.parks.fetch_add(1, Ordering::Relaxed);
-                slot = inner.work.wait(slot).unwrap_or_else(PoisonError::into_inner);
-                inner.metrics.wakes.fetch_add(1, Ordering::Relaxed);
-            }
-        };
-        if let Some(task) = task {
-            IN_JOB.with(|f| f.set(true));
-            let r = catch_unwind(AssertUnwindSafe(task));
-            IN_JOB.with(|f| f.set(false));
-            let mut slot = lock_pool(&inner.slot);
-            if r.is_err() {
-                slot.panicked = true;
-            }
-            slot.running -= 1;
-            if slot.running == 0 {
-                inner.done.notify_all();
-            }
+        let gen = inner.gen.load(Ordering::Acquire);
+        if let Some(job) = find_work(inner, wid) {
+            execute(inner, &job);
+            continue;
+        }
+        let guard = lock_pool(&inner.park);
+        if inner.gen.load(Ordering::Acquire) == gen {
+            inner.metrics.parks.fetch_add(1, Ordering::Relaxed);
+            drop(inner.work.wait(guard).unwrap_or_else(PoisonError::into_inner));
+            inner.metrics.wakes.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -307,5 +539,74 @@ mod tests {
             ok.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn run_many_invokes_each_task_exactly_once() {
+        let count = 37;
+        let hits: Vec<AtomicUsize> = (0..count).map(|_| AtomicUsize::new(0)).collect();
+        global().run_many(count, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_many_registers_tasks_in_flight() {
+        // The whole set is submitted before any completion is awaited,
+        // so the high-water mark must reach the set size even on a
+        // single-threaded pool.
+        let before = stats().jobs;
+        global().run_many(5, &|_| {});
+        let s = stats();
+        assert!(s.jobs >= before + 5, "jobs {} -> {}", before, s.jobs);
+        assert!(s.max_inflight >= 5, "max_inflight {}", s.max_inflight);
+    }
+
+    #[test]
+    fn run_many_panic_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            global().run_many(4, &|i| {
+                if i == 2 {
+                    panic!("task boom");
+                }
+            });
+        });
+        assert!(caught.is_err());
+        let ok = AtomicUsize::new(0);
+        global().run_many(3, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn concurrent_submitters_overlap() {
+        // Two threads submitting chunked jobs at once: both finish and
+        // both are correct (the old pool serialized these on a submit
+        // lock; the multi-job pool runs them in flight together).
+        let n = 1 << 18;
+        let want = (n as u64 - 1) * n as u64 / 2;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let cursor = AtomicUsize::new(0);
+                    let sum = AtomicU64::new(0);
+                    global().run(usize::MAX, &|| loop {
+                        let start = cursor.fetch_add(1 << 10, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + (1 << 10)).min(n);
+                        let mut local = 0u64;
+                        for i in start..end {
+                            local += i as u64;
+                        }
+                        sum.fetch_add(local, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), want);
+                });
+            }
+        });
     }
 }

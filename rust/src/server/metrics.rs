@@ -32,6 +32,14 @@ pub struct Metrics {
     pub cc_millis: Counter,
     /// CC/LABELS requests answered from the labels cache.
     pub cc_cache_hits: Counter,
+    /// CC/LABELS requests that computed (and admitted) a fresh entry.
+    pub cc_cache_misses: Counter,
+    /// Sharded views created (SHARD).
+    pub shards_created: Counter,
+    /// Partitioned connectivity runs (PCC).
+    pub pcc_runs: Counter,
+    /// Total milliseconds spent inside partitioned connectivity runs.
+    pub pcc_millis: Counter,
     /// Streaming sessions created (STREAM + SLOAD).
     pub streams_created: Counter,
     /// Edges ingested through SADD across all streams.
@@ -49,14 +57,20 @@ impl Metrics {
         let pool = crate::par::pool::stats();
         format!(
             "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
+             cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
              streams={} stream_edges={} stream_epochs={} stream_queries={} pool_workers={} \
-             pool_jobs={} pool_pulls={} pool_parks={} pool_wakes={}",
+             pool_jobs={} pool_pulls={} pool_steals={} pool_parks={} pool_wakes={} \
+             pool_inflight={} pool_max_inflight={} pool_exec_peak={}",
             self.requests.get(),
             self.errors.get(),
             self.graphs_loaded.get(),
             self.cc_runs.get(),
             self.cc_millis.get(),
             self.cc_cache_hits.get(),
+            self.cc_cache_misses.get(),
+            self.shards_created.get(),
+            self.pcc_runs.get(),
+            self.pcc_millis.get(),
             self.streams_created.get(),
             self.stream_edges.get(),
             self.stream_epochs.get(),
@@ -64,8 +78,12 @@ impl Metrics {
             pool.workers,
             pool.jobs,
             pool.pulls,
+            pool.steals,
             pool.parks,
-            pool.wakes
+            pool.wakes,
+            pool.inflight,
+            pool.max_inflight,
+            pool.exec_peak
         )
     }
 }

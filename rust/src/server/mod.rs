@@ -25,11 +25,21 @@
 //!                                    (cnt defaults to 10000; page with
 //!                                    off/cnt, total = label count)
 //!   STATS name                     → OK n=.. m=.. components=.. ...
-//!   LIST                           → OK name:n:m ... stream/name:n:m ...
-//!   DROP name                      → OK       (graph or stream)
+//!   LIST                           → OK name:n:m ... shard/name:n:m ...
+//!                                    stream/name:n:m ...
+//!   DROP name                      → OK       (graph, shards or stream)
 //!   METRICS                        → OK requests=.. cc_runs=.. ...
+//!                                    cache/<name>=hits:misses ...
 //!   PING                           → PONG
 //!   QUIT                           → BYE (closes connection)
+//!
+//! Sharded store (see [`crate::shard`]; SHARD partitions a stored graph
+//! into p vertex-range shards, PCC runs shard-local connectivity
+//! concurrently — one pool job per shard — and contracts the boundary):
+//!   SHARD name p                   → OK p boundary_edges
+//!   PCC name [ALG]                 → OK components iterations millis
+//!   SHARDSTATS name                → OK p=.. n=.. m=.. boundary=..
+//!                                    shardK=lo:hi:m:components:maxdeg ...
 //!
 //! Streaming connectivity (see [`crate::stream`]; epochs are sealed
 //! label snapshots, `e` defaults to the current epoch):
@@ -45,6 +55,11 @@
 //!   SQUERY name LABEL v [e]        → OK label epoch
 //!   SSAVE name PATH                → OK epoch    (write binary snapshot)
 //!   SLOAD name SNAPPATH [WALPATH]  → OK n epoch  (recover from disk)
+//!
+//! Sealed epochs are admitted into the CC labels cache, so `LABELS`
+//! also pages streaming labellings (`epoch:<e>` in the alg slot picks a
+//! retained epoch; default = current):
+//!   LABELS streamname [epoch:E] [off [cnt]] → OK total l.. l..
 
 pub mod metrics;
 
@@ -60,7 +75,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::cc::{self, Algorithm};
 use crate::coordinator::{algorithm_by_name, auto_select};
 use crate::graph::{gen, io, stats, Csr, EdgeList};
-use crate::stream::StreamingCc;
+use crate::shard::{self, ShardedGraph};
+use crate::stream::{Snapshot, StreamingCc};
 use crate::util::Timer;
 use crate::VId;
 
@@ -71,24 +87,54 @@ use metrics::Metrics;
 /// Beyond the cap the least recently touched entry is evicted.
 pub const CC_CACHE_CAP: usize = 16;
 
+/// Backing storage for a cached labelling: static entries own their
+/// vector; stream entries share the sealed snapshot's allocation
+/// instead of duplicating an O(n) copy.
+enum CachedLabels {
+    Owned(cc::Labels),
+    Epoch(Arc<Snapshot>),
+}
+
 /// A memoized connectivity run for one (graph, algorithm) pair: what
 /// `CC` reports and what `LABELS` pages through.
 pub struct CcEntry {
-    pub labels: cc::Labels,
+    labels: CachedLabels,
     pub iterations: usize,
     pub components: usize,
-    /// The exact graph this result was computed on. Hits verify it by
-    /// pointer identity against the request's graph: replacing a name
-    /// purges the cache, but purge and graph-map insert are separate
-    /// critical sections, so a key match alone can be stale.
-    graph: Arc<Csr>,
+    /// The exact graph this result was computed on, for static graphs.
+    /// Hits verify it by pointer identity against the request's graph:
+    /// replacing a name purges the cache, but purge and graph-map
+    /// insert are separate critical sections, so a key match alone can
+    /// be stale. `None` for streaming-epoch entries.
+    graph: Option<Arc<Csr>>,
+    /// The exact stream a streaming-epoch entry was read from, for the
+    /// same identity check (a DROP + recreate reuses both the name and
+    /// the epoch numbers, and the DROP purge races in-flight lookups).
+    /// Weak so cached entries never keep a dropped stream — and its
+    /// WAL claim — alive. `None` for static entries.
+    stream: Option<Weak<StreamingCc>>,
     /// Last-touch stamp from [`ServerState::cache_clock`] (LRU order).
     stamp: AtomicU64,
 }
 
-/// Shared server state: the graph and stream stores plus counters.
+impl CcEntry {
+    /// The cached label array (min-vertex-id canonical).
+    pub fn labels(&self) -> &[VId] {
+        match &self.labels {
+            CachedLabels::Owned(l) => l,
+            CachedLabels::Epoch(s) => &s.labels,
+        }
+    }
+}
+
+/// Shared server state: the graph, shard and stream stores plus
+/// counters.
 pub struct ServerState {
     graphs: RwLock<HashMap<String, Arc<Csr>>>,
+    /// Sharded views keyed by the source graph's name (SHARD/PCC).
+    /// Replacing or dropping the source graph drops its view too — a
+    /// partition of a graph that no longer exists must not serve.
+    sharded: RwLock<HashMap<String, Arc<ShardedGraph>>>,
     streams: RwLock<HashMap<String, Arc<StreamingCc>>>,
     /// Connectivity results already computed for (graph, alg) — both
     /// `CC` reruns and LABELS paging would otherwise rerun connectivity
@@ -97,6 +143,13 @@ pub struct ServerState {
     labels_cache: RwLock<HashMap<(String, String), Arc<CcEntry>>>,
     /// Monotonic clock for LRU stamps in the labels cache.
     cache_clock: AtomicU64,
+    /// Per-graph labels-cache accounting: name → (hits, misses), where
+    /// a "miss" is a computed-and-admitted entry. Stream entries count
+    /// under `stream/<name>`. Counts survive graph *replacement* (they
+    /// describe the name) but are dropped with DROP, so the map stays
+    /// bounded by the store's own lifecycle. RwLock + atomic counters:
+    /// the hit path (every cached CC/LABELS) takes only the read side.
+    cache_stats: RwLock<HashMap<String, (AtomicU64, AtomicU64)>>,
     /// WAL files claimed by streams that may still be alive — the map
     /// entry or an in-flight verb holding the Arc. A claim dies with
     /// its last Arc, so DROP + recreate on the same WAL is refused
@@ -118,9 +171,11 @@ impl ServerState {
         let threads = if threads == 0 { 0 } else { threads.min(crate::par::num_threads()) };
         Self {
             graphs: RwLock::new(HashMap::new()),
+            sharded: RwLock::new(HashMap::new()),
             streams: RwLock::new(HashMap::new()),
             labels_cache: RwLock::new(HashMap::new()),
             cache_clock: AtomicU64::new(0),
+            cache_stats: RwLock::new(HashMap::new()),
             wal_claims: Mutex::new(HashMap::new()),
             metrics: Metrics::default(),
             threads,
@@ -130,6 +185,67 @@ impl ServerState {
     fn touch(&self, e: &CcEntry) {
         let now = self.cache_clock.fetch_add(1, Ordering::Relaxed) + 1;
         e.stamp.store(now, Ordering::Relaxed);
+    }
+
+    /// Record a per-graph labels-cache hit or miss (and the matching
+    /// global counter). Hot path (the name already has counters, i.e.
+    /// every request after the first) is a read lock plus one relaxed
+    /// increment — no allocation, no exclusive lock.
+    fn note_cache(&self, name: &str, hit: bool) {
+        if hit {
+            self.metrics.cc_cache_hits.inc();
+        } else {
+            self.metrics.cc_cache_misses.inc();
+        }
+        {
+            let m = self.cache_stats.read().unwrap();
+            if let Some(e) = m.get(name) {
+                let c = if hit { &e.0 } else { &e.1 };
+                c.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        let mut m = self.cache_stats.write().unwrap();
+        let e = m.entry(name.to_string()).or_default();
+        let c = if hit { &e.0 } else { &e.1 };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-graph cache counters as ` cache/<name>=hits:misses ...`
+    /// (leading space; empty when nothing was ever looked up), appended
+    /// to the METRICS reply.
+    pub fn render_cache_stats(&self) -> String {
+        let m = self.cache_stats.read().unwrap();
+        let mut pairs: Vec<String> = m
+            .iter()
+            .map(|(k, (h, mi))| {
+                format!(
+                    "cache/{k}={}:{}",
+                    h.load(Ordering::Relaxed),
+                    mi.load(Ordering::Relaxed)
+                )
+            })
+            .collect();
+        pairs.sort();
+        if pairs.is_empty() {
+            String::new()
+        } else {
+            format!(" {}", pairs.join(" "))
+        }
+    }
+
+    /// Evict the least recently touched entry when the cache is full
+    /// and `key` is not already resident. Caller holds the write lock.
+    fn evict_if_full(map: &mut HashMap<(String, String), Arc<CcEntry>>, key: &(String, String)) {
+        if map.len() >= CC_CACHE_CAP && !map.contains_key(key) {
+            let victim = map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone());
+            if let Some(v) = victim {
+                map.remove(&v);
+            }
+        }
     }
 
     /// The connectivity result for `(graph, alg)`, served from the
@@ -154,9 +270,9 @@ impl ServerState {
         if let Some(e) = self.labels_cache.read().unwrap().get(&key).cloned() {
             // Pointer identity, not just key match: a racing replace of
             // this name may not have purged the old entry yet.
-            if Arc::ptr_eq(&e.graph, g) {
+            if e.graph.as_ref().map_or(false, |eg| Arc::ptr_eq(eg, g)) {
                 self.touch(&e);
-                self.metrics.cc_cache_hits.inc();
+                self.note_cache(name, true);
                 return Ok((e, None));
             }
         }
@@ -167,9 +283,10 @@ impl ServerState {
         self.metrics.cc_millis.add(ms as u64);
         let entry = Arc::new(CcEntry {
             components: cc::num_components(&r.labels),
-            labels: r.labels,
+            labels: CachedLabels::Owned(r.labels),
             iterations: r.iterations,
-            graph: Arc::clone(g),
+            graph: Some(Arc::clone(g)),
+            stream: None,
             stamp: AtomicU64::new(0),
         });
         self.touch(&entry);
@@ -181,18 +298,84 @@ impl ServerState {
         let still_current =
             self.graphs.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, g));
         if still_current {
-            if map.len() >= CC_CACHE_CAP && !map.contains_key(&key) {
-                let victim = map
-                    .iter()
-                    .min_by_key(|(_, e)| e.stamp.load(Ordering::Relaxed))
-                    .map(|(k, _)| k.clone());
-                if let Some(v) = victim {
-                    map.remove(&v);
-                }
-            }
+            // Count the miss only on admission: a racing DROP must not
+            // have its cache_stats cleanup resurrected by this lookup.
+            self.note_cache(name, false);
+            Self::evict_if_full(&mut map, &key);
             map.insert(key, Arc::clone(&entry));
         }
         Ok((entry, Some(ms)))
+    }
+
+    /// Cached labels for a sealed stream epoch (ROADMAP item: admit
+    /// streaming epoch labellings into the CC labels cache). Admitted
+    /// lazily on first LABELS touch — never on SEPOCH itself, so a
+    /// stream sealing epochs nobody pages cannot evict the static CC
+    /// entries from the bounded cache. Epochs are immutable, so a key
+    /// hit stays valid as long as the stream exists (DROP purges every
+    /// `stream/<name>` key). Returns the entry plus whether it was a
+    /// hit.
+    pub fn stream_cached(
+        &self,
+        name: &str,
+        s: &Arc<StreamingCc>,
+        epoch: u64,
+    ) -> Result<(Arc<CcEntry>, bool)> {
+        let cache_name = format!("stream/{name}");
+        let key = (cache_name.clone(), format!("epoch:{epoch}"));
+        // Bind the lookup first: an `if let` on the locked expression
+        // would hold the read guard through the body (temporary
+        // lifetime extension), deadlocking the dead-entry removal's
+        // write lock below.
+        let cached = self.labels_cache.read().unwrap().get(&key).cloned();
+        if let Some(e) = cached {
+            // Pointer identity against the *current* stream, like the
+            // static path: a DROP + recreate reuses name and epoch
+            // numbers, and the DROP purge can race an in-flight lookup.
+            let same_stream = e
+                .stream
+                .as_ref()
+                .map_or(false, |w| w.upgrade().map_or(false, |cur| Arc::ptr_eq(&cur, s)));
+            // Serve only epochs the stream still retains: otherwise
+            // LABELS for an evicted epoch would answer from the cache
+            // while SQUERY for the same epoch errors, and flip to an
+            // error whenever the cache entry happens to be LRU-evicted.
+            let retained = s.at_epoch(epoch).is_some();
+            if same_stream && retained {
+                self.touch(&e);
+                self.note_cache(&cache_name, true);
+                return Ok((e, true));
+            }
+            if same_stream && !retained {
+                // Dead entry: the epoch left the stream's history, so
+                // it can never hit again — free its cache slot (and
+                // the snapshot it pins) instead of waiting for LRU.
+                self.labels_cache.write().unwrap().remove(&key);
+            }
+        }
+        let snap = s.snapshot_at(Some(epoch))?;
+        let entry = Arc::new(CcEntry {
+            components: snap.num_components,
+            labels: CachedLabels::Epoch(snap),
+            iterations: 0,
+            graph: None,
+            stream: Some(Arc::downgrade(s)),
+            stamp: AtomicU64::new(0),
+        });
+        self.touch(&entry);
+        let mut map = self.labels_cache.write().unwrap();
+        // Admit only while `name` still maps to this stream: a racing
+        // DROP (or DROP + recreate) must not have its purge undone —
+        // neither in the cache nor in cache_stats (miss counted only on
+        // admission).
+        let still_current =
+            self.streams.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, s));
+        if still_current {
+            self.note_cache(&cache_name, false);
+            Self::evict_if_full(&mut map, &key);
+            map.insert(key, Arc::clone(&entry));
+        }
+        Ok((entry, false))
     }
 
     #[cfg(test)]
@@ -203,10 +386,43 @@ impl ServerState {
     pub fn insert(&self, name: &str, g: Csr) {
         self.graphs.write().unwrap().insert(name.to_string(), Arc::new(g));
         self.labels_cache.write().unwrap().retain(|k, _| k.0 != name);
+        // A sharded view partitions the *replaced* graph; drop it.
+        self.sharded.write().unwrap().remove(name);
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<Csr>> {
         self.graphs.read().unwrap().get(name).cloned()
+    }
+
+    /// Register a sharded view of graph `name`, guarding against a
+    /// racing replace: the view is admitted only while `name` still
+    /// maps to the exact graph that was partitioned (the same
+    /// pointer-identity rule the labels cache uses) — otherwise
+    /// PCC/SHARDSTATS would serve a partition of a dead graph. Returns
+    /// `None` when the graph was replaced or dropped mid-partition.
+    /// (Holding the sharded write lock across the identity check
+    /// serializes with `insert`'s purge: either the purge runs after
+    /// this insert and removes it, or the check sees the new graph.)
+    pub fn insert_sharded(
+        &self,
+        name: &str,
+        src: &Arc<Csr>,
+        sg: ShardedGraph,
+    ) -> Option<Arc<ShardedGraph>> {
+        let sg = Arc::new(sg);
+        let mut map = self.sharded.write().unwrap();
+        let still_current =
+            self.graphs.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, src));
+        if !still_current {
+            return None;
+        }
+        map.insert(name.to_string(), Arc::clone(&sg));
+        self.metrics.shards_created.inc();
+        Some(sg)
+    }
+
+    pub fn get_sharded(&self, name: &str) -> Option<Arc<ShardedGraph>> {
+        self.sharded.read().unwrap().get(name).cloned()
     }
 
     /// Create (or recover) a stream and register it under `name`,
@@ -254,13 +470,26 @@ impl ServerState {
         self.streams.read().unwrap().get(name).cloned()
     }
 
-    /// Drop a graph or stream by name (graphs take precedence).
+    /// Drop a graph (with its sharded view) or stream by name (graphs
+    /// take precedence).
     pub fn drop_graph(&self, name: &str) -> bool {
         if self.graphs.write().unwrap().remove(name).is_some() {
             self.labels_cache.write().unwrap().retain(|k, _| k.0 != name);
+            self.sharded.write().unwrap().remove(name);
+            self.cache_stats.write().unwrap().remove(name);
             return true;
         }
-        self.streams.write().unwrap().remove(name).is_some()
+        if self.streams.write().unwrap().remove(name).is_some() {
+            // Streaming graphs cache sealed-epoch labellings under
+            // `stream/<name>`; dropping the stream must evict them or a
+            // recreated stream reusing the name (and its epoch numbers)
+            // would serve the dead stream's labels.
+            let skey = format!("stream/{name}");
+            self.labels_cache.write().unwrap().retain(|k, _| k.0 != skey);
+            self.cache_stats.write().unwrap().remove(&skey);
+            return true;
+        }
+        false
     }
 
     pub fn list(&self) -> Vec<(String, usize, usize)> {
@@ -271,6 +500,13 @@ impl ServerState {
             .iter()
             .map(|(k, g)| (k.clone(), g.n, g.m()))
             .collect();
+        v.extend(
+            self.sharded
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(k, s)| (format!("shard/{k}"), s.n, s.m)),
+        );
         v.extend(
             self.streams
                 .read()
@@ -373,6 +609,9 @@ impl<'s> Session<'s> {
             "CC" => self.cmd_cc(&rest),
             "LABELS" => self.cmd_labels(&rest),
             "STATS" => self.cmd_stats(&rest),
+            "SHARD" => self.cmd_shard(&rest),
+            "PCC" => self.cmd_pcc(&rest),
+            "SHARDSTATS" => self.cmd_shardstats(&rest),
             "STREAM" => self.cmd_stream(&rest),
             "SADD" => self.cmd_sadd(&rest),
             "SEPOCH" => self.cmd_sepoch(&rest),
@@ -393,7 +632,11 @@ impl<'s> Session<'s> {
                 Some(name) => Err(anyhow!("no graph or stream {name:?}")),
                 None => Err(anyhow!("DROP needs a name")),
             },
-            "METRICS" => Ok(format!("OK {}", self.state.metrics.render())),
+            "METRICS" => Ok(format!(
+                "OK {}{}",
+                self.state.metrics.render(),
+                self.state.render_cache_stats()
+            )),
             other => Err(anyhow!("unknown command {other:?}")),
         };
         Some(match reply {
@@ -499,6 +742,8 @@ impl<'s> Session<'s> {
     /// `LABELS name [alg] [offset [count]]` — pages through the label
     /// array instead of silently truncating. The reply leads with the
     /// total label count so clients know when they have everything.
+    /// For streams the alg slot takes `epoch:<e>` instead (default =
+    /// current epoch) and pages the sealed epoch's labelling.
     fn cmd_labels(&self, rest: &[&str]) -> Result<String> {
         let mut it = rest.iter();
         let name = *it.next().ok_or_else(|| anyhow!("usage: LABELS name [alg] [off [cnt]]"))?;
@@ -513,19 +758,39 @@ impl<'s> Session<'s> {
                 bail!("usage: LABELS name [alg] [offset [count]], got {tok:?}");
             }
         }
-        let alg_name = alg_name.unwrap_or("C-2");
         anyhow::ensure!(nums.len() <= 2, "usage: LABELS name [alg] [offset [count]]");
         let offset = nums.first().copied().unwrap_or(0);
         let count = nums.get(1).copied().unwrap_or(10_000);
-        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
-        // Serve every page of one (graph, alg) from a single run —
-        // paging clients would otherwise trigger a full connectivity
-        // run per page. The same cache backs CC.
-        let (entry, _ran_ms) = self.state.cc_cached(name, alg_name, &g, || {
-            let alg = self.resolve_alg(&g, alg_name)?;
-            Ok(alg.run_with_stats(&g))
-        })?;
-        let labels = &entry.labels;
+        let entry = if let Some(g) = self.state.get(name) {
+            // Serve every page of one (graph, alg) from a single run —
+            // paging clients would otherwise trigger a full connectivity
+            // run per page. The same cache backs CC.
+            let alg_name = alg_name.unwrap_or("C-2");
+            self.state
+                .cc_cached(name, alg_name, &g, || {
+                    let alg = self.resolve_alg(&g, alg_name)?;
+                    Ok(alg.run_with_stats(&g))
+                })?
+                .0
+        } else if let Some(s) = self.state.get_stream(name) {
+            // Streams page their sealed-epoch labellings through the
+            // same cache; `epoch:<e>` in the alg slot picks a retained
+            // epoch (default current).
+            let epoch = match alg_name {
+                None => s.epoch(),
+                Some(tok) => tok
+                    .strip_prefix("epoch:")
+                    .ok_or_else(|| {
+                        anyhow!("stream LABELS takes `epoch:<e>`, not an algorithm ({tok:?})")
+                    })?
+                    .parse::<u64>()
+                    .map_err(|e| anyhow!("bad epoch in {tok:?}: {e}"))?,
+            };
+            self.state.stream_cached(name, &s, epoch)?.0
+        } else {
+            bail!("no graph or stream {name:?}");
+        };
+        let labels = entry.labels();
         let total = labels.len();
         let lo = offset.min(total);
         let hi = lo.saturating_add(count).min(total);
@@ -546,6 +811,82 @@ impl<'s> Session<'s> {
             "OK n={} m={} components={} diameter={} max_degree={}",
             s.n, s.m, s.num_components, s.pseudo_diameter, s.max_degree
         ))
+    }
+
+    // --------------------------------------------------- sharded verbs
+
+    /// `SHARD name p` — partition a stored graph into `p` vertex-range
+    /// shards (see [`crate::shard`]); replaces any previous view.
+    fn cmd_shard(&self, rest: &[&str]) -> Result<String> {
+        let (name, p) = match rest {
+            [name, p] => (*name, p.parse::<usize>().map_err(|e| anyhow!("bad shard count: {e}"))?),
+            _ => bail!("usage: SHARD name p"),
+        };
+        anyhow::ensure!(p >= 1, "shard count must be >= 1");
+        anyhow::ensure!(p <= 65_536, "shard count {p} unreasonably large");
+        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+        let sg = self
+            .state
+            .insert_sharded(name, &g, ShardedGraph::partition(&g, p))
+            .ok_or_else(|| anyhow!("graph {name:?} was replaced during SHARD; retry"))?;
+        Ok(format!("OK {} {}", sg.p(), sg.boundary.len()))
+    }
+
+    /// `PCC name [alg]` — partitioned connectivity: shard-local runs
+    /// concurrently (one pool job per shard), then boundary merge.
+    fn cmd_pcc(&self, rest: &[&str]) -> Result<String> {
+        let (name, alg_name) = match rest {
+            [name] => (*name, "C-2"),
+            [name, alg] => (*name, *alg),
+            _ => bail!("usage: PCC name [alg]"),
+        };
+        let sg = self
+            .state
+            .get_sharded(name)
+            .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
+        let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
+            // Drive the §IV-E policy from the heaviest shard's topology
+            // (partitioning is by vertex range, so shards inherit the
+            // source graph's shape).
+            let big = sg
+                .shards
+                .iter()
+                .max_by_key(|s| s.graph.m())
+                .expect("a partition has at least one shard");
+            Box::new(auto_select(big.stats()).with_threads(self.state.threads))
+        } else {
+            algorithm_by_name(alg_name, self.state.threads)?
+        };
+        let t = Timer::start();
+        let r = shard::run_sharded(&sg, alg.as_ref(), self.state.threads);
+        let ms = t.ms();
+        self.state.metrics.pcc_runs.inc();
+        self.state.metrics.pcc_millis.add(ms as u64);
+        Ok(format!("OK {} {} {:.3}", cc::num_components(&r.labels), r.iterations, ms))
+    }
+
+    /// `SHARDSTATS name` — per-shard topology of a sharded view.
+    fn cmd_shardstats(&self, rest: &[&str]) -> Result<String> {
+        let name = rest.first().ok_or_else(|| anyhow!("usage: SHARDSTATS name"))?;
+        let sg = self
+            .state
+            .get_sharded(name)
+            .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
+        let mut out = format!(
+            "OK p={} n={} m={} boundary={}",
+            sg.p(),
+            sg.n,
+            sg.m,
+            sg.boundary.len()
+        );
+        for (k, sh) in sg.shards.iter().enumerate() {
+            let st = sh.stats();
+            out.push_str(&format!(
+                " shard{k}={}:{}:{}:{}:{}",
+                sh.lo, sh.hi, st.m, st.num_components, st.max_degree
+            ));
+        }
+        Ok(out)
     }
 
     // ------------------------------------------------- streaming verbs
@@ -937,6 +1278,98 @@ mod tests {
             state.labels_cache.read().unwrap().contains_key(&hot),
             "recently-touched entry was evicted"
         );
+    }
+
+    #[test]
+    fn shard_pcc_flow() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN g er:300:500").starts_with("OK"));
+        // Partitioned CC before SHARD is an error.
+        assert!(ask("PCC g C-2").starts_with("ERR"));
+        let sh = ask("SHARD g 3");
+        assert!(sh.starts_with("OK 3 "), "{sh}");
+        let cc = ask("CC g C-2");
+        let pcc = ask("PCC g C-2");
+        assert!(pcc.starts_with("OK"), "{pcc}");
+        // Same component count as the single-shard run.
+        assert_eq!(
+            cc.split_whitespace().nth(1).unwrap(),
+            pcc.split_whitespace().nth(1).unwrap(),
+            "cc={cc} pcc={pcc}"
+        );
+        let st = ask("SHARDSTATS g");
+        assert!(st.contains("p=3"), "{st}");
+        assert!(st.contains("shard2="), "{st}");
+        assert!(ask("LIST").contains("shard/g:300:"));
+        assert!(ask("PCC g auto").starts_with("OK"));
+        let m = ask("METRICS");
+        assert!(m.contains("shards=1"), "{m}");
+        assert!(m.contains("pcc_runs=2"), "{m}");
+        // Replacing the graph drops the stale sharded view.
+        assert!(ask("GEN g path:10").starts_with("OK"));
+        assert!(ask("PCC g C-2").starts_with("ERR"), "stale sharded view served");
+        assert!(ask("SHARD g 2").starts_with("OK 2 "));
+        assert!(ask("DROP g").starts_with("OK"));
+        assert!(ask("SHARDSTATS g").starts_with("ERR"));
+    }
+
+    #[test]
+    fn stream_labels_page_through_cache() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("STREAM s 6").starts_with("OK"));
+        assert!(ask("SADD s 0 1 2 3").starts_with("OK"));
+        assert_eq!(ask("SEPOCH s"), "OK 1 4");
+        // Current epoch pages like a static graph (total first).
+        assert_eq!(ask("LABELS s"), "OK 6 0 0 2 2 4 5");
+        assert_eq!(ask("LABELS s 2 3"), "OK 6 2 2 4");
+        // Sealed epochs stay addressable after later seals.
+        assert!(ask("SADD s 1 2").starts_with("OK"));
+        assert_eq!(ask("SEPOCH s"), "OK 2 3");
+        assert_eq!(ask("LABELS s epoch:1 0 6"), "OK 6 0 0 2 2 4 5");
+        assert_eq!(ask("LABELS s epoch:2 0 6"), "OK 6 0 0 0 0 4 5");
+        assert!(ask("LABELS s epoch:9").starts_with("ERR"));
+        assert!(ask("LABELS s FastSV").starts_with("ERR"), "algs rejected for streams");
+        // Lazy admissions count as misses (one per epoch first touched);
+        // repeat pages of an admitted epoch are hits.
+        let m = ask("METRICS");
+        assert!(m.contains("cache/stream/s="), "{m}");
+        let kv = m
+            .split_whitespace()
+            .find(|t| t.starts_with("cache/stream/s="))
+            .unwrap()
+            .split_once('=')
+            .unwrap()
+            .1
+            .to_string();
+        let (hits, misses) = kv.split_once(':').unwrap();
+        assert!(hits.parse::<u64>().unwrap() >= 2, "hits {kv}");
+        assert!(misses.parse::<u64>().unwrap() >= 2, "misses {kv}");
+    }
+
+    /// Regression: DROP on a streaming graph must evict its cached
+    /// epoch labellings — a recreated stream reuses the name *and* the
+    /// epoch numbers, so a stale entry would serve the dead stream's
+    /// labels.
+    #[test]
+    fn drop_stream_evicts_cached_epoch_labels() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("STREAM s 4").starts_with("OK"));
+        assert!(ask("SADD s 0 1").starts_with("OK"));
+        assert_eq!(ask("SEPOCH s"), "OK 1 3");
+        assert_eq!(ask("LABELS s epoch:1"), "OK 4 0 0 2 3");
+        assert_eq!(ask("DROP s"), "OK");
+        // Recreate under the same name with different edges; epoch 1 of
+        // the new stream must reflect the new stream, not the old one.
+        assert!(ask("STREAM s 4").starts_with("OK"));
+        assert!(ask("SADD s 2 3").starts_with("OK"));
+        assert_eq!(ask("SEPOCH s"), "OK 1 3");
+        assert_eq!(ask("LABELS s epoch:1"), "OK 4 0 1 2 2", "stale cached labels served");
     }
 
     #[test]

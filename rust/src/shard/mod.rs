@@ -1,0 +1,35 @@
+//! Sharded connectivity subsystem.
+//!
+//! The Contour operator is embarrassingly parallel per iteration, but a
+//! single monolithic graph store still funnels every request through
+//! one label array and (before the multi-job pool) one job at a time.
+//! Distributed-memory connectivity work — FastSV (Zhang, Azad & Hu) and
+//! the near-optimal MPC algorithms (Behnezhad et al.) — shows the
+//! winning shape: run connectivity **locally on shards**, then contract
+//! the small cross-shard boundary. This module is that shape for the
+//! in-process store, in three layers:
+//!
+//! * [`partition`] — split a [`crate::graph::Csr`] into `p` vertex-range
+//!   shards (reusing [`crate::graph::transform::partition_edges`]) plus
+//!   an explicit boundary edge list, with per-shard
+//!   [`crate::graph::stats::GraphStats`].
+//! * [`exec`] — run any [`crate::cc::Algorithm`] shard-locally and
+//!   concurrently (one pool job per shard; C-1/C-2/C-m hop schedules
+//!   honored unchanged), then union representative labels over the
+//!   boundary with the Rem-CAS structure from [`crate::cc::unionfind`]
+//!   and broadcast final roots back into every shard's label range.
+//! * The **shard router** lives in [`crate::server`]: `SHARD name p`
+//!   partitions a stored graph, `PCC name [alg]` runs partitioned
+//!   connectivity, `SHARDSTATS name` reports per-shard topology — and
+//!   the multi-job pool lets two clients' requests overlap instead of
+//!   serializing on a submit lock.
+//!
+//! The sharded result is not merely component-equivalent to a
+//! single-shard run: it is the *identical* canonical min-vertex-id
+//! labelling (`tests/shard_equiv.rs` pins both properties).
+
+pub mod exec;
+pub mod partition;
+
+pub use exec::{run_sharded, ShardedRun};
+pub use partition::{Shard, ShardedGraph};

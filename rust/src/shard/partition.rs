@@ -1,0 +1,171 @@
+//! Vertex-range graph partitioner.
+//!
+//! Splits a [`Csr`] into `p` shard-local subgraphs by contiguous vertex
+//! range plus an explicit cross-shard boundary edge list — the
+//! decomposition the distributed-memory connectivity literature (FastSV,
+//! Behnezhad et al.) runs local connectivity on before contracting the
+//! (small) boundary. Shard `k` owns global vertices `[lo, hi)` compacted
+//! to local ids `0..hi - lo`, so every shard is a standalone graph any
+//! [`crate::cc::Algorithm`] can run on unchanged; the boundary keeps
+//! global ids for the merge pass ([`super::exec`]).
+//!
+//! Each shard also carries its own [`GraphStats`] — computed lazily on
+//! first use, so the server's `SHARDSTATS` verb (and the §IV-E auto
+//! policy, per shard) can reason about per-shard topology while
+//! `SHARD`/`PCC` never pay the stats BFS sweeps.
+
+use std::sync::OnceLock;
+
+use crate::graph::stats::{self, GraphStats};
+use crate::graph::{transform, Csr};
+use crate::VId;
+
+/// One shard: a contiguous global vertex range `[lo, hi)` compacted to
+/// local ids `0..hi - lo`, its local subgraph, and its statistics.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub lo: VId,
+    pub hi: VId,
+    /// Local subgraph over local ids (`global - lo`).
+    pub graph: Csr,
+    /// Lazily computed: see [`Shard::stats`].
+    stats: OnceLock<GraphStats>,
+}
+
+impl Shard {
+    /// Vertices owned by this shard.
+    pub fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+
+    /// This shard's [`GraphStats`], computed on first use: the stats
+    /// BFS sweeps (component census + pseudo-diameter) cost several
+    /// O(n + m) passes, and the PCC hot path never reads them — only
+    /// `SHARDSTATS` and the `auto` policy do, so `SHARD` itself stays
+    /// one O(m) partition sweep.
+    pub fn stats(&self) -> &GraphStats {
+        self.stats.get_or_init(|| stats::stats(&self.graph))
+    }
+}
+
+/// A graph split into vertex-range shards plus the boundary edges.
+#[derive(Clone, Debug)]
+pub struct ShardedGraph {
+    /// Global vertex count of the source graph.
+    pub n: usize,
+    /// Unique undirected edges of the source graph (locals + boundary).
+    pub m: usize,
+    /// Shards in ascending range order; ranges tile `0..n` exactly.
+    pub shards: Vec<Shard>,
+    /// Cross-shard edges, global ids.
+    pub boundary: Vec<(VId, VId)>,
+}
+
+impl ShardedGraph {
+    /// Partition `g` into (up to) `p` balanced vertex ranges. `p` is
+    /// clamped to `[1, n]` so no shard is empty (except the degenerate
+    /// empty graph, which yields one empty shard).
+    pub fn partition(g: &Csr, p: usize) -> Self {
+        let p = p.max(1).min(g.n.max(1));
+        let bounds: Vec<usize> = (0..=p).map(|k| k * g.n / p).collect();
+        let owner = |v: VId| bounds.partition_point(|&b| b <= v as usize) - 1;
+        let (parts, boundary) = transform::partition_edges(g, &bounds, owner);
+        let shards = parts
+            .into_iter()
+            .enumerate()
+            .map(|(k, e)| Shard {
+                lo: bounds[k] as VId,
+                hi: bounds[k + 1] as VId,
+                graph: e.into_csr(),
+                stats: OnceLock::new(),
+            })
+            .collect();
+        Self { n: g.n, m: g.m(), shards, boundary }
+    }
+
+    /// Number of shards.
+    pub fn p(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard index owning global vertex `v` (`v < n`).
+    pub fn owner(&self, v: VId) -> usize {
+        debug_assert!((v as usize) < self.n);
+        self.shards.partition_point(|s| s.hi <= v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn ranges_tile_and_edges_are_conserved() {
+        let g = gen::erdos_renyi(500, 900, 3).into_csr();
+        for p in [1usize, 2, 3, 7, 16] {
+            let sg = ShardedGraph::partition(&g, p);
+            assert_eq!(sg.p(), p);
+            assert_eq!(sg.shards[0].lo, 0);
+            assert_eq!(sg.shards.last().unwrap().hi as usize, g.n);
+            for w in sg.shards.windows(2) {
+                assert_eq!(w[0].hi, w[1].lo, "ranges must tile");
+            }
+            let local_m: usize = sg.shards.iter().map(|s| s.graph.m()).sum();
+            assert_eq!(local_m + sg.boundary.len(), g.m(), "p={p}");
+            // Boundary edges genuinely cross shards.
+            for &(u, v) in &sg.boundary {
+                assert_ne!(sg.owner(u), sg.owner(v));
+            }
+        }
+    }
+
+    #[test]
+    fn owner_matches_ranges() {
+        let g = gen::path(10).into_csr();
+        let sg = ShardedGraph::partition(&g, 3);
+        for (k, sh) in sg.shards.iter().enumerate() {
+            for v in sh.lo..sh.hi {
+                assert_eq!(sg.owner(v), k);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps_to_n() {
+        let g = gen::path(3).into_csr();
+        let sg = ShardedGraph::partition(&g, 100);
+        assert_eq!(sg.p(), 3);
+        assert!(sg.shards.iter().all(|s| s.len() == 1));
+        assert_eq!(sg.boundary.len(), 2);
+        let sg1 = ShardedGraph::partition(&g, 0);
+        assert_eq!(sg1.p(), 1);
+        assert!(sg1.boundary.is_empty());
+    }
+
+    #[test]
+    fn per_shard_stats_describe_local_subgraphs() {
+        // path(6) at p=2: each shard is a 3-path with 1 component.
+        let g = gen::path(6).into_csr();
+        let sg = ShardedGraph::partition(&g, 2);
+        for sh in &sg.shards {
+            assert_eq!(sh.stats().n, 3);
+            assert_eq!(sh.stats().m, 2);
+            assert_eq!(sh.stats().num_components, 1);
+        }
+        assert_eq!(sg.boundary, vec![(2, 3)]);
+    }
+
+    #[test]
+    fn empty_graph_partitions() {
+        let g = crate::graph::EdgeList::new(0).into_csr();
+        let sg = ShardedGraph::partition(&g, 4);
+        assert_eq!(sg.p(), 1);
+        assert_eq!(sg.shards[0].len(), 0);
+        assert!(sg.boundary.is_empty());
+    }
+}

@@ -16,8 +16,8 @@ use contour::par;
 #[test]
 fn nested_parallel_passes_from_a_parallel_pass() {
     // Outer pass over disjoint ranges; each range runs its own inner
-    // parallel pass. The inner calls must run inline (single job slot)
-    // and still cover every index exactly once.
+    // parallel pass. The inner calls must run inline (the outer pass
+    // already owns the workers) and still cover every index once.
     let n = 1 << 17;
     let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
     par::par_for(n, 0, 1 << 12, |outer| {
@@ -34,8 +34,8 @@ fn nested_parallel_passes_from_a_parallel_pass() {
 #[test]
 fn concurrent_sessions_share_one_pool() {
     // Several OS threads (the server's one-thread-per-connection model)
-    // submit parallel passes concurrently; the pool serializes jobs but
-    // every session must get exact results.
+    // submit parallel passes concurrently; jobs run in flight together
+    // on the multi-job pool and every session must get exact results.
     let sessions = 4;
     let rounds = 25;
     let n = 1 << 17;
