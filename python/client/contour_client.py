@@ -36,8 +36,9 @@ contracted — labels are identical to the single-shard run):
 
     with ContourClient("127.0.0.1", 7021) as c:
         c.gen("g", "rmat:18:16")
-        c.shard("g", 8)                       # partition into 8 shards
+        c.shard("g", 8, balance="edges")      # edge-balanced fences
         comps, iters, ms = c.pcc("g", "C-2")  # partitioned graph_cc
+        c.pcc("g", "C-2")                     # repeat: served from cache
         c.shard_stats("g")                    # per-shard topology
 """
 
@@ -172,7 +173,13 @@ class ContourClient:
 
     def metrics(self) -> dict:
         """Server counters. Most values are ints; per-graph cache
-        entries (``cache/<name>``) are ``"hits:misses"`` strings."""
+        entries (``cache/<name>``, including sharded views under
+        ``cache/shard/<name>``) are ``"hits:misses"`` strings. The
+        execution-engine counters ride along: ``pool_pins`` (workers
+        pinned to cores), ``pool_sticky_jobs`` / ``pool_sticky_home`` /
+        ``pool_sticky_away`` (sticky chunk→worker placement), and
+        ``frontier_passes`` / ``frontier_skipped`` (active-edge frontier
+        passes and the chunks they skipped)."""
         out: dict = {}
         for p in self._request("METRICS").split()[1:]:
             k, v = p.split("=", 1)
@@ -189,23 +196,29 @@ class ContourClient:
     # concurrently (one pool job per shard) and contracts the cross-shard
     # boundary. Labels are identical to the single-shard run.
 
-    def shard(self, name: str, p: int) -> Tuple[int, int]:
-        """Partition graph ``name`` into ``p`` vertex-range shards.
+    def shard(self, name: str, p: int, balance: Optional[str] = None) -> Tuple[int, int]:
+        """Partition graph ``name`` into ``p`` contiguous range shards.
+        ``balance`` selects the fence policy: ``"vertices"`` (default —
+        equal vertex counts) or ``"edges"`` (fences placed by cumulative
+        edge count, evening out per-shard work on power-law graphs).
         Returns (shards, boundary_edges)."""
-        _, shards, boundary = self._request(f"SHARD {name} {p}").split()
+        req = f"SHARD {name} {p}" + (f" {balance}" if balance else "")
+        _, shards, boundary = self._request(req).split()
         return int(shards), int(boundary)
 
     def pcc(self, name: str, alg: str = "C-2") -> Tuple[int, int, float]:
         """Partitioned ``graph_cc``: shard-local runs + boundary merge.
         Returns (components, iterations, server_millis); requires a
-        prior :meth:`shard` call for ``name``."""
+        prior :meth:`shard` call for ``name``. Results are cached
+        server-side per (name, alg, p, balance) — a repeat call on an
+        unchanged partition reports 0.0 ms."""
         _, comps, iters, ms = self._request(f"PCC {name} {alg}").split()
         return int(comps), int(iters), float(ms)
 
     def shard_stats(self, name: str) -> dict:
         """Per-shard topology: ``{"p": .., "n": .., "m": ..,
-        "boundary": .., "shards": [{"lo", "hi", "m", "components",
-        "max_degree"}, ...]}``."""
+        "boundary": .., "balance": "vertices"|"edges", "shards":
+        [{"lo", "hi", "m", "components", "max_degree"}, ...]}``."""
         parts = self._request(f"SHARDSTATS {name}").split()[1:]
         out: dict = {"shards": []}
         for part in parts:
@@ -216,7 +229,10 @@ class ContourClient:
                     {"lo": lo, "hi": hi, "m": m, "components": comps, "max_degree": maxdeg}
                 )
             else:
-                out[k] = int(v)
+                try:
+                    out[k] = int(v)
+                except ValueError:
+                    out[k] = v  # e.g. balance=edges
         return out
 
     # ------------------------------------------------------------ streaming

@@ -490,13 +490,28 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-fn hotpath_json_text(quick: bool, threads: usize, records: &[HotpathRecord]) -> String {
+fn hotpath_json_text(
+    quick: bool,
+    threads: usize,
+    records: &[HotpathRecord],
+    summary: &[(&str, f64)],
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"schema\": 2,\n");
     out.push_str(&format!("  \"quick\": {quick},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"pool_workers\": {},\n", crate::par::pool::stats().workers));
+    out.push_str("  \"summary\": {");
+    for (i, (k, v)) in summary.iter().enumerate() {
+        out.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            json_escape(k),
+            v
+        ));
+    }
+    out.push_str("},\n");
     out.push_str("  \"records\": [\n");
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
@@ -515,12 +530,20 @@ fn hotpath_json_text(quick: bool, threads: usize, records: &[HotpathRecord]) -> 
 
 /// `bench hotpath` — the hot-path trajectory the ROADMAP tracks over
 /// time instead of one-off runs: `exec/pool` vs `exec/spawn` (the
-/// worker-pool amortization) plus the `shard/p` sweep (sharded C-2
-/// against shard counts). Writes human-readable `hotpath_trend.{txt,
-/// csv}` *and* machine-readable `BENCH_hotpath.json` (CI uploads the
-/// JSON as an artifact so deltas are diffable across commits).
+/// worker-pool amortization), `contour/full` vs `contour/frontier`
+/// (the active-edge frontier), the `shard/p` sweep (sharded C-2
+/// against shard counts) and `balance/vertices` vs `balance/edges`
+/// (fence policy at p=4). The JSON summary carries
+/// `frontier_speedup_rmat` (full/frontier median ratio on the
+/// low-diameter RMAT case) and `edge_mass_ratio_p4_{vertices,edges}`
+/// (max/min per-shard edge mass). Writes human-readable
+/// `hotpath_trend.{txt,csv}` *and* machine-readable
+/// `BENCH_hotpath.json` (CI uploads the JSON as an artifact so deltas
+/// are diffable across commits; the repo-root `BENCH_hotpath.json` is
+/// the committed trajectory baseline).
 pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<String> {
     use crate::graph::gen;
+    use crate::shard::Balance;
 
     let (scale, edges) = if quick { (13, 1 << 17) } else { (18, 1 << 22) };
     let g = gen::rmat(scale, edges, gen::RmatKind::Graph500, 1).into_csr();
@@ -571,6 +594,33 @@ pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
     }
     crate::par::set_exec_mode(crate::par::ExecMode::Pooled);
 
+    // Contour execution engine: full-sweep vs active-edge frontier on
+    // the same sticky chunk grid. The rmat pair feeds the
+    // frontier_speedup_rmat summary (the low-diameter case the frontier
+    // exists for); road is the adversarial high-diameter control.
+    for (label, frontier) in [("full", false), ("frontier", true)] {
+        for (gname, graph) in [("rmat", &g), ("road", &road)] {
+            let alg = cc::contour::Contour::c2().with_threads(threads).with_frontier(frontier);
+            bench(
+                &mut records,
+                &mut t,
+                &format!("contour/{label}"),
+                gname,
+                graph,
+                &mut || alg.run_with_stats(graph).iterations,
+            );
+        }
+    }
+    let median_of = |records: &[HotpathRecord], bench: &str, graph: &str| -> f64 {
+        records
+            .iter()
+            .find(|r| r.bench == bench && r.graph == graph)
+            .map(|r| r.median_ms)
+            .unwrap_or(f64::NAN)
+    };
+    let frontier_speedup = median_of(&records, "contour/full", "rmat")
+        / median_of(&records, "contour/frontier", "rmat");
+
     // Sharded connectivity: partition once per p, measure the sharded
     // run (shard-local C-2 jobs in flight + boundary contraction).
     for p in [1usize, 2, 4, 8] {
@@ -581,8 +631,42 @@ pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
         });
     }
 
+    // Fence policy at p=4: edge-balanced vs vertex-balanced shards,
+    // with the max/min per-shard edge-mass ratio recorded alongside the
+    // timing (the ratio is deterministic; the timing shows what the
+    // balance buys the concurrent shard jobs).
+    let mut mass_ratio = Vec::new();
+    for balance in [Balance::Vertices, Balance::Edges] {
+        let sg = crate::shard::ShardedGraph::partition_with(&g, 4, balance);
+        let mass: Vec<usize> = sg
+            .shards
+            .iter()
+            .map(|s| g.offsets[s.hi as usize] - g.offsets[s.lo as usize])
+            .collect();
+        let ratio = *mass.iter().max().unwrap() as f64
+            / (*mass.iter().min().unwrap() as f64).max(1.0);
+        mass_ratio.push(ratio);
+        let alg = cc::contour::Contour::c2().with_threads(threads);
+        bench(
+            &mut records,
+            &mut t,
+            &format!("balance/{}", balance.as_str()),
+            "rmat",
+            &g,
+            &mut || crate::shard::run_sharded(&sg, &alg, threads).iterations,
+        );
+    }
+    let summary = [
+        ("frontier_speedup_rmat", frontier_speedup),
+        ("edge_mass_ratio_p4_vertices", mass_ratio[0]),
+        ("edge_mass_ratio_p4_edges", mass_ratio[1]),
+    ];
+
     std::fs::create_dir_all(out_dir)?;
-    std::fs::write(out_dir.join("BENCH_hotpath.json"), hotpath_json_text(quick, threads, &records))?;
+    std::fs::write(
+        out_dir.join("BENCH_hotpath.json"),
+        hotpath_json_text(quick, threads, &records, &summary),
+    )?;
     write_outputs(out_dir, "hotpath_trend", &t)?;
     Ok(t.render())
 }
@@ -607,12 +691,17 @@ mod tests {
                 medges_per_s: 50.0,
             },
         ];
-        let text = hotpath_json_text(true, 4, &recs);
-        assert!(text.contains("\"schema\": 1"));
+        let summary = [("frontier_speedup_rmat", 1.4567), ("edge_mass_ratio_p4_edges", 1.08)];
+        let text = hotpath_json_text(true, 4, &recs, &summary);
+        assert!(text.contains("\"schema\": 2"));
         assert!(text.contains("\"quick\": true"));
         assert!(text.contains("\"bench\": \"shard/p2\""));
+        assert!(text.contains("\"frontier_speedup_rmat\": 1.457"), "{text}");
+        assert!(text.contains("\"edge_mass_ratio_p4_edges\": 1.080"), "{text}");
+        // One comma between the two summary keys, none trailing.
+        assert!(text.contains("1.457, \""), "{text}");
         // One comma between the two records, none after the last.
-        assert_eq!(text.matches("},\n").count(), 1);
+        assert_eq!(text.matches("},\n").count(), 2, "{text}");
         assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\u000a");
     }
 

@@ -13,6 +13,10 @@
 //! write mode (CAS per Eq. 4 / plain racy store), and the early
 //! convergence check of §III-B.2.
 
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
 use super::{Algorithm, AtomicLabels, RunResult};
 use crate::graph::Csr;
 use crate::par;
@@ -75,6 +79,37 @@ pub enum WriteMode {
 /// Default "m" for the high-order variants, following §IV-C (m = 1024).
 pub const M_ORDER: usize = 1024;
 
+/// In frontier mode, force a full sweep after this many consecutive
+/// frontier (dirty-chunks-only) passes. The per-chunk dirty bits are a
+/// *local* signal — a chunk that changed nothing goes clean even though
+/// a label one of its edges reads may later be lowered by another chunk
+/// — so periodic full sweeps (plus one whenever a frontier pass changes
+/// nothing) are the correctness backstop that recovers any activation
+/// the local bits missed. Convergence is only ever concluded from a
+/// full sweep.
+pub const FULL_SWEEP_EVERY: usize = 4;
+
+/// Frontier-mode accounting across all runs in this process (surfaced
+/// by the server's METRICS verb): frontier (partial) passes executed,
+/// and chunks those passes skipped as clean.
+static FRONTIER_PASSES: AtomicU64 = AtomicU64::new(0);
+static FRONTIER_SKIPPED: AtomicU64 = AtomicU64::new(0);
+
+/// `(frontier_passes, frontier_skipped_chunks)` since process start.
+pub fn frontier_counters() -> (u64, u64) {
+    (FRONTIER_PASSES.load(Ordering::Relaxed), FRONTIER_SKIPPED.load(Ordering::Relaxed))
+}
+
+/// Process-wide frontier default: `CONTOUR_FRONTIER=1` (or `on`/`true`)
+/// turns the active-edge frontier on for every [`Contour`] that does
+/// not set it explicitly. Resolved once.
+fn frontier_from_env() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        matches!(std::env::var("CONTOUR_FRONTIER").as_deref(), Ok("1") | Ok("on") | Ok("true"))
+    })
+}
+
 /// Configurable Contour runner; use the constructors for the paper's
 /// named variants.
 #[derive(Clone, Debug)]
@@ -84,6 +119,14 @@ pub struct Contour {
     pub write: WriteMode,
     /// Early convergence check (§III-B.2).
     pub early_check: bool,
+    /// Active-edge frontier: skip chunks of the edge grid whose last
+    /// visit changed nothing, with periodic full sweeps as the
+    /// correctness backstop ([`FULL_SWEEP_EVERY`]). `None` defers to
+    /// the `CONTOUR_FRONTIER` environment default. Final labels are
+    /// bit-identical to the full-sweep engine for every variant —
+    /// both converge to the canonical min-id labelling — only the
+    /// work per iteration differs.
+    pub frontier: Option<bool>,
     /// Worker threads (0 = [`par::num_threads`]).
     pub threads: usize,
     pub max_iters: usize,
@@ -97,6 +140,7 @@ impl Contour {
             update,
             write,
             early_check: true,
+            frontier: None,
             threads: 0,
             max_iters: 100_000,
             name: name.to_string(),
@@ -169,10 +213,27 @@ impl Contour {
         self
     }
 
+    /// Force the active-edge frontier on or off (overriding the
+    /// `CONTOUR_FRONTIER` environment default).
+    pub fn with_frontier(mut self, on: bool) -> Self {
+        self.frontier = Some(on);
+        self
+    }
+
     pub fn renamed(mut self, name: &str) -> Self {
-        self.name = name.to_string();
         name.clone_into(&mut self.name);
         self
+    }
+
+    /// Whether this run uses the active-edge frontier. Sync mode is
+    /// excluded: every sync pass pays two O(n) shadow-array copies
+    /// regardless of how many chunks the dirty bits skip, and frontier
+    /// mode adds passes between the full sweeps that conclude
+    /// convergence — a net loss for C-Syn, whose labels are identical
+    /// either way (both engines converge to the canonical min-id
+    /// labelling).
+    fn frontier_on(&self) -> bool {
+        self.update == UpdateMode::Async && self.frontier.unwrap_or_else(frontier_from_env)
     }
 }
 
@@ -192,22 +253,47 @@ fn chase(labels: &AtomicLabels, x: VId, h: usize) -> VId {
 }
 
 impl Contour {
-    /// One iteration of MM^h over all edges. `read` is the array gathers
-    /// go through; `write_to` receives conditional assignments (same
-    /// array for async, the `L_u` array for sync). Returns whether any
-    /// label changed.
-    fn edge_pass(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels, h: usize) -> bool {
-        // Fast path for the paper's default operator: MM^2 with plain
-        // stores reuses the labels loaded during the chase instead of
-        // re-walking the chain (≈ halves loads per edge; EXPERIMENTS.md
-        // §Perf step 8). Semantics match Definition 2/3 exactly: the
-        // target set {w, v, L[w], L[v]} is evaluated at operator entry.
+    /// MM^h over one chunk of the edge grid: runs the operator on every
+    /// edge in `range` and reports whether any label changed. The
+    /// Plain-store fast paths (h = 1, h = 2, recorded-chain h > 2) and
+    /// the generic CAS/sync body all share this per-range shape so the
+    /// chunked engine in [`Contour::edge_pass`] can schedule any
+    /// variant — full sweep or frontier, sticky or inline — through one
+    /// driver.
+    ///
+    /// Fast path rationale for the paper's default operator: MM^2 with
+    /// plain stores reuses the labels loaded during the chase instead
+    /// of re-walking the chain (≈ halves loads per edge; EXPERIMENTS.md
+    /// §Perf step 8). Semantics match Definition 2/3 exactly: the
+    /// target set {w, v, L[w], L[v]} is evaluated at operator entry.
+    #[inline]
+    fn pass_range(
+        &self,
+        g: &Csr,
+        read: &AtomicLabels,
+        write_to: &AtomicLabels,
+        h: usize,
+        range: Range<usize>,
+    ) -> bool {
         match (self.write, h) {
-            (WriteMode::Plain, 1) => return self.edge_pass_h1(g, read, write_to),
-            (WriteMode::Plain, 2) => return self.edge_pass_h2(g, read, write_to),
-            (WriteMode::Plain, _) => return self.edge_pass_hm(g, read, write_to, h),
-            _ => {}
+            (WriteMode::Plain, 1) => self.pass_range_h1(g, read, write_to, range),
+            (WriteMode::Plain, 2) => self.pass_range_h2(g, read, write_to, range),
+            (WriteMode::Plain, _) => self.pass_range_hm(g, read, write_to, h, range),
+            _ => self.pass_range_generic(g, read, write_to, h, range),
         }
+    }
+
+    /// Generic MM^h body (CAS writes, and the sync engine's shadow
+    /// array): chase both endpoints, then conditionally assign along
+    /// both chains — targets w, L[w], ..., L^{h-1}[w] and the v side.
+    fn pass_range_generic(
+        &self,
+        g: &Csr,
+        read: &AtomicLabels,
+        write_to: &AtomicLabels,
+        h: usize,
+        range: Range<usize>,
+    ) -> bool {
         let store = |arr: &AtomicLabels, i: VId, z: VId| -> bool {
             match self.write {
                 WriteMode::Plain => arr.store_min_plain(i, z),
@@ -216,104 +302,93 @@ impl Contour {
         };
         let src = &g.src;
         let dst = &g.dst;
-        par::par_map_reduce(
-            g.m(),
-            self.threads,
-            par::AUTO_GRAIN,
-            || false,
-            |acc, range| {
-                for e in range {
-                    let (w, v) = (src[e], dst[e]);
-                    let zw = chase(read, w, h);
-                    let zv = chase(read, v, h);
-                    let z = zw.min(zv);
-                    // Conditional vector assignment along both chains:
-                    // targets w, L[w], ..., L^{h-1}[w] and the v side.
-                    for mut x in [w, v] {
-                        for _ in 0..h {
-                            let nxt = read.load(x);
-                            *acc |= store(write_to, x, z);
-                            if nxt == x {
-                                break;
-                            }
-                            x = nxt;
-                        }
+        let mut changed = false;
+        for e in range {
+            let (w, v) = (src[e], dst[e]);
+            let zw = chase(read, w, h);
+            let zv = chase(read, v, h);
+            let z = zw.min(zv);
+            for mut x in [w, v] {
+                for _ in 0..h {
+                    let nxt = read.load(x);
+                    changed |= store(write_to, x, z);
+                    if nxt == x {
+                        break;
                     }
+                    x = nxt;
                 }
-            },
-            |a, b| a || b,
-        )
+            }
+        }
+        changed
     }
 
     /// MM^1 fast path (plain stores): z = min(L[w], L[v]); lower the
     /// larger side. 2 loads + at most 1 store per edge.
-    fn edge_pass_h1(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels) -> bool {
+    fn pass_range_h1(
+        &self,
+        g: &Csr,
+        read: &AtomicLabels,
+        write_to: &AtomicLabels,
+        range: Range<usize>,
+    ) -> bool {
         let src = &g.src;
         let dst = &g.dst;
-        par::par_map_reduce(
-            g.m(),
-            self.threads,
-            par::AUTO_GRAIN,
-            || false,
-            |acc, range| {
-                for e in range {
-                    let (w, v) = (src[e], dst[e]);
-                    let lw = read.load(w);
-                    let lv = read.load(v);
-                    if lw == lv {
-                        continue;
-                    }
-                    *acc |= if lw > lv {
-                        write_to.store_min_plain(w, lv)
-                    } else {
-                        write_to.store_min_plain(v, lw)
-                    };
-                }
-            },
-            |a, b| a || b,
-        )
+        let mut changed = false;
+        for e in range {
+            let (w, v) = (src[e], dst[e]);
+            let lw = read.load(w);
+            let lv = read.load(v);
+            if lw == lv {
+                continue;
+            }
+            changed |= if lw > lv {
+                write_to.store_min_plain(w, lv)
+            } else {
+                write_to.store_min_plain(v, lw)
+            };
+        }
+        changed
     }
 
     /// MM^2 fast path (plain stores): 4 loads + up to 4 conditional
     /// stores per edge, everything reused from registers.
-    fn edge_pass_h2(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels) -> bool {
+    fn pass_range_h2(
+        &self,
+        g: &Csr,
+        read: &AtomicLabels,
+        write_to: &AtomicLabels,
+        range: Range<usize>,
+    ) -> bool {
         let src = &g.src;
         let dst = &g.dst;
-        par::par_map_reduce(
-            g.m(),
-            self.threads,
-            par::AUTO_GRAIN,
-            || false,
-            |acc, range| {
-                for e in range {
-                    let (w, v) = (src[e], dst[e]);
-                    let lw = read.load(w);
-                    let lv = read.load(v);
-                    let llw = read.load(lw);
-                    let llv = read.load(lv);
-                    let z = llw.min(llv);
-                    // Conditional vector assignment over {w, v, L[w], L[v]}
-                    // with the comparison values already in registers.
-                    if lw > z {
-                        write_to.store_min_plain(w, z);
-                        *acc = true;
-                    }
-                    if lv > z {
-                        write_to.store_min_plain(v, z);
-                        *acc = true;
-                    }
-                    if llw > z {
-                        write_to.store_min_plain(lw, z);
-                        *acc = true;
-                    }
-                    if llv > z {
-                        write_to.store_min_plain(lv, z);
-                        *acc = true;
-                    }
-                }
-            },
-            |a, b| a || b,
-        )
+        let mut changed = false;
+        for e in range {
+            let (w, v) = (src[e], dst[e]);
+            let lw = read.load(w);
+            let lv = read.load(v);
+            let llw = read.load(lw);
+            let llv = read.load(lv);
+            let z = llw.min(llv);
+            // Conditional vector assignment over {w, v, L[w], L[v]}
+            // with the comparison values already in registers.
+            if lw > z {
+                write_to.store_min_plain(w, z);
+                changed = true;
+            }
+            if lv > z {
+                write_to.store_min_plain(v, z);
+                changed = true;
+            }
+            if llw > z {
+                write_to.store_min_plain(lw, z);
+                changed = true;
+            }
+            if llv > z {
+                write_to.store_min_plain(lv, z);
+                changed = true;
+            }
+        }
+        changed
     }
 
     /// MM^h fast path for h > 2 (plain stores): records the pointer chain
@@ -321,73 +396,120 @@ impl Contour {
     /// re-loads. Chains longer than the record buffer (rare: the
     /// compression effect keeps chains near-flat after the first
     /// iteration) fall back to re-walking with loads.
-    fn edge_pass_hm(&self, g: &Csr, read: &AtomicLabels, write_to: &AtomicLabels, h: usize) -> bool {
+    fn pass_range_hm(
+        &self,
+        g: &Csr,
+        read: &AtomicLabels,
+        write_to: &AtomicLabels,
+        h: usize,
+        range: Range<usize>,
+    ) -> bool {
         const CAP: usize = 32;
         let src = &g.src;
         let dst = &g.dst;
-        par::par_map_reduce(
-            g.m(),
-            self.threads,
-            par::AUTO_GRAIN,
-            || false,
-            |acc, range| {
-                // (chain nodes, current label of the last node, length)
-                let mut chains = [[0 as VId; CAP]; 2];
-                let mut vals = [0 as VId; 2];
-                let mut lens = [0usize; 2];
-                for e in range {
-                    let ends = [src[e], dst[e]];
-                    for side in 0..2 {
-                        let mut cur = ends[side];
-                        let chain = &mut chains[side];
-                        let mut len = 0usize;
-                        let val = loop {
-                            if len < CAP {
-                                chain[len] = cur;
-                            }
-                            len += 1;
-                            let nxt = read.load(cur);
-                            if nxt == cur || len >= h {
-                                break nxt;
-                            }
-                            cur = nxt;
-                        };
-                        vals[side] = val;
-                        lens[side] = len;
+        let mut changed = false;
+        // (chain nodes, current label of the last node, length)
+        let mut chains = [[0 as VId; CAP]; 2];
+        let mut vals = [0 as VId; 2];
+        let mut lens = [0usize; 2];
+        for e in range {
+            let ends = [src[e], dst[e]];
+            for side in 0..2 {
+                let mut cur = ends[side];
+                let chain = &mut chains[side];
+                let mut len = 0usize;
+                let val = loop {
+                    if len < CAP {
+                        chain[len] = cur;
                     }
-                    let z = vals[0].min(vals[1]);
-                    for side in 0..2 {
-                        let len = lens[side];
-                        let recorded = len.min(CAP);
-                        if len > CAP {
-                            // Rare long chain: re-walk the unrecorded tail
-                            // *before* the stores below can clobber the
-                            // pointers the walk follows.
-                            let mut x = chains[side][CAP - 1];
-                            for _ in CAP - 1..len {
-                                let nxt = read.load(x);
-                                *acc |= write_to.store_min_plain(x, z);
-                                if nxt == x {
-                                    break;
-                                }
-                                x = nxt;
-                            }
+                    len += 1;
+                    let nxt = read.load(cur);
+                    if nxt == cur || len >= h {
+                        break nxt;
+                    }
+                    cur = nxt;
+                };
+                vals[side] = val;
+                lens[side] = len;
+            }
+            let z = vals[0].min(vals[1]);
+            for side in 0..2 {
+                let len = lens[side];
+                let recorded = len.min(CAP);
+                if len > CAP {
+                    // Rare long chain: re-walk the unrecorded tail
+                    // *before* the stores below can clobber the
+                    // pointers the walk follows.
+                    let mut x = chains[side][CAP - 1];
+                    for _ in CAP - 1..len {
+                        let nxt = read.load(x);
+                        changed |= write_to.store_min_plain(x, z);
+                        if nxt == x {
+                            break;
                         }
-                        for i in 0..recorded {
-                            // Current label of chain[i] is chain[i+1]
-                            // (or the chased value for the last node).
-                            let label =
-                                if i + 1 < recorded { chains[side][i + 1] } else { vals[side] };
-                            if label > z {
-                                write_to.store_min_plain(chains[side][i], z);
-                                *acc = true;
-                            }
-                        }
+                        x = nxt;
                     }
                 }
-            },
-            |a, b| a || b,
-        )
+                for i in 0..recorded {
+                    // Current label of chain[i] is chain[i+1]
+                    // (or the chased value for the last node).
+                    let label = if i + 1 < recorded { chains[side][i + 1] } else { vals[side] };
+                    if label > z {
+                        write_to.store_min_plain(chains[side][i], z);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        changed
+    }
+
+    /// One iteration of MM^h over the stable edge-chunk grid, scheduled
+    /// sticky so each contiguous chunk block lands on the same worker
+    /// every pass. With `dirty = Some` (frontier mode) and `full =
+    /// false`, chunks whose bit is clear are skipped entirely; every
+    /// processed chunk's bit is rewritten to whether it changed any
+    /// label, so the grid's dirty set shrinks as edges settle. Returns
+    /// whether any processed chunk changed a label.
+    fn edge_pass(
+        &self,
+        g: &Csr,
+        read: &AtomicLabels,
+        write_to: &AtomicLabels,
+        h: usize,
+        grid: par::Chunks,
+        dirty: Option<&[AtomicBool]>,
+        full: bool,
+    ) -> bool {
+        let changed = AtomicBool::new(false);
+        match dirty {
+            None => {
+                par::par_for_sticky(grid, self.threads, |_, range| {
+                    if self.pass_range(g, read, write_to, h, range) {
+                        changed.store(true, Ordering::Relaxed);
+                    }
+                });
+            }
+            Some(bits) => {
+                let skipped = AtomicU64::new(0);
+                par::par_for_sticky(grid, self.threads, |c, range| {
+                    if !full && !bits[c].load(Ordering::Relaxed) {
+                        skipped.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    let ch = self.pass_range(g, read, write_to, h, range);
+                    bits[c].store(ch, Ordering::Relaxed);
+                    if ch {
+                        changed.store(true, Ordering::Relaxed);
+                    }
+                });
+                if !full {
+                    FRONTIER_PASSES.fetch_add(1, Ordering::Relaxed);
+                    FRONTIER_SKIPPED.fetch_add(skipped.load(Ordering::Relaxed), Ordering::Relaxed);
+                }
+            }
+        }
+        changed.load(Ordering::Relaxed)
     }
 
     /// §III-B.2 early convergence check, evaluated on the *settled* label
@@ -436,23 +558,65 @@ impl Algorithm for Contour {
             UpdateMode::Sync => Some(AtomicLabels::identity(n)),
             UpdateMode::Async => None,
         };
+        // The stable chunk grid every pass of this run reuses: stable
+        // ids are what let sticky scheduling keep chunk→worker fixed
+        // across iterations and what the frontier's dirty bits index.
+        // Frontier grids are capped finer than the scheduling-optimal
+        // grain: a chunk is dirty if *any* of its edges changed, so on
+        // late passes with scattered updates halving the chunk size
+        // roughly doubles the skippable fraction, at a per-chunk cost
+        // (one closure call + one bit) that is noise next to the edges
+        // saved. Sticky slots own contiguous chunk *blocks*, so finer
+        // chunks do not fragment worker locality.
+        let threads = if self.threads == 0 { par::num_threads() } else { self.threads };
+        let frontier_on = self.frontier_on() && g.m() > 0;
+        let scheduling_grain = par::adaptive_grain(g.m(), threads);
+        let grain = if frontier_on { scheduling_grain.min(1 << 10) } else { scheduling_grain };
+        let grid = par::Chunks::new(g.m(), grain);
+        let dirty: Option<Vec<AtomicBool>> =
+            frontier_on.then(|| (0..grid.count()).map(|_| AtomicBool::new(true)).collect());
         let mut iters = 0usize;
+        // Frontier bookkeeping: the first pass, every pass after
+        // FULL_SWEEP_EVERY consecutive frontier passes, and any pass
+        // after a frontier pass that changed nothing run as full
+        // sweeps; only full sweeps may conclude convergence (frontier
+        // passes see a subset of the edges, so their quiescence proves
+        // nothing globally).
+        let mut force_full = true;
+        let mut since_full = 0usize;
         loop {
             let h = self.schedule.order_at(iters).max(1);
             iters += 1;
+            let full = match &dirty {
+                None => true,
+                Some(_) => force_full || since_full >= FULL_SWEEP_EVERY,
+            };
+            let bits = dirty.as_deref();
             let changed = match &shadow {
-                None => self.edge_pass(g, &labels, &labels, h),
+                None => self.edge_pass(g, &labels, &labels, h, grid, bits, full),
                 Some(lu) => {
                     lu.copy_from(&labels);
-                    let f = self.edge_pass(g, &labels, lu, h);
+                    let f = self.edge_pass(g, &labels, lu, h, grid, bits, full);
                     labels.copy_from(lu); // L = L_u (line 9 of Alg. 1)
                     f
                 }
             };
-            let converged = !changed
-                || (self.early_check && changed && self.check_converged(g, &labels));
-            if converged || iters >= self.max_iters {
-                break;
+            if full {
+                since_full = 0;
+                force_full = false;
+                let converged = !changed || (self.early_check && self.check_converged(g, &labels));
+                if converged || iters >= self.max_iters {
+                    break;
+                }
+            } else {
+                since_full += 1;
+                // A frontier pass that changed nothing has drained the
+                // local dirty set; only a full sweep can tell settled
+                // from stalled.
+                force_full = !changed;
+                if iters >= self.max_iters {
+                    break;
+                }
             }
         }
         // The early check can exit with star-compression still pending
@@ -623,5 +787,46 @@ mod tests {
         let seq = Contour::c2().with_threads(1).run(&g);
         let par = Contour::c2().with_threads(8).run(&g);
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn frontier_mode_matches_full_sweep_for_all_variants() {
+        let g = gen::rmat(11, 10_000, gen::RmatKind::Graph500, 3).into_csr().shuffled_edges(5);
+        for alg in Contour::all_variants() {
+            let full = alg.clone().with_frontier(false).run(&g);
+            let frontier = alg.clone().with_frontier(true).run(&g);
+            assert_eq!(frontier, full, "{} frontier diverges", alg.name());
+        }
+    }
+
+    #[test]
+    fn frontier_skips_settled_chunks() {
+        // Low diameter: most chunks settle after the first couple of
+        // passes, so the frontier counters must record skipped chunks
+        // while the labels stay bit-identical.
+        let g = gen::rmat(13, 120_000, gen::RmatKind::Graph500, 9).into_csr().shuffled_edges(2);
+        let (p0, s0) = frontier_counters();
+        let want = Contour::c2().with_frontier(false).run(&g);
+        let got = Contour::c2().with_frontier(true).run(&g);
+        assert_eq!(got, want);
+        let (p1, s1) = frontier_counters();
+        assert!(p1 > p0, "no frontier pass ran");
+        assert!(s1 > s0, "frontier never skipped a chunk");
+    }
+
+    #[test]
+    fn frontier_handles_degenerate_graphs() {
+        let g = crate::graph::EdgeList::new(4).into_csr();
+        let r = Contour::c2().with_frontier(true).run_with_stats(&g);
+        assert_eq!(r.labels, vec![0, 1, 2, 3]);
+        assert_eq!(r.iterations, 1);
+        let g = gen::path(1).into_csr();
+        assert_eq!(Contour::c2().with_frontier(true).run(&g), vec![0]);
+    }
+
+    #[test]
+    fn renamed_sets_the_display_name() {
+        let alg = Contour::c2().renamed("C-2/custom");
+        assert_eq!(alg.name(), "C-2/custom");
     }
 }

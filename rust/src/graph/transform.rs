@@ -90,6 +90,31 @@ where
     (parts, boundary)
 }
 
+/// Weighted-fence mode for [`partition_edges`]: `p + 1` range fences
+/// placed by **cumulative edge count** instead of vertex count. The CSR
+/// `offsets` array already is the prefix sum of degrees, so fence `k`
+/// is one binary search for the first vertex whose prefix reaches
+/// `k/p` of the total (2m) — shard `k` then carries ≈ 2m/p edge
+/// endpoints however skewed the degree distribution is, which is what
+/// evens out per-shard work on power-law graphs (vertex-count fences
+/// hand whole hub neighborhoods to whichever shard owns the hub's
+/// range). Fences are clamped monotone; under extreme skew (one vertex
+/// heavier than 2m/p) a range may be empty, which the shard machinery
+/// tolerates.
+pub fn edge_balanced_fences(g: &Csr, p: usize) -> Vec<usize> {
+    assert!(p >= 1, "need at least one shard");
+    let total = *g.offsets.last().unwrap_or(&0);
+    let mut bounds = Vec::with_capacity(p + 1);
+    bounds.push(0usize);
+    for k in 1..p {
+        let target = k * total / p;
+        let cut = g.offsets.partition_point(|&o| o < target).min(g.n);
+        bounds.push(cut.max(bounds[k - 1]));
+    }
+    bounds.push(g.n);
+    bounds
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +179,27 @@ mod tests {
         assert_eq!(boundary, vec![(2, 3)]);
         // Edge conservation: locals + boundary = m.
         assert_eq!(parts.iter().map(|e| e.len()).sum::<usize>() + boundary.len(), g.m());
+    }
+
+    #[test]
+    fn edge_fences_balance_degree_mass_on_power_law() {
+        // The fence guarantee: each shard's degree mass lands within
+        // one max-degree of 2m/p, so even a skewed RMAT splits evenly.
+        let g = gen::rmat(12, 50_000, gen::RmatKind::Graph500, 1).into_csr();
+        let p = 4;
+        let b = edge_balanced_fences(&g, p);
+        assert_eq!(b.len(), p + 1);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[p], g.n);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]), "fences not monotone: {b:?}");
+        let weight = |k: usize| g.offsets[b[k + 1]] - g.offsets[b[k]];
+        let max = (0..p).map(weight).max().unwrap();
+        let min = (0..p).map(weight).min().unwrap();
+        assert!(max as f64 <= 1.5 * min as f64, "edge mass skew: max {max} min {min}");
+        // Degenerate inputs stay well-formed.
+        assert_eq!(edge_balanced_fences(&g, 1), vec![0, g.n]);
+        let empty = crate::graph::EdgeList::new(0).into_csr();
+        assert_eq!(edge_balanced_fences(&empty, 3), vec![0, 0, 0, 0]);
     }
 
     #[test]

@@ -69,7 +69,7 @@ fn print_usage() {
          \x20 contour stream [--graph FILE | --gen SPEC] [--batch B] [--epochs K]\n\
          \x20        [--wal PATH] [--snapshot PATH] [--threads T] [--verify]\n\
          \x20 contour shard [--graph FILE | --gen SPEC] [--alg NAME] [--shards 1,2,4,8]\n\
-         \x20        [--threads T] [--verify]\n\
+         \x20        [--balance vertices|edges] [--threads T] [--verify]\n\
          \x20 contour list\n\n\
          graph SPECs: path:N cycle:N star:N grid:R:C road:R:C tree:D comb:S:T\n\
          \x20            kmer:CHAINS:LEN er:N:M ba:N:K rmat:SCALE:EDGEFACTOR delaunay:N soup:P:S"
@@ -322,7 +322,15 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let (name, g) = load_graph(args)?;
     let alg_name = args.get_or("alg", "C-2");
     let alg = algorithm_by_name(alg_name, threads)?;
-    println!("graph {name}: n={} m={} (alg {alg_name})", g.n, g.m());
+    let balance_name = args.get_or("balance", "vertices");
+    let balance = contour::shard::Balance::parse(balance_name)
+        .ok_or_else(|| anyhow!("--balance expects `vertices` or `edges`, got {balance_name:?}"))?;
+    println!(
+        "graph {name}: n={} m={} (alg {alg_name}, {} fences)",
+        g.n,
+        g.m(),
+        balance.as_str()
+    );
     let t = Timer::start();
     let single = alg.run_with_stats(&g);
     let single_ms = t.ms();
@@ -342,7 +350,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
             .parse()
             .map_err(|_| anyhow!("--shards expects a comma list of integers, got {tok:?}"))?;
         let t = Timer::start();
-        let sg = contour::shard::ShardedGraph::partition(&g, p);
+        let sg = contour::shard::ShardedGraph::partition_with(&g, p, balance);
         let part_ms = t.ms();
         let t = Timer::start();
         let r = contour::shard::run_sharded(&sg, alg.as_ref(), threads);

@@ -14,6 +14,12 @@
 //! an escape hatch via `CONTOUR_EXEC=spawn`) paid thread churn on the
 //! hottest path in the crate. [`par_for`] still degrades to a plain
 //! sequential loop for small inputs so tiny graphs pay nothing.
+//!
+//! On top of the dynamic substrate sits the locality layer:
+//! [`Chunks`] names an iteration-stable chunk grid, and
+//! [`par_for_sticky`] schedules it so the same chunk block lands on the
+//! same (core-pinned) pool worker on every pass of a hot loop — see
+//! [`pool::Pool::run_sticky`].
 
 pub mod pool;
 
@@ -99,6 +105,36 @@ pub fn adaptive_grain(len: usize, threads: usize) -> usize {
     (len / (threads.max(1) * 8)).clamp(1 << 10, 1 << 14)
 }
 
+/// An **iteration-stable** chunking of `0..len`: chunk `c` covers
+/// `[c*grain, min((c+1)*grain, len))`, so as long as `(len, grain)` are
+/// held fixed the chunk ids name the same index ranges on every pass.
+/// This is the one chunk abstraction the locality layers share: sticky
+/// scheduling assigns contiguous chunk blocks to fixed workers
+/// ([`par_for_sticky`]), and the Contour frontier keeps one dirty bit
+/// per chunk of this grid across iterations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunks {
+    pub len: usize,
+    pub grain: usize,
+}
+
+impl Chunks {
+    pub fn new(len: usize, grain: usize) -> Self {
+        Self { len, grain: grain.max(1) }
+    }
+
+    /// Number of chunks (0 for an empty range).
+    pub fn count(&self) -> usize {
+        (self.len + self.grain - 1) / self.grain
+    }
+
+    /// Index range of chunk `c` (`c < count()`).
+    pub fn range(&self, c: usize) -> Range<usize> {
+        let lo = c * self.grain;
+        lo..(lo + self.grain).min(self.len)
+    }
+}
+
 #[inline]
 fn resolve_threads(threads: usize) -> usize {
     if threads == 0 {
@@ -167,6 +203,75 @@ where
                 f(start..(start + grain).min(len));
             });
         }
+    }
+}
+
+/// Sticky parallel for over an iteration-stable chunk grid: `f(c,
+/// range)` runs exactly once per chunk, and on the pooled substrate the
+/// grid is split into `slots` contiguous chunk blocks with block `s`
+/// always executing on the same pool worker ([`pool::Pool::run_sticky`]
+/// — slot jobs live on their home worker's queue and are excluded from
+/// stealing). A hot loop issuing the same grid every iteration (Contour:
+/// ~log d_max passes) therefore re-touches each block's label/edge
+/// cache lines on one pinned core instead of scattering them.
+///
+/// Degrades gracefully everywhere stickiness is unavailable: nested or
+/// single-threaded or small passes run inline, and the spawn-per-call
+/// substrate (plus explicit thread counts beyond the pool size) runs a
+/// dynamic chunk cursor — correct, just not sticky.
+pub fn par_for_sticky<F>(chunks: Chunks, threads: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let nchunks = chunks.count();
+    if nchunks == 0 {
+        return;
+    }
+    let threads = resolve_threads(threads);
+    let inline = threads <= 1 || chunks.len <= SEQ_CUTOFF.min(DEFAULT_GRAIN) || pool::in_job();
+    let spawn = !inline
+        && (exec_mode() == ExecMode::SpawnPerCall || threads > pool::global().max_threads());
+    if inline {
+        for c in 0..nchunks {
+            f(c, chunks.range(c));
+        }
+    } else if spawn {
+        // Dynamic cursor over the same stable grid: no persistent
+        // workers to be sticky to (or the caller asked for more threads
+        // than the pool owns — the oversubscription escape hatch).
+        let cursor = AtomicUsize::new(0);
+        let worker = || loop {
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= nchunks {
+                break;
+            }
+            f(c, chunks.range(c));
+        };
+        std::thread::scope(|s| {
+            for _ in 1..threads.min(nchunks) {
+                let worker = &worker;
+                s.spawn(move || worker());
+            }
+            worker();
+        });
+    } else {
+        let p = pool::global();
+        let slots = threads.min(p.max_threads()).min(nchunks);
+        if slots <= 1 {
+            for c in 0..nchunks {
+                f(c, chunks.range(c));
+            }
+            return;
+        }
+        p.run_sticky(slots, &|slot| {
+            // Slot `s` owns the `s`-th contiguous block of chunks —
+            // stable across passes, contiguous for locality.
+            let lo = slot * nchunks / slots;
+            let hi = (slot + 1) * nchunks / slots;
+            for c in lo..hi {
+                f(c, chunks.range(c));
+            }
+        });
     }
 }
 
@@ -489,6 +594,60 @@ mod tests {
         assert_eq!(adaptive_grain(0, 0), 1 << 10); // degenerate inputs
         let mid = 1 << 20;
         assert_eq!(adaptive_grain(mid, 16), mid / (16 * 8));
+    }
+
+    #[test]
+    fn chunk_grid_tiles_exactly() {
+        let c = Chunks::new(10_000, 1 << 10);
+        assert_eq!(c.count(), 10);
+        let mut covered = 0usize;
+        for i in 0..c.count() {
+            let r = c.range(i);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, 10_000);
+        assert_eq!(Chunks::new(0, 64).count(), 0);
+        assert_eq!(Chunks::new(5, 0).grain, 1, "grain clamps to 1");
+        assert_eq!(Chunks::new(4096, 4096).count(), 1);
+    }
+
+    #[test]
+    fn sticky_pass_covers_each_chunk_once() {
+        // Big enough to leave the inline path; every (chunk, index) must
+        // be visited exactly once and chunk ids must match the grid.
+        let grid = Chunks::new(1 << 17, 1 << 12);
+        let hits: Vec<AtomicU64> = (0..grid.len).map(|_| AtomicU64::new(0)).collect();
+        par_for_sticky(grid, 0, |c, r| {
+            assert_eq!(r, grid.range(c));
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sticky_pass_inlines_when_nested_or_small() {
+        // Small grid: runs inline on the caller.
+        let small = Chunks::new(100, 10);
+        let mut seen = 0usize;
+        let cell = std::sync::Mutex::new(&mut seen);
+        par_for_sticky(small, 8, |_, r| **cell.lock().unwrap() += r.len());
+        assert_eq!(seen, 100);
+        // Nested inside a pooled pass: must not resubmit to the pool.
+        let grid = Chunks::new(1 << 16, 1 << 10);
+        let hits: Vec<AtomicU64> = (0..grid.len).map(|_| AtomicU64::new(0)).collect();
+        par_for(grid.len, 4, 1 << 12, |outer| {
+            let sub = Chunks::new(outer.len(), 1 << 10);
+            let base = outer.start;
+            par_for_sticky(sub, 4, |_, inner| {
+                for i in inner {
+                    hits[base + i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -35,9 +35,17 @@
 //!   epilogue can never race a late joiner.
 //! * Nested parallel calls (a pass inside a pool job) run inline
 //!   sequentially — the outer pass already owns the workers.
+//! * **Locality** (the execution-engine PR): workers pin themselves to
+//!   cores on Linux (`sched_setaffinity`, `CONTOUR_PIN=0` disables, a
+//!   graceful no-op elsewhere), and [`Pool::run_sticky`] runs a pass as
+//!   one single-seat job per *slot*, each enqueued on a fixed worker's
+//!   own queue and never stealable — so across a Contour run's
+//!   ~log(d_max) passes the same chunk block always executes on the
+//!   same (pinned) worker, whose cache keeps that block's label/edge
+//!   lines warm.
 //! * [`PoolMetrics`] counts jobs, chunk pulls, steals, park/wake
-//!   transitions, and jobs in flight; the server `METRICS` verb reports
-//!   them.
+//!   transitions, jobs in flight, core pins and sticky-job placement;
+//!   the server `METRICS` verb reports them.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -50,6 +58,67 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 /// unwinding can happen, so the poison flag carries no information.
 fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Whether workers pin themselves to cores. `CONTOUR_PIN=0` (or `off`/
+/// `no`) disables; resolved once so all workers agree for the process
+/// lifetime.
+fn pin_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !matches!(std::env::var("CONTOUR_PIN").as_deref(), Ok("0") | Ok("off") | Ok("no"))
+    })
+}
+
+/// Core pinning for pool workers (ROADMAP: queue→core affinity). With
+/// per-worker queues and sticky chunk blocks, pinning worker `w` to a
+/// fixed core keeps one queue's label/edge working set in one core's
+/// private cache across a whole run's passes. Linux-only — a direct
+/// glibc/musl `sched_setaffinity` call so no external crate is needed —
+/// and a graceful no-op elsewhere.
+mod affinity {
+    /// Pin the calling thread to the `worker`-th CPU of the process's
+    /// **currently allowed** set (so `taskset`/cgroup cpusets are
+    /// respected — pinning to absolute CPU 0..n would escape an
+    /// operator's reservation and stack every contour process on the
+    /// same low-numbered cores). Returns false, leaving the thread
+    /// unpinned, when the allowed set cannot be read.
+    #[cfg(target_os = "linux")]
+    pub fn pin_current_thread(worker: usize) -> bool {
+        // Mirrors glibc's `cpu_set_t`: a 1024-bit mask.
+        const WORDS: usize = 1024 / 64;
+        extern "C" {
+            fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        let mut allowed = [0u64; WORDS];
+        // SAFETY: pid 0 targets the calling thread; the kernel writes
+        // at most `cpusetsize` bytes into `allowed`, which the array
+        // provides.
+        let ok =
+            unsafe { sched_getaffinity(0, std::mem::size_of_val(&allowed), allowed.as_mut_ptr()) };
+        if ok != 0 {
+            return false;
+        }
+        let cpus: Vec<usize> = (0..WORDS * 64)
+            .filter(|&c| allowed[c / 64] & (1u64 << (c % 64)) != 0)
+            .collect();
+        if cpus.is_empty() {
+            return false;
+        }
+        let core = cpus[worker % cpus.len()];
+        let mut mask = [0u64; WORDS];
+        mask[core / 64] |= 1u64 << (core % 64);
+        // SAFETY: pid 0 targets the calling thread; the kernel only
+        // reads `cpusetsize` bytes from `mask`, which the array
+        // provides.
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn pin_current_thread(_worker: usize) -> bool {
+        false
+    }
 }
 
 /// Counters describing pool activity since process start.
@@ -78,6 +147,20 @@ pub struct PoolMetrics {
     /// counts submitted batches), ≥ 2 here proves task bodies actually
     /// ran concurrently.
     pub max_exec_active: AtomicU64,
+    /// Workers successfully pinned to a core (0 when pinning is
+    /// disabled via `CONTOUR_PIN=0` or unsupported on this OS).
+    pub pins: AtomicU64,
+    /// Sticky passes submitted through [`Pool::run_sticky`].
+    pub sticky_jobs: AtomicU64,
+    /// Sticky slot jobs executed by their home worker. With sticky
+    /// entries excluded from stealing this is every slot job — the
+    /// stable chunk→worker mapping the stress test asserts.
+    pub sticky_home: AtomicU64,
+    /// Sticky slot jobs executed away from their home worker. Kept as a
+    /// counter (rather than assumed impossible) so any future
+    /// scheduling change that breaks the placement invariant shows up
+    /// in METRICS and fails the stress test.
+    pub sticky_away: AtomicU64,
 }
 
 /// Plain-value snapshot of [`PoolMetrics`] for rendering.
@@ -94,6 +177,11 @@ pub struct PoolStats {
     pub max_inflight: u64,
     /// Peak count of concurrently executing task bodies.
     pub exec_peak: u64,
+    /// Workers pinned to a core.
+    pub pins: u64,
+    pub sticky_jobs: u64,
+    pub sticky_home: u64,
+    pub sticky_away: u64,
 }
 
 /// Lifetime-erased pointer to a submitter's task closure. Raw (not a
@@ -125,6 +213,10 @@ struct Job {
     /// A participant's task invocation panicked (re-raised by the
     /// submitter once the job is drained).
     panicked: AtomicBool,
+    /// Sticky placement: `Some(w)` means this job belongs on worker
+    /// `w`'s queue and must not be stolen by other workers — the
+    /// chunk→worker stability [`Pool::run_sticky`] promises.
+    home: Option<usize>,
 }
 
 // SAFETY: `task` is only dereferenced under the claim protocol (see
@@ -139,6 +231,17 @@ impl Job {
             task,
             state: AtomicU64::new(init),
             panicked: AtomicBool::new(false),
+            home: None,
+        })
+    }
+
+    /// A single-seat sticky job homed on worker `home`'s queue.
+    fn new_homed(task: TaskPtr, home: usize) -> Arc<Self> {
+        Arc::new(Self {
+            task,
+            state: AtomicU64::new(1),
+            panicked: AtomicBool::new(false),
+            home: Some(home),
         })
     }
 
@@ -295,6 +398,10 @@ impl Pool {
             inflight: m.inflight.load(Ordering::Relaxed),
             max_inflight: m.max_inflight.load(Ordering::Relaxed),
             exec_peak: m.max_exec_active.load(Ordering::Relaxed),
+            pins: m.pins.load(Ordering::Relaxed),
+            sticky_jobs: m.sticky_jobs.load(Ordering::Relaxed),
+            sticky_home: m.sticky_home.load(Ordering::Relaxed),
+            sticky_away: m.sticky_away.load(Ordering::Relaxed),
         }
     }
 
@@ -396,7 +503,7 @@ impl Pool {
         // The submitter claims whatever no worker has taken yet, so the
         // set completes even on a single-threaded pool.
         for job in &jobs {
-            execute(&self.inner, job);
+            execute(&self.inner, job, None);
         }
         let mut panicked = false;
         for job in &jobs {
@@ -406,6 +513,60 @@ impl Pool {
         self.inner.metrics.inflight.fetch_sub(count as u64, Ordering::Relaxed);
         if panicked {
             panic!("pool task panicked");
+        }
+    }
+
+    /// Run `task(slot)` exactly once per slot in `0..slots` with a
+    /// **stable slot→worker mapping**: slot 0 runs on the submitting
+    /// thread; slot `s >= 1` becomes a single-seat job enqueued
+    /// directly on worker `s - 1`'s own queue, excluded from stealing.
+    /// Repeated sticky passes over the same slot layout (a Contour
+    /// run's ~log d_max iterations) therefore land each slot — and the
+    /// chunk block it owns — on the same (pinned) worker every time,
+    /// keeping that block's cache lines resident. The price is that a
+    /// slot whose home worker is busy waits for it instead of migrating;
+    /// callers balance slots by work (edge-balanced chunks) for exactly
+    /// this reason. Requires `2 <= slots <= max_threads()`; panics
+    /// propagate (as one panic) after every slot settles.
+    pub fn run_sticky(&self, slots: usize, task: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(
+            (2..=self.threads).contains(&slots),
+            "run_sticky wants 2..=threads slots, got {slots}"
+        );
+        self.job_submitted(1);
+        self.inner.metrics.sticky_jobs.fetch_add(1, Ordering::Relaxed);
+        // One wrapper closure per non-submitter slot, kept alive by this
+        // frame until every job is drained below.
+        let wrappers: Vec<Box<dyn Fn() + Sync + '_>> = (1..slots)
+            .map(|s| Box::new(move || task(s)) as Box<dyn Fn() + Sync + '_>)
+            .collect();
+        // SAFETY: see `run` — each job has a single seat and this frame
+        // waits for every job to drain before returning, so the erased
+        // borrows never outlive it.
+        let jobs: Vec<Arc<Job>> = wrappers
+            .iter()
+            .enumerate()
+            .map(|(w, t)| Job::new_homed(erase(t.as_ref()), w))
+            .collect();
+        for (w, job) in jobs.iter().enumerate() {
+            lock_pool(&self.inner.queues[w]).push_back(Arc::clone(job));
+        }
+        self.notify_work();
+        let mine = {
+            let _in_job = JobScope::enter();
+            count_exec(&self.inner.metrics, || catch_unwind(AssertUnwindSafe(|| task(0))))
+        };
+        let mut panicked = false;
+        for job in &jobs {
+            self.wait_done(job);
+            panicked |= job.panicked.load(Ordering::Acquire);
+        }
+        self.inner.metrics.inflight.fetch_sub(1, Ordering::Relaxed);
+        if let Err(p) = mine {
+            resume_unwind(p);
+        }
+        if panicked {
+            panic!("pool worker panicked during sticky pass");
         }
     }
 }
@@ -422,6 +583,9 @@ fn count_exec<R>(metrics: &PoolMetrics, f: impl FnOnce() -> R) -> R {
 }
 
 /// Pop work: own queue front first, then steal from the others' backs.
+/// Sticky jobs are only ever taken by their home worker — stealing one
+/// would break the chunk→worker stability `run_sticky` exists for — so
+/// the steal scan skips them.
 fn find_work(inner: &Inner, wid: usize) -> Option<Arc<Job>> {
     let n = inner.queues.len();
     if n == 0 {
@@ -432,7 +596,10 @@ fn find_work(inner: &Inner, wid: usize) -> Option<Arc<Job>> {
     }
     for off in 1..n {
         let idx = (wid + off) % n;
-        if let Some(j) = lock_pool(&inner.queues[idx]).pop_back() {
+        let mut q = lock_pool(&inner.queues[idx]);
+        if let Some(pos) = q.iter().rposition(|j| j.home.is_none()) {
+            let j = q.remove(pos).expect("rposition index is in bounds");
+            drop(q);
             inner.metrics.steals.fetch_add(1, Ordering::Relaxed);
             return Some(j);
         }
@@ -442,9 +609,19 @@ fn find_work(inner: &Inner, wid: usize) -> Option<Arc<Job>> {
 
 /// Claim a seat on `job` and, on success, run its task once. A failed
 /// claim means the entry is stale (job already full or retired).
-fn execute(inner: &Inner, job: &Job) {
+/// `wid` is the executing pool worker (`None` for a submitting thread),
+/// checked against sticky jobs' home placement for the metrics.
+fn execute(inner: &Inner, job: &Job, wid: Option<usize>) {
     if !job.claim() {
         return;
+    }
+    if let Some(home) = job.home {
+        let c = if wid == Some(home) {
+            &inner.metrics.sticky_home
+        } else {
+            &inner.metrics.sticky_away
+        };
+        c.fetch_add(1, Ordering::Relaxed);
     }
     // SAFETY: a successful claim pins the job open (`active > 0`), and
     // the submitter does not return — so the closure outlives this call
@@ -466,10 +643,13 @@ fn execute(inner: &Inner, job: &Job) {
 }
 
 fn worker_loop(inner: &Inner, wid: usize) {
+    if pin_enabled() && affinity::pin_current_thread(wid) {
+        inner.metrics.pins.fetch_add(1, Ordering::Relaxed);
+    }
     loop {
         let gen = inner.gen.load(Ordering::Acquire);
         if let Some(job) = find_work(inner, wid) {
-            execute(inner, &job);
+            execute(inner, &job, Some(wid));
             continue;
         }
         let guard = lock_pool(&inner.park);
@@ -578,6 +758,56 @@ mod tests {
             ok.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_sticky_covers_every_slot_once() {
+        let p = global();
+        if p.max_threads() < 2 {
+            return; // single-thread pool: the par layer inlines sticky passes
+        }
+        let slots = p.max_threads().min(4);
+        let hits: Vec<AtomicUsize> = (0..slots).map(|_| AtomicUsize::new(0)).collect();
+        p.run_sticky(slots, &|s| {
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sticky_jobs_never_leave_their_home_worker() {
+        let p = global();
+        if p.max_threads() < 2 {
+            return;
+        }
+        let slots = p.max_threads().min(3);
+        for _ in 0..50 {
+            p.run_sticky(slots, &|_| {});
+        }
+        let s = stats();
+        assert_eq!(s.sticky_away, 0, "sticky jobs migrated off their home worker");
+        assert!(s.sticky_home >= 50 * (slots as u64 - 1), "home runs {}", s.sticky_home);
+    }
+
+    #[test]
+    fn run_sticky_panic_propagates_and_pool_survives() {
+        let p = global();
+        if p.max_threads() < 2 {
+            return;
+        }
+        let caught = std::panic::catch_unwind(|| {
+            p.run_sticky(2, &|s| {
+                if s == 1 {
+                    panic!("sticky boom");
+                }
+            });
+        });
+        assert!(caught.is_err());
+        let ok = AtomicUsize::new(0);
+        p.run_sticky(2, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -52,15 +52,19 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn render(&self) -> String {
-        // Worker-pool counters ride along so one METRICS scrape covers
-        // both the request layer and the parallel substrate under it.
+        // Worker-pool and frontier counters ride along so one METRICS
+        // scrape covers the request layer, the parallel substrate and
+        // the Contour execution engine under it.
         let pool = crate::par::pool::stats();
+        let (frontier_passes, frontier_skipped) = crate::cc::contour::frontier_counters();
         format!(
             "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
              cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
              streams={} stream_edges={} stream_epochs={} stream_queries={} pool_workers={} \
              pool_jobs={} pool_pulls={} pool_steals={} pool_parks={} pool_wakes={} \
-             pool_inflight={} pool_max_inflight={} pool_exec_peak={}",
+             pool_inflight={} pool_max_inflight={} pool_exec_peak={} pool_pins={} \
+             pool_sticky_jobs={} pool_sticky_home={} pool_sticky_away={} \
+             frontier_passes={} frontier_skipped={}",
             self.requests.get(),
             self.errors.get(),
             self.graphs_loaded.get(),
@@ -83,7 +87,13 @@ impl Metrics {
             pool.wakes,
             pool.inflight,
             pool.max_inflight,
-            pool.exec_peak
+            pool.exec_peak,
+            pool.pins,
+            pool.sticky_jobs,
+            pool.sticky_home,
+            pool.sticky_away,
+            frontier_passes,
+            frontier_skipped
         )
     }
 }
@@ -101,6 +111,11 @@ mod tests {
         assert_eq!(m.requests.get(), 2);
         assert!(m.render().contains("requests=2"));
         assert!(m.render().contains("cc_millis=120"));
+        // Execution-engine counters are part of the scrape surface.
+        assert!(m.render().contains("pool_pins="));
+        assert!(m.render().contains("pool_sticky_jobs="));
+        assert!(m.render().contains("frontier_passes="));
+        assert!(m.render().contains("frontier_skipped="));
     }
 
     #[test]

@@ -34,12 +34,15 @@
 //!   QUIT                           → BYE (closes connection)
 //!
 //! Sharded store (see [`crate::shard`]; SHARD partitions a stored graph
-//! into p vertex-range shards, PCC runs shard-local connectivity
-//! concurrently — one pool job per shard — and contracts the boundary):
-//!   SHARD name p                   → OK p boundary_edges
+//! into p range shards — fences by vertex count or, with `edges`, by
+//! cumulative edge count — PCC runs shard-local connectivity
+//! concurrently — one pool job per shard — and contracts the boundary;
+//! PCC results are cached per (name, alg, p, balance) like CC results,
+//! with hits reporting 0.000 ms):
+//!   SHARD name p [vertices|edges]  → OK p boundary_edges
 //!   PCC name [ALG]                 → OK components iterations millis
 //!   SHARDSTATS name                → OK p=.. n=.. m=.. boundary=..
-//!                                    shardK=lo:hi:m:components:maxdeg ...
+//!                                    balance=.. shardK=lo:hi:m:...
 //!
 //! Streaming connectivity (see [`crate::stream`]; epochs are sealed
 //! label snapshots, `e` defaults to the current epoch):
@@ -113,6 +116,12 @@ pub struct CcEntry {
     /// Weak so cached entries never keep a dropped stream — and its
     /// WAL claim — alive. `None` for static entries.
     stream: Option<Weak<StreamingCc>>,
+    /// The exact partition a sharded (`PCC`) entry was computed on, for
+    /// the same identity check (re-`SHARD` swaps the Arc even when
+    /// `(p, balance)` — and therefore the cache key — repeat). Weak so
+    /// a cached entry never keeps a replaced partition's O(n + m) copy
+    /// alive. `None` for static and stream entries.
+    sharded: Option<Weak<ShardedGraph>>,
     /// Last-touch stamp from [`ServerState::cache_clock`] (LRU order).
     stamp: AtomicU64,
 }
@@ -185,6 +194,18 @@ impl ServerState {
     fn touch(&self, e: &CcEntry) {
         let now = self.cache_clock.fetch_add(1, Ordering::Relaxed) + 1;
         e.stamp.store(now, Ordering::Relaxed);
+    }
+
+    /// Cache/stat namespace for a graph's sharded (PCC) results — the
+    /// one definition every purge and lookup site shares, so the
+    /// spelling cannot drift. (Like the `stream/<name>` namespace this
+    /// mirrors, it is a string prefix: a graph literally *named*
+    /// `shard/x` would share the namespace of graph `x`'s sharded
+    /// view — a pre-existing quirk of the wire protocol's flat name
+    /// space, costing at worst a spurious eviction or a conflated
+    /// METRICS line, never wrong labels.)
+    fn shard_cache_name(name: &str) -> String {
+        format!("shard/{name}")
     }
 
     /// Record a per-graph labels-cache hit or miss (and the matching
@@ -287,6 +308,7 @@ impl ServerState {
             iterations: r.iterations,
             graph: Some(Arc::clone(g)),
             stream: None,
+            sharded: None,
             stamp: AtomicU64::new(0),
         });
         self.touch(&entry);
@@ -360,6 +382,7 @@ impl ServerState {
             iterations: 0,
             graph: None,
             stream: Some(Arc::downgrade(s)),
+            sharded: None,
             stamp: AtomicU64::new(0),
         });
         self.touch(&entry);
@@ -378,6 +401,70 @@ impl ServerState {
         Ok((entry, false))
     }
 
+    /// The partitioned-connectivity result for a sharded view, served
+    /// from the labels cache or computed by `compute` and admitted
+    /// (ROADMAP item: PCC recomputed every time). Keyed
+    /// `(shard/<name>, <alg>:p<p>:<balance>)` and — like the static
+    /// cache — verified by pointer identity against the *current*
+    /// sharded view, so a re-`SHARD` (same or different parameters) or
+    /// a racing graph replace can never serve a dead partition's
+    /// labels. Returns the entry plus `Some(millis)` when a sharded run
+    /// actually happened (`None` = cache hit); runs are accounted to
+    /// `pcc_runs`/`pcc_millis` here, and per-view hits/misses appear in
+    /// METRICS as `cache/shard/<name>`.
+    pub fn pcc_cached<F>(
+        &self,
+        name: &str,
+        alg: &str,
+        sg: &Arc<ShardedGraph>,
+        compute: F,
+    ) -> Result<(Arc<CcEntry>, Option<f64>)>
+    where
+        F: FnOnce() -> Result<shard::ShardedRun>,
+    {
+        let cache_name = Self::shard_cache_name(name);
+        let key = (cache_name.clone(), format!("{alg}:p{}:{}", sg.p(), sg.balance.as_str()));
+        if let Some(e) = self.labels_cache.read().unwrap().get(&key).cloned() {
+            let same = e
+                .sharded
+                .as_ref()
+                .map_or(false, |w| w.upgrade().map_or(false, |cur| Arc::ptr_eq(&cur, sg)));
+            if same {
+                self.touch(&e);
+                self.note_cache(&cache_name, true);
+                return Ok((e, None));
+            }
+        }
+        let t = Timer::start();
+        let r = compute()?;
+        let ms = t.ms();
+        self.metrics.pcc_runs.inc();
+        self.metrics.pcc_millis.add(ms as u64);
+        let entry = Arc::new(CcEntry {
+            components: cc::num_components(&r.labels),
+            labels: CachedLabels::Owned(r.labels),
+            iterations: r.iterations,
+            graph: None,
+            stream: None,
+            sharded: Some(Arc::downgrade(sg)),
+            stamp: AtomicU64::new(0),
+        });
+        self.touch(&entry);
+        let mut map = self.labels_cache.write().unwrap();
+        // Admit only while `name`'s sharded view is still the exact
+        // partition we computed on: a concurrent SHARD/GEN/DROP must
+        // not have its purge undone (miss counted only on admission,
+        // mirroring the static path).
+        let still_current =
+            self.sharded.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, sg));
+        if still_current {
+            self.note_cache(&cache_name, false);
+            Self::evict_if_full(&mut map, &key);
+            map.insert(key, Arc::clone(&entry));
+        }
+        Ok((entry, Some(ms)))
+    }
+
     #[cfg(test)]
     fn cache_len(&self) -> usize {
         self.labels_cache.read().unwrap().len()
@@ -385,8 +472,11 @@ impl ServerState {
 
     pub fn insert(&self, name: &str, g: Csr) {
         self.graphs.write().unwrap().insert(name.to_string(), Arc::new(g));
-        self.labels_cache.write().unwrap().retain(|k, _| k.0 != name);
-        // A sharded view partitions the *replaced* graph; drop it.
+        let skey = Self::shard_cache_name(name);
+        // Purge both the static entries and any cached PCC labellings:
+        // a sharded view partitions the *replaced* graph, so its cached
+        // results are as dead as the view itself (dropped below).
+        self.labels_cache.write().unwrap().retain(|k, _| k.0 != name && k.0 != skey);
         self.sharded.write().unwrap().remove(name);
     }
 
@@ -474,9 +564,12 @@ impl ServerState {
     /// take precedence).
     pub fn drop_graph(&self, name: &str) -> bool {
         if self.graphs.write().unwrap().remove(name).is_some() {
-            self.labels_cache.write().unwrap().retain(|k, _| k.0 != name);
+            let skey = ServerState::shard_cache_name(name);
+            self.labels_cache.write().unwrap().retain(|k, _| k.0 != name && k.0 != skey);
             self.sharded.write().unwrap().remove(name);
-            self.cache_stats.write().unwrap().remove(name);
+            let mut stats = self.cache_stats.write().unwrap();
+            stats.remove(name);
+            stats.remove(&skey);
             return true;
         }
         if self.streams.write().unwrap().remove(name).is_some() {
@@ -815,25 +908,47 @@ impl<'s> Session<'s> {
 
     // --------------------------------------------------- sharded verbs
 
-    /// `SHARD name p` — partition a stored graph into `p` vertex-range
-    /// shards (see [`crate::shard`]); replaces any previous view.
+    /// `SHARD name p [vertices|edges]` — partition a stored graph into
+    /// `p` range shards (see [`crate::shard`]); the optional balance
+    /// policy places fences by vertex count (default) or by cumulative
+    /// edge count. Replaces any previous view and purges its cached PCC
+    /// results.
     fn cmd_shard(&self, rest: &[&str]) -> Result<String> {
-        let (name, p) = match rest {
-            [name, p] => (*name, p.parse::<usize>().map_err(|e| anyhow!("bad shard count: {e}"))?),
-            _ => bail!("usage: SHARD name p"),
+        let (name, p, balance) = match rest {
+            [name, p] => (*name, *p, shard::Balance::Vertices),
+            [name, p, b] => (
+                *name,
+                *p,
+                shard::Balance::parse(b)
+                    .ok_or_else(|| anyhow!("balance must be `vertices` or `edges`, got {b:?}"))?,
+            ),
+            _ => bail!("usage: SHARD name p [vertices|edges]"),
         };
+        let p = p.parse::<usize>().map_err(|e| anyhow!("bad shard count: {e}"))?;
         anyhow::ensure!(p >= 1, "shard count must be >= 1");
         anyhow::ensure!(p <= 65_536, "shard count {p} unreasonably large");
         let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+        // Hygiene: purge entries cached for the partition this SHARD
+        // replaces *before* publishing the new one — purging after
+        // could race a concurrent PCC and delete an entry freshly
+        // computed on the new partition. (A PCC racing into this
+        // window can still re-admit an old-partition entry; its weak
+        // identity is dead, so it can never serve and only waits for
+        // LRU.) Outside insert_sharded so the labels-cache lock is
+        // never nested inside the sharded lock.
+        let skey = ServerState::shard_cache_name(name);
+        self.state.labels_cache.write().unwrap().retain(|k, _| k.0 != skey);
         let sg = self
             .state
-            .insert_sharded(name, &g, ShardedGraph::partition(&g, p))
+            .insert_sharded(name, &g, ShardedGraph::partition_with(&g, p, balance))
             .ok_or_else(|| anyhow!("graph {name:?} was replaced during SHARD; retry"))?;
         Ok(format!("OK {} {}", sg.p(), sg.boundary.len()))
     }
 
     /// `PCC name [alg]` — partitioned connectivity: shard-local runs
     /// concurrently (one pool job per shard), then boundary merge.
+    /// Results are cached per `(name, alg, p, balance)` with the same
+    /// identity rules as `CC` (a cache hit reports 0.000 ms).
     fn cmd_pcc(&self, rest: &[&str]) -> Result<String> {
         let (name, alg_name) = match rest {
             [name] => (*name, "C-2"),
@@ -844,25 +959,24 @@ impl<'s> Session<'s> {
             .state
             .get_sharded(name)
             .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
-        let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
-            // Drive the §IV-E policy from the heaviest shard's topology
-            // (partitioning is by vertex range, so shards inherit the
-            // source graph's shape).
-            let big = sg
-                .shards
-                .iter()
-                .max_by_key(|s| s.graph.m())
-                .expect("a partition has at least one shard");
-            Box::new(auto_select(big.stats()).with_threads(self.state.threads))
-        } else {
-            algorithm_by_name(alg_name, self.state.threads)?
-        };
-        let t = Timer::start();
-        let r = shard::run_sharded(&sg, alg.as_ref(), self.state.threads);
-        let ms = t.ms();
-        self.state.metrics.pcc_runs.inc();
-        self.state.metrics.pcc_millis.add(ms as u64);
-        Ok(format!("OK {} {} {:.3}", cc::num_components(&r.labels), r.iterations, ms))
+        let threads = self.state.threads;
+        let (entry, ran_ms) = self.state.pcc_cached(name, alg_name, &sg, || {
+            let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
+                // Drive the §IV-E policy from the heaviest shard's
+                // topology (range partitioning, so shards inherit the
+                // source graph's shape).
+                let big = sg
+                    .shards
+                    .iter()
+                    .max_by_key(|s| s.graph.m())
+                    .expect("a partition has at least one shard");
+                Box::new(auto_select(big.stats()).with_threads(threads))
+            } else {
+                algorithm_by_name(alg_name, threads)?
+            };
+            Ok(shard::run_sharded(&sg, alg.as_ref(), threads))
+        })?;
+        Ok(format!("OK {} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
     }
 
     /// `SHARDSTATS name` — per-shard topology of a sharded view.
@@ -873,11 +987,12 @@ impl<'s> Session<'s> {
             .get_sharded(name)
             .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
         let mut out = format!(
-            "OK p={} n={} m={} boundary={}",
+            "OK p={} n={} m={} boundary={} balance={}",
             sg.p(),
             sg.n,
             sg.m,
-            sg.boundary.len()
+            sg.boundary.len(),
+            sg.balance.as_str()
         );
         for (k, sh) in sg.shards.iter().enumerate() {
             let st = sh.stats();
@@ -1313,6 +1428,52 @@ mod tests {
         assert!(ask("SHARD g 2").starts_with("OK 2 "));
         assert!(ask("DROP g").starts_with("OK"));
         assert!(ask("SHARDSTATS g").starts_with("ERR"));
+    }
+
+    #[test]
+    fn pcc_results_are_cached_per_partition() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN g er:400:700").starts_with("OK"));
+        assert!(ask("SHARD g 3").starts_with("OK 3 "));
+        let first = ask("PCC g C-2");
+        assert!(first.starts_with("OK"), "{first}");
+        let again = ask("PCC g C-2");
+        // Served from the cache: one actual sharded run, same report.
+        assert_eq!(
+            first.split_whitespace().take(3).collect::<Vec<_>>(),
+            again.split_whitespace().take(3).collect::<Vec<_>>(),
+            "cached PCC disagrees: {first} vs {again}"
+        );
+        let m = ask("METRICS");
+        assert!(m.contains("pcc_runs=1"), "{m}");
+        assert!(m.contains("cache/shard/g=1:1"), "{m}");
+        // Re-SHARD (even with identical parameters) is a new partition:
+        // the stale entry must not serve.
+        assert!(ask("SHARD g 3").starts_with("OK 3 "));
+        assert!(ask("PCC g C-2").starts_with("OK"));
+        let m = ask("METRICS");
+        assert!(m.contains("pcc_runs=2"), "{m}");
+        // Edge-balanced fences through the verb: distinct cache key,
+        // surfaced in SHARDSTATS, same components as CC.
+        assert!(ask("SHARD g 3 edges").starts_with("OK 3 "));
+        assert!(ask("SHARDSTATS g").contains("balance=edges"));
+        let cc = ask("CC g C-2");
+        let pcc = ask("PCC g C-2");
+        assert_eq!(
+            cc.split_whitespace().nth(1).unwrap(),
+            pcc.split_whitespace().nth(1).unwrap(),
+            "cc={cc} pcc={pcc}"
+        );
+        assert!(ask("PCC g C-2").starts_with("OK"));
+        let m = ask("METRICS");
+        assert!(m.contains("pcc_runs=3"), "{m}");
+        assert!(ask("SHARD g 3 hubs").starts_with("ERR"), "bad balance accepted");
+        // DROP clears the per-view cache accounting with the view.
+        assert!(ask("DROP g").starts_with("OK"));
+        let m = ask("METRICS");
+        assert!(!m.contains("cache/shard/g="), "{m}");
     }
 
     #[test]

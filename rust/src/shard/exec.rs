@@ -25,7 +25,7 @@
 
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 
-use super::partition::ShardedGraph;
+use super::partition::{Balance, ShardedGraph};
 use crate::cc::unionfind::RemConcurrent;
 use crate::cc::{Algorithm, Labels};
 use crate::par;
@@ -40,6 +40,11 @@ pub struct ShardedRun {
     pub iterations: usize,
     pub shards: usize,
     pub boundary_edges: usize,
+    /// Fence policy of the partition this run executed on
+    /// ([`Balance::Edges`] evens the per-shard edge mass, so the
+    /// shard-job seating below stays busy instead of idling behind one
+    /// heavy shard).
+    pub balance: Balance,
 }
 
 /// Run `alg` on every shard concurrently, then contract the boundary.
@@ -116,6 +121,7 @@ pub fn run_sharded(sg: &ShardedGraph, alg: &(dyn Algorithm + Sync), threads: usi
         iterations: if boundary_edges > 0 { iterations + 1 } else { iterations },
         shards: p,
         boundary_edges,
+        balance: sg.balance,
     }
 }
 
@@ -161,6 +167,18 @@ mod tests {
         let r = run_sharded(&sg, &Contour::c2(), 0);
         assert!(r.iterations >= 2, "merge pass must be counted");
         assert!(r.iterations >= single.iterations);
+    }
+
+    #[test]
+    fn edge_balanced_partition_produces_identical_labels() {
+        let g = gen::rmat(11, 8_000, gen::RmatKind::Graph500, 4).into_csr();
+        let want = Contour::c2().run(&g);
+        for p in [2usize, 4] {
+            let sg = ShardedGraph::partition_with(&g, p, Balance::Edges);
+            let r = run_sharded(&sg, &Contour::c2(), 0);
+            assert_eq!(r.labels, want, "p={p}");
+            assert_eq!(r.balance, Balance::Edges);
+        }
     }
 
     #[test]

@@ -9,10 +9,13 @@
 //! the small cross-shard boundary. This module is that shape for the
 //! in-process store, in three layers:
 //!
-//! * [`partition`] — split a [`crate::graph::Csr`] into `p` vertex-range
-//!   shards (reusing [`crate::graph::transform::partition_edges`]) plus
-//!   an explicit boundary edge list, with per-shard
-//!   [`crate::graph::stats::GraphStats`].
+//! * [`partition`] — split a [`crate::graph::Csr`] into `p` contiguous
+//!   range shards (reusing [`crate::graph::transform::partition_edges`])
+//!   plus an explicit boundary edge list, with per-shard
+//!   [`crate::graph::stats::GraphStats`]. Fences follow a [`Balance`]
+//!   policy: equal vertex counts, or equal edge mass
+//!   ([`crate::graph::transform::edge_balanced_fences`]) so power-law
+//!   graphs split into equal-work shards.
 //! * [`exec`] — run any [`crate::cc::Algorithm`] shard-locally and
 //!   concurrently (one pool job per shard; C-1/C-2/C-m hop schedules
 //!   honored unchanged), then union representative labels over the
@@ -32,4 +35,4 @@ pub mod exec;
 pub mod partition;
 
 pub use exec::{run_sharded, ShardedRun};
-pub use partition::{Shard, ShardedGraph};
+pub use partition::{Balance, Shard, ShardedGraph};

@@ -1,4 +1,4 @@
-//! Vertex-range graph partitioner.
+//! Range graph partitioner with selectable fence placement.
 //!
 //! Splits a [`Csr`] into `p` shard-local subgraphs by contiguous vertex
 //! range plus an explicit cross-shard boundary edge list — the
@@ -8,6 +8,13 @@
 //! to local ids `0..hi - lo`, so every shard is a standalone graph any
 //! [`crate::cc::Algorithm`] can run on unchanged; the boundary keeps
 //! global ids for the merge pass ([`super::exec`]).
+//!
+//! Fences are placed by a [`Balance`] policy: equal vertex counts (the
+//! original behavior) or equal cumulative edge counts
+//! ([`crate::graph::transform::edge_balanced_fences`] — one binary
+//! search per fence over the CSR offsets), which evens out per-shard
+//! work on power-law graphs where a vertex split hands one shard most
+//! of the edges.
 //!
 //! Each shard also carries its own [`GraphStats`] — computed lazily on
 //! first use, so the server's `SHARDSTATS` verb (and the §IV-E auto
@@ -52,7 +59,37 @@ impl Shard {
     }
 }
 
-/// A graph split into vertex-range shards plus the boundary edges.
+/// Fence-placement policy for [`ShardedGraph::partition_with`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Balance {
+    /// Equal vertex counts per shard (the original policy).
+    #[default]
+    Vertices,
+    /// Fences placed by cumulative edge count — each shard carries
+    /// ≈ 2m/p edge endpoints, fixing the power-law imbalance of vertex
+    /// fences. See [`transform::edge_balanced_fences`].
+    Edges,
+}
+
+impl Balance {
+    /// Parse the wire/CLI spelling (`vertices` | `edges`).
+    pub fn parse(s: &str) -> Option<Balance> {
+        match s {
+            "vertices" => Some(Balance::Vertices),
+            "edges" => Some(Balance::Edges),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Balance::Vertices => "vertices",
+            Balance::Edges => "edges",
+        }
+    }
+}
+
+/// A graph split into range shards plus the boundary edges.
 #[derive(Clone, Debug)]
 pub struct ShardedGraph {
     /// Global vertex count of the source graph.
@@ -63,6 +100,8 @@ pub struct ShardedGraph {
     pub shards: Vec<Shard>,
     /// Cross-shard edges, global ids.
     pub boundary: Vec<(VId, VId)>,
+    /// Fence policy this partition was built with.
+    pub balance: Balance,
 }
 
 impl ShardedGraph {
@@ -70,8 +109,19 @@ impl ShardedGraph {
     /// clamped to `[1, n]` so no shard is empty (except the degenerate
     /// empty graph, which yields one empty shard).
     pub fn partition(g: &Csr, p: usize) -> Self {
+        Self::partition_with(g, p, Balance::Vertices)
+    }
+
+    /// Partition `g` into (up to) `p` contiguous ranges under the given
+    /// fence policy. `p` is clamped to `[1, n]`; with [`Balance::Edges`]
+    /// an individual range can still be empty under extreme skew (one
+    /// vertex heavier than 2m/p), which the executor tolerates.
+    pub fn partition_with(g: &Csr, p: usize, balance: Balance) -> Self {
         let p = p.max(1).min(g.n.max(1));
-        let bounds: Vec<usize> = (0..=p).map(|k| k * g.n / p).collect();
+        let bounds: Vec<usize> = match balance {
+            Balance::Vertices => (0..=p).map(|k| k * g.n / p).collect(),
+            Balance::Edges => transform::edge_balanced_fences(g, p),
+        };
         let owner = |v: VId| bounds.partition_point(|&b| b <= v as usize) - 1;
         let (parts, boundary) = transform::partition_edges(g, &bounds, owner);
         let shards = parts
@@ -84,7 +134,7 @@ impl ShardedGraph {
                 stats: OnceLock::new(),
             })
             .collect();
-        Self { n: g.n, m: g.m(), shards, boundary }
+        Self { n: g.n, m: g.m(), shards, boundary, balance }
     }
 
     /// Number of shards.
@@ -158,6 +208,56 @@ mod tests {
             assert_eq!(sh.stats().num_components, 1);
         }
         assert_eq!(sg.boundary, vec![(2, 3)]);
+    }
+
+    #[test]
+    fn edge_balanced_fences_fix_power_law_skew() {
+        // Acceptance: on RMAT at p=4 the edge-balanced policy brings the
+        // max/min per-shard edge-mass ratio to <= 1.5, and improves on
+        // the vertex policy (which hands the low-id hub range most of
+        // the edges on this generator).
+        let g = gen::rmat(12, 50_000, gen::RmatKind::Graph500, 7).into_csr();
+        let p = 4;
+        // A shard's edge mass = edge endpoints it owns (degree sum of
+        // its range): the per-shard work an O(m) sweep actually does.
+        let mass = |sg: &ShardedGraph| -> Vec<usize> {
+            sg.shards
+                .iter()
+                .map(|s| g.offsets[s.hi as usize] - g.offsets[s.lo as usize])
+                .collect()
+        };
+        let ratio = |w: &[usize]| -> f64 {
+            let max = *w.iter().max().unwrap() as f64;
+            let min = *w.iter().min().unwrap() as f64;
+            max / min.max(1.0)
+        };
+        let by_edges = ShardedGraph::partition_with(&g, p, Balance::Edges);
+        let by_vertices = ShardedGraph::partition_with(&g, p, Balance::Vertices);
+        assert_eq!(by_edges.balance, Balance::Edges);
+        assert_eq!(by_edges.p(), p);
+        // Both policies still tile 0..n and conserve edges.
+        for sg in [&by_edges, &by_vertices] {
+            assert_eq!(sg.shards[0].lo, 0);
+            assert_eq!(sg.shards.last().unwrap().hi as usize, g.n);
+            for w in sg.shards.windows(2) {
+                assert_eq!(w[0].hi, w[1].lo);
+            }
+            let local_m: usize = sg.shards.iter().map(|s| s.graph.m()).sum();
+            assert_eq!(local_m + sg.boundary.len(), g.m());
+        }
+        let re = ratio(&mass(&by_edges));
+        let rv = ratio(&mass(&by_vertices));
+        assert!(re <= 1.5, "edge-balanced ratio {re:.2} > 1.5");
+        assert!(re < rv, "edge fences ({re:.2}) did not improve on vertex fences ({rv:.2})");
+    }
+
+    #[test]
+    fn balance_parses_wire_spelling() {
+        assert_eq!(Balance::parse("edges"), Some(Balance::Edges));
+        assert_eq!(Balance::parse("vertices"), Some(Balance::Vertices));
+        assert_eq!(Balance::parse("hubs"), None);
+        assert_eq!(Balance::Edges.as_str(), "edges");
+        assert_eq!(Balance::default(), Balance::Vertices);
     }
 
     #[test]

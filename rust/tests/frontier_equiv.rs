@@ -1,0 +1,82 @@
+//! Active-edge frontier equivalence matrix: frontier-mode Contour must
+//! produce labels **bit-identical** to the full-sweep engine for every
+//! variant, on every generator class, sequential and parallel. Both
+//! engines converge to the canonical min-vertex-id labelling — the
+//! frontier only changes which chunks each intermediate pass touches —
+//! so full `Vec` equality is the right check, and any under-merge from
+//! a mis-skipped chunk shows up as a hard mismatch.
+//!
+//! The generator set spans the shapes that stress the frontier
+//! differently: low-diameter power-law (rmat — chunks settle fast, the
+//! case the frontier wins on), uniform random (er), mesh (road — label
+//! propagation crosses chunk borders, exercising the periodic
+//! full-sweep backstop), and worst-case diameter (path).
+
+use contour::cc::contour::Contour;
+use contour::cc::Algorithm;
+use contour::graph::{gen, Csr};
+
+/// Generators sized above the parallel cutoff so the pooled sticky
+/// substrate (not just the inline fallback) is exercised.
+fn generators() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("rmat", gen::rmat(13, 60_000, gen::RmatKind::Graph500, 3).into_csr().shuffled_edges(1)),
+        ("er", gen::erdos_renyi(20_000, 40_000, 5).into_csr().shuffled_edges(2)),
+        ("road", gen::road(100, 100, 9).into_csr().shuffled_edges(3)),
+        ("path", gen::path(30_000).into_csr().shuffled_edges(4)),
+    ]
+}
+
+#[test]
+fn frontier_bit_identical_to_full_sweep_for_all_variants() {
+    for (gname, g) in generators() {
+        for alg in Contour::all_variants() {
+            for threads in [1usize, 4] {
+                let full = alg.clone().with_threads(threads).with_frontier(false).run(&g);
+                let frontier = alg.clone().with_threads(threads).with_frontier(true).run(&g);
+                assert_eq!(
+                    frontier,
+                    full,
+                    "{} on {gname} (n={} m={}) threads={threads}: frontier diverges",
+                    alg.name(),
+                    g.n,
+                    g.m()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn frontier_equivalence_holds_under_concurrent_runs() {
+    // Frontier runs racing through the shared pool (the server shape):
+    // per-run dirty grids must not interfere across sessions.
+    let g = gen::rmat(12, 30_000, gen::RmatKind::Graph500, 7).into_csr().shuffled_edges(6);
+    let want = Contour::c2().with_threads(1).with_frontier(false).run(&g);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let g = &g;
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let got = Contour::c2().with_frontier(true).run(g);
+                    assert_eq!(&got, want);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn frontier_skip_accounting_is_visible() {
+    // The execution engine must actually skip settled chunks on a
+    // low-diameter graph (otherwise "frontier mode" is a no-op) while
+    // staying bit-identical.
+    let g = gen::rmat(13, 120_000, gen::RmatKind::Graph500, 11).into_csr().shuffled_edges(8);
+    let (_, s0) = contour::cc::contour::frontier_counters();
+    let full = Contour::c2().with_frontier(false).run(&g);
+    let frontier = Contour::c2().with_frontier(true).run(&g);
+    assert_eq!(frontier, full);
+    let (_, s1) = contour::cc::contour::frontier_counters();
+    assert!(s1 > s0, "frontier mode never skipped a chunk");
+}

@@ -85,6 +85,52 @@ fn pool_reused_across_a_thousand_tiny_passes() {
 }
 
 #[test]
+fn thousand_sticky_passes_keep_a_stable_chunk_to_worker_mapping() {
+    // The execution-engine contract: a sticky pass over a stable chunk
+    // grid lands each chunk block on the same worker every time (slot
+    // jobs live on their home worker's queue and are excluded from
+    // stealing), so a hot loop re-touches warm cache lines instead of
+    // scattering. 1000 passes over one grid; the pool metrics must show
+    // sticky placement never migrated, and every index must be covered
+    // exactly once per pass.
+    let before = par::pool::stats();
+    let grid = par::Chunks::new(1 << 17, 1 << 12);
+    let hits: Vec<AtomicU64> = (0..grid.len).map(|_| AtomicU64::new(0)).collect();
+    let passes = 1000u64;
+    for _ in 0..passes {
+        par::par_for_sticky(grid, 0, |c, r| {
+            assert_eq!(r, grid.range(c), "chunk ids must be grid-stable");
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == passes));
+    if par::num_threads() > 1 && par::exec_mode() == par::ExecMode::Pooled {
+        let after = par::pool::stats();
+        assert!(
+            after.sticky_jobs >= before.sticky_jobs + passes,
+            "sticky passes bypassed the pool: {} -> {}",
+            before.sticky_jobs,
+            after.sticky_jobs
+        );
+        // Stability, asserted via metrics: every sticky slot job in the
+        // process ran on its home worker — the chunk→worker mapping
+        // never moved across all 1000 passes.
+        assert_eq!(
+            after.sticky_away, before.sticky_away,
+            "sticky slot jobs migrated off their home worker"
+        );
+        assert!(
+            after.sticky_home >= before.sticky_home + passes,
+            "home-worker executions did not advance: {} -> {}",
+            before.sticky_home,
+            after.sticky_home
+        );
+    }
+}
+
+#[test]
 fn pooled_labels_bit_identical_to_single_thread_for_all_variants() {
     // Property pinned by the refactor: for every Contour variant the
     // pooled parallel run must produce exactly the label array the

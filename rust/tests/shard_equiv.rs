@@ -12,7 +12,7 @@ use std::sync::Arc;
 use contour::cc::{self, contour::Contour, Algorithm};
 use contour::graph::{gen, Csr};
 use contour::server::{serve_listener, ServerState};
-use contour::shard::{run_sharded, ShardedGraph};
+use contour::shard::{run_sharded, Balance, ShardedGraph};
 
 fn generators() -> Vec<(&'static str, Csr)> {
     vec![
@@ -25,8 +25,9 @@ fn generators() -> Vec<(&'static str, Csr)> {
 }
 
 /// The acceptance matrix: generators × shard counts {1,2,4,7} × hops
-/// {1,2}. Also pins the stronger property that sharded labels are the
-/// *identical* canonical labelling, and partition edge conservation.
+/// {1,2} × fence policies {vertices, edges}. Also pins the stronger
+/// property that sharded labels are the *identical* canonical
+/// labelling, and partition edge conservation.
 #[test]
 fn sharded_equivalent_to_single_shard_contour() {
     for (gname, g) in generators() {
@@ -40,21 +41,23 @@ fn sharded_equivalent_to_single_shard_contour() {
             // truth (both canonical), so `want` stands in for it.
             assert_eq!(alg.run(&g), want, "{gname} single-shard h{hops}");
             for p in [1usize, 2, 4, 7] {
-                let sg = ShardedGraph::partition(&g, p);
-                assert_eq!(
-                    sg.shards.iter().map(|s| s.graph.m()).sum::<usize>() + sg.boundary.len(),
-                    g.m(),
-                    "{gname} p={p}: edges lost in partitioning"
-                );
-                let r = run_sharded(&sg, &alg, 0);
-                assert!(
-                    cc::same_partition(&r.labels, &want),
-                    "{gname} p={p} h{hops}: sharded labels not component-equivalent"
-                );
-                assert_eq!(
-                    r.labels, want,
-                    "{gname} p={p} h{hops}: sharded labels not canonical min-id"
-                );
+                for balance in [Balance::Vertices, Balance::Edges] {
+                    let sg = ShardedGraph::partition_with(&g, p, balance);
+                    assert_eq!(
+                        sg.shards.iter().map(|s| s.graph.m()).sum::<usize>() + sg.boundary.len(),
+                        g.m(),
+                        "{gname} p={p} {balance:?}: edges lost in partitioning"
+                    );
+                    let r = run_sharded(&sg, &alg, 0);
+                    assert!(
+                        cc::same_partition(&r.labels, &want),
+                        "{gname} p={p} h{hops} {balance:?}: not component-equivalent"
+                    );
+                    assert_eq!(
+                        r.labels, want,
+                        "{gname} p={p} h{hops} {balance:?}: not canonical min-id"
+                    );
+                }
             }
         }
     }
@@ -93,7 +96,8 @@ fn connect(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, BufWriter<TcpSt
 /// complete correctly, and the pool's in-flight high-water mark must
 /// show ≥ 2 jobs overlapping (each sharded run alone submits one job
 /// per shard; two sessions overlap on top of that — the old
-/// single-job-slot pool could never exceed 1).
+/// single-job-slot pool could never exceed 1). With the shard-labels
+/// cache, each graph computes once and the repeat requests are hits.
 #[test]
 fn concurrent_pcc_requests_overlap_in_the_pool() {
     let state = Arc::new(ServerState::new(0));
@@ -159,13 +163,22 @@ fn concurrent_pcc_requests_overlap_in_the_pool() {
             "shard jobs never executed concurrently: {metrics}"
         );
     }
+    // The shard-labels cache: each (graph, alg, p, balance) computed
+    // exactly once; the other 4 requests per graph were hits.
     let pcc_runs: u64 = metrics
         .split_whitespace()
         .find_map(|t| t.strip_prefix("pcc_runs="))
         .expect("pcc_runs in METRICS")
         .parse()
         .unwrap();
-    assert_eq!(pcc_runs, 10, "{metrics}");
+    assert_eq!(pcc_runs, 2, "{metrics}");
+    for name in ["a", "b"] {
+        let kv = metrics
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix(&format!("cache/shard/{name}=")))
+            .unwrap_or_else(|| panic!("cache/shard/{name} in METRICS: {metrics}"));
+        assert_eq!(kv, "4:1", "shard cache accounting for {name}: {metrics}");
+    }
     assert_eq!(ask(&mut r0, &mut w0, "QUIT"), "BYE");
 
     shutdown.store(true, Ordering::Relaxed);
