@@ -133,10 +133,20 @@ class ContourClient:
 
     # ------------------------------------------------------------- analysis
 
-    def graph_cc(self, name: str, alg: str = "C-2") -> Tuple[int, int, float]:
+    def graph_cc(self, name: str, alg: str = "C-2",
+                 frontier: Optional[str] = None) -> Tuple[int, int, float]:
         """The paper's ``graph_cc(graph)`` call: returns
-        (components, iterations, server_millis)."""
-        _, comps, iters, ms = self._request(f"CC {name} {alg}").split()
+        (components, iterations, server_millis). ``frontier`` pins the
+        Contour execution engine for this request: ``"exact"`` (vertex→
+        chunk activation map, no backstop sweeps), ``"chunk"`` (local
+        dirty bits + periodic full sweeps) or ``"off"`` (full sweeps).
+        Default: the server process's ``CONTOUR_FRONTIER`` setting.
+        Labels are bit-identical across engines; only iterations/time
+        differ, and each pinned engine gets its own server cache slot."""
+        if frontier not in (None, "exact", "chunk", "off"):
+            raise ValueError(f"frontier must be exact|chunk|off, got {frontier!r}")
+        req = f"CC {name} {alg}" + (f" {frontier}" if frontier else "")
+        _, comps, iters, ms = self._request(req).split()
         return int(comps), int(iters), float(ms)
 
     def labels(self, name: str, alg: str = "C-2",
@@ -177,9 +187,13 @@ class ContourClient:
         ``cache/shard/<name>``) are ``"hits:misses"`` strings. The
         execution-engine counters ride along: ``pool_pins`` (workers
         pinned to cores), ``pool_sticky_jobs`` / ``pool_sticky_home`` /
-        ``pool_sticky_away`` (sticky chunk→worker placement), and
-        ``frontier_passes`` / ``frontier_skipped`` (active-edge frontier
-        passes and the chunks they skipped)."""
+        ``pool_sticky_away`` (sticky chunk→worker placement),
+        ``frontier_passes`` / ``frontier_skipped`` (partial frontier
+        passes and the chunks they skipped, both engines),
+        ``frontier_activations`` (stores that re-dirtied chunks through
+        the exact vertex→chunk map), ``frontier_exact`` (exact-engine
+        passes) and ``frontier_full_sweeps`` (the chunk engine's forced
+        backstop sweeps — the exact engine never forces one)."""
         out: dict = {}
         for p in self._request("METRICS").split()[1:]:
             k, v = p.split("=", 1)

@@ -59,6 +59,22 @@ def test_ping_and_generate(server):
         assert ms >= 0.0
 
 
+def test_frontier_modes_agree(server):
+    with ContourClient(port=PORT) as c:
+        c.gen("fm", "er:500:900")
+        base, _, _ = c.graph_cc("fm", "C-2")
+        for mode in ("exact", "chunk", "off"):
+            comps, iters, _ = c.graph_cc("fm", "C-2", frontier=mode)
+            assert comps == base, f"{mode} changed the component count"
+            assert iters >= 1
+        with pytest.raises(ValueError):
+            c.graph_cc("fm", "C-2", frontier="sideways")
+        m = c.metrics()
+        assert "frontier_exact" in m
+        assert "frontier_activations" in m
+        assert "frontier_full_sweeps" in m
+
+
 def test_upload_matches_ground_truth(server):
     import numpy as np
 

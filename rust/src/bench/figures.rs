@@ -530,12 +530,14 @@ fn hotpath_json_text(
 
 /// `bench hotpath` — the hot-path trajectory the ROADMAP tracks over
 /// time instead of one-off runs: `exec/pool` vs `exec/spawn` (the
-/// worker-pool amortization), `contour/full` vs `contour/frontier`
-/// (the active-edge frontier), the `shard/p` sweep (sharded C-2
-/// against shard counts) and `balance/vertices` vs `balance/edges`
-/// (fence policy at p=4). The JSON summary carries
+/// worker-pool amortization), `contour/full` vs `contour/frontier` vs
+/// `contour/exact` (the three frontier engines), the `shard/p` sweep
+/// (sharded C-2 against shard counts) and `balance/vertices` vs
+/// `balance/edges` (fence policy at p=4). The JSON summary carries
 /// `frontier_speedup_rmat` (full/frontier median ratio on the
-/// low-diameter RMAT case) and `edge_mass_ratio_p4_{vertices,edges}`
+/// low-diameter RMAT case), `exact_vs_chunk_{rmat,road}` (chunk/exact
+/// median ratio — road is the high-diameter case where dropping the
+/// backstop sweeps pays) and `edge_mass_ratio_p4_{vertices,edges}`
 /// (max/min per-shard edge mass). Writes human-readable
 /// `hotpath_trend.{txt,csv}` *and* machine-readable
 /// `BENCH_hotpath.json` (CI uploads the JSON as an artifact so deltas
@@ -594,13 +596,21 @@ pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
     }
     crate::par::set_exec_mode(crate::par::ExecMode::Pooled);
 
-    // Contour execution engine: full-sweep vs active-edge frontier on
-    // the same sticky chunk grid. The rmat pair feeds the
-    // frontier_speedup_rmat summary (the low-diameter case the frontier
-    // exists for); road is the adversarial high-diameter control.
-    for (label, frontier) in [("full", false), ("frontier", true)] {
+    // Contour execution engine: full-sweep vs chunk frontier vs exact
+    // vertex-activation on the same sticky chunk grid. The rmat pair
+    // feeds the frontier_speedup_rmat summary (the low-diameter case
+    // the chunk frontier exists for); road is the high-diameter case —
+    // adversarial for the chunk engine (backstop sweeps fire while
+    // propagation crosses chunk borders) and exactly what the exact
+    // activation map was built for, which is what the
+    // exact_vs_chunk_road ratio records.
+    for (label, mode) in [
+        ("full", cc::contour::FrontierMode::Off),
+        ("frontier", cc::contour::FrontierMode::Chunk),
+        ("exact", cc::contour::FrontierMode::Exact),
+    ] {
         for (gname, graph) in [("rmat", &g), ("road", &road)] {
-            let alg = cc::contour::Contour::c2().with_threads(threads).with_frontier(frontier);
+            let alg = cc::contour::Contour::c2().with_threads(threads).with_frontier_mode(mode);
             bench(
                 &mut records,
                 &mut t,
@@ -620,6 +630,10 @@ pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
     };
     let frontier_speedup = median_of(&records, "contour/full", "rmat")
         / median_of(&records, "contour/frontier", "rmat");
+    let exact_vs_chunk_rmat = median_of(&records, "contour/frontier", "rmat")
+        / median_of(&records, "contour/exact", "rmat");
+    let exact_vs_chunk_road = median_of(&records, "contour/frontier", "road")
+        / median_of(&records, "contour/exact", "road");
 
     // Sharded connectivity: partition once per p, measure the sharded
     // run (shard-local C-2 jobs in flight + boundary contraction).
@@ -658,6 +672,8 @@ pub fn hotpath_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
     }
     let summary = [
         ("frontier_speedup_rmat", frontier_speedup),
+        ("exact_vs_chunk_rmat", exact_vs_chunk_rmat),
+        ("exact_vs_chunk_road", exact_vs_chunk_road),
         ("edge_mass_ratio_p4_vertices", mass_ratio[0]),
         ("edge_mass_ratio_p4_edges", mass_ratio[1]),
     ];

@@ -99,10 +99,7 @@ impl Algorithm for Afforest {
                 pr[v].store(r, Ordering::Relaxed);
             }
         });
-        RunResult {
-            labels: p.into_iter().map(|x| x.into_inner()).collect(),
-            iterations: 1,
-        }
+        RunResult::new(p.into_iter().map(|x| x.into_inner()).collect(), 1)
     }
 }
 

@@ -123,7 +123,7 @@ impl Algorithm for BfsCc {
             BfsMode::Sequential => self.run_sequential(g),
             BfsMode::Parallel => self.run_parallel(g),
         };
-        RunResult { labels, iterations: rounds }
+        RunResult::new(labels, rounds)
     }
 }
 

@@ -17,7 +17,8 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::OnceLock;
 
-use super::{Algorithm, AtomicLabels, RunResult};
+use super::{Algorithm, AtomicLabels, FrontierStats, RunResult};
+use crate::graph::transform::{vertex_chunk_index, VertexChunkIndex};
 use crate::graph::Csr;
 use crate::par;
 use crate::VId;
@@ -79,34 +80,102 @@ pub enum WriteMode {
 /// Default "m" for the high-order variants, following §IV-C (m = 1024).
 pub const M_ORDER: usize = 1024;
 
-/// In frontier mode, force a full sweep after this many consecutive
-/// frontier (dirty-chunks-only) passes. The per-chunk dirty bits are a
-/// *local* signal — a chunk that changed nothing goes clean even though
-/// a label one of its edges reads may later be lowered by another chunk
-/// — so periodic full sweeps (plus one whenever a frontier pass changes
-/// nothing) are the correctness backstop that recovers any activation
-/// the local bits missed. Convergence is only ever concluded from a
-/// full sweep.
+/// In **chunk** frontier mode, force a full sweep after this many
+/// consecutive frontier (dirty-chunks-only) passes. Chunk mode's
+/// per-chunk dirty bits are a *local* signal — a chunk that changed
+/// nothing goes clean even though a label one of its edges reads may
+/// later be lowered by another chunk — so periodic full sweeps (plus
+/// one whenever a frontier pass changes nothing) are the correctness
+/// backstop, and chunk mode concludes convergence only from a full
+/// sweep. **Exact** mode has no such constant: its vertex→chunk
+/// activation map re-dirties precisely the chunks a lowered label can
+/// affect, so an empty dirty set *is* the convergence proof.
 pub const FULL_SWEEP_EVERY: usize = 4;
 
-/// Frontier-mode accounting across all runs in this process (surfaced
-/// by the server's METRICS verb): frontier (partial) passes executed,
-/// and chunks those passes skipped as clean.
+/// How the Contour execution engine selects edge chunks per iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontierMode {
+    /// Full sweep every pass (the paper's engine, no dirty bits).
+    Off,
+    /// Per-chunk dirty bits, rewritten each visit, with the
+    /// [`FULL_SWEEP_EVERY`] full-sweep backstop (PR 4's engine).
+    Chunk,
+    /// Exact vertex-level activation: lowering `label[v]` marks every
+    /// chunk containing an edge incident to `v` dirty (via a
+    /// per-run [`VertexChunkIndex`]), a pass claims exactly the dirty
+    /// chunks, and convergence is concluded from an empty dirty set —
+    /// no forced sweeps.
+    Exact,
+}
+
+impl FrontierMode {
+    /// Parse a mode name: `exact`, `chunk`, `off` (plus the PR-4 era
+    /// boolean spellings `1`/`on`/`true` → chunk, `0`/`false`/`none` →
+    /// off, case-insensitively).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(Self::Exact),
+            "chunk" | "1" | "on" | "true" => Some(Self::Chunk),
+            "off" | "0" | "false" | "none" => Some(Self::Off),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Chunk => "chunk",
+            Self::Exact => "exact",
+        }
+    }
+}
+
+/// Frontier accounting across all runs in this process (surfaced by the
+/// server's METRICS verb). Runs accumulate privately and flush once at
+/// the end, so these only ever move forward and a reader never sees a
+/// half-counted run.
 static FRONTIER_PASSES: AtomicU64 = AtomicU64::new(0);
 static FRONTIER_SKIPPED: AtomicU64 = AtomicU64::new(0);
+static FRONTIER_ACTIVATIONS: AtomicU64 = AtomicU64::new(0);
+static FRONTIER_EXACT_PASSES: AtomicU64 = AtomicU64::new(0);
+static FRONTIER_FULL_SWEEPS: AtomicU64 = AtomicU64::new(0);
 
 /// `(frontier_passes, frontier_skipped_chunks)` since process start.
+/// (Kept for callers that predate [`frontier_totals`].)
 pub fn frontier_counters() -> (u64, u64) {
     (FRONTIER_PASSES.load(Ordering::Relaxed), FRONTIER_SKIPPED.load(Ordering::Relaxed))
 }
 
-/// Process-wide frontier default: `CONTOUR_FRONTIER=1` (or `on`/`true`)
-/// turns the active-edge frontier on for every [`Contour`] that does
-/// not set it explicitly. Resolved once.
-fn frontier_from_env() -> bool {
-    static ON: OnceLock<bool> = OnceLock::new();
-    *ON.get_or_init(|| {
-        matches!(std::env::var("CONTOUR_FRONTIER").as_deref(), Ok("1") | Ok("on") | Ok("true"))
+/// All process-wide frontier counters since start, in the same shape a
+/// single run reports ([`FrontierStats`]).
+pub fn frontier_totals() -> FrontierStats {
+    FrontierStats {
+        passes: FRONTIER_PASSES.load(Ordering::Relaxed),
+        skipped_chunks: FRONTIER_SKIPPED.load(Ordering::Relaxed),
+        activations: FRONTIER_ACTIVATIONS.load(Ordering::Relaxed),
+        exact_passes: FRONTIER_EXACT_PASSES.load(Ordering::Relaxed),
+        full_sweeps: FRONTIER_FULL_SWEEPS.load(Ordering::Relaxed),
+    }
+}
+
+fn flush_frontier_totals(s: &FrontierStats) {
+    FRONTIER_PASSES.fetch_add(s.passes, Ordering::Relaxed);
+    FRONTIER_SKIPPED.fetch_add(s.skipped_chunks, Ordering::Relaxed);
+    FRONTIER_ACTIVATIONS.fetch_add(s.activations, Ordering::Relaxed);
+    FRONTIER_EXACT_PASSES.fetch_add(s.exact_passes, Ordering::Relaxed);
+    FRONTIER_FULL_SWEEPS.fetch_add(s.full_sweeps, Ordering::Relaxed);
+}
+
+/// Process-wide frontier default: `CONTOUR_FRONTIER=exact|chunk|off`
+/// selects the engine for every [`Contour`] that does not set a mode
+/// explicitly. Resolved once; unset or unparseable means off.
+fn frontier_from_env() -> FrontierMode {
+    static MODE: OnceLock<FrontierMode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        std::env::var("CONTOUR_FRONTIER")
+            .ok()
+            .and_then(|v| FrontierMode::parse(&v))
+            .unwrap_or(FrontierMode::Off)
     })
 }
 
@@ -119,14 +188,15 @@ pub struct Contour {
     pub write: WriteMode,
     /// Early convergence check (§III-B.2).
     pub early_check: bool,
-    /// Active-edge frontier: skip chunks of the edge grid whose last
-    /// visit changed nothing, with periodic full sweeps as the
-    /// correctness backstop ([`FULL_SWEEP_EVERY`]). `None` defers to
-    /// the `CONTOUR_FRONTIER` environment default. Final labels are
-    /// bit-identical to the full-sweep engine for every variant —
-    /// both converge to the canonical min-id labelling — only the
-    /// work per iteration differs.
-    pub frontier: Option<bool>,
+    /// Active-edge frontier engine ([`FrontierMode`]): skip settled
+    /// chunks of the edge grid, either with PR 4's local dirty bits +
+    /// backstop sweeps (`Chunk`) or the exact vertex→chunk activation
+    /// map (`Exact`). `None` defers to the `CONTOUR_FRONTIER`
+    /// environment default. Final labels are bit-identical to the
+    /// full-sweep engine for every variant and mode — all converge to
+    /// the canonical min-id labelling — only the work per iteration
+    /// differs.
+    pub frontier: Option<FrontierMode>,
     /// Worker threads (0 = [`par::num_threads`]).
     pub threads: usize,
     pub max_iters: usize,
@@ -213,10 +283,18 @@ impl Contour {
         self
     }
 
-    /// Force the active-edge frontier on or off (overriding the
+    /// Boolean convenience kept from PR 4: `true` selects the chunk
+    /// frontier, `false` the full-sweep engine (overriding the
+    /// `CONTOUR_FRONTIER` environment default). Prefer
+    /// [`Contour::with_frontier_mode`].
+    pub fn with_frontier(self, on: bool) -> Self {
+        self.with_frontier_mode(if on { FrontierMode::Chunk } else { FrontierMode::Off })
+    }
+
+    /// Pin this run's frontier engine (overriding the
     /// `CONTOUR_FRONTIER` environment default).
-    pub fn with_frontier(mut self, on: bool) -> Self {
-        self.frontier = Some(on);
+    pub fn with_frontier_mode(mut self, mode: FrontierMode) -> Self {
+        self.frontier = Some(mode);
         self
     }
 
@@ -225,15 +303,20 @@ impl Contour {
         self
     }
 
-    /// Whether this run uses the active-edge frontier. Sync mode is
-    /// excluded: every sync pass pays two O(n) shadow-array copies
-    /// regardless of how many chunks the dirty bits skip, and frontier
-    /// mode adds passes between the full sweeps that conclude
-    /// convergence — a net loss for C-Syn, whose labels are identical
-    /// either way (both engines converge to the canonical min-id
+    /// The frontier engine this run will use. Sync updates demote
+    /// `Chunk` to `Off`: every sync pass pays two O(n) shadow-array
+    /// copies regardless of how many chunks the dirty bits skip, and
+    /// chunk mode adds passes between the full sweeps that conclude its
+    /// convergence — a net loss for C-Syn. `Exact` *does* apply to sync
+    /// variants: with activation exact there are no extra passes — the
+    /// shadow pass simply skips clean chunks — and labels stay
+    /// identical (every engine converges to the canonical min-id
     /// labelling).
-    fn frontier_on(&self) -> bool {
-        self.update == UpdateMode::Async && self.frontier.unwrap_or_else(frontier_from_env)
+    fn frontier_mode(&self) -> FrontierMode {
+        match self.frontier.unwrap_or_else(frontier_from_env) {
+            FrontierMode::Chunk if self.update == UpdateMode::Sync => FrontierMode::Off,
+            mode => mode,
+        }
     }
 }
 
@@ -252,14 +335,42 @@ fn chase(labels: &AtomicLabels, x: VId, h: usize) -> VId {
     cur
 }
 
+/// Chunk-selection policy for one [`Contour::edge_pass`] iteration.
+enum PassMode<'a> {
+    /// Process every chunk (full sweep).
+    Full,
+    /// PR 4's chunk frontier: honor/rewrite local dirty bits, with
+    /// `full` forcing a backstop sweep that still refreshes the bits.
+    Chunk { bits: &'a [AtomicBool], full: bool },
+    /// Exact vertex-level activation over the per-run membership index.
+    Exact { bits: &'a [AtomicBool], index: &'a VertexChunkIndex, activations: &'a AtomicU64 },
+}
+
+/// What one [`Contour::edge_pass`] observed.
+struct PassOutcome {
+    /// Did any processed chunk perform a store?
+    changed: bool,
+    /// Chunks skipped as clean.
+    skipped: u64,
+}
+
 impl Contour {
     /// MM^h over one chunk of the edge grid: runs the operator on every
     /// edge in `range` and reports whether any label changed. The
     /// Plain-store fast paths (h = 1, h = 2, recorded-chain h > 2) and
     /// the generic CAS/sync body all share this per-range shape so the
     /// chunked engine in [`Contour::edge_pass`] can schedule any
-    /// variant — full sweep or frontier, sticky or inline — through one
-    /// driver.
+    /// variant — full sweep, chunk frontier or exact frontier, sticky
+    /// or inline — through one driver.
+    ///
+    /// `on_lower(x)` fires after **every performed store** to `x`
+    /// (monomorphized to a no-op outside exact mode). Exact activation
+    /// leans on this being complete: a plain racy store can even *raise*
+    /// a label it believed it was lowering (the §III-B.3 lost-update
+    /// race), and the only way an edge's endpoints can become unequal is
+    /// some performed store — so "every performed store activates its
+    /// target's chunks" is exactly the invariant that keeps every
+    /// actionable edge inside the dirty set.
     ///
     /// Fast path rationale for the paper's default operator: MM^2 with
     /// plain stores reuses the labels loaded during the chase instead
@@ -267,32 +378,34 @@ impl Contour {
     /// §Perf step 8). Semantics match Definition 2/3 exactly: the
     /// target set {w, v, L[w], L[v]} is evaluated at operator entry.
     #[inline]
-    fn pass_range(
+    fn pass_range<A: Fn(VId)>(
         &self,
         g: &Csr,
         read: &AtomicLabels,
         write_to: &AtomicLabels,
         h: usize,
         range: Range<usize>,
+        on_lower: &A,
     ) -> bool {
         match (self.write, h) {
-            (WriteMode::Plain, 1) => self.pass_range_h1(g, read, write_to, range),
-            (WriteMode::Plain, 2) => self.pass_range_h2(g, read, write_to, range),
-            (WriteMode::Plain, _) => self.pass_range_hm(g, read, write_to, h, range),
-            _ => self.pass_range_generic(g, read, write_to, h, range),
+            (WriteMode::Plain, 1) => self.pass_range_h1(g, read, write_to, range, on_lower),
+            (WriteMode::Plain, 2) => self.pass_range_h2(g, read, write_to, range, on_lower),
+            (WriteMode::Plain, _) => self.pass_range_hm(g, read, write_to, h, range, on_lower),
+            _ => self.pass_range_generic(g, read, write_to, h, range, on_lower),
         }
     }
 
     /// Generic MM^h body (CAS writes, and the sync engine's shadow
     /// array): chase both endpoints, then conditionally assign along
     /// both chains — targets w, L[w], ..., L^{h-1}[w] and the v side.
-    fn pass_range_generic(
+    fn pass_range_generic<A: Fn(VId)>(
         &self,
         g: &Csr,
         read: &AtomicLabels,
         write_to: &AtomicLabels,
         h: usize,
         range: Range<usize>,
+        on_lower: &A,
     ) -> bool {
         let store = |arr: &AtomicLabels, i: VId, z: VId| -> bool {
             match self.write {
@@ -311,7 +424,10 @@ impl Contour {
             for mut x in [w, v] {
                 for _ in 0..h {
                     let nxt = read.load(x);
-                    changed |= store(write_to, x, z);
+                    if store(write_to, x, z) {
+                        changed = true;
+                        on_lower(x);
+                    }
                     if nxt == x {
                         break;
                     }
@@ -324,12 +440,13 @@ impl Contour {
 
     /// MM^1 fast path (plain stores): z = min(L[w], L[v]); lower the
     /// larger side. 2 loads + at most 1 store per edge.
-    fn pass_range_h1(
+    fn pass_range_h1<A: Fn(VId)>(
         &self,
         g: &Csr,
         read: &AtomicLabels,
         write_to: &AtomicLabels,
         range: Range<usize>,
+        on_lower: &A,
     ) -> bool {
         let src = &g.src;
         let dst = &g.dst;
@@ -341,23 +458,24 @@ impl Contour {
             if lw == lv {
                 continue;
             }
-            changed |= if lw > lv {
-                write_to.store_min_plain(w, lv)
-            } else {
-                write_to.store_min_plain(v, lw)
-            };
+            let (tgt, z) = if lw > lv { (w, lv) } else { (v, lw) };
+            if write_to.store_min_plain(tgt, z) {
+                changed = true;
+                on_lower(tgt);
+            }
         }
         changed
     }
 
     /// MM^2 fast path (plain stores): 4 loads + up to 4 conditional
     /// stores per edge, everything reused from registers.
-    fn pass_range_h2(
+    fn pass_range_h2<A: Fn(VId)>(
         &self,
         g: &Csr,
         read: &AtomicLabels,
         write_to: &AtomicLabels,
         range: Range<usize>,
+        on_lower: &A,
     ) -> bool {
         let src = &g.src;
         let dst = &g.dst;
@@ -370,22 +488,25 @@ impl Contour {
             let llv = read.load(lv);
             let z = llw.min(llv);
             // Conditional vector assignment over {w, v, L[w], L[v]}
-            // with the comparison values already in registers.
-            if lw > z {
-                write_to.store_min_plain(w, z);
+            // with the comparison values already in registers. The
+            // pre-check keeps the common no-op case load-free; whether
+            // the store was *performed* comes from store_min itself
+            // (a racing worker may have gotten there first).
+            if lw > z && write_to.store_min_plain(w, z) {
                 changed = true;
+                on_lower(w);
             }
-            if lv > z {
-                write_to.store_min_plain(v, z);
+            if lv > z && write_to.store_min_plain(v, z) {
                 changed = true;
+                on_lower(v);
             }
-            if llw > z {
-                write_to.store_min_plain(lw, z);
+            if llw > z && write_to.store_min_plain(lw, z) {
                 changed = true;
+                on_lower(lw);
             }
-            if llv > z {
-                write_to.store_min_plain(lv, z);
+            if llv > z && write_to.store_min_plain(lv, z) {
                 changed = true;
+                on_lower(lv);
             }
         }
         changed
@@ -396,13 +517,14 @@ impl Contour {
     /// re-loads. Chains longer than the record buffer (rare: the
     /// compression effect keeps chains near-flat after the first
     /// iteration) fall back to re-walking with loads.
-    fn pass_range_hm(
+    fn pass_range_hm<A: Fn(VId)>(
         &self,
         g: &Csr,
         read: &AtomicLabels,
         write_to: &AtomicLabels,
         h: usize,
         range: Range<usize>,
+        on_lower: &A,
     ) -> bool {
         const CAP: usize = 32;
         let src = &g.src;
@@ -443,7 +565,10 @@ impl Contour {
                     let mut x = chains[side][CAP - 1];
                     for _ in CAP - 1..len {
                         let nxt = read.load(x);
-                        changed |= write_to.store_min_plain(x, z);
+                        if write_to.store_min_plain(x, z) {
+                            changed = true;
+                            on_lower(x);
+                        }
                         if nxt == x {
                             break;
                         }
@@ -454,9 +579,9 @@ impl Contour {
                     // Current label of chain[i] is chain[i+1]
                     // (or the chased value for the last node).
                     let label = if i + 1 < recorded { chains[side][i + 1] } else { vals[side] };
-                    if label > z {
-                        write_to.store_min_plain(chains[side][i], z);
+                    if label > z && write_to.store_min_plain(chains[side][i], z) {
                         changed = true;
+                        on_lower(chains[side][i]);
                     }
                 }
             }
@@ -466,11 +591,21 @@ impl Contour {
 
     /// One iteration of MM^h over the stable edge-chunk grid, scheduled
     /// sticky so each contiguous chunk block lands on the same worker
-    /// every pass. With `dirty = Some` (frontier mode) and `full =
-    /// false`, chunks whose bit is clear are skipped entirely; every
-    /// processed chunk's bit is rewritten to whether it changed any
-    /// label, so the grid's dirty set shrinks as edges settle. Returns
-    /// whether any processed chunk changed a label.
+    /// every pass. The `mode` selects which chunks run:
+    ///
+    /// * [`PassMode::Full`] — every chunk.
+    /// * [`PassMode::Chunk`] — skip clear-bit chunks unless `full`;
+    ///   every processed chunk's bit is rewritten to whether it changed
+    ///   any label (PR 4's local signal).
+    /// * [`PassMode::Exact`] — *claim* each dirty chunk by clearing its
+    ///   bit **before** processing (`swap(false, Acquire)`), and let
+    ///   every performed store re-dirty the chunks of its target vertex
+    ///   through the [`VertexChunkIndex`] with a `Release` store.
+    ///   Clear-before-process plus release/acquire pairing closes the
+    ///   lost-wakeup window: if a claimer's acquire-swap observes a
+    ///   writer's release-set it also observes the label store that
+    ///   preceded it, and a set that lands after the claim simply
+    ///   leaves the chunk dirty for the next pass.
     fn edge_pass(
         &self,
         g: &Csr,
@@ -478,38 +613,66 @@ impl Contour {
         write_to: &AtomicLabels,
         h: usize,
         grid: par::Chunks,
-        dirty: Option<&[AtomicBool]>,
-        full: bool,
-    ) -> bool {
+        mode: &PassMode<'_>,
+    ) -> PassOutcome {
         let changed = AtomicBool::new(false);
-        match dirty {
-            None => {
+        let skipped = AtomicU64::new(0);
+        match *mode {
+            PassMode::Full => {
                 par::par_for_sticky(grid, self.threads, |_, range| {
-                    if self.pass_range(g, read, write_to, h, range) {
+                    if self.pass_range(g, read, write_to, h, range, &|_| {}) {
                         changed.store(true, Ordering::Relaxed);
                     }
                 });
             }
-            Some(bits) => {
-                let skipped = AtomicU64::new(0);
+            PassMode::Chunk { bits, full } => {
                 par::par_for_sticky(grid, self.threads, |c, range| {
                     if !full && !bits[c].load(Ordering::Relaxed) {
                         skipped.fetch_add(1, Ordering::Relaxed);
                         return;
                     }
-                    let ch = self.pass_range(g, read, write_to, h, range);
+                    let ch = self.pass_range(g, read, write_to, h, range, &|_| {});
                     bits[c].store(ch, Ordering::Relaxed);
                     if ch {
                         changed.store(true, Ordering::Relaxed);
                     }
                 });
-                if !full {
-                    FRONTIER_PASSES.fetch_add(1, Ordering::Relaxed);
-                    FRONTIER_SKIPPED.fetch_add(skipped.load(Ordering::Relaxed), Ordering::Relaxed);
-                }
+            }
+            PassMode::Exact { bits, index, activations } => {
+                par::par_for_sticky(grid, self.threads, |c, range| {
+                    if !bits[c].swap(false, Ordering::Acquire) {
+                        skipped.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    // Count activations chunk-locally and flush once:
+                    // a shared fetch_add per performed store would put
+                    // cross-core counter contention inside the hottest
+                    // loop the engine exists to speed up.
+                    let local = std::cell::Cell::new(0u64);
+                    let on_lower = |x: VId| {
+                        local.set(local.get() + 1);
+                        for &ci in index.chunks_of(x) {
+                            // Unconditional release store: a
+                            // load-then-set "optimization" could
+                            // observe a stale `true`, skip the set, and
+                            // let a concurrent claimer clear the bit
+                            // without seeing our label write.
+                            bits[ci as usize].store(true, Ordering::Release);
+                        }
+                    };
+                    if self.pass_range(g, read, write_to, h, range, &on_lower) {
+                        changed.store(true, Ordering::Relaxed);
+                    }
+                    if local.get() > 0 {
+                        activations.fetch_add(local.get(), Ordering::Relaxed);
+                    }
+                });
             }
         }
-        changed.load(Ordering::Relaxed)
+        PassOutcome {
+            changed: changed.load(Ordering::Relaxed),
+            skipped: skipped.load(Ordering::Relaxed),
+        }
     }
 
     /// §III-B.2 early convergence check, evaluated on the *settled* label
@@ -560,7 +723,8 @@ impl Algorithm for Contour {
         };
         // The stable chunk grid every pass of this run reuses: stable
         // ids are what let sticky scheduling keep chunk→worker fixed
-        // across iterations and what the frontier's dirty bits index.
+        // across iterations, what the frontier's dirty bits index, and
+        // what the exact activation map is built against.
         // Frontier grids are capped finer than the scheduling-optimal
         // grain: a chunk is dirty if *any* of its edges changed, so on
         // late passes with scattered updates halving the chunk size
@@ -569,61 +733,107 @@ impl Algorithm for Contour {
         // saved. Sticky slots own contiguous chunk *blocks*, so finer
         // chunks do not fragment worker locality.
         let threads = if self.threads == 0 { par::num_threads() } else { self.threads };
-        let frontier_on = self.frontier_on() && g.m() > 0;
+        let mode = if g.m() == 0 { FrontierMode::Off } else { self.frontier_mode() };
         let scheduling_grain = par::adaptive_grain(g.m(), threads);
-        let grain = if frontier_on { scheduling_grain.min(1 << 10) } else { scheduling_grain };
+        let grain = match mode {
+            FrontierMode::Off => scheduling_grain,
+            _ => scheduling_grain.min(1 << 10),
+        };
         let grid = par::Chunks::new(g.m(), grain);
-        let dirty: Option<Vec<AtomicBool>> =
-            frontier_on.then(|| (0..grid.count()).map(|_| AtomicBool::new(true)).collect());
+        let dirty: Option<Vec<AtomicBool>> = (mode != FrontierMode::Off)
+            .then(|| (0..grid.count()).map(|_| AtomicBool::new(true)).collect());
+        // The exact engine's vertex→chunk membership index: built once
+        // per run (two O(m) sweeps), amortized over the run's passes.
+        let index: Option<VertexChunkIndex> =
+            (mode == FrontierMode::Exact).then(|| vertex_chunk_index(g, grid));
+        let activations = AtomicU64::new(0);
+        let mut stats = FrontierStats::default();
         let mut iters = 0usize;
-        // Frontier bookkeeping: the first pass, every pass after
+        // Chunk-mode bookkeeping: the first pass, every pass after
         // FULL_SWEEP_EVERY consecutive frontier passes, and any pass
         // after a frontier pass that changed nothing run as full
-        // sweeps; only full sweeps may conclude convergence (frontier
-        // passes see a subset of the edges, so their quiescence proves
-        // nothing globally).
+        // sweeps; chunk mode concludes convergence only from full
+        // sweeps (its partial passes see a subset of the edges, so
+        // their quiescence proves nothing globally). The exact engine
+        // needs none of this: every performed store re-dirties exactly
+        // the chunks it can affect, so a pass with no store means the
+        // dirty set is drained and every edge has equal endpoint
+        // labels — which, with labels always component-internal and
+        // L[μ] = μ pinned at each component minimum, is full
+        // convergence to the canonical labelling.
         let mut force_full = true;
         let mut since_full = 0usize;
         loop {
             let h = self.schedule.order_at(iters).max(1);
             iters += 1;
-            let full = match &dirty {
-                None => true,
-                Some(_) => force_full || since_full >= FULL_SWEEP_EVERY,
+            let full = match mode {
+                FrontierMode::Off => true,
+                FrontierMode::Chunk => force_full || since_full >= FULL_SWEEP_EVERY,
+                FrontierMode::Exact => false,
             };
-            let bits = dirty.as_deref();
-            let changed = match &shadow {
-                None => self.edge_pass(g, &labels, &labels, h, grid, bits, full),
+            let pass_mode = match mode {
+                FrontierMode::Off => PassMode::Full,
+                FrontierMode::Chunk => PassMode::Chunk { bits: dirty.as_deref().unwrap(), full },
+                FrontierMode::Exact => PassMode::Exact {
+                    bits: dirty.as_deref().unwrap(),
+                    index: index.as_ref().unwrap(),
+                    activations: &activations,
+                },
+            };
+            let out = match &shadow {
+                None => self.edge_pass(g, &labels, &labels, h, grid, &pass_mode),
                 Some(lu) => {
                     lu.copy_from(&labels);
-                    let f = self.edge_pass(g, &labels, lu, h, grid, bits, full);
+                    let o = self.edge_pass(g, &labels, lu, h, grid, &pass_mode);
                     labels.copy_from(lu); // L = L_u (line 9 of Alg. 1)
-                    f
+                    o
                 }
             };
-            if full {
-                since_full = 0;
-                force_full = false;
-                let converged = !changed || (self.early_check && self.check_converged(g, &labels));
-                if converged || iters >= self.max_iters {
-                    break;
+            match mode {
+                FrontierMode::Exact => {
+                    stats.passes += 1;
+                    stats.exact_passes += 1;
+                    stats.skipped_chunks += out.skipped;
+                    if !out.changed || iters >= self.max_iters {
+                        break;
+                    }
                 }
-            } else {
-                since_full += 1;
-                // A frontier pass that changed nothing has drained the
-                // local dirty set; only a full sweep can tell settled
-                // from stalled.
-                force_full = !changed;
-                if iters >= self.max_iters {
-                    break;
+                _ if full => {
+                    if mode == FrontierMode::Chunk {
+                        stats.full_sweeps += 1;
+                    }
+                    since_full = 0;
+                    force_full = false;
+                    let converged =
+                        !out.changed || (self.early_check && self.check_converged(g, &labels));
+                    if converged || iters >= self.max_iters {
+                        break;
+                    }
+                }
+                _ => {
+                    stats.passes += 1;
+                    stats.skipped_chunks += out.skipped;
+                    since_full += 1;
+                    // A frontier pass that changed nothing has drained
+                    // the local dirty set; only a full sweep can tell
+                    // settled from stalled.
+                    force_full = !out.changed;
+                    if iters >= self.max_iters {
+                        break;
+                    }
                 }
             }
         }
         // The early check can exit with star-compression still pending
         // (labels point at roots transitively); finish with pointer
-        // jumping so labels are the canonical min-id form.
+        // jumping so labels are the canonical min-id form. (The exact
+        // engine's quiescence exit needs no compression — equal labels
+        // along every edge already *are* the canonical stars — but the
+        // jump is a cheap no-op then and keeps one epilogue.)
         finalize_stars(&labels, self.threads);
-        RunResult { labels: labels.to_vec(), iterations: iters }
+        stats.activations = activations.load(Ordering::Relaxed);
+        flush_frontier_totals(&stats);
+        RunResult { labels: labels.to_vec(), iterations: iters, frontier: stats }
     }
 }
 
@@ -728,10 +938,16 @@ mod tests {
         // §IV-C: iterations(C-m) <= iterations(C-2) <= iterations(C-1).
         // Shuffled edge order: sequential order lets an async sweep carry
         // label 0 down the whole path in one pass, hiding the contrast.
+        // Pinned to the full-sweep engine: the paper's counts are about
+        // full sweeps, and this test must assert the same thing whatever
+        // CONTOUR_FRONTIER the suite runs under.
         let g = gen::path(2000).into_csr().shuffled_edges(17);
-        let i1 = Contour::c1().run_with_stats(&g).iterations;
-        let i2 = Contour::c2().run_with_stats(&g).iterations;
-        let im = Contour::cm().run_with_stats(&g).iterations;
+        let full = |c: Contour| {
+            c.with_frontier_mode(FrontierMode::Off).run_with_stats(&g).iterations
+        };
+        let i1 = full(Contour::c1());
+        let i2 = full(Contour::c2());
+        let im = full(Contour::cm());
         assert!(im <= i2, "C-m {im} > C-2 {i2}");
         assert!(i2 <= i1, "C-2 {i2} > C-1 {i1}");
         assert!(i1 > i2, "C-1 ({i1}) should need more iterations than C-2 ({i2})");
@@ -741,9 +957,13 @@ mod tests {
     fn theorem1_bound_for_sync_c2() {
         // Synchronous MM^2 must converge within ceil(log_1.5 d) + 1
         // iterations (+1 for the final no-change detection pass).
+        // Full-sweep engine pinned: Theorem 1's contraction argument
+        // needs every edge processed every iteration.
         for n in [10usize, 100, 500] {
             let g = gen::path(n).into_csr();
-            let alg = Contour::csyn().with_early_check(false);
+            let alg = Contour::csyn()
+                .with_early_check(false)
+                .with_frontier_mode(FrontierMode::Off);
             let r = alg.run_with_stats(&g);
             let d = (n - 1) as f64;
             let bound = d.log(1.5).ceil() as usize + 1;
@@ -758,8 +978,11 @@ mod tests {
     #[test]
     fn async_not_slower_than_sync_in_iterations() {
         let g = gen::path(1000).into_csr();
-        let sync = Contour::csyn().run_with_stats(&g).iterations;
-        let asy = Contour::c2().run_with_stats(&g).iterations;
+        let full = |c: Contour| {
+            c.with_frontier_mode(FrontierMode::Off).run_with_stats(&g).iterations
+        };
+        let sync = full(Contour::csyn());
+        let asy = full(Contour::c2());
         assert!(asy <= sync + 1, "async {asy} vs sync {sync}");
     }
 
@@ -793,10 +1016,91 @@ mod tests {
     fn frontier_mode_matches_full_sweep_for_all_variants() {
         let g = gen::rmat(11, 10_000, gen::RmatKind::Graph500, 3).into_csr().shuffled_edges(5);
         for alg in Contour::all_variants() {
-            let full = alg.clone().with_frontier(false).run(&g);
-            let frontier = alg.clone().with_frontier(true).run(&g);
-            assert_eq!(frontier, full, "{} frontier diverges", alg.name());
+            let full = alg.clone().with_frontier_mode(FrontierMode::Off).run(&g);
+            for mode in [FrontierMode::Chunk, FrontierMode::Exact] {
+                let got = alg.clone().with_frontier_mode(mode).run(&g);
+                assert_eq!(got, full, "{} diverges in {} mode", alg.name(), mode.as_str());
+            }
         }
+    }
+
+    #[test]
+    fn frontier_mode_parses_all_spellings() {
+        assert_eq!(FrontierMode::parse("exact"), Some(FrontierMode::Exact));
+        assert_eq!(FrontierMode::parse("EXACT"), Some(FrontierMode::Exact));
+        assert_eq!(FrontierMode::parse("chunk"), Some(FrontierMode::Chunk));
+        assert_eq!(FrontierMode::parse("1"), Some(FrontierMode::Chunk));
+        assert_eq!(FrontierMode::parse("on"), Some(FrontierMode::Chunk));
+        assert_eq!(FrontierMode::parse("true"), Some(FrontierMode::Chunk));
+        assert_eq!(FrontierMode::parse("off"), Some(FrontierMode::Off));
+        assert_eq!(FrontierMode::parse("0"), Some(FrontierMode::Off));
+        assert_eq!(FrontierMode::parse("none"), Some(FrontierMode::Off));
+        assert_eq!(FrontierMode::parse("sideways"), None);
+        for m in [FrontierMode::Off, FrontierMode::Chunk, FrontierMode::Exact] {
+            assert_eq!(FrontierMode::parse(m.as_str()), Some(m));
+        }
+    }
+
+    #[test]
+    fn with_frontier_bool_maps_to_modes() {
+        assert_eq!(Contour::c2().with_frontier(true).frontier, Some(FrontierMode::Chunk));
+        assert_eq!(Contour::c2().with_frontier(false).frontier, Some(FrontierMode::Off));
+    }
+
+    #[test]
+    fn exact_mode_reports_no_forced_sweeps() {
+        // Per-run stats (carried on RunResult, so concurrent tests in
+        // this process can't perturb them): the exact engine must run
+        // exact passes only, force zero backstop sweeps, record its
+        // store-site activations, and still skip settled chunks.
+        let g = gen::rmat(12, 60_000, gen::RmatKind::Graph500, 21).into_csr().shuffled_edges(9);
+        let want = Contour::c2().with_frontier_mode(FrontierMode::Off).run(&g);
+        let r = Contour::c2().with_frontier_mode(FrontierMode::Exact).run_with_stats(&g);
+        assert_eq!(r.labels, want);
+        assert_eq!(r.frontier.full_sweeps, 0, "exact mode forced a sweep");
+        assert_eq!(r.frontier.exact_passes as usize, r.iterations);
+        assert_eq!(r.frontier.passes, r.frontier.exact_passes);
+        assert!(r.frontier.activations > 0, "no activation ever recorded");
+        // (Skipping is asserted deterministically in
+        // tests/frontier_exact.rs — on a homogeneous low-diameter graph
+        // the dirty set can legitimately stay full until quiescence.)
+        // Chunk mode on the same graph *does* force backstop sweeps.
+        let c = Contour::c2().with_frontier_mode(FrontierMode::Chunk).run_with_stats(&g);
+        assert_eq!(c.labels, want);
+        assert!(c.frontier.full_sweeps >= 1, "chunk mode must full-sweep at least once");
+        assert_eq!(c.frontier.exact_passes, 0);
+        assert_eq!(c.frontier.activations, 0);
+        // Full-sweep engine reports no frontier accounting at all.
+        let f = Contour::c2().with_frontier_mode(FrontierMode::Off).run_with_stats(&g);
+        assert_eq!(f.frontier, crate::cc::FrontierStats::default());
+    }
+
+    #[test]
+    fn exact_mode_applies_to_sync_variants() {
+        // Chunk mode demotes to Off for sync updates; exact does not —
+        // the shadow pass skips clean chunks and labels stay identical.
+        let g = gen::road(60, 60, 13).into_csr().shuffled_edges(2);
+        let want = Contour::csyn().with_frontier_mode(FrontierMode::Off).run(&g);
+        let r = Contour::csyn().with_frontier_mode(FrontierMode::Exact).run_with_stats(&g);
+        assert_eq!(r.labels, want);
+        assert!(r.frontier.exact_passes > 0, "sync run never took an exact pass");
+        assert_eq!(r.frontier.full_sweeps, 0);
+        // The chunk demotion still holds.
+        let c = Contour::csyn().with_frontier_mode(FrontierMode::Chunk).run_with_stats(&g);
+        assert_eq!(c.labels, want);
+        assert_eq!(c.frontier.passes, 0, "chunk mode must demote to Off for sync");
+    }
+
+    #[test]
+    fn exact_mode_handles_degenerate_graphs() {
+        let g = crate::graph::EdgeList::new(4).into_csr();
+        let r = Contour::c2().with_frontier_mode(FrontierMode::Exact).run_with_stats(&g);
+        assert_eq!(r.labels, vec![0, 1, 2, 3]);
+        assert_eq!(r.iterations, 1);
+        let g = gen::path(1).into_csr();
+        assert_eq!(Contour::c2().with_frontier_mode(FrontierMode::Exact).run(&g), vec![0]);
+        let g = gen::path(2).into_csr();
+        assert_eq!(Contour::c2().with_frontier_mode(FrontierMode::Exact).run(&g), vec![0, 0]);
     }
 
     #[test]

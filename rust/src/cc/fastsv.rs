@@ -99,7 +99,7 @@ impl Algorithm for FastSv {
                 break;
             }
         }
-        RunResult { labels: f.to_vec(), iterations: iters }
+        RunResult::new(f.to_vec(), iters)
     }
 }
 

@@ -60,7 +60,7 @@ impl Algorithm for LabelPropagation {
                 break;
             }
         }
-        RunResult { labels: cur.to_vec(), iterations: iters }
+        RunResult::new(cur.to_vec(), iters)
     }
 }
 

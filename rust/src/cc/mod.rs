@@ -36,6 +36,27 @@ use crate::VId;
 /// Component labels: `labels[v]` = min vertex id in v's component.
 pub type Labels = Vec<VId>;
 
+/// Per-run accounting of the Contour execution engine's frontier
+/// (zeroed for algorithms and modes that never consult dirty bits).
+/// Carried on [`RunResult`] so tests and callers can assert on one
+/// run's behavior without racing the process-wide `METRICS` counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontierStats {
+    /// Partial (dirty-chunks-only) passes, chunk and exact mode alike.
+    pub passes: u64,
+    /// Chunks those passes skipped as clean.
+    pub skipped_chunks: u64,
+    /// Stores that marked chunks dirty through the vertex→chunk
+    /// activation map (exact mode).
+    pub activations: u64,
+    /// Exact-activation passes (a subset of `passes`).
+    pub exact_passes: u64,
+    /// Forced full sweeps — the chunk engine's periodic correctness
+    /// backstop. The exact engine concludes convergence from an empty
+    /// dirty set and never forces one, so this stays 0 there.
+    pub full_sweeps: u64,
+}
+
 /// Outcome of one connectivity run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -43,6 +64,16 @@ pub struct RunResult {
     /// Iterations to convergence, counted the way the paper's Fig. 1
     /// counts (union-find algorithms report 1).
     pub iterations: usize,
+    /// Execution-engine accounting for this run (see [`FrontierStats`]).
+    pub frontier: FrontierStats,
+}
+
+impl RunResult {
+    /// Result with no frontier accounting (every non-Contour algorithm,
+    /// and Contour runs with the frontier off).
+    pub fn new(labels: Labels, iterations: usize) -> Self {
+        Self { labels, iterations, frontier: FrontierStats::default() }
+    }
 }
 
 /// A connectivity algorithm. `run_with_stats` is the canonical entry;

@@ -78,7 +78,7 @@ impl Algorithm for ShiloachVishkin {
                 break;
             }
         }
-        RunResult { labels: p.to_vec(), iterations: iters }
+        RunResult::new(p.to_vec(), iters)
     }
 }
 

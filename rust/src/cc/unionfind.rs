@@ -67,7 +67,7 @@ impl Algorithm for RemSequential {
             }
             p[v] = r;
         }
-        RunResult { labels: p, iterations: 1 }
+        RunResult::new(p, 1)
     }
 }
 
@@ -156,10 +156,7 @@ impl Algorithm for RemConcurrent {
                 pr[v].store(r, Ordering::Relaxed);
             }
         });
-        RunResult {
-            labels: p.into_iter().map(|x| x.into_inner()).collect(),
-            iterations: 1,
-        }
+        RunResult::new(p.into_iter().map(|x| x.into_inner()).collect(), 1)
     }
 }
 
@@ -203,7 +200,7 @@ impl Algorithm for RankUnionFind {
             labels[v] = find(&mut p, v as VId);
         }
         // Rank-based roots are arbitrary; canonicalize to min-id form.
-        RunResult { labels: super::canonicalize(&labels), iterations: 1 }
+        RunResult::new(super::canonicalize(&labels), 1)
     }
 }
 

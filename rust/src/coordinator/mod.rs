@@ -7,7 +7,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
-use crate::cc::{self, contour::Contour, Algorithm, RunResult};
+use crate::cc::{self, contour::Contour, contour::FrontierMode, Algorithm, RunResult};
 use crate::graph::{stats::GraphStats, Csr};
 use crate::runtime::{PaddedGraph, Runtime};
 use crate::util::Timer;
@@ -75,7 +75,7 @@ impl PjrtContour<'_> {
                     .ok_or_else(|| anyhow!("no bucket fits n={} m={} for {run_name}", g.n, g.m()))?;
                 let p = PaddedGraph::new(g, art.n, art.m)?;
                 let out = self.rt.exec_i32(art, &[p.labels.clone(), p.src.clone(), p.dst.clone()])?;
-                Ok(RunResult { labels: p.unpad(&out[0]), iterations: out[1][0].max(1) as usize })
+                Ok(RunResult::new(p.unpad(&out[0]), out[1][0].max(1) as usize))
             }
             PjrtMode::PerIteration => {
                 let art = self
@@ -95,7 +95,7 @@ impl PjrtContour<'_> {
                         break;
                     }
                 }
-                Ok(RunResult { labels: p.unpad(&labels), iterations: iters })
+                Ok(RunResult::new(p.unpad(&labels), iters))
             }
         }
     }
@@ -131,13 +131,34 @@ pub fn auto_select(stats: &GraphStats) -> Contour {
 
 /// Algorithm registry by figure-legend name. `threads` = 0 for default.
 pub fn algorithm_by_name(name: &str, threads: usize) -> Result<Box<dyn Algorithm + Send + Sync>> {
+    algorithm_by_name_with(name, threads, None)
+}
+
+/// [`algorithm_by_name`] with an explicit Contour frontier engine:
+/// `Some(mode)` pins the mode on every Contour variant (non-Contour
+/// algorithms have no frontier and ignore it); `None` keeps the
+/// `CONTOUR_FRONTIER` environment default. This is what the server's
+/// `CC name alg [exact|chunk|off]` verb and the CLI's `--frontier`
+/// option resolve through.
+pub fn algorithm_by_name_with(
+    name: &str,
+    threads: usize,
+    frontier: Option<FrontierMode>,
+) -> Result<Box<dyn Algorithm + Send + Sync>> {
+    let contour = |c: Contour| -> Box<dyn Algorithm + Send + Sync> {
+        let c = c.with_threads(threads);
+        Box::new(match frontier {
+            Some(mode) => c.with_frontier_mode(mode),
+            None => c,
+        })
+    };
     let alg: Box<dyn Algorithm + Send + Sync> = match name {
-        "C-1" => Box::new(Contour::c1().with_threads(threads)),
-        "C-2" => Box::new(Contour::c2().with_threads(threads)),
-        "C-m" => Box::new(Contour::cm().with_threads(threads)),
-        "C-11mm" => Box::new(Contour::c11mm().with_threads(threads)),
-        "C-1m1m" => Box::new(Contour::c1m1m().with_threads(threads)),
-        "C-Syn" => Box::new(Contour::csyn().with_threads(threads)),
+        "C-1" => contour(Contour::c1()),
+        "C-2" => contour(Contour::c2()),
+        "C-m" => contour(Contour::cm()),
+        "C-11mm" => contour(Contour::c11mm()),
+        "C-1m1m" => contour(Contour::c1m1m()),
+        "C-Syn" => contour(Contour::csyn()),
         "FastSV" => Box::new(cc::fastsv::FastSv::new().with_threads(threads)),
         "SV" => Box::new(cc::sv::ShiloachVishkin::new()),
         "ConnectIt" => Box::new(cc::unionfind::RemConcurrent::new().with_threads(threads)),
@@ -274,6 +295,20 @@ mod tests {
             assert_eq!(&alg.name(), name);
         }
         assert!(algorithm_by_name("nope", 1).is_err());
+    }
+
+    #[test]
+    fn factory_applies_frontier_mode() {
+        let g = gen::path(300).into_csr().shuffled_edges(3);
+        let want = algorithm_by_name_with("C-2", 1, Some(FrontierMode::Off)).unwrap().run(&g);
+        for mode in [FrontierMode::Chunk, FrontierMode::Exact] {
+            let got = algorithm_by_name_with("C-2", 1, Some(mode)).unwrap().run(&g);
+            assert_eq!(got, want, "C-2 diverges under {} via the factory", mode.as_str());
+        }
+        // Non-Contour algorithms have no frontier: the mode is ignored,
+        // not an error (one verb syntax serves every algorithm).
+        let uf = algorithm_by_name_with("ConnectIt", 1, Some(FrontierMode::Exact)).unwrap();
+        assert_eq!(uf.run(&g), want);
     }
 
     #[test]

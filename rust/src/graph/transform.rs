@@ -7,6 +7,7 @@ use std::collections::HashMap;
 
 use super::{Csr, EdgeList};
 use crate::cc::Labels;
+use crate::par::Chunks;
 use crate::VId;
 
 /// Sizes of each component, keyed by root label.
@@ -115,6 +116,94 @@ pub fn edge_balanced_fences(g: &Csr, p: usize) -> Vec<usize> {
     bounds
 }
 
+/// CSR-shaped vertex → edge-chunk membership index over an
+/// iteration-stable [`Chunks`] grid of a graph's edge list: vertex `v`'s
+/// slice names every chunk that contains at least one edge incident to
+/// `v`, sorted ascending with no duplicates. This is what makes *exact*
+/// frontier activation possible in the Contour engine
+/// ([`crate::cc::contour`]): when a pass lowers `label[v]`, marking
+/// exactly `chunks_of(v)` dirty re-schedules every edge whose operator
+/// can now make progress, so convergence is concluded directly from an
+/// empty dirty set — no backstop sweeps. Built once per run (the grid is
+/// fixed for a run's lifetime) in two O(m) sweeps.
+#[derive(Clone, Debug)]
+pub struct VertexChunkIndex {
+    /// `offsets.len() == n + 1`; vertex `v` owns `chunks[offsets[v]..offsets[v + 1]]`.
+    offsets: Vec<usize>,
+    chunks: Vec<u32>,
+}
+
+impl VertexChunkIndex {
+    /// Chunk ids (of the grid the index was built from) containing an
+    /// edge incident to `v`.
+    #[inline]
+    pub fn chunks_of(&self, v: VId) -> &[u32] {
+        &self.chunks[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Total membership entries (≤ 2m; usually far fewer after dedup).
+    pub fn entries(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Number of vertices indexed.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Build the [`VertexChunkIndex`] for `g`'s edge list over `grid`
+/// (which must tile `0..g.m()` — the same grid every pass of the run
+/// iterates). Because chunk ids are `e / grain`, the id sequence seen
+/// by any one vertex while sweeping edges in order is non-decreasing,
+/// so consecutive-duplicate suppression per endpoint is *exact* dedup —
+/// no sort pass needed: one counting sweep, a prefix sum, one fill
+/// sweep.
+pub fn vertex_chunk_index(g: &Csr, grid: Chunks) -> VertexChunkIndex {
+    let n = g.n;
+    let m = g.m();
+    debug_assert_eq!(grid.len, m, "index grid must tile the edge list");
+    let grain = grid.grain.max(1);
+    const NONE: u32 = u32::MAX;
+    // Pass 1: exact deduplicated membership counts per vertex.
+    let mut last = vec![NONE; n];
+    let mut cursor = vec![0usize; n];
+    for (e, (u, v)) in g.edges().enumerate() {
+        let c = (e / grain) as u32;
+        for x in [u, v] {
+            let x = x as usize;
+            if last[x] != c {
+                last[x] = c;
+                cursor[x] += 1;
+            }
+        }
+    }
+    let mut offsets = vec![0usize; n + 1];
+    for v in 0..n {
+        offsets[v + 1] = offsets[v] + cursor[v];
+    }
+    // Pass 2: fill, reusing `cursor` as per-vertex write positions.
+    let mut chunks = vec![0u32; offsets[n]];
+    last.fill(NONE);
+    cursor.fill(0);
+    for (e, (u, v)) in g.edges().enumerate() {
+        let c = (e / grain) as u32;
+        for x in [u, v] {
+            let x = x as usize;
+            if last[x] != c {
+                last[x] = c;
+                chunks[offsets[x] + cursor[x]] = c;
+                cursor[x] += 1;
+            }
+        }
+    }
+    VertexChunkIndex { offsets, chunks }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +289,66 @@ mod tests {
         assert_eq!(edge_balanced_fences(&g, 1), vec![0, g.n]);
         let empty = crate::graph::EdgeList::new(0).into_csr();
         assert_eq!(edge_balanced_fences(&empty, 3), vec![0, 0, 0, 0]);
+    }
+
+    /// Reference membership: brute-force set of chunks per vertex.
+    fn brute_membership(g: &Csr, grid: Chunks) -> Vec<Vec<u32>> {
+        let mut want: Vec<std::collections::BTreeSet<u32>> = vec![Default::default(); g.n];
+        for (e, (u, v)) in g.edges().enumerate() {
+            let c = (e / grid.grain) as u32;
+            want[u as usize].insert(c);
+            want[v as usize].insert(c);
+        }
+        want.into_iter().map(|s| s.into_iter().collect()).collect()
+    }
+
+    #[test]
+    fn vertex_chunk_index_matches_brute_force() {
+        for (g, grain) in [
+            (gen::rmat(9, 3_000, gen::RmatKind::Graph500, 4).into_csr().shuffled_edges(1), 64),
+            (gen::path(500).into_csr().shuffled_edges(2), 37),
+            (gen::star(200).into_csr(), 16),
+            (gen::component_soup(5, 20, 3).into_csr().shuffled_edges(4), 8),
+        ] {
+            let grid = Chunks::new(g.m(), grain);
+            let idx = vertex_chunk_index(&g, grid);
+            assert_eq!(idx.len(), g.n);
+            let want = brute_membership(&g, grid);
+            for v in 0..g.n {
+                assert_eq!(
+                    idx.chunks_of(v as VId),
+                    &want[v][..],
+                    "vertex {v} membership wrong (n={} m={} grain={grain})",
+                    g.n,
+                    g.m()
+                );
+            }
+            // Sorted + deduplicated by construction.
+            for v in 0..g.n {
+                let s = idx.chunks_of(v as VId);
+                assert!(s.windows(2).all(|w| w[0] < w[1]), "vertex {v} slice not strict-sorted");
+            }
+            assert!(idx.entries() <= 2 * g.m());
+        }
+    }
+
+    #[test]
+    fn vertex_chunk_index_degenerate() {
+        // No edges: every vertex has an empty slice.
+        let g = crate::graph::EdgeList::new(5).into_csr();
+        let idx = vertex_chunk_index(&g, Chunks::new(0, 16));
+        assert_eq!(idx.len(), 5);
+        assert_eq!(idx.entries(), 0);
+        for v in 0..5 {
+            assert!(idx.chunks_of(v).is_empty());
+        }
+        // Single chunk covering everything: each touched vertex maps to
+        // exactly chunk 0.
+        let g = gen::complete(6).into_csr();
+        let idx = vertex_chunk_index(&g, Chunks::new(g.m(), g.m()));
+        for v in 0..6 {
+            assert_eq!(idx.chunks_of(v), [0]);
+        }
     }
 
     #[test]

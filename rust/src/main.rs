@@ -61,9 +61,11 @@ fn print_usage() {
         "contour — minimum-mapping connectivity (Contour algorithm reproduction)\n\n\
          usage:\n\
          \x20 contour run   [--graph FILE | --gen SPEC] [--alg NAME|auto] [--threads T] [--engine native|pjrt-step|pjrt-run]\n\
+         \x20        [--frontier exact|chunk|off]  (default: CONTOUR_FRONTIER)\n\
          \x20 contour batch [--graph FILE | --gen SPEC] --algs A,B,C [--workers W]\n\
-         \x20 contour bench TARGET [--quick] [--out DIR] [--threads T]\n\
+         \x20 contour bench TARGET [--quick] [--out DIR] [--threads T] [--baseline]\n\
          \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt hotpath all\n\
+         \x20        (--baseline: hotpath only — rewrite ./BENCH_hotpath.json; run from the repo root)\n\
          \x20 contour stats [--graph FILE | --gen SPEC]\n\
          \x20 contour serve [--addr HOST:PORT] [--threads T]\n\
          \x20 contour stream [--graph FILE | --gen SPEC] [--batch B] [--epochs K]\n\
@@ -117,13 +119,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (name, g) = load_graph(args)?;
     let alg_name = args.get_or("alg", "C-2");
     let engine = args.get_or("engine", "native");
+    // Only the canonical mode names here: FrontierMode::parse also
+    // accepts the legacy boolean spellings ("true"/"1"/...), and a bare
+    // `--frontier` flag reaches us as the value "true" — which must be
+    // an error, not a silent fallback to the chunk engine.
+    let frontier = match args.get("frontier") {
+        None => None,
+        Some(s) if matches!(s, "exact" | "chunk" | "off") => {
+            contour::cc::contour::FrontierMode::parse(s)
+        }
+        Some(s) => bail!("--frontier expects exact|chunk|off, got {s:?}"),
+    };
     println!("graph {name}: n={} m={}", g.n, g.m());
     let t = Timer::start();
     let result = match engine {
         "native" => {
             let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
                 let s = stats::stats(&g);
-                let chosen = coordinator::auto_select(&s);
+                let mut chosen = coordinator::auto_select(&s);
+                if let Some(mode) = frontier {
+                    chosen = chosen.with_frontier_mode(mode);
+                }
                 println!(
                     "auto-selected {} (diam~{} comps={})",
                     chosen.name(),
@@ -132,11 +148,15 @@ fn cmd_run(args: &Args) -> Result<()> {
                 );
                 Box::new(chosen.with_threads(threads))
             } else {
-                algorithm_by_name(alg_name, threads)?
+                coordinator::algorithm_by_name_with(alg_name, threads, frontier)?
             };
             alg.run_with_stats(&g)
         }
         "pjrt-step" | "pjrt-run" => {
+            anyhow::ensure!(
+                frontier.is_none(),
+                "--frontier applies to the native engine only (the HLO loop is a full sweep)"
+            );
             let rt = contour::runtime::Runtime::from_env()?;
             let mode = if engine == "pjrt-step" {
                 coordinator::PjrtMode::PerIteration
@@ -219,6 +239,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     } else {
         run(target)?;
+    }
+    // `bench hotpath --baseline` refreshes the committed trajectory
+    // baseline at ./BENCH_hotpath.json (run from the repo root; the
+    // ROADMAP refresh item as one command instead of a manual copy).
+    // Read-then-write instead of fs::copy: with `--out .` source and
+    // destination are the same file, and copy's open-with-truncate
+    // would zero the baseline before reading it.
+    if target == "hotpath" && args.flag("baseline") {
+        let src = out.join("BENCH_hotpath.json");
+        let dst = Path::new("BENCH_hotpath.json");
+        let bytes = std::fs::read(&src)
+            .with_context(|| format!("reading bench output {}", src.display()))?;
+        std::fs::write(dst, bytes)
+            .with_context(|| format!("writing {}", dst.display()))?;
+        println!("baseline refreshed: ./BENCH_hotpath.json <- {}", src.display());
     }
     println!("bench done in {:.1}s; outputs in {}", t.secs(), out.display());
     Ok(())

@@ -54,9 +54,14 @@ impl Metrics {
     pub fn render(&self) -> String {
         // Worker-pool and frontier counters ride along so one METRICS
         // scrape covers the request layer, the parallel substrate and
-        // the Contour execution engine under it.
+        // the Contour execution engine under it. `frontier_passes` /
+        // `frontier_skipped` cover both frontier engines;
+        // `frontier_activations` / `frontier_exact` /
+        // `frontier_full_sweeps` split out the exact engine's
+        // store-site activations, its passes, and the chunk engine's
+        // forced backstop sweeps (the exact engine never forces one).
         let pool = crate::par::pool::stats();
-        let (frontier_passes, frontier_skipped) = crate::cc::contour::frontier_counters();
+        let frontier = crate::cc::contour::frontier_totals();
         format!(
             "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
              cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
@@ -64,7 +69,8 @@ impl Metrics {
              pool_jobs={} pool_pulls={} pool_steals={} pool_parks={} pool_wakes={} \
              pool_inflight={} pool_max_inflight={} pool_exec_peak={} pool_pins={} \
              pool_sticky_jobs={} pool_sticky_home={} pool_sticky_away={} \
-             frontier_passes={} frontier_skipped={}",
+             frontier_passes={} frontier_skipped={} frontier_activations={} \
+             frontier_exact={} frontier_full_sweeps={}",
             self.requests.get(),
             self.errors.get(),
             self.graphs_loaded.get(),
@@ -92,8 +98,11 @@ impl Metrics {
             pool.sticky_jobs,
             pool.sticky_home,
             pool.sticky_away,
-            frontier_passes,
-            frontier_skipped
+            frontier.passes,
+            frontier.skipped_chunks,
+            frontier.activations,
+            frontier.exact_passes,
+            frontier.full_sweeps
         )
     }
 }
@@ -116,6 +125,9 @@ mod tests {
         assert!(m.render().contains("pool_sticky_jobs="));
         assert!(m.render().contains("frontier_passes="));
         assert!(m.render().contains("frontier_skipped="));
+        assert!(m.render().contains("frontier_activations="));
+        assert!(m.render().contains("frontier_exact="));
+        assert!(m.render().contains("frontier_full_sweeps="));
     }
 
     #[test]

@@ -20,7 +20,11 @@
 //!   GEN name SPEC                  → OK n m
 //!   UPLOAD name m                  → then m lines "u v", → OK n m
 //!   LOAD name PATH                 → OK n m
-//!   CC name [ALG]                  → OK components iterations millis
+//!   CC name [ALG] [FRONTIER]       → OK components iterations millis
+//!                                    (FRONTIER pins the Contour engine:
+//!                                    exact | chunk | off; default = the
+//!                                    server's CONTOUR_FRONTIER; pinned
+//!                                    modes cache per (name, alg, mode))
 //!   LABELS name [ALG] [off [cnt]]  → OK total l_off .. l_{off+cnt-1}
 //!                                    (cnt defaults to 10000; page with
 //!                                    off/cnt, total = label count)
@@ -75,8 +79,9 @@ use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cc::contour::FrontierMode;
 use crate::cc::{self, Algorithm};
-use crate::coordinator::{algorithm_by_name, auto_select};
+use crate::coordinator::{algorithm_by_name, algorithm_by_name_with, auto_select};
 use crate::graph::{gen, io, stats, Csr, EdgeList};
 use crate::shard::{self, ShardedGraph};
 use crate::stream::{Snapshot, StreamingCc};
@@ -807,25 +812,55 @@ impl<'s> Session<'s> {
     }
 
     fn resolve_alg(&self, g: &Csr, alg: &str) -> Result<Box<dyn Algorithm + Send + Sync>> {
+        self.resolve_alg_with(g, alg, None)
+    }
+
+    /// Resolve an algorithm name with an optional Contour frontier
+    /// engine pinned (`Some(mode)`; `None` keeps the process default).
+    fn resolve_alg_with(
+        &self,
+        g: &Csr,
+        alg: &str,
+        frontier: Option<FrontierMode>,
+    ) -> Result<Box<dyn Algorithm + Send + Sync>> {
         if alg == "auto" {
-            Ok(Box::new(auto_select(&stats::stats(g)).with_threads(self.state.threads)))
+            let mut c = auto_select(&stats::stats(g)).with_threads(self.state.threads);
+            if let Some(mode) = frontier {
+                c = c.with_frontier_mode(mode);
+            }
+            Ok(Box::new(c))
         } else {
-            algorithm_by_name(alg, self.state.threads)
+            algorithm_by_name_with(alg, self.state.threads, frontier)
         }
     }
 
     fn cmd_cc(&self, rest: &[&str]) -> Result<String> {
-        let (name, alg_name) = match rest {
-            [name] => (*name, "C-2"),
-            [name, alg] => (*name, *alg),
-            _ => bail!("usage: CC name [alg]"),
+        let (name, alg_name, fmode) = match rest {
+            [name] => (*name, "C-2", None),
+            [name, alg] => (*name, *alg, None),
+            [name, alg, mode] => (
+                *name,
+                *alg,
+                Some(FrontierMode::parse(mode).ok_or_else(|| {
+                    anyhow!("frontier mode must be exact|chunk|off, got {mode:?}")
+                })?),
+            ),
+            _ => bail!("usage: CC name [alg] [exact|chunk|off]"),
         };
         let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
         // Serve repeat CC requests for an unchanged (graph, alg) pair
         // from the labels cache: graphs are immutable once inserted,
-        // and replacing/dropping a name purges its entries.
-        let (entry, ran_ms) = self.state.cc_cached(name, alg_name, &g, || {
-            let alg = self.resolve_alg(&g, alg_name)?;
+        // and replacing/dropping a name purges its entries. Labels are
+        // bit-identical across frontier engines, but iterations/millis
+        // are not — an explicitly pinned mode gets its own cache slot
+        // so the reply reflects the engine that was asked for (DROP and
+        // replace purge by name, covering these slots too).
+        let key = match fmode {
+            None => alg_name.to_string(),
+            Some(m) => format!("{alg_name}#{}", m.as_str()),
+        };
+        let (entry, ran_ms) = self.state.cc_cached(name, &key, &g, || {
+            let alg = self.resolve_alg_with(&g, alg_name, fmode)?;
             Ok(alg.run_with_stats(&g))
         })?;
         // A cache hit reports 0.000 ms: no connectivity work was done.
@@ -1372,6 +1407,35 @@ mod tests {
         assert!(ask("CC g C-2").starts_with("OK 1 "), "stale cache served after replace");
         let m = ask("METRICS");
         assert!(m.contains("cc_runs=2"), "{m}");
+    }
+
+    #[test]
+    fn cc_accepts_frontier_mode_argument() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN g er:400:700").starts_with("OK"));
+        let base = ask("CC g C-2");
+        let comps = base.split_whitespace().nth(1).unwrap().to_string();
+        for mode in ["exact", "chunk", "off"] {
+            let r = ask(&format!("CC g C-2 {mode}"));
+            assert!(r.starts_with("OK"), "{mode}: {r}");
+            assert_eq!(r.split_whitespace().nth(1).unwrap(), comps, "{mode}: {r}");
+        }
+        // Pinned modes get their own cache slot: the repeat is a hit.
+        let again = ask("CC g C-2 exact");
+        assert!(again.ends_with("0.000"), "{again}");
+        // The §IV-E auto policy composes with a pinned engine.
+        assert!(ask("CC g auto exact").starts_with("OK"));
+        assert!(ask("CC g C-2 sideways").starts_with("ERR"));
+        // The exact engine's passes surface in METRICS.
+        let m = ask("METRICS");
+        let exact = m
+            .split_whitespace()
+            .find_map(|p| p.strip_prefix("frontier_exact="))
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap();
+        assert!(exact > 0, "{m}");
     }
 
     #[test]

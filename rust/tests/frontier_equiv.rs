@@ -1,18 +1,22 @@
-//! Active-edge frontier equivalence matrix: frontier-mode Contour must
+//! Active-edge frontier equivalence matrix: both frontier engines
+//! (chunk dirty-bits and the exact vertex→chunk activation map) must
 //! produce labels **bit-identical** to the full-sweep engine for every
-//! variant, on every generator class, sequential and parallel. Both
+//! variant, on every generator class, sequential and parallel. All
 //! engines converge to the canonical min-vertex-id labelling — the
 //! frontier only changes which chunks each intermediate pass touches —
 //! so full `Vec` equality is the right check, and any under-merge from
-//! a mis-skipped chunk shows up as a hard mismatch.
+//! a mis-skipped chunk (or a missed activation) shows up as a hard
+//! mismatch.
 //!
-//! The generator set spans the shapes that stress the frontier
+//! The generator set spans the shapes that stress the frontiers
 //! differently: low-diameter power-law (rmat — chunks settle fast, the
-//! case the frontier wins on), uniform random (er), mesh (road — label
-//! propagation crosses chunk borders, exercising the periodic
-//! full-sweep backstop), and worst-case diameter (path).
+//! case the chunk frontier wins on), uniform random (er), mesh (road —
+//! label propagation crosses chunk borders: the chunk engine's backstop
+//! case and the exact map's reason to exist), and worst-case diameter
+//! (path — see tests/frontier_exact.rs for the exact engine's pass
+//! count and zero-sweep pins there).
 
-use contour::cc::contour::Contour;
+use contour::cc::contour::{Contour, FrontierMode};
 use contour::cc::Algorithm;
 use contour::graph::{gen, Csr};
 
@@ -32,16 +36,27 @@ fn frontier_bit_identical_to_full_sweep_for_all_variants() {
     for (gname, g) in generators() {
         for alg in Contour::all_variants() {
             for threads in [1usize, 4] {
-                let full = alg.clone().with_threads(threads).with_frontier(false).run(&g);
-                let frontier = alg.clone().with_threads(threads).with_frontier(true).run(&g);
-                assert_eq!(
-                    frontier,
-                    full,
-                    "{} on {gname} (n={} m={}) threads={threads}: frontier diverges",
-                    alg.name(),
-                    g.n,
-                    g.m()
-                );
+                let full = alg
+                    .clone()
+                    .with_threads(threads)
+                    .with_frontier_mode(FrontierMode::Off)
+                    .run(&g);
+                for mode in [FrontierMode::Chunk, FrontierMode::Exact] {
+                    let got = alg
+                        .clone()
+                        .with_threads(threads)
+                        .with_frontier_mode(mode)
+                        .run(&g);
+                    assert_eq!(
+                        got,
+                        full,
+                        "{} on {gname} (n={} m={}) threads={threads}: {} engine diverges",
+                        alg.name(),
+                        g.n,
+                        g.m(),
+                        mode.as_str()
+                    );
+                }
             }
         }
     }
@@ -50,17 +65,19 @@ fn frontier_bit_identical_to_full_sweep_for_all_variants() {
 #[test]
 fn frontier_equivalence_holds_under_concurrent_runs() {
     // Frontier runs racing through the shared pool (the server shape):
-    // per-run dirty grids must not interfere across sessions.
+    // per-run dirty grids and membership indexes must not interfere
+    // across sessions, in either engine.
     let g = gen::rmat(12, 30_000, gen::RmatKind::Graph500, 7).into_csr().shuffled_edges(6);
-    let want = Contour::c2().with_threads(1).with_frontier(false).run(&g);
+    let want = Contour::c2().with_threads(1).with_frontier_mode(FrontierMode::Off).run(&g);
     std::thread::scope(|s| {
-        for _ in 0..4 {
+        for i in 0..4 {
             let g = &g;
             let want = &want;
+            let mode = if i % 2 == 0 { FrontierMode::Chunk } else { FrontierMode::Exact };
             s.spawn(move || {
                 for _ in 0..3 {
-                    let got = Contour::c2().with_frontier(true).run(g);
-                    assert_eq!(&got, want);
+                    let got = Contour::c2().with_frontier_mode(mode).run(g);
+                    assert_eq!(&got, want, "{} engine diverged concurrently", mode.as_str());
                 }
             });
         }

@@ -1,0 +1,171 @@
+//! Exact-frontier stress tests on worst-case-diameter graphs.
+//!
+//! The exact engine's whole point (ROADMAP "smarter frontier
+//! activation") is the high-diameter case: label propagation crosses
+//! chunk borders for many passes, which forced the chunk engine into
+//! periodic O(m) backstop sweeps. With the vertex→chunk activation map
+//! those sweeps are gone — so on a long path we pin, per run (via the
+//! `RunResult::frontier` stats, immune to other tests' runs in this
+//! process):
+//!
+//! * **zero** forced full sweeps after startup (in fact zero, period:
+//!   the initial pass is just the dirty set starting full),
+//! * pass count staying O(log d) — asserted against a generous
+//!   `4·log2(d) + 16` as well as against the chunk-mode engine's own
+//!   pass count, so an accidental regression to wave-like O(d)
+//!   propagation fails loudly,
+//! * settled chunks actually being skipped (the star component below
+//!   occupies its own leading chunks and quiesces within two passes),
+//! * labels bit-identical to the full-sweep engine.
+
+use contour::cc::contour::{Contour, FrontierMode};
+use contour::cc::{self, Algorithm};
+use contour::graph::{Csr, EdgeList};
+use contour::util::Xoshiro256;
+use contour::VId;
+
+/// Star (ids `0..star`, settles in ~2 passes, fills its own leading
+/// chunks of the sorted edge list) plus a long path over ids
+/// `star..star+path` visited in a seeded random order (so the canonical
+/// sorted edge order is uncorrelated with path adjacency and no single
+/// in-order sweep collapses it — worst-case diameter stays worst-case).
+fn star_plus_scrambled_path(star: usize, path: usize, seed: u64) -> Csr {
+    let n = star + path;
+    let mut e = EdgeList::with_capacity(n, n);
+    for i in 1..star {
+        e.push(0, i as VId);
+    }
+    let mut order: Vec<VId> = (star as VId..n as VId).collect();
+    let mut rng = Xoshiro256::new(seed);
+    rng.shuffle(&mut order);
+    for w in order.windows(2) {
+        e.push(w[0], w[1]);
+    }
+    e.into_csr()
+}
+
+#[test]
+fn exact_engine_is_logarithmic_with_zero_forced_sweeps_on_paths() {
+    let star = 5_000usize;
+    let path = 30_000usize;
+    let log2_d = (path as f64).log2().ceil() as usize;
+    for seed in [3u64, 11] {
+        let g = star_plus_scrambled_path(star, path, seed);
+        let want = Contour::c2().with_frontier_mode(FrontierMode::Off).run(&g);
+        assert_eq!(cc::num_components(&want), 2);
+        for threads in [1usize, 4] {
+            let exact = Contour::c2()
+                .with_threads(threads)
+                .with_frontier_mode(FrontierMode::Exact)
+                .run_with_stats(&g);
+            assert_eq!(exact.labels, want, "exact labels diverge (threads={threads})");
+            // The tentpole claim: no backstop sweeps, ever — the dirty
+            // set alone concludes convergence.
+            assert_eq!(
+                exact.frontier.full_sweeps, 0,
+                "exact engine forced a full sweep (threads={threads})"
+            );
+            assert_eq!(exact.frontier.exact_passes as usize, exact.iterations);
+            // The star settles within the first couple of passes; its
+            // pure chunks must be skipped for the rest of the run.
+            assert!(
+                exact.frontier.skipped_chunks > 0,
+                "no chunk ever skipped (threads={threads})"
+            );
+            assert!(exact.frontier.activations > 0);
+            // O(log d): generous 4x + slack over the pointer-doubling
+            // bound; a regression to O(d) wave propagation would be
+            // thousands of passes.
+            assert!(
+                exact.iterations <= 4 * log2_d + 16,
+                "exact needed {} passes on d={path} (bound {})",
+                exact.iterations,
+                4 * log2_d + 16
+            );
+            // And it must not blow up relative to the chunk engine it
+            // replaces (chunk counts its backstop sweeps as passes too).
+            let chunk = Contour::c2()
+                .with_threads(threads)
+                .with_frontier_mode(FrontierMode::Chunk)
+                .run_with_stats(&g);
+            assert_eq!(chunk.labels, want);
+            assert!(chunk.frontier.full_sweeps >= 1, "chunk engine must backstop-sweep");
+            assert!(
+                exact.iterations <= 2 * chunk.iterations + 8,
+                "exact {} passes vs chunk {} (threads={threads})",
+                exact.iterations,
+                chunk.iterations
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_engine_handles_high_order_operators_on_paths() {
+    // C-m (h = 1024) and the schedule variants lean hardest on
+    // chain-interior stores — exactly the stores whose activations the
+    // membership map must not miss. A long path makes any missed
+    // activation show up as an under-merged component.
+    let g = star_plus_scrambled_path(2_000, 12_000, 7);
+    let want = cc::ground_truth(&g);
+    for alg in [Contour::cm(), Contour::c11mm(), Contour::c1m1m()] {
+        for threads in [1usize, 4] {
+            let r = alg
+                .clone()
+                .with_threads(threads)
+                .with_frontier_mode(FrontierMode::Exact)
+                .run_with_stats(&g);
+            assert_eq!(r.labels, want, "{} exact diverges (threads={threads})", alg.name());
+            assert_eq!(r.frontier.full_sweeps, 0);
+        }
+    }
+}
+
+#[test]
+fn exact_engine_sync_variant_on_paths() {
+    // Sync + exact: the shadow-copy engine skips clean chunks too. The
+    // pass count must stay within the same logarithmic ballpark (the
+    // sync pass reads a stale array, so give it double room).
+    let g = star_plus_scrambled_path(2_000, 12_000, 19);
+    let log2_d = (12_000f64).log2().ceil() as usize;
+    let want = Contour::csyn().with_frontier_mode(FrontierMode::Off).run(&g);
+    for threads in [1usize, 4] {
+        let r = Contour::csyn()
+            .with_threads(threads)
+            .with_frontier_mode(FrontierMode::Exact)
+            .run_with_stats(&g);
+        assert_eq!(r.labels, want, "sync exact diverges (threads={threads})");
+        assert_eq!(r.frontier.full_sweeps, 0);
+        assert!(r.frontier.skipped_chunks > 0, "sync exact never skipped (threads={threads})");
+        assert!(
+            r.iterations <= 8 * log2_d + 16,
+            "sync exact needed {} passes (bound {})",
+            r.iterations,
+            8 * log2_d + 16
+        );
+    }
+}
+
+#[test]
+fn exact_engine_concurrent_runs_do_not_interfere() {
+    // Per-run dirty grids and membership indexes racing through the
+    // shared worker pool (the server shape): every run must stay
+    // bit-identical and sweep-free.
+    let g = star_plus_scrambled_path(1_500, 8_000, 23);
+    let want = Contour::c2().with_frontier_mode(FrontierMode::Off).run(&g);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let g = &g;
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..2 {
+                    let r = Contour::c2()
+                        .with_frontier_mode(FrontierMode::Exact)
+                        .run_with_stats(g);
+                    assert_eq!(&r.labels, want);
+                    assert_eq!(r.frontier.full_sweeps, 0);
+                }
+            });
+        }
+    });
+}

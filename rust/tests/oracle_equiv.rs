@@ -1,0 +1,113 @@
+//! Differential oracle harness: **every** `cc::Algorithm`
+//! implementation — the six Contour variants under every frontier
+//! engine, FastSV, Shiloach–Vishkin, both union-finds, ConnectIt,
+//! label propagation, both BFS forms, and Afforest — must induce the
+//! same component partition (up to label renaming) on a seeded
+//! randomized generator matrix, sequential and parallel. ConnectIt and
+//! Groute-style asynchronous CC lean on exactly this kind of
+//! cross-algorithm matrix to trust precise activation; until now only
+//! contour-vs-contour (`frontier_equiv`) and shard-vs-single
+//! (`shard_equiv`) were pinned.
+//!
+//! The generator set — {rmat, er, road, path, soup, delaunay}:
+//! power-law, uniform, mesh, worst-case diameter, many
+//! components, planar — each stresses a different failure mode
+//! (hub contention, scattered merges, border propagation, deep chains,
+//! cross-component leaks, local structure).
+
+use contour::cc::contour::FrontierMode;
+use contour::cc::{self, Algorithm};
+use contour::coordinator::{algorithm_by_name_with, ALGORITHM_NAMES};
+use contour::graph::{gen, Csr};
+
+/// The Contour variants of `ALGORITHM_NAMES` (the only algorithms with
+/// a frontier engine to vary).
+const CONTOUR_NAMES: &[&str] = &["C-1", "C-2", "C-m", "C-11mm", "C-1m1m", "C-Syn"];
+
+const THREAD_COUNTS: [usize; 2] = [1, 4];
+
+fn generators(seed: u64) -> Vec<(&'static str, Csr)> {
+    vec![
+        (
+            "rmat",
+            gen::rmat(11, 12_000, gen::RmatKind::Graph500, seed)
+                .into_csr()
+                .shuffled_edges(seed ^ 0xA1),
+        ),
+        ("er", gen::erdos_renyi(8_000, 15_000, seed).into_csr().shuffled_edges(seed ^ 0xA2)),
+        ("road", gen::road(55, 55, seed).into_csr().shuffled_edges(seed ^ 0xA3)),
+        ("path", gen::path(4_000).into_csr().shuffled_edges(seed ^ 0xA4)),
+        ("soup", gen::component_soup(6, 40, seed).into_csr().shuffled_edges(seed ^ 0xA5)),
+        ("delaunay", gen::delaunay(1_500, seed).into_csr().shuffled_edges(seed ^ 0xA6)),
+    ]
+}
+
+/// Every algorithm × every generator × sequential and parallel, against
+/// the BFS oracle. Partition equivalence is the contract; exact min-id
+/// equality is asserted on top because every implementation here
+/// canonicalizes (a representation bug would slip past `same_partition`
+/// alone).
+#[test]
+fn oracle_every_algorithm_on_every_generator() {
+    for (gname, g) in generators(1) {
+        let truth = cc::ground_truth(&g);
+        for &name in ALGORITHM_NAMES {
+            for threads in THREAD_COUNTS {
+                let labels = algorithm_by_name_with(name, threads, None).unwrap().run(&g);
+                assert!(
+                    cc::same_partition(&labels, &truth),
+                    "{name} partitions {gname} wrongly (threads={threads}, n={}, m={})",
+                    g.n,
+                    g.m()
+                );
+                assert_eq!(
+                    labels, truth,
+                    "{name} labels not canonical min-id on {gname} (threads={threads})"
+                );
+            }
+        }
+    }
+}
+
+/// The Contour frontier matrix: variants × generators × threads ×
+/// {off, chunk, exact}. Labels must be **bit-identical** across
+/// engines — the frontier only changes which chunks a pass touches.
+#[test]
+fn oracle_contour_frontier_matrix() {
+    for seed in [3u64, 9] {
+        for (gname, g) in generators(seed) {
+            let truth = cc::ground_truth(&g);
+            for &name in CONTOUR_NAMES {
+                for threads in THREAD_COUNTS {
+                    for mode in [FrontierMode::Off, FrontierMode::Chunk, FrontierMode::Exact] {
+                        let labels = algorithm_by_name_with(name, threads, Some(mode))
+                            .unwrap()
+                            .run(&g);
+                        assert_eq!(
+                            labels,
+                            truth,
+                            "{name} diverges on {gname} (seed={seed}, threads={threads}, \
+                             frontier={})",
+                            mode.as_str()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sanity on the matrix itself: the Contour names used above must stay
+/// a subset of the factory registry (a renamed variant would silently
+/// shrink the matrix).
+#[test]
+fn oracle_matrix_covers_known_names() {
+    for &name in CONTOUR_NAMES {
+        assert!(
+            ALGORITHM_NAMES.contains(&name),
+            "{name} not in ALGORITHM_NAMES — oracle matrix out of date"
+        );
+    }
+    // And the factory rejects garbage rather than falling back.
+    assert!(algorithm_by_name_with("C-3", 1, Some(FrontierMode::Exact)).is_err());
+}

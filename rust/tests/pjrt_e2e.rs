@@ -55,7 +55,12 @@ fn per_iteration_counts_match_sync_semantics() {
     // accounting differences of at most one).
     let g = gen::path(800).into_csr().shuffled_edges(9);
     let pjrt = PjrtContour::new(&rt, 2, PjrtMode::PerIteration).try_run(&g).unwrap();
-    let sync = Contour::csyn().with_early_check(false).run_with_stats(&g);
+    // Full-sweep engine pinned: the HLO loop sweeps every edge every
+    // iteration, so that is the engine whose count it must match.
+    let sync = Contour::csyn()
+        .with_early_check(false)
+        .with_frontier_mode(contour::cc::contour::FrontierMode::Off)
+        .run_with_stats(&g);
     assert!(
         pjrt.iterations.abs_diff(sync.iterations) <= 1,
         "pjrt {} vs native sync {}",

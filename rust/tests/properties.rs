@@ -3,6 +3,7 @@
 //! seeded case generation, a fixed case budget, and failing-seed
 //! reporting — rerun any failure with its printed seed).
 
+use contour::cc::contour::FrontierMode;
 use contour::cc::{self, contour::Contour, Algorithm};
 use contour::coordinator::{algorithm_by_name, ALGORITHM_NAMES};
 use contour::graph::{gen, Csr, EdgeList};
@@ -98,7 +99,10 @@ fn prop_theorem1_bound() {
         let s = contour::graph::stats::stats(&g);
         let d = s.pseudo_diameter.max(1) as f64;
         let bound = d.log(1.5).ceil() as usize + 2; // +1 detection pass
-        let r = Contour::csyn().run_with_stats(&g);
+        // Theorem 1 is about the full-sweep engine (every edge, every
+        // iteration); pin it so the bound stays meaningful under any
+        // CONTOUR_FRONTIER the suite runs with.
+        let r = Contour::csyn().with_frontier_mode(FrontierMode::Off).run_with_stats(&g);
         if r.iterations > bound {
             return Err(format!(
                 "sync C-2 took {} iters > bound {bound} (diam {})",
@@ -194,6 +198,85 @@ fn prop_generator_and_csr_invariants() {
     });
 }
 
+/// METAMORPHIC INVARIANT: relabeling vertices by a random permutation
+/// and running Contour on the relabeled graph yields — after mapping
+/// the labels back — the same partition as running on the original.
+/// This catches id-order dependence (e.g. an activation map or chunk
+/// grid that accidentally keys off vertex magnitude) that equivalence
+/// tests on a single labeling can never see. Exercises every frontier
+/// engine: the exact map is the newest way to get this wrong.
+#[test]
+fn prop_vertex_permutation_invariance() {
+    check_property("vertex_permutation_invariance", 18, |seed| {
+        let g = random_graph(seed);
+        let mut rng = Xoshiro256::new(seed ^ 0x51CA_B00D);
+        let mut perm: Vec<VId> = (0..g.n as VId).collect();
+        rng.shuffle(&mut perm);
+        let mut pe = EdgeList::with_capacity(g.n, g.m());
+        for (u, v) in g.edges() {
+            pe.push(perm[u as usize], perm[v as usize]);
+        }
+        let pg = pe.into_csr().shuffled_edges(seed ^ 0x7E77);
+        for mode in [FrontierMode::Off, FrontierMode::Chunk, FrontierMode::Exact] {
+            let base = Contour::c2().with_frontier_mode(mode).run(&g);
+            let permuted = Contour::c2().with_frontier_mode(mode).run(&pg);
+            // Map the permuted labels back into the original vertex
+            // order; the values live in permuted id space, which
+            // same_partition's canonicalization washes out.
+            let back: Vec<VId> = (0..g.n).map(|v| permuted[perm[v] as usize]).collect();
+            if !cc::same_partition(&base, &back) {
+                return Err(format!(
+                    "partition changed under relabeling (frontier={}, n={}, m={})",
+                    mode.as_str(),
+                    g.n,
+                    g.m()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// METAMORPHIC INVARIANT: duplicating random edges, flipping
+/// orientations, sprinkling self-loops and reshuffling the edge order
+/// never changes the labelling — the canonicalization pipeline plus the
+/// engine must be insensitive to how the same graph is spelled.
+#[test]
+fn prop_edge_duplication_and_shuffle_invariance() {
+    check_property("edge_duplication_invariance", 18, |seed| {
+        let g = random_graph(seed);
+        let mut rng = Xoshiro256::new(seed ^ 0xD0_D0);
+        let mut pairs: Vec<(VId, VId)> = g.edges().collect();
+        // Duplicate ~half the edges, some flipped; add a few self-loops.
+        for i in 0..pairs.len() {
+            if rng.below(2) == 0 {
+                let (u, v) = pairs[i];
+                pairs.push(if rng.below(2) == 0 { (v, u) } else { (u, v) });
+            }
+        }
+        for _ in 0..4usize.min(g.n) {
+            let v = rng.below(g.n as u64) as VId;
+            pairs.push((v, v));
+        }
+        let noisy = EdgeList::from_pairs(g.n, &pairs)
+            .into_csr()
+            .shuffled_edges(seed ^ 0xBEE5);
+        for mode in [FrontierMode::Off, FrontierMode::Chunk, FrontierMode::Exact] {
+            let a = Contour::c2().with_frontier_mode(mode).run(&g);
+            let b = Contour::c2().with_frontier_mode(mode).run(&noisy);
+            if a != b {
+                return Err(format!(
+                    "duplication/shuffle changed labels (frontier={}, n={}, m={})",
+                    mode.as_str(),
+                    g.n,
+                    g.m()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// INVARIANT: the distributed simulator computes the same partition as
 /// the shared-memory algorithms (it runs the real algorithm).
 #[test]
@@ -205,7 +288,12 @@ fn prop_distsim_iterations_match_sync() {
             return Ok(());
         }
         let r = simulate(&g, 4, DistAlgorithm::Contour { hops: 2 }, CostModel::default());
-        let sync = Contour::csyn().with_early_check(false).run_with_stats(&g);
+        // The simulator models synchronous full sweeps; compare against
+        // the same engine whatever CONTOUR_FRONTIER the suite runs with.
+        let sync = Contour::csyn()
+            .with_early_check(false)
+            .with_frontier_mode(FrontierMode::Off)
+            .run_with_stats(&g);
         // Same synchronous schedule => same superstep count (±1 for the
         // detection pass accounting).
         if r.supersteps.abs_diff(sync.iterations) > 1 {
