@@ -40,6 +40,17 @@ contracted — labels are identical to the single-shard run):
         comps, iters, ms = c.pcc("g", "C-2")  # partitioned graph_cc
         c.pcc("g", "C-2")                     # repeat: served from cache
         c.shard_stats("g")                    # per-shard topology
+
+Observability (every CC/PCC run records a span timeline server-side;
+METRICS carries per-verb log₂ latency histograms):
+
+    with ContourClient("127.0.0.1", 7021) as c:
+        c.gen("g", "rmat:16:16")
+        c.graph_cc("g", "C-2", frontier="exact")
+        for s in c.trace("g"):                # one span per Contour pass
+            print(s["name"], s["mode"], s["dur_ns"], s["args"])
+        c.metrics()["lat/CC"]                 # {"count", "p50", "p95", "p99"}
+        c.recent(5)                           # last 5 requests (verb, ok, ns)
 """
 
 from __future__ import annotations
@@ -192,15 +203,74 @@ class ContourClient:
         passes and the chunks they skipped, both engines),
         ``frontier_activations`` (stores that re-dirtied chunks through
         the exact vertex→chunk map), ``frontier_exact`` (exact-engine
-        passes) and ``frontier_full_sweeps`` (the chunk engine's forced
-        backstop sweeps — the exact engine never forces one)."""
+        passes), ``frontier_full_sweeps`` (the chunk engine's forced
+        backstop sweeps — the exact engine never forces one) and
+        ``chunk_index_built`` / ``chunk_index_reused`` (exact-engine
+        vertex→chunk index builds vs. cache hits on sharded views).
+
+        Latency keys (``lat/<verb>`` per request verb, plus
+        ``lat/pool_wait`` / ``lat/pool_run`` for the worker pool) are
+        log₂-bucket histograms and decode to
+        ``{"count", "p50", "p95", "p99"}`` dicts — percentiles are
+        bucket midpoints in nanoseconds (clamped to the observed
+        max)."""
         out: dict = {}
         for p in self._request("METRICS").split()[1:]:
             k, v = p.split("=", 1)
+            if k.startswith("lat/"):
+                count, p50, p95, p99 = (int(x) for x in v.split(":"))
+                out[k] = {"count": count, "p50": p50, "p95": p95, "p99": p99}
+                continue
             try:
                 out[k] = int(v)
             except ValueError:
                 out[k] = v
+        return out
+
+    # ------------------------------------------------------------- tracing
+    #
+    # Every CC/PCC run records a bounded span timeline server-side (one
+    # span per Contour pass, shard-local passes on per-shard tracks).
+    # TRACE ships the most recent timeline for a graph; RECENT tails the
+    # server's per-request ring buffer.
+
+    def trace(self, name: str) -> List[dict]:
+        """Span timeline of the most recent CC/PCC run on ``name``:
+        a list of ``{"name", "cat", "mode", "tid", "start_ns",
+        "dur_ns", "args"}`` dicts, start-ordered. ``mode`` is how a
+        Contour pass executed ("exact"/"chunk"/"full"; "" for
+        non-pass spans) and ``args`` carries per-span counters such as
+        ``visited``/``skipped``/``lowered``. For Chrome-trace JSON use
+        ``contour run --trace`` on the server side instead."""
+        parts = self._request(f"TRACE {name}").split()[1:]
+        spans: List[dict] = []
+        for tok in parts[2:]:  # skip the n=/dropped= header
+            fields = tok.split("|")
+            sname, cat, mode, tid, start_ns, dur_ns = fields[:6]
+            args = {}
+            if len(fields) > 6 and fields[6]:
+                args = {k: int(v) for k, v in (kv.split("=") for kv in fields[6].split(","))}
+            spans.append(
+                {
+                    "name": sname,
+                    "cat": cat,
+                    "mode": mode,
+                    "tid": int(tid),
+                    "start_ns": int(start_ns),
+                    "dur_ns": int(dur_ns),
+                    "args": args,
+                }
+            )
+        return spans
+
+    def recent(self, n: Optional[int] = None) -> List[dict]:
+        """Tail of the server's request ring buffer (most recent last):
+        ``{"verb", "ok", "ns"}`` dicts for up to ``n`` requests."""
+        req = "RECENT" + (f" {n}" if n is not None else "")
+        out = []
+        for tok in self._request(req).split()[2:]:
+            verb, ok, ns = tok.split(":")
+            out.append({"verb": verb, "ok": ok == "1", "ns": int(ns)})
         return out
 
     # ------------------------------------------------------------- sharding
@@ -220,13 +290,21 @@ class ContourClient:
         _, shards, boundary = self._request(req).split()
         return int(shards), int(boundary)
 
-    def pcc(self, name: str, alg: str = "C-2") -> Tuple[int, int, float]:
+    def pcc(self, name: str, alg: str = "C-2",
+            frontier: Optional[str] = None) -> Tuple[int, int, float]:
         """Partitioned ``graph_cc``: shard-local runs + boundary merge.
         Returns (components, iterations, server_millis); requires a
-        prior :meth:`shard` call for ``name``. Results are cached
-        server-side per (name, alg, p, balance) — a repeat call on an
-        unchanged partition reports 0.0 ms."""
-        _, comps, iters, ms = self._request(f"PCC {name} {alg}").split()
+        prior :meth:`shard` call for ``name``. ``frontier`` pins the
+        Contour engine shard-locally (``"exact"``/``"chunk"``/``"off"``,
+        as in :meth:`graph_cc`); exact-mode repeats on one partition
+        reuse each shard's cached vertex→chunk index
+        (``chunk_index_reused`` in :meth:`metrics`). Results are cached
+        server-side per (name, alg, frontier, p, balance) — a repeat
+        call on an unchanged partition reports 0.0 ms."""
+        if frontier not in (None, "exact", "chunk", "off"):
+            raise ValueError(f"frontier must be exact|chunk|off, got {frontier!r}")
+        req = f"PCC {name} {alg}" + (f" {frontier}" if frontier else "")
+        _, comps, iters, ms = self._request(req).split()
         return int(comps), int(iters), float(ms)
 
     def shard_stats(self, name: str) -> dict:

@@ -15,9 +15,9 @@
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use super::{Algorithm, AtomicLabels, FrontierStats, RunResult};
+use super::{Algorithm, AtomicLabels, FrontierStats, RunContext, RunResult};
 use crate::graph::transform::{vertex_chunk_index, VertexChunkIndex};
 use crate::graph::Csr;
 use crate::par;
@@ -164,6 +164,78 @@ fn flush_frontier_totals(s: &FrontierStats) {
     FRONTIER_ACTIVATIONS.fetch_add(s.activations, Ordering::Relaxed);
     FRONTIER_EXACT_PASSES.fetch_add(s.exact_passes, Ordering::Relaxed);
     FRONTIER_FULL_SWEEPS.fetch_add(s.full_sweeps, Ordering::Relaxed);
+}
+
+/// Vertex→chunk indexes built / reused from a [`ChunkIndexCache`]
+/// across all runs in this process (surfaced by the server's METRICS
+/// verb as `chunk_index_built` / `chunk_index_reused`).
+static CHUNK_INDEX_BUILT: AtomicU64 = AtomicU64::new(0);
+static CHUNK_INDEX_REUSED: AtomicU64 = AtomicU64::new(0);
+
+/// `(built, reused)` exact-frontier membership indexes since process
+/// start. `reused` counts the O(m) rebuilds a [`ChunkIndexCache`]
+/// avoided.
+pub fn chunk_index_counters() -> (u64, u64) {
+    (
+        CHUNK_INDEX_BUILT.load(Ordering::Relaxed),
+        CHUNK_INDEX_REUSED.load(Ordering::Relaxed),
+    )
+}
+
+/// Cache of exact-frontier membership indexes for **one graph**, keyed
+/// by grid grain (the only grid parameter — every grid tiles `0..m`).
+///
+/// The index is a pure function of the edge list and the grain, and the
+/// grain is a pure function of `(m, threads)` — so repeated runs over
+/// the same graph (the server's cached PCC path re-running Contour on
+/// each shard per request) rebuild an identical index every time. One
+/// cache per shard, living as long as the shard's `Csr`, turns those
+/// two O(m) sweeps per run into a lookup. Stored `Arc`s keep hits
+/// allocation-free; the build holds the lock so concurrent requests
+/// cannot duplicate work.
+#[derive(Debug, Default)]
+pub struct ChunkIndexCache {
+    by_grain: Mutex<IndexEntries>,
+    reuses: AtomicU64,
+}
+
+type IndexEntries = Vec<(usize, Arc<VertexChunkIndex>)>;
+
+impl Clone for ChunkIndexCache {
+    /// Clones share the built indexes (cheap `Arc` copies) but start
+    /// their own reuse count.
+    fn clone(&self) -> Self {
+        let entries = lock_cache(&self.by_grain).clone();
+        Self { by_grain: Mutex::new(entries), reuses: AtomicU64::new(0) }
+    }
+}
+
+fn lock_cache(m: &Mutex<IndexEntries>) -> std::sync::MutexGuard<'_, IndexEntries> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl ChunkIndexCache {
+    /// The index for `g` over `grid`, building and memoizing on first
+    /// use. The caller owns the invariant that this cache only ever
+    /// sees the one graph it was created next to.
+    pub fn get_or_build(&self, g: &Csr, grid: par::Chunks) -> Arc<VertexChunkIndex> {
+        debug_assert_eq!(grid.len, g.m(), "cache consulted with a foreign grid");
+        let mut entries = lock_cache(&self.by_grain);
+        if let Some((_, ix)) = entries.iter().find(|&&(grain, _)| grain == grid.grain) {
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+            CHUNK_INDEX_REUSED.fetch_add(1, Ordering::Relaxed);
+            return ix.clone();
+        }
+        let ix = Arc::new(vertex_chunk_index(g, grid));
+        CHUNK_INDEX_BUILT.fetch_add(1, Ordering::Relaxed);
+        entries.push((grid.grain, ix.clone()));
+        ix
+    }
+
+    /// Rebuilds this cache avoided (its hit count).
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(Ordering::Relaxed)
+    }
 }
 
 /// Process-wide frontier default: `CONTOUR_FRONTIER=exact|chunk|off`
@@ -714,6 +786,16 @@ impl Algorithm for Contour {
     }
 
     fn run_with_stats(&self, g: &Csr) -> RunResult {
+        self.run_ctx(g, &RunContext::default())
+    }
+
+    /// The pass loop with observability wired in: one span per pass
+    /// (mode, chunks visited/skipped, labels lowered), plus spans for
+    /// the index build and the star-finalize epilogue — all keyed to
+    /// `ctx.tid` so sharded runs land on their own tracks. With
+    /// `ctx.trace` unset the extra cost is one branch per pass.
+    fn run_ctx(&self, g: &Csr, ctx: &RunContext<'_>) -> RunResult {
+        let tr = ctx.trace.as_deref();
         let n = g.n;
         let labels = AtomicLabels::identity(n);
         // Sync mode keeps the L_u array of Alg. 1.
@@ -742,10 +824,23 @@ impl Algorithm for Contour {
         let grid = par::Chunks::new(g.m(), grain);
         let dirty: Option<Vec<AtomicBool>> = (mode != FrontierMode::Off)
             .then(|| (0..grid.count()).map(|_| AtomicBool::new(true)).collect());
-        // The exact engine's vertex→chunk membership index: built once
-        // per run (two O(m) sweeps), amortized over the run's passes.
-        let index: Option<VertexChunkIndex> =
-            (mode == FrontierMode::Exact).then(|| vertex_chunk_index(g, grid));
+        // The exact engine's vertex→chunk membership index: two O(m)
+        // sweeps, amortized over the run's passes — or over *many* runs
+        // when the caller supplies a [`ChunkIndexCache`] (the sharded
+        // PCC path re-runs Contour on the same shard per request).
+        let index_start = tr.map(|t| t.now());
+        let index: Option<Arc<VertexChunkIndex>> =
+            (mode == FrontierMode::Exact).then(|| match ctx.chunk_index_cache {
+                Some(cache) => cache.get_or_build(g, grid),
+                None => {
+                    CHUNK_INDEX_BUILT.fetch_add(1, Ordering::Relaxed);
+                    Arc::new(vertex_chunk_index(g, grid))
+                }
+            });
+        if let (Some(t), Some(start), Some(ix)) = (tr, index_start, index.as_deref()) {
+            let args = vec![("entries", ix.entries() as u64)];
+            t.close("index".to_string(), "contour", "", ctx.tid, start, args);
+        }
         let activations = AtomicU64::new(0);
         let mut stats = FrontierStats::default();
         let mut iters = 0usize;
@@ -764,6 +859,7 @@ impl Algorithm for Contour {
         let mut force_full = true;
         let mut since_full = 0usize;
         loop {
+            let pass_idx = iters;
             let h = self.schedule.order_at(iters).max(1);
             iters += 1;
             let full = match mode {
@@ -776,10 +872,12 @@ impl Algorithm for Contour {
                 FrontierMode::Chunk => PassMode::Chunk { bits: dirty.as_deref().unwrap(), full },
                 FrontierMode::Exact => PassMode::Exact {
                     bits: dirty.as_deref().unwrap(),
-                    index: index.as_ref().unwrap(),
+                    index: index.as_deref().unwrap(),
                     activations: &activations,
                 },
             };
+            let span_start = tr.map(|t| t.now());
+            let act_before = activations.load(Ordering::Relaxed);
             let out = match &shadow {
                 None => self.edge_pass(g, &labels, &labels, h, grid, &pass_mode),
                 Some(lu) => {
@@ -789,6 +887,25 @@ impl Algorithm for Contour {
                     o
                 }
             };
+            if let (Some(t), Some(start)) = (tr, span_start) {
+                // `detail` is the mode this pass *executed* — a chunk
+                // engine's backstop sweep traces as "full", so summing
+                // spans by detail reconciles exactly with FrontierStats.
+                let detail = if full { "full" } else { mode.as_str() };
+                let mut args = vec![
+                    ("pass", pass_idx as u64),
+                    ("h", h as u64),
+                    ("visited", grid.count() as u64 - out.skipped),
+                    ("skipped", out.skipped),
+                ];
+                if mode == FrontierMode::Exact {
+                    let lowered = activations.load(Ordering::Relaxed) - act_before;
+                    args.push(("lowered", lowered));
+                } else {
+                    args.push(("changed", out.changed as u64));
+                }
+                t.close(format!("pass{pass_idx}"), "contour", detail, ctx.tid, start, args);
+            }
             match mode {
                 FrontierMode::Exact => {
                     stats.passes += 1;
@@ -830,10 +947,19 @@ impl Algorithm for Contour {
         // engine's quiescence exit needs no compression — equal labels
         // along every edge already *are* the canonical stars — but the
         // jump is a cheap no-op then and keeps one epilogue.)
+        let fin_start = tr.map(|t| t.now());
         finalize_stars(&labels, self.threads);
+        if let (Some(t), Some(start)) = (tr, fin_start) {
+            t.close("finalize".to_string(), "contour", "", ctx.tid, start, vec![]);
+        }
         stats.activations = activations.load(Ordering::Relaxed);
         flush_frontier_totals(&stats);
-        RunResult { labels: labels.to_vec(), iterations: iters, frontier: stats }
+        RunResult {
+            labels: labels.to_vec(),
+            iterations: iters,
+            frontier: stats,
+            trace: ctx.trace.clone(),
+        }
     }
 }
 

@@ -29,8 +29,10 @@ pub mod unionfind;
 pub mod verify;
 
 use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
 
 use crate::graph::Csr;
+use crate::obs::RunTrace;
 use crate::VId;
 
 /// Component labels: `labels[v]` = min vertex id in v's component.
@@ -66,23 +68,73 @@ pub struct RunResult {
     pub iterations: usize,
     /// Execution-engine accounting for this run (see [`FrontierStats`]).
     pub frontier: FrontierStats,
+    /// Span timeline for this run, present iff the caller asked for one
+    /// (see [`Algorithm::run_ctx`]). Shared so the shard executor can
+    /// merge many runs onto one timeline.
+    pub trace: Option<Arc<RunTrace>>,
 }
 
 impl RunResult {
     /// Result with no frontier accounting (every non-Contour algorithm,
     /// and Contour runs with the frontier off).
     pub fn new(labels: Labels, iterations: usize) -> Self {
-        Self { labels, iterations, frontier: FrontierStats::default() }
+        Self { labels, iterations, frontier: FrontierStats::default(), trace: None }
     }
 }
 
-/// A connectivity algorithm. `run_with_stats` is the canonical entry;
-/// `run` is the convenience wrapper.
+/// Per-run execution context: observability and cache hooks that ride
+/// alongside the graph without widening every algorithm signature.
+/// `RunContext::default()` means "no tracing, no caches" and is what
+/// [`Algorithm::run_with_stats`] uses.
+#[derive(Clone, Default)]
+pub struct RunContext<'a> {
+    /// Span recorder shared by every layer of this run; `None` disables
+    /// tracing (the hot path then pays one branch per pass, not more).
+    pub trace: Option<Arc<RunTrace>>,
+    /// Logical track the run's spans land on (0 = driver; the shard
+    /// executor gives each shard its own track).
+    pub tid: u32,
+    /// Reusable vertex→chunk index for the exact frontier (see
+    /// [`contour::ChunkIndexCache`]); `None` builds per run.
+    pub chunk_index_cache: Option<&'a contour::ChunkIndexCache>,
+}
+
+impl RunContext<'_> {
+    /// A context with a fresh trace attached and nothing else.
+    pub fn traced() -> Self {
+        Self { trace: Some(Arc::new(RunTrace::new())), ..Self::default() }
+    }
+}
+
+/// A connectivity algorithm. `run_ctx` is the canonical entry;
+/// `run_with_stats` and `run` are convenience wrappers.
 pub trait Algorithm {
     /// Display name matching the paper's figure legends (e.g. "C-2").
     fn name(&self) -> String;
 
     fn run_with_stats(&self, g: &Csr) -> RunResult;
+
+    /// Run with an execution context. The default implementation wraps
+    /// [`Self::run_with_stats`] in a single whole-run span, so every
+    /// algorithm is traceable; engines with finer structure (Contour's
+    /// pass loop) override this to emit per-pass spans.
+    fn run_ctx(&self, g: &Csr, ctx: &RunContext<'_>) -> RunResult {
+        let Some(tr) = ctx.trace.as_deref() else {
+            return self.run_with_stats(g);
+        };
+        let start = tr.now();
+        let mut r = self.run_with_stats(g);
+        let args = vec![("iterations", r.iterations as u64)];
+        tr.close(self.name(), "cc", "", ctx.tid, start, args);
+        r.trace = ctx.trace.clone();
+        r
+    }
+
+    /// Run with a fresh trace; the returned `RunResult::trace` holds
+    /// the recorded timeline.
+    fn run_traced(&self, g: &Csr) -> RunResult {
+        self.run_ctx(g, &RunContext::traced())
+    }
 
     fn run(&self, g: &Csr) -> Labels {
         self.run_with_stats(g).labels

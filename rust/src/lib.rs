@@ -33,6 +33,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod distsim;
 pub mod graph;
+pub mod obs;
 pub mod par;
 pub mod runtime;
 pub mod server;

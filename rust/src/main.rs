@@ -15,14 +15,16 @@
 //!   contour bench all --quick --out results
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use contour::bench::figures;
-use contour::cc::{self, Algorithm};
+use contour::cc::{self, Algorithm, RunContext};
 use contour::cli::Args;
 use contour::coordinator::{self, algorithm_by_name, Coordinator, Job};
 use contour::graph::{gen, io, stats, Csr, EdgeList};
+use contour::obs::RunTrace;
 use contour::util::Timer;
 
 fn main() {
@@ -62,16 +64,18 @@ fn print_usage() {
          usage:\n\
          \x20 contour run   [--graph FILE | --gen SPEC] [--alg NAME|auto] [--threads T] [--engine native|pjrt-step|pjrt-run]\n\
          \x20        [--frontier exact|chunk|off]  (default: CONTOUR_FRONTIER)\n\
+         \x20        [--trace FILE]  (write the run's span timeline as Chrome trace JSON)\n\
          \x20 contour batch [--graph FILE | --gen SPEC] --algs A,B,C [--workers W]\n\
-         \x20 contour bench TARGET [--quick] [--out DIR] [--threads T] [--baseline]\n\
+         \x20 contour bench TARGET [--quick] [--out DIR] [--threads T] [--baseline] [--trace FILE]\n\
          \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt hotpath all\n\
          \x20        (--baseline: hotpath only — rewrite ./BENCH_hotpath.json; run from the repo root)\n\
+         \x20        (--trace: afterwards run one traced RMAT pass and export its timeline)\n\
          \x20 contour stats [--graph FILE | --gen SPEC]\n\
          \x20 contour serve [--addr HOST:PORT] [--threads T]\n\
          \x20 contour stream [--graph FILE | --gen SPEC] [--batch B] [--epochs K]\n\
          \x20        [--wal PATH] [--snapshot PATH] [--threads T] [--verify]\n\
          \x20 contour shard [--graph FILE | --gen SPEC] [--alg NAME] [--shards 1,2,4,8]\n\
-         \x20        [--balance vertices|edges] [--threads T] [--verify]\n\
+         \x20        [--balance vertices|edges] [--threads T] [--verify] [--trace FILE]\n\
          \x20 contour list\n\n\
          graph SPECs: path:N cycle:N star:N grid:R:C road:R:C tree:D comb:S:T\n\
          \x20            kmer:CHAINS:LEN er:N:M ba:N:K rmat:SCALE:EDGEFACTOR delaunay:N soup:P:S"
@@ -131,6 +135,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         Some(s) => bail!("--frontier expects exact|chunk|off, got {s:?}"),
     };
     println!("graph {name}: n={} m={}", g.n, g.m());
+    // `--trace FILE`: record the run's span timeline and export it as
+    // Chrome trace-event JSON (Perfetto / chrome://tracing).
+    let trace_out = args.get("trace");
+    let tr: Option<Arc<RunTrace>> = trace_out.map(|_| Arc::new(RunTrace::new()));
     let t = Timer::start();
     let result = match engine {
         "native" => {
@@ -150,7 +158,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             } else {
                 coordinator::algorithm_by_name_with(alg_name, threads, frontier)?
             };
-            alg.run_with_stats(&g)
+            match &tr {
+                Some(t) => {
+                    let ctx = RunContext { trace: Some(Arc::clone(t)), ..Default::default() };
+                    alg.run_ctx(&g, &ctx)
+                }
+                None => alg.run_with_stats(&g),
+            }
         }
         "pjrt-step" | "pjrt-run" => {
             anyhow::ensure!(
@@ -164,7 +178,15 @@ fn cmd_run(args: &Args) -> Result<()> {
                 coordinator::PjrtMode::FusedRun
             };
             let hops = args.get_usize("hops", 2)?;
-            coordinator::PjrtContour::new(&rt, hops, mode).try_run(&g)?
+            // The HLO loop has no per-pass hook; trace the device run
+            // as one whole-run span so the export still has a timeline.
+            let start = tr.as_ref().map(|t| t.now());
+            let r = coordinator::PjrtContour::new(&rt, hops, mode).try_run(&g)?;
+            if let (Some(t), Some(s)) = (tr.as_ref(), start) {
+                let spargs = vec![("iterations", r.iterations as u64)];
+                t.close(engine.to_string(), "cc", "", 0, s, spargs);
+            }
+            r
         }
         other => bail!("unknown engine {other:?}"),
     };
@@ -180,6 +202,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("verify") {
         cc::verify::assert_valid(&g, &result.labels, alg_name);
         println!("verification: OK");
+    }
+    if let (Some(path), Some(t)) = (trace_out, tr.as_ref()) {
+        std::fs::write(path, t.to_chrome_json("contour run"))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace: {} spans -> {path} (load in Perfetto / chrome://tracing)", t.len());
     }
     Ok(())
 }
@@ -254,6 +281,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
         std::fs::write(dst, bytes)
             .with_context(|| format!("writing {}", dst.display()))?;
         println!("baseline refreshed: ./BENCH_hotpath.json <- {}", src.display());
+    }
+    // `--trace FILE`: after the targets, run one traced RMAT pass with
+    // the exact frontier and export its timeline as Chrome trace-event
+    // JSON — the artifact CI validates and uploads.
+    if let Some(path) = args.get("trace") {
+        let scale: u32 = if quick { 14 } else { 16 };
+        let g = gen::rmat(scale, 16usize << scale, gen::RmatKind::Graph500, 42)
+            .into_csr()
+            .shuffled_edges(42);
+        let alg = coordinator::algorithm_by_name_with(
+            "C-2",
+            threads,
+            Some(contour::cc::contour::FrontierMode::Exact),
+        )?;
+        let r = alg.run_traced(&g);
+        let trace = r.trace.as_ref().expect("run_traced always attaches a trace");
+        std::fs::write(path, trace.to_chrome_json("contour bench"))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace: rmat:{scale} C-2/exact, {} spans -> {path}", trace.len());
     }
     println!("bench done in {:.1}s; outputs in {}", t.secs(), out.display());
     Ok(())
@@ -366,6 +412,11 @@ fn cmd_shard(args: &Args) -> Result<()> {
         g.m(),
         balance.as_str()
     );
+    // `--trace FILE`: one shared timeline across the whole shard-count
+    // sweep — each run's pcc/merge spans land on the driver track, each
+    // shard's passes on its own track.
+    let trace_out = args.get("trace");
+    let tr: Option<Arc<RunTrace>> = trace_out.map(|_| Arc::new(RunTrace::new()));
     let t = Timer::start();
     let single = alg.run_with_stats(&g);
     let single_ms = t.ms();
@@ -388,7 +439,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
         let sg = contour::shard::ShardedGraph::partition_with(&g, p, balance);
         let part_ms = t.ms();
         let t = Timer::start();
-        let r = contour::shard::run_sharded(&sg, alg.as_ref(), threads);
+        let r = contour::shard::run_sharded_ctx(&sg, alg.as_ref(), threads, tr.as_ref());
         let run_ms = t.ms();
         println!(
             "{:>6} {:>10} {:>10} {:>8} {:>10.2} {:>10.2} {:>7.2}x",
@@ -409,6 +460,11 @@ fn cmd_shard(args: &Args) -> Result<()> {
     }
     if args.flag("verify") {
         println!("verification: sharded labels identical to single-shard for every shard count");
+    }
+    if let (Some(path), Some(t)) = (trace_out, tr.as_ref()) {
+        std::fs::write(path, t.to_chrome_json("contour shard"))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace: {} spans -> {path} (load in Perfetto / chrome://tracing)", t.len());
     }
     Ok(())
 }

@@ -1,0 +1,193 @@
+//! Lock-free log₂-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: bucket 0 holds the value 0, bucket `b >= 1` holds
+/// `[2^(b-1), 2^b)` nanoseconds, and the top bucket absorbs everything
+/// from `2^62` up — 64 buckets cover the full `u64` range.
+pub const BUCKETS: usize = 64;
+
+/// A lock-free latency histogram with power-of-two buckets.
+///
+/// Values are nanoseconds by convention (everything the engine records
+/// is a `Duration`), but nothing in here assumes a unit. Recording is
+/// two relaxed `fetch_add`s plus a relaxed `fetch_max` — no locks, no
+/// allocation — so it is safe on hot paths and from any thread.
+/// Quantiles come from a bucket walk: within a bucket the reported
+/// value is the bucket midpoint (exact to within 1.5× by construction,
+/// which is ample for the p50/p95/p99 the `METRICS` verb renders).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket holding `v`: 0 for 0, else `64 - leading_zeros(v)`
+    /// clamped into the array (so bucket `b` spans `[2^(b-1), 2^b)`).
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    /// Midpoint of bucket `b`'s range — the value a quantile landing in
+    /// `b` reports.
+    fn representative(b: usize) -> u64 {
+        if b == 0 {
+            return 0;
+        }
+        let low = 1u64 << (b - 1);
+        low + low / 2
+    }
+
+    /// Record one value (nanoseconds by convention).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration as nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    /// A consistent-enough snapshot for rendering (buckets are read
+    /// relaxed, so a concurrent recorder may be half-visible; counts
+    /// only ever grow, so quantiles stay sane).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: [u64; BUCKETS] =
+            std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed));
+        let count: u64 = counts.iter().sum();
+        let max = self.max.load(Ordering::Relaxed);
+        let quantile = |q: f64| -> u64 {
+            if count == 0 {
+                return 0;
+            }
+            let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+            let mut cum = 0u64;
+            for (b, &c) in counts.iter().enumerate() {
+                cum += c;
+                if cum >= target {
+                    // The top non-empty bucket's midpoint can overshoot
+                    // the true maximum; clamp to the exact max tracked.
+                    return Self::representative(b).min(max);
+                }
+            }
+            max
+        };
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max,
+            p50: quantile(0.50),
+            p95: quantile(0.95),
+            p99: quantile(0.99),
+        }
+    }
+}
+
+/// Plain-value view of a [`Histogram`] at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+impl HistogramSnapshot {
+    /// The `METRICS` wire form: `count:p50:p95:p99` (nanoseconds).
+    pub fn render(&self) -> String {
+        format!("{}:{}:{}:{}", self.count, self.p50, self.p95, self.p99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s, HistogramSnapshot::default());
+        assert_eq!(s.render(), "0:0:0:0");
+    }
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(Histogram::bucket(0), 0);
+        assert_eq!(Histogram::bucket(1), 1);
+        assert_eq!(Histogram::bucket(2), 2);
+        assert_eq!(Histogram::bucket(3), 2);
+        assert_eq!(Histogram::bucket(4), 3);
+        assert_eq!(Histogram::bucket(1024), 11);
+        assert_eq!(Histogram::bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_track_recorded_values() {
+        let h = Histogram::new();
+        // 100 values around 1µs, one outlier at ~1ms.
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 101);
+        assert_eq!(s.max, 1_000_000);
+        // p50 must land in 1_000's bucket [512, 1024): midpoint 768.
+        assert!((512..1024).contains(&s.p50), "p50={}", s.p50);
+        assert!(s.p99 <= s.max);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{s:?}");
+    }
+
+    #[test]
+    fn single_value_quantiles_clamp_to_max() {
+        let h = Histogram::new();
+        h.record(700);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        // Bucket [512, 1024) midpoint is 768 > the observed max 700.
+        assert_eq!(s.p50, 700);
+        assert_eq!(s.p99, 700);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        let s = h.snapshot();
+        assert_eq!(s.count, 8000);
+        assert!(s.max >= 7999);
+    }
+}

@@ -1,0 +1,36 @@
+//! Run-level observability: dependency-free measurement primitives.
+//!
+//! The engine's only observable outputs used to be the flat `METRICS`
+//! counter line and a per-run iteration count — aggregate totals with no
+//! notion of *where a run's time went* or *what the latency distribution
+//! looks like*. ConnectIt's evaluation (PAPERS.md) is built on per-phase
+//! breakdowns (sampling vs finish phases timed separately) and Groute's
+//! adaptive CC switches strategy on per-pass runtime signals; both need
+//! the two primitives this module provides:
+//!
+//! * [`Histogram`] — a lock-free log₂-bucketed latency histogram.
+//!   Recording is two relaxed `fetch_add`s plus a `fetch_max` (no locks,
+//!   no allocation, safe from any thread); rendering walks the 64
+//!   buckets into count/p50/p95/p99/max. The server keeps one per verb
+//!   and the worker pool splits queue-wait from run-time with a pair.
+//! * [`RunTrace`] — a bounded span recorder for one run (or one sharded
+//!   run, or one CLI invocation). Spans are complete `X`-phase events
+//!   (name, category, track, start, duration, small numeric args);
+//!   recording is a short mutex push, and the whole recorder is behind
+//!   an `Option` so tracing *off* costs one branch per pass, not per
+//!   edge. Export is the standard Chrome trace-event JSON
+//!   ([`RunTrace::to_chrome_json`]) — `contour run --trace out.json`
+//!   opens directly in Perfetto / `chrome://tracing` — plus a one-line
+//!   wire form ([`RunTrace::render_wire`]) for the server's `TRACE`
+//!   verb.
+//!
+//! Neither primitive knows about graphs or algorithms; the wiring lives
+//! with the layers being observed ([`crate::cc::RunContext`] threads a
+//! trace through the algorithm core, [`crate::par::pool`] owns the
+//! queue-wait/run-time pair, [`crate::server`] owns the per-verb set).
+
+mod histogram;
+mod trace;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use trace::{DEFAULT_SPAN_CAP, RunTrace, Span};

@@ -1,0 +1,338 @@
+//! Bounded span recorder with Chrome trace-event export.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Default span capacity per trace. A Contour run emits one span per
+/// pass plus a handful of setup/finalize spans; a sharded run adds one
+/// per shard. 8192 covers every realistic run while bounding a
+/// pathological one (spans past the cap are counted, not stored).
+pub const DEFAULT_SPAN_CAP: usize = 8192;
+
+/// One completed span: a named interval on a logical track.
+///
+/// Times are nanoseconds relative to the owning [`RunTrace`]'s origin
+/// (its creation instant), which keeps them small, monotonic, and
+/// serializable without a wall-clock dependency.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Display name ("pass3", "shard1", "merge", ...).
+    pub name: String,
+    /// Category for trace viewers ("contour", "pcc", "pool", ...).
+    pub cat: &'static str,
+    /// One-word qualifier — for pass spans this is the executed mode
+    /// ("full" / "chunk" / "exact"); empty when not applicable.
+    pub detail: &'static str,
+    /// Logical track id: 0 is the driver, sharded runs put shard `k`
+    /// on track `k + 1`.
+    pub tid: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Small numeric payload (pass index, chunks skipped, labels
+    /// lowered, ...), rendered into the trace viewer's args pane.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+impl Span {
+    /// The value of a named arg, if present.
+    pub fn arg(&self, key: &str) -> Option<u64> {
+        self.args.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+}
+
+/// A bounded recorder of [`Span`]s for one run.
+///
+/// One `RunTrace` is shared (via `Arc`) by every layer participating in
+/// a run: the algorithm core pushes pass spans, the shard executor
+/// pushes shard/merge spans on their own tracks, the CLI serializes the
+/// result. Recording takes a short mutex — spans are pushed once per
+/// pass or per shard, never per edge, so contention is nil. Callers
+/// gate on `Option<&RunTrace>`, making tracing-off cost one branch.
+#[derive(Debug)]
+pub struct RunTrace {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+    tid_names: Mutex<Vec<(u32, String)>>,
+    dropped: AtomicU64,
+    cap: usize,
+}
+
+impl Default for RunTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panicking recorder thread must not take the trace down with it;
+    // span data is append-only so a poisoned guard is still coherent.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl RunTrace {
+    pub fn new() -> Self {
+        Self::with_cap(DEFAULT_SPAN_CAP)
+    }
+
+    pub fn with_cap(cap: usize) -> Self {
+        Self {
+            origin: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+            tid_names: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+            cap,
+        }
+    }
+
+    /// Nanoseconds since this trace was created — the timebase every
+    /// span's `start_ns` is expressed in.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    /// Record a completed span. Past the capacity the span is dropped
+    /// and counted, so a runaway pass loop cannot exhaust memory.
+    pub fn push(&self, span: Span) {
+        let mut spans = lock(&self.spans);
+        if spans.len() >= self.cap {
+            drop(spans);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        spans.push(span);
+    }
+
+    /// Close out a span that began at `start_ns` (from [`Self::now`]):
+    /// duration is measured here, then the span is recorded.
+    pub fn close(
+        &self,
+        name: String,
+        cat: &'static str,
+        detail: &'static str,
+        tid: u32,
+        start_ns: u64,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        let dur_ns = self.now().saturating_sub(start_ns);
+        self.push(Span { name, cat, detail, tid, start_ns, dur_ns, args });
+    }
+
+    /// Give a logical track a display name ("driver", "shard 0", ...).
+    pub fn name_tid(&self, tid: u32, name: &str) {
+        let mut names = lock(&self.tid_names);
+        if let Some(slot) = names.iter_mut().find(|(t, _)| *t == tid) {
+            slot.1 = name.to_string();
+        } else {
+            names.push((tid, name.to_string()));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.spans).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped past the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all recorded spans, in recording order.
+    pub fn spans(&self) -> Vec<Span> {
+        lock(&self.spans).clone()
+    }
+
+    /// One-line wire form for the server's `TRACE` verb:
+    /// `n=<len> dropped=<d> <span> <span> ...` where each span is
+    /// `name|cat|detail|tid|start_ns|dur_ns[|k=v,k=v]`. Fields never
+    /// contain spaces or `|`, so the line splits on whitespace then `|`.
+    pub fn render_wire(&self) -> String {
+        let spans = lock(&self.spans);
+        let mut out = format!("n={} dropped={}", spans.len(), self.dropped());
+        for s in spans.iter() {
+            out.push(' ');
+            out.push_str(&format!(
+                "{}|{}|{}|{}|{}|{}",
+                s.name, s.cat, s.detail, s.tid, s.start_ns, s.dur_ns
+            ));
+            if !s.args.is_empty() {
+                let kv: Vec<String> = s.args.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                out.push('|');
+                out.push_str(&kv.join(","));
+            }
+        }
+        out
+    }
+
+    /// Serialize as Chrome trace-event JSON (the `traceEvents` format
+    /// Perfetto and `chrome://tracing` load directly). Spans become
+    /// complete (`"ph":"X"`) events with microsecond timestamps;
+    /// process/track names ride along as `"M"` metadata events.
+    pub fn to_chrome_json(&self, process_name: &str) -> String {
+        let spans = lock(&self.spans);
+        let names = lock(&self.tid_names);
+        let mut events: Vec<String> = Vec::with_capacity(spans.len() + names.len() + 2);
+        events.push(format!(
+            "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":1,\"tid\":0,\
+             \"args\":{{\"name\":{}}}}}",
+            json_str(process_name)
+        ));
+        for (tid, name) in names.iter() {
+            events.push(format!(
+                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\"tid\":{tid},\
+                 \"args\":{{\"name\":{}}}}}",
+                json_str(name)
+            ));
+        }
+        for s in spans.iter() {
+            let mut args = String::new();
+            if !s.detail.is_empty() {
+                args.push_str(&format!("\"mode\":{}", json_str(s.detail)));
+            }
+            for (k, v) in &s.args {
+                if !args.is_empty() {
+                    args.push(',');
+                }
+                args.push_str(&format!("{}:{v}", json_str(k)));
+            }
+            events.push(format!(
+                "{{\"ph\":\"X\",\"name\":{},\"cat\":{},\"pid\":1,\"tid\":{},\
+                 \"ts\":{:.3},\"dur\":{:.3},\"args\":{{{args}}}}}",
+                json_str(&s.name),
+                json_str(s.cat),
+                s.tid,
+                s.start_ns as f64 / 1e3,
+                s.dur_ns as f64 / 1e3,
+            ));
+        }
+        let dropped = self.dropped();
+        if dropped > 0 {
+            events.push(format!(
+                "{{\"ph\":\"M\",\"name\":\"dropped_spans\",\"pid\":1,\"tid\":0,\
+                 \"args\":{{\"count\":{dropped}}}}}"
+            ));
+        }
+        format!("{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}", events.join(","))
+    }
+}
+
+/// Minimal JSON string escape — names here are ASCII identifiers, but a
+/// graph name from the wire could hold anything.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunTrace {
+        let t = RunTrace::new();
+        t.name_tid(0, "driver");
+        let s0 = t.now();
+        t.close("pass0".to_string(), "contour", "full", 0, s0, vec![("pass", 0)]);
+        t.close("pass1".to_string(), "contour", "exact", 0, s0, vec![("pass", 1), ("skipped", 7)]);
+        t
+    }
+
+    #[test]
+    fn records_and_snapshots_spans() {
+        let t = sample();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 0);
+        let spans = t.spans();
+        assert_eq!(spans[0].name, "pass0");
+        assert_eq!(spans[1].detail, "exact");
+        assert_eq!(spans[1].arg("skipped"), Some(7));
+        assert_eq!(spans[1].arg("missing"), None);
+        assert!(spans[1].start_ns >= spans[0].start_ns);
+    }
+
+    #[test]
+    fn capacity_bound_counts_drops() {
+        let t = RunTrace::with_cap(2);
+        for i in 0..5 {
+            t.close(format!("s{i}"), "test", "", 0, 0, vec![]);
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        assert!(t.render_wire().starts_with("n=2 dropped=3 "));
+    }
+
+    #[test]
+    fn wire_form_round_trips_fields() {
+        let t = sample();
+        let wire = t.render_wire();
+        let toks: Vec<&str> = wire.split_whitespace().collect();
+        assert_eq!(toks[0], "n=2");
+        assert_eq!(toks[1], "dropped=0");
+        let fields: Vec<&str> = toks[3].split('|').collect();
+        assert_eq!(fields[0], "pass1");
+        assert_eq!(fields[1], "contour");
+        assert_eq!(fields[2], "exact");
+        assert_eq!(fields[3], "0");
+        assert_eq!(fields[6], "pass=1,skipped=7");
+    }
+
+    #[test]
+    fn chrome_json_has_required_shape() {
+        let t = sample();
+        let json = t.to_chrome_json("contour run");
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"pass1\""));
+        assert!(json.contains("\"mode\":\"exact\""));
+        assert!(json.contains("\"thread_name\""));
+        // Balanced braces/brackets — cheap structural sanity without a
+        // JSON parser in the dependency-free crate.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny"), "\"x\\ny\"");
+        let t = RunTrace::new();
+        t.close("ev\"il".to_string(), "test", "", 0, 0, vec![]);
+        let json = t.to_chrome_json("p\"q");
+        assert!(json.contains("\"name\":\"ev\\\"il\""));
+        assert!(json.contains("{\"name\":\"p\\\"q\"}"));
+    }
+
+    #[test]
+    fn tid_names_update_in_place() {
+        let t = RunTrace::new();
+        t.name_tid(1, "shard 0");
+        t.name_tid(1, "shard zero");
+        t.name_tid(2, "shard 1");
+        let json = t.to_chrome_json("p");
+        assert!(!json.contains("\"shard 0\""));
+        assert!(json.contains("\"shard zero\""));
+        assert!(json.contains("\"shard 1\""));
+    }
+}

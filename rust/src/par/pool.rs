@@ -51,6 +51,9 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::obs::{Histogram, HistogramSnapshot};
 
 /// Lock ignoring poisoning: a panic inside a pool job unwinds through
 /// guards and would otherwise poison them, bricking the pool for the
@@ -161,6 +164,12 @@ pub struct PoolMetrics {
     /// scheduling change that breaks the placement invariant shows up
     /// in METRICS and fails the stress test.
     pub sticky_away: AtomicU64,
+    /// Enqueue→claim latency per job execution: time a queue entry sat
+    /// before a participant claimed it. Queue-wait growing while
+    /// run-time stays flat means the pool is saturated, not slow.
+    pub queue_wait: Histogram,
+    /// Claim→finish latency per job execution (the task body itself).
+    pub run_time: Histogram,
 }
 
 /// Plain-value snapshot of [`PoolMetrics`] for rendering.
@@ -182,6 +191,10 @@ pub struct PoolStats {
     pub sticky_jobs: u64,
     pub sticky_home: u64,
     pub sticky_away: u64,
+    /// Enqueue→claim latency distribution (ns).
+    pub queue_wait: HistogramSnapshot,
+    /// Claim→finish latency distribution (ns).
+    pub run_time: HistogramSnapshot,
 }
 
 /// Lifetime-erased pointer to a submitter's task closure. Raw (not a
@@ -206,6 +219,10 @@ const SEATS_MASK: u64 = (1 << 32) - 1;
 
 struct Job {
     task: TaskPtr,
+    /// When this job was created (≈ enqueued: creation and queue push
+    /// are adjacent in every submitter). `execute` turns it into the
+    /// queue-wait sample at claim time.
+    enqueued: Instant,
     /// `(active << 32) | seats`: open seats grant entry, active counts
     /// participants currently inside the closure. The job is drained
     /// exactly when both halves are zero.
@@ -229,6 +246,7 @@ impl Job {
         let init = (if submitter_active { ACTIVE_ONE } else { 0 }) | seats as u64;
         Arc::new(Self {
             task,
+            enqueued: Instant::now(),
             state: AtomicU64::new(init),
             panicked: AtomicBool::new(false),
             home: None,
@@ -239,6 +257,7 @@ impl Job {
     fn new_homed(task: TaskPtr, home: usize) -> Arc<Self> {
         Arc::new(Self {
             task,
+            enqueued: Instant::now(),
             state: AtomicU64::new(1),
             panicked: AtomicBool::new(false),
             home: Some(home),
@@ -402,6 +421,8 @@ impl Pool {
             sticky_jobs: m.sticky_jobs.load(Ordering::Relaxed),
             sticky_home: m.sticky_home.load(Ordering::Relaxed),
             sticky_away: m.sticky_away.load(Ordering::Relaxed),
+            queue_wait: m.queue_wait.snapshot(),
+            run_time: m.run_time.snapshot(),
         }
     }
 
@@ -615,6 +636,7 @@ fn execute(inner: &Inner, job: &Job, wid: Option<usize>) {
     if !job.claim() {
         return;
     }
+    inner.metrics.queue_wait.record_duration(job.enqueued.elapsed());
     if let Some(home) = job.home {
         let c = if wid == Some(home) {
             &inner.metrics.sticky_home
@@ -627,10 +649,12 @@ fn execute(inner: &Inner, job: &Job, wid: Option<usize>) {
     // the submitter does not return — so the closure outlives this call
     // — until every claimed participant has finished.
     let task: &(dyn Fn() + Sync) = unsafe { &*job.task };
+    let started = Instant::now();
     let r = {
         let _in_job = JobScope::enter();
         count_exec(&inner.metrics, || catch_unwind(AssertUnwindSafe(task)))
     };
+    inner.metrics.run_time.record_duration(started.elapsed());
     if r.is_err() {
         job.panicked.store(true, Ordering::Release);
     }

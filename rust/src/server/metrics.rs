@@ -60,8 +60,14 @@ impl Metrics {
         // `frontier_full_sweeps` split out the exact engine's
         // store-site activations, its passes, and the chunk engine's
         // forced backstop sweeps (the exact engine never forces one).
+        // `chunk_index_built` / `chunk_index_reused` meter the exact
+        // engine's vertex→chunk index: reuse counts O(m) rebuilds a
+        // shard's ChunkIndexCache avoided. `lat/pool_wait` /
+        // `lat/pool_run` are log₂ histograms (count:p50:p95:p99, ns) of
+        // job queue-wait and run time.
         let pool = crate::par::pool::stats();
         let frontier = crate::cc::contour::frontier_totals();
+        let (idx_built, idx_reused) = crate::cc::contour::chunk_index_counters();
         format!(
             "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
              cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
@@ -70,7 +76,9 @@ impl Metrics {
              pool_inflight={} pool_max_inflight={} pool_exec_peak={} pool_pins={} \
              pool_sticky_jobs={} pool_sticky_home={} pool_sticky_away={} \
              frontier_passes={} frontier_skipped={} frontier_activations={} \
-             frontier_exact={} frontier_full_sweeps={}",
+             frontier_exact={} frontier_full_sweeps={} \
+             chunk_index_built={idx_built} chunk_index_reused={idx_reused} \
+             lat/pool_wait={} lat/pool_run={}",
             self.requests.get(),
             self.errors.get(),
             self.graphs_loaded.get(),
@@ -102,7 +110,9 @@ impl Metrics {
             frontier.skipped_chunks,
             frontier.activations,
             frontier.exact_passes,
-            frontier.full_sweeps
+            frontier.full_sweeps,
+            pool.queue_wait.render(),
+            pool.run_time.render()
         )
     }
 }
@@ -128,6 +138,16 @@ mod tests {
         assert!(m.render().contains("frontier_activations="));
         assert!(m.render().contains("frontier_exact="));
         assert!(m.render().contains("frontier_full_sweeps="));
+        assert!(m.render().contains("chunk_index_built="));
+        assert!(m.render().contains("chunk_index_reused="));
+        // Pool latency histograms render as count:p50:p95:p99.
+        let r = m.render();
+        let wait = r
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("lat/pool_wait="))
+            .expect("lat/pool_wait missing");
+        assert_eq!(wait.split(':').count(), 4, "{wait}");
+        assert!(r.contains("lat/pool_run="), "{r}");
     }
 
     #[test]

@@ -34,6 +34,17 @@
 //!   DROP name                      → OK       (graph, shards or stream)
 //!   METRICS                        → OK requests=.. cc_runs=.. ...
 //!                                    cache/<name>=hits:misses ...
+//!                                    lat/<verb>=count:p50:p95:p99
+//!                                    (per-verb request latency, ns, from
+//!                                    log₂ histograms; lat/pool_wait and
+//!                                    lat/pool_run meter the worker pool)
+//!   TRACE name                     → OK n=.. dropped=.. span span ...
+//!                                    (the most recent CC/PCC run's span
+//!                                    timeline for that graph; each span
+//!                                    is name|cat|mode|tid|start|dur[|k=v,..])
+//!   RECENT [n]                     → OK count verb:ok:dur_ns ...
+//!                                    (ring buffer of the last requests,
+//!                                    oldest first)
 //!   PING                           → PONG
 //!   QUIT                           → BYE (closes connection)
 //!
@@ -44,7 +55,10 @@
 //! PCC results are cached per (name, alg, p, balance) like CC results,
 //! with hits reporting 0.000 ms):
 //!   SHARD name p [vertices|edges]  → OK p boundary_edges
-//!   PCC name [ALG]                 → OK components iterations millis
+//!   PCC name [ALG] [FRONTIER]      → OK components iterations millis
+//!                                    (FRONTIER as in CC; with `exact`,
+//!                                    repeat runs on one partition reuse
+//!                                    each shard's vertex→chunk index)
 //!   SHARDSTATS name                → OK p=.. n=.. m=.. boundary=..
 //!                                    balance=.. shardK=lo:hi:m:...
 //!
@@ -70,19 +84,21 @@
 
 pub mod metrics;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::cc::contour::FrontierMode;
 use crate::cc::{self, Algorithm};
-use crate::coordinator::{algorithm_by_name, algorithm_by_name_with, auto_select};
+use crate::coordinator::{algorithm_by_name_with, auto_select};
 use crate::graph::{gen, io, stats, Csr, EdgeList};
+use crate::obs::{Histogram, RunTrace};
 use crate::shard::{self, ShardedGraph};
 use crate::stream::{Snapshot, StreamingCc};
 use crate::util::Timer;
@@ -94,6 +110,19 @@ use metrics::Metrics;
 /// an unbounded cache grows with every (graph, alg) pair ever queried.
 /// Beyond the cap the least recently touched entry is evicted.
 pub const CC_CACHE_CAP: usize = 16;
+
+/// Requests retained by the `RECENT` ring buffer.
+pub const RECENT_CAP: usize = 64;
+
+/// Every verb the dispatcher knows. `note_verb` interns the request's
+/// verb against this table so the latency map and the recent-request
+/// ring hold `&'static str`s and stay bounded even under a stream of
+/// garbage commands (which are counted in `errors`, not interned).
+const VERBS: &[&str] = &[
+    "PING", "GEN", "UPLOAD", "LOAD", "CC", "LABELS", "STATS", "SHARD", "PCC", "SHARDSTATS",
+    "STREAM", "SADD", "SEPOCH", "SQUERY", "SSAVE", "SLOAD", "LIST", "DROP", "METRICS", "TRACE",
+    "RECENT",
+];
 
 /// Backing storage for a cached labelling: static entries own their
 /// vector; stream entries share the sealed snapshot's allocation
@@ -171,6 +200,19 @@ pub struct ServerState {
     /// second appender would interleave frames, and recovery's
     /// torn-tail repair could truncate a frame mid-write).
     wal_claims: Mutex<HashMap<std::path::PathBuf, Weak<StreamingCc>>>,
+    /// Most recent CC/PCC run trace per graph name (the `TRACE` verb).
+    /// One entry per live name — replace and DROP purge it with the
+    /// graph — so the map is bounded by the graph store's own
+    /// lifecycle. No identity check: "most recent run under this name"
+    /// is the verb's contract, and a stale timeline can mislead a human
+    /// at worst, never serve wrong labels.
+    traces: RwLock<HashMap<String, Arc<RunTrace>>>,
+    /// Per-verb request-latency histograms (`lat/<verb>` in METRICS).
+    /// Keys are interned against [`VERBS`], so the map stays bounded.
+    verb_lat: RwLock<HashMap<&'static str, Histogram>>,
+    /// Ring buffer of the last [`RECENT_CAP`] handled requests as
+    /// (verb, ok, duration ns), oldest first (the `RECENT` verb).
+    recent: Mutex<VecDeque<(&'static str, bool, u64)>>,
     pub metrics: Metrics,
     /// Worker threads each algorithm run may use (0 = all).
     pub threads: usize,
@@ -191,6 +233,9 @@ impl ServerState {
             cache_clock: AtomicU64::new(0),
             cache_stats: RwLock::new(HashMap::new()),
             wal_claims: Mutex::new(HashMap::new()),
+            traces: RwLock::new(HashMap::new()),
+            verb_lat: RwLock::new(HashMap::new()),
+            recent: Mutex::new(VecDeque::with_capacity(RECENT_CAP)),
             metrics: Metrics::default(),
             threads,
         }
@@ -252,6 +297,60 @@ impl ServerState {
                 )
             })
             .collect();
+        pairs.sort();
+        if pairs.is_empty() {
+            String::new()
+        } else {
+            format!(" {}", pairs.join(" "))
+        }
+    }
+
+    /// Publish `name`'s most recent run trace (served by the `TRACE`
+    /// verb). CC and PCC overwrite the same slot, so the verb always
+    /// answers with the latest run on that graph.
+    fn store_trace(&self, name: &str, t: Arc<RunTrace>) {
+        self.traces.write().unwrap().insert(name.to_string(), t);
+    }
+
+    /// The most recent run trace stored under `name`, if any.
+    pub fn trace_of(&self, name: &str) -> Option<Arc<RunTrace>> {
+        self.traces.read().unwrap().get(name).cloned()
+    }
+
+    /// Record one handled request into the per-verb latency histogram
+    /// and the recent-request ring. Unknown commands are not interned
+    /// (so the maps stay bounded); the steady-state path is a read lock
+    /// plus the histogram's relaxed fetch-adds.
+    fn note_verb(&self, verb: &str, ok: bool, dur: std::time::Duration) {
+        let Some(&v) = VERBS.iter().find(|&&v| v == verb) else {
+            return;
+        };
+        let ns = dur.as_nanos().min(u64::MAX as u128) as u64;
+        let recorded = match self.verb_lat.read().unwrap().get(v) {
+            Some(h) => {
+                h.record(ns);
+                true
+            }
+            None => false,
+        };
+        if !recorded {
+            self.verb_lat.write().unwrap().entry(v).or_default().record(ns);
+        }
+        let mut r = self.recent.lock().unwrap();
+        if r.len() == RECENT_CAP {
+            r.pop_front();
+        }
+        r.push_back((v, ok, ns));
+    }
+
+    /// Per-verb latency histograms as ` lat/<verb>=count:p50:p95:p99`
+    /// (leading space; empty before the first request; values in ns,
+    /// sorted by verb), appended to the METRICS reply alongside the
+    /// per-graph cache counters.
+    pub fn render_verb_lat(&self) -> String {
+        let m = self.verb_lat.read().unwrap();
+        let mut pairs: Vec<String> =
+            m.iter().map(|(v, h)| format!("lat/{v}={}", h.snapshot().render())).collect();
         pairs.sort();
         if pairs.is_empty() {
             String::new()
@@ -483,6 +582,8 @@ impl ServerState {
         // results are as dead as the view itself (dropped below).
         self.labels_cache.write().unwrap().retain(|k, _| k.0 != name && k.0 != skey);
         self.sharded.write().unwrap().remove(name);
+        // A replaced graph's timeline describes a dead graph.
+        self.traces.write().unwrap().remove(name);
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<Csr>> {
@@ -575,6 +676,7 @@ impl ServerState {
             let mut stats = self.cache_stats.write().unwrap();
             stats.remove(name);
             stats.remove(&skey);
+            self.traces.write().unwrap().remove(name);
             return true;
         }
         if self.streams.write().unwrap().remove(name).is_some() {
@@ -695,6 +797,7 @@ impl<'s> Session<'s> {
         mut read_extra: R,
     ) -> Option<String> {
         self.state.metrics.requests.inc();
+        let started = Instant::now();
         let mut fields = line.split_whitespace();
         let cmd = fields.next().unwrap_or("").to_ascii_uppercase();
         let rest: Vec<&str> = fields.collect();
@@ -731,12 +834,24 @@ impl<'s> Session<'s> {
                 None => Err(anyhow!("DROP needs a name")),
             },
             "METRICS" => Ok(format!(
-                "OK {}{}",
+                "OK {}{}{}",
                 self.state.metrics.render(),
-                self.state.render_cache_stats()
+                self.state.render_cache_stats(),
+                self.state.render_verb_lat()
             )),
+            "TRACE" => match rest.first() {
+                Some(name) => match self.state.trace_of(name) {
+                    Some(t) => Ok(format!("OK {}", t.render_wire())),
+                    None => Err(anyhow!("no trace for {name:?} (run CC or PCC first)")),
+                },
+                None => Err(anyhow!("usage: TRACE name")),
+            },
+            "RECENT" => self.cmd_recent(&rest),
             other => Err(anyhow!("unknown command {other:?}")),
         };
+        // Latency is recorded before the reply is even serialized, so
+        // `lat/<verb>` meters request handling, not socket writes.
+        self.state.note_verb(&cmd, reply.is_ok(), started.elapsed());
         Some(match reply {
             Ok(r) => r,
             Err(e) => {
@@ -744,6 +859,23 @@ impl<'s> Session<'s> {
                 format!("ERR {e}")
             }
         })
+    }
+
+    /// `RECENT [n]` — the last (up to `n`) handled requests as
+    /// `verb:ok:dur_ns`, oldest first; the reply leads with the count.
+    fn cmd_recent(&self, rest: &[&str]) -> Result<String> {
+        let n = match rest {
+            [] => RECENT_CAP,
+            [n] => n.parse::<usize>().map_err(|e| anyhow!("bad count: {e}"))?,
+            _ => bail!("usage: RECENT [n]"),
+        };
+        let r = self.state.recent.lock().unwrap();
+        let skip = r.len().saturating_sub(n);
+        let mut out = format!("OK {}", r.len() - skip);
+        for (verb, ok, ns) in r.iter().skip(skip) {
+            out.push_str(&format!(" {verb}:{}:{ns}", *ok as u8));
+        }
+        Ok(out)
     }
 
     fn cmd_gen(&self, rest: &[&str]) -> Result<String> {
@@ -861,7 +993,14 @@ impl<'s> Session<'s> {
         };
         let (entry, ran_ms) = self.state.cc_cached(name, &key, &g, || {
             let alg = self.resolve_alg_with(&g, alg_name, fmode)?;
-            Ok(alg.run_with_stats(&g))
+            // Every computed run records a span timeline for the TRACE
+            // verb — the recorder costs two clock reads per pass, noise
+            // next to the pass itself, so it is always on here.
+            let r = alg.run_traced(&g);
+            if let Some(t) = &r.trace {
+                self.state.store_trace(name, Arc::clone(t));
+            }
+            Ok(r)
         })?;
         // A cache hit reports 0.000 ms: no connectivity work was done.
         Ok(format!("OK {} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
@@ -980,22 +1119,37 @@ impl<'s> Session<'s> {
         Ok(format!("OK {} {}", sg.p(), sg.boundary.len()))
     }
 
-    /// `PCC name [alg]` — partitioned connectivity: shard-local runs
-    /// concurrently (one pool job per shard), then boundary merge.
-    /// Results are cached per `(name, alg, p, balance)` with the same
-    /// identity rules as `CC` (a cache hit reports 0.000 ms).
+    /// `PCC name [alg] [exact|chunk|off]` — partitioned connectivity:
+    /// shard-local runs concurrently (one pool job per shard), then
+    /// boundary merge. The optional frontier mode pins the Contour
+    /// engine like CC's — with `exact`, repeated runs on one partition
+    /// reuse each shard's cached vertex→chunk index
+    /// (`chunk_index_reused` in METRICS) instead of rebuilding it.
+    /// Results are cached per `(name, alg, mode, p, balance)` with the
+    /// same identity rules as `CC` (a cache hit reports 0.000 ms).
     fn cmd_pcc(&self, rest: &[&str]) -> Result<String> {
-        let (name, alg_name) = match rest {
-            [name] => (*name, "C-2"),
-            [name, alg] => (*name, *alg),
-            _ => bail!("usage: PCC name [alg]"),
+        let (name, alg_name, fmode) = match rest {
+            [name] => (*name, "C-2", None),
+            [name, alg] => (*name, *alg, None),
+            [name, alg, mode] => (
+                *name,
+                *alg,
+                Some(FrontierMode::parse(mode).ok_or_else(|| {
+                    anyhow!("frontier mode must be exact|chunk|off, got {mode:?}")
+                })?),
+            ),
+            _ => bail!("usage: PCC name [alg] [exact|chunk|off]"),
         };
         let sg = self
             .state
             .get_sharded(name)
             .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
         let threads = self.state.threads;
-        let (entry, ran_ms) = self.state.pcc_cached(name, alg_name, &sg, || {
+        let key = match fmode {
+            None => alg_name.to_string(),
+            Some(m) => format!("{alg_name}#{}", m.as_str()),
+        };
+        let (entry, ran_ms) = self.state.pcc_cached(name, &key, &sg, || {
             let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
                 // Drive the §IV-E policy from the heaviest shard's
                 // topology (range partitioning, so shards inherit the
@@ -1005,11 +1159,20 @@ impl<'s> Session<'s> {
                     .iter()
                     .max_by_key(|s| s.graph.m())
                     .expect("a partition has at least one shard");
-                Box::new(auto_select(big.stats()).with_threads(threads))
+                let mut c = auto_select(big.stats()).with_threads(threads);
+                if let Some(mode) = fmode {
+                    c = c.with_frontier_mode(mode);
+                }
+                Box::new(c)
             } else {
-                algorithm_by_name(alg_name, threads)?
+                algorithm_by_name_with(alg_name, threads, fmode)?
             };
-            Ok(shard::run_sharded(&sg, alg.as_ref(), threads))
+            // Computed runs share one timeline: driver track (the pcc +
+            // merge spans) plus one track per shard.
+            let tr = Arc::new(RunTrace::new());
+            let r = shard::run_sharded_ctx(&sg, alg.as_ref(), threads, Some(&tr));
+            self.state.store_trace(name, tr);
+            Ok(r)
         })?;
         Ok(format!("OK {} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
     }
@@ -1538,6 +1701,105 @@ mod tests {
         assert!(ask("DROP g").starts_with("OK"));
         let m = ask("METRICS");
         assert!(!m.contains("cache/shard/g="), "{m}");
+    }
+
+    /// Pull a `key=<u64>` counter out of a METRICS reply.
+    fn metric_u64(m: &str, key: &str) -> u64 {
+        m.split_whitespace()
+            .find_map(|t| t.strip_prefix(key))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("{key} missing in {m}"))
+    }
+
+    #[test]
+    fn trace_verb_reports_the_last_run() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("TRACE g").starts_with("ERR"), "trace before any graph");
+        assert!(ask("GEN g er:300:500").starts_with("OK"));
+        assert!(ask("TRACE g").starts_with("ERR"), "trace before any run");
+        assert!(ask("CC g C-2").starts_with("OK"));
+        let t = ask("TRACE g");
+        assert!(t.starts_with("OK n="), "{t}");
+        assert!(t.contains("pass0|contour|"), "per-pass span missing: {t}");
+        assert!(t.contains("finalize|contour|"), "epilogue span missing: {t}");
+        // Non-Contour algorithms trace as one whole-run span.
+        assert!(ask("CC g ConnectIt").starts_with("OK"));
+        assert!(ask("TRACE g").contains("ConnectIt|cc|"));
+        // PCC overwrites the slot with the sharded timeline: the run
+        // span on the driver track plus one track per shard.
+        assert!(ask("SHARD g 2").starts_with("OK"));
+        assert!(ask("PCC g C-2").starts_with("OK"));
+        let t = ask("TRACE g");
+        assert!(t.contains("pcc|pcc|"), "driver span missing: {t}");
+        assert!(t.contains("shard0|pcc|"), "{t}");
+        assert!(t.contains("shard1|pcc|"), "{t}");
+        // DROP purges the timeline with the graph.
+        assert!(ask("DROP g").starts_with("OK"));
+        assert!(ask("TRACE g").starts_with("ERR"));
+    }
+
+    #[test]
+    fn metrics_report_per_verb_latency() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN g er:300:500").starts_with("OK"));
+        assert!(ask("CC g C-2").starts_with("OK"));
+        let m = ask("METRICS");
+        let cc = m
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("lat/CC="))
+            .unwrap_or_else(|| panic!("lat/CC missing: {m}"));
+        let parts: Vec<u64> = cc.split(':').map(|x| x.parse().unwrap()).collect();
+        assert_eq!(parts.len(), 4, "{cc}");
+        assert_eq!(parts[0], 1, "one CC request: {cc}");
+        assert!(parts[1] > 0 && parts[2] > 0 && parts[3] > 0, "zero percentiles: {cc}");
+        assert!(parts[1] <= parts[2] && parts[2] <= parts[3], "{cc}");
+        assert!(m.contains("lat/GEN="), "{m}");
+        // The ring buffer lists the session's requests oldest-first;
+        // a reply never includes its own (still in-flight) request.
+        let r = ask("RECENT");
+        assert!(r.starts_with("OK 3 "), "{r}");
+        assert!(r.contains(" GEN:1:"), "{r}");
+        assert!(r.contains(" CC:1:"), "{r}");
+        assert!(r.contains(" METRICS:1:"), "{r}");
+        let r2 = ask("RECENT 2");
+        assert!(r2.starts_with("OK 2 "), "{r2}");
+        assert!(r2.contains(" METRICS:1:") && r2.contains(" RECENT:1:"), "{r2}");
+        assert!(ask("RECENT x").starts_with("ERR"));
+        // Failed requests are recorded with ok=0.
+        assert!(ask("CC nope C-2").starts_with("ERR"));
+        assert!(ask("RECENT 2").contains(" CC:0:"));
+    }
+
+    #[test]
+    fn pcc_accepts_frontier_mode_and_reuses_chunk_indexes() {
+        let state = ServerState::new(1);
+        let mut s = Session::new(&state);
+        let mut ask = |line: &str| s.handle(line, || unreachable!()).unwrap();
+        assert!(ask("GEN g er:400:700").starts_with("OK"));
+        assert!(ask("SHARD g 2").starts_with("OK 2 "));
+        // The chunk-index counters are process-global (other tests bump
+        // them concurrently), so assert on deltas with >=.
+        let reused0 = metric_u64(&ask("METRICS"), "chunk_index_reused=");
+        let cc = ask("CC g C-2");
+        let p1 = ask("PCC g C-2 exact");
+        assert!(p1.starts_with("OK"), "{p1}");
+        assert_eq!(
+            cc.split_whitespace().nth(1),
+            p1.split_whitespace().nth(1),
+            "cc={cc} pcc={p1}"
+        );
+        // A pinned mode gets its own cache slot: the repeat is a hit.
+        assert!(ask("PCC g C-2 exact").ends_with("0.000"));
+        // A different algorithm re-runs on the same partition and picks
+        // up each shard's cached vertex→chunk index (2 shards).
+        assert!(ask("PCC g C-1 exact").starts_with("OK"));
+        let reused1 = metric_u64(&ask("METRICS"), "chunk_index_reused=");
+        assert!(reused1 >= reused0 + 2, "indexes not reused: {reused0} -> {reused1}");
+        assert!(ask("PCC g C-2 sideways").starts_with("ERR"));
     }
 
     #[test]

@@ -24,10 +24,12 @@
 //!    across generators × shard counts × operator hops.
 
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use super::partition::{Balance, ShardedGraph};
 use crate::cc::unionfind::RemConcurrent;
-use crate::cc::{Algorithm, Labels};
+use crate::cc::{Algorithm, Labels, RunContext};
+use crate::obs::RunTrace;
 use crate::par;
 
 /// Outcome of one sharded connectivity run.
@@ -45,6 +47,10 @@ pub struct ShardedRun {
     /// shard-job seating below stays busy instead of idling behind one
     /// heavy shard).
     pub balance: Balance,
+    /// Span timeline, present iff the caller passed a trace to
+    /// [`run_sharded_ctx`]: one "pcc" span on the driver track, each
+    /// shard's passes on track `k + 1`, and the boundary merge.
+    pub trace: Option<Arc<RunTrace>>,
 }
 
 /// Run `alg` on every shard concurrently, then contract the boundary.
@@ -53,8 +59,28 @@ pub struct ShardedRun {
 /// passes inline on its pool job), and the merge passes pass the same
 /// cap to `par_for`.
 pub fn run_sharded(sg: &ShardedGraph, alg: &(dyn Algorithm + Sync), threads: usize) -> ShardedRun {
+    run_sharded_ctx(sg, alg, threads, None)
+}
+
+/// [`run_sharded`] with an optional shared trace: the whole run becomes
+/// one "pcc" span on the driver track (tid 0), each shard's passes land
+/// on their own track (tid `k + 1`, named "shard k"), and the boundary
+/// merge + root broadcast trace as a "merge" span. Shard runs also pick
+/// up each shard's [`ChunkIndexCache`](crate::cc::contour::ChunkIndexCache),
+/// so repeated exact-frontier runs over one partition reuse the
+/// vertex→chunk index instead of rebuilding it.
+pub fn run_sharded_ctx(
+    sg: &ShardedGraph,
+    alg: &(dyn Algorithm + Sync),
+    threads: usize,
+    trace: Option<&Arc<RunTrace>>,
+) -> ShardedRun {
     let n = sg.n;
     let p = sg.shards.len();
+    let run_start = trace.map(|t| {
+        t.name_tid(0, "driver");
+        t.now()
+    });
     // 1 + 2. Shard-local connectivity, one pool job per shard, each
     //    writing its labels straight into the shared (atomic) parent
     //    array the merge operates on — globalization rides inside the
@@ -83,7 +109,25 @@ pub fn run_sharded(sg: &ShardedGraph, alg: &(dyn Algorithm + Sync), threads: usi
             break;
         }
         let sh = &sg.shards[k];
-        let r = alg.run_with_stats(&sh.graph);
+        let tid = k as u32 + 1;
+        let shard_start = trace.map(|t| {
+            t.name_tid(tid, &format!("shard {k}"));
+            t.now()
+        });
+        let ctx = RunContext {
+            trace: trace.cloned(),
+            tid,
+            chunk_index_cache: Some(&sh.index_cache),
+        };
+        let r = alg.run_ctx(&sh.graph, &ctx);
+        if let (Some(t), Some(start)) = (trace, shard_start) {
+            let args = vec![
+                ("n", sh.graph.n as u64),
+                ("m", sh.graph.m() as u64),
+                ("iterations", r.iterations as u64),
+            ];
+            t.close(format!("shard{k}"), "pcc", "", tid, start, args);
+        }
         im.fetch_max(r.iterations, Ordering::Relaxed);
         let base = sh.lo;
         for (i, &l) in r.labels.iter().enumerate() {
@@ -92,6 +136,7 @@ pub fn run_sharded(sg: &ShardedGraph, alg: &(dyn Algorithm + Sync), threads: usi
     });
     let iterations = iters_max.load(Ordering::Relaxed);
     let boundary_edges = sg.boundary.len();
+    let merge_start = trace.map(|t| t.now());
     if boundary_edges > 0 {
         // 3. Boundary contraction on the representative forest.
         let boundary = &sg.boundary;
@@ -115,13 +160,29 @@ pub fn run_sharded(sg: &ShardedGraph, alg: &(dyn Algorithm + Sync), threads: usi
             }
         });
     }
+    if let (Some(t), Some(start)) = (trace, merge_start) {
+        if boundary_edges > 0 {
+            let args = vec![("boundary", boundary_edges as u64)];
+            t.close("merge".to_string(), "pcc", "", 0, start, args);
+        }
+    }
+    let iterations = if boundary_edges > 0 { iterations + 1 } else { iterations };
+    if let (Some(t), Some(start)) = (trace, run_start) {
+        let args = vec![
+            ("shards", p as u64),
+            ("boundary", boundary_edges as u64),
+            ("iterations", iterations as u64),
+        ];
+        t.close("pcc".to_string(), "pcc", "", 0, start, args);
+    }
     let labels: Labels = parents.into_iter().map(|x| x.into_inner()).collect();
     ShardedRun {
         labels,
-        iterations: if boundary_edges > 0 { iterations + 1 } else { iterations },
+        iterations,
         shards: p,
         boundary_edges,
         balance: sg.balance,
+        trace: trace.cloned(),
     }
 }
 

@@ -34,5 +34,5 @@
 pub mod exec;
 pub mod partition;
 
-pub use exec::{run_sharded, ShardedRun};
+pub use exec::{run_sharded, run_sharded_ctx, ShardedRun};
 pub use partition::{Balance, Shard, ShardedGraph};

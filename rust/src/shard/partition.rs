@@ -23,6 +23,7 @@
 
 use std::sync::OnceLock;
 
+use crate::cc::contour::ChunkIndexCache;
 use crate::graph::stats::{self, GraphStats};
 use crate::graph::{transform, Csr};
 use crate::VId;
@@ -37,6 +38,12 @@ pub struct Shard {
     pub graph: Csr,
     /// Lazily computed: see [`Shard::stats`].
     stats: OnceLock<GraphStats>,
+    /// Exact-frontier membership indexes for `graph`, living as long as
+    /// the shard — the server's cached PCC path re-runs Contour on each
+    /// shard per request, and the index depends only on the (immutable)
+    /// shard edge list and the grid grain. See
+    /// [`crate::cc::contour::ChunkIndexCache`].
+    pub index_cache: ChunkIndexCache,
 }
 
 impl Shard {
@@ -132,6 +139,7 @@ impl ShardedGraph {
                 hi: bounds[k + 1] as VId,
                 graph: e.into_csr(),
                 stats: OnceLock::new(),
+                index_cache: ChunkIndexCache::default(),
             })
             .collect();
         Self { n: g.n, m: g.m(), shards, boundary, balance }

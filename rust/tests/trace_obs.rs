@@ -1,0 +1,165 @@
+//! Trace/counter coherence: the span timeline a traced run records must
+//! reconcile *exactly* with the `FrontierStats` the same run reports —
+//! on all three frontier engines. The trace is an observability layer
+//! over the pass loop, not a second bookkeeping system; if the two ever
+//! disagree, one of them is lying about what the engine did.
+//!
+//! Reconciliation rules (see `cc/contour.rs`: a pass span's `detail` is
+//! the mode the pass *executed* — a chunk engine's forced backstop
+//! sweep traces as "full"):
+//!
+//! * pass spans == iterations (every pass is on the timeline),
+//! * spans with detail chunk|exact == `frontier.passes`,
+//! * spans with detail exact == `frontier.exact_passes`,
+//! * full spans (chunk engine) == `frontier.full_sweeps`,
+//! * Σ `skipped` over partial spans == `frontier.skipped_chunks`,
+//! * Σ `lowered` over exact spans == `frontier.activations`.
+
+use std::sync::Arc;
+
+use contour::cc::contour::{ChunkIndexCache, Contour, FrontierMode};
+use contour::cc::{Algorithm, RunContext, RunResult};
+use contour::graph::{gen, Csr, EdgeList};
+use contour::obs::{RunTrace, Span};
+use contour::shard::{run_sharded_ctx, ShardedGraph};
+use contour::VId;
+
+/// A graph with real frontier structure: a star that quiesces early
+/// (so partial passes actually skip chunks) plus an ER tangle.
+fn testbed() -> Csr {
+    let star = 3_000usize;
+    let mut e = EdgeList::with_capacity(star + 4_000, star + 7_000);
+    for i in 1..star {
+        e.push(0, i as VId);
+    }
+    for (u, v) in gen::erdos_renyi(4_000, 7_000, 11).into_csr().edges() {
+        e.push(u + star as VId, v + star as VId);
+    }
+    e.into_csr().shuffled_edges(5)
+}
+
+fn pass_spans(spans: &[Span]) -> Vec<&Span> {
+    spans.iter().filter(|s| s.cat == "contour" && s.name.starts_with("pass")).collect()
+}
+
+fn assert_coherent(r: &RunResult, mode: FrontierMode) {
+    let tr = r.trace.as_ref().expect("traced run must carry its trace");
+    assert_eq!(tr.dropped(), 0, "{mode:?}: spans dropped");
+    let spans = tr.spans();
+    let passes = pass_spans(&spans);
+    assert_eq!(passes.len(), r.iterations, "{mode:?}: one span per pass");
+    let by = |d: &str| passes.iter().filter(|s| s.detail == d).count() as u64;
+    assert_eq!(by("chunk") + by("exact"), r.frontier.passes, "{mode:?}: partial passes");
+    assert_eq!(by("exact"), r.frontier.exact_passes, "{mode:?}: exact passes");
+    if mode == FrontierMode::Chunk {
+        assert_eq!(by("full"), r.frontier.full_sweeps, "backstop sweeps");
+    }
+    if mode == FrontierMode::Off {
+        assert_eq!(by("full"), passes.len() as u64, "off engine only full-sweeps");
+        assert_eq!(r.frontier, Default::default(), "off engine counts nothing");
+    }
+    let skipped: u64 = passes
+        .iter()
+        .filter(|s| s.detail != "full")
+        .map(|s| s.arg("skipped").expect("pass spans carry `skipped`"))
+        .sum();
+    assert_eq!(skipped, r.frontier.skipped_chunks, "{mode:?}: skipped chunks");
+    let lowered: u64 = passes.iter().filter_map(|s| s.arg("lowered")).sum();
+    assert_eq!(lowered, r.frontier.activations, "{mode:?}: activations");
+    // The epilogue is always on the timeline.
+    assert!(spans.iter().any(|s| s.name == "finalize"), "{mode:?}: finalize span");
+}
+
+#[test]
+fn traced_spans_reconcile_with_frontier_stats_on_every_engine() {
+    let g = testbed();
+    let mut labels = None;
+    for mode in [FrontierMode::Off, FrontierMode::Chunk, FrontierMode::Exact] {
+        let r = Contour::c2().with_frontier_mode(mode).run_traced(&g);
+        assert_coherent(&r, mode);
+        if mode == FrontierMode::Exact {
+            assert!(
+                r.trace.as_ref().unwrap().spans().iter().any(|s| s.name == "index"),
+                "exact runs trace the index build"
+            );
+        }
+        // Tracing never changes the answer.
+        let l = labels.get_or_insert_with(|| r.labels.clone());
+        assert_eq!(*l, r.labels, "{mode:?}");
+    }
+}
+
+#[test]
+fn untraced_runs_carry_no_trace() {
+    let g = gen::path(500).into_csr();
+    let r = Contour::c2().run_with_stats(&g);
+    assert!(r.trace.is_none());
+    // run_ctx without a trace is the plain path too.
+    let r = Contour::c2().run_ctx(&g, &RunContext::default());
+    assert!(r.trace.is_none());
+}
+
+#[test]
+fn chunk_index_cache_is_reused_across_runs() {
+    let g = testbed();
+    let cache = ChunkIndexCache::default();
+    let alg = Contour::c2().with_frontier_mode(FrontierMode::Exact);
+    let ctx = RunContext { trace: None, tid: 0, chunk_index_cache: Some(&cache) };
+    let r1 = alg.run_ctx(&g, &ctx);
+    assert_eq!(cache.reuses(), 0, "first run builds");
+    let r2 = alg.run_ctx(&g, &ctx);
+    assert_eq!(cache.reuses(), 1, "second run reuses the vertex→chunk index");
+    assert_eq!(r1.labels, r2.labels);
+}
+
+#[test]
+fn sharded_runs_share_one_timeline_across_tracks() {
+    let g = gen::erdos_renyi(1_200, 2_000, 3).into_csr();
+    let p = 3usize;
+    let sg = ShardedGraph::partition(&g, p);
+    let tr = Arc::new(RunTrace::new());
+    let r = run_sharded_ctx(&sg, &Contour::c2(), 0, Some(&tr));
+    assert!(Arc::ptr_eq(r.trace.as_ref().unwrap(), &tr));
+    let spans = tr.spans();
+    // The whole run is one driver-track span carrying the shard count.
+    let pcc = spans.iter().find(|s| s.name == "pcc").expect("driver span");
+    assert_eq!(pcc.tid, 0);
+    assert_eq!(pcc.arg("shards"), Some(p as u64));
+    assert_eq!(pcc.arg("iterations"), Some(r.iterations as u64));
+    // One span per shard, each on its own track (tid k + 1), and every
+    // shard-local pass span lands on its shard's track.
+    let mut shard_iters = 0u64;
+    for k in 0..p {
+        let s = spans
+            .iter()
+            .find(|s| s.name == format!("shard{k}"))
+            .unwrap_or_else(|| panic!("missing shard{k} span"));
+        assert_eq!(s.tid, k as u32 + 1);
+        shard_iters += s.arg("iterations").expect("shard spans carry iterations");
+    }
+    let passes = pass_spans(&spans);
+    assert_eq!(passes.len() as u64, shard_iters, "pass spans == Σ shard iterations");
+    assert!(passes.iter().all(|s| s.tid >= 1 && s.tid <= p as u32));
+    // The boundary merge traces on the driver track.
+    if r.boundary_edges > 0 {
+        let m = spans.iter().find(|s| s.name == "merge").expect("merge span");
+        assert_eq!(m.tid, 0);
+        assert_eq!(m.arg("boundary"), Some(r.boundary_edges as u64));
+    }
+    // And the sharded labels still match the single-shard run.
+    assert_eq!(r.labels, Contour::c2().run(&g));
+}
+
+#[test]
+fn chrome_export_of_a_real_run_has_the_required_keys() {
+    let g = testbed();
+    let r = Contour::c2().with_frontier_mode(FrontierMode::Exact).run_traced(&g);
+    let json = r.trace.unwrap().to_chrome_json("trace_obs test");
+    let keys =
+        ["\"displayTimeUnit\"", "\"traceEvents\"", "\"ph\":\"X\"", "\"ph\":\"M\"", "\"ts\":"];
+    for key in keys {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    assert!(json.contains("\"mode\":\"exact\""), "pass spans carry their mode");
+    assert_eq!(json.matches('{').count(), json.matches('}').count(), "unbalanced JSON braces");
+}
