@@ -51,22 +51,72 @@ METRICS carries per-verb log₂ latency histograms):
             print(s["name"], s["mode"], s["dur_ns"], s["args"])
         c.metrics()["lat/CC"]                 # {"count", "p50", "p95", "p99"}
         c.recent(5)                           # last 5 requests (verb, ok, ns)
+
+Protocol v2 (binary framing): on connect the client sends ``HELLO 2``;
+a v2 server answers ``OK v2`` and the connection switches to
+length-prefixed binary frames (request ids, pipelining, packed label
+arrays — see README "Protocol v2"). Older servers answer ``ERR`` and
+the client silently stays on the line protocol, so every method works
+against either server. ``protocol="line"`` pins the text protocol;
+``protocol="binary"`` makes a missing v2 an error.
+
+    with ContourClient("127.0.0.1", 7021) as c:   # negotiates v2
+        c.gen("g", "rmat:16:16")
+        c.batch_query("g", [0, 17, 42])           # one snapshot, many ids
+        with c.pipeline(window=16) as p:          # many requests in flight
+            tickets = [p.batch_query("g", chunk) for chunk in chunks]
+            labels = [p.result(t) for t in tickets]
 """
 
 from __future__ import annotations
 
 import socket
-from typing import Iterable, List, Optional, Tuple
+import struct
+from typing import Dict, Iterable, List, Optional, Tuple, Union
+
+_MAGIC = b"CP"
+_VERSION = 2
+_STATUS_OK, _STATUS_ERR, _STATUS_BUSY, _STATUS_BYE = 0, 1, 2, 3
+# Mirror of the server's opcode table (rust/src/server/protocol.rs):
+# append new verbs, never renumber.
+_OPCODES = {
+    verb: op
+    for op, verb in [
+        (1, "PING"), (2, "GEN"), (3, "UPLOAD"), (4, "LOAD"), (5, "CC"),
+        (6, "LABELS"), (7, "STATS"), (8, "SHARD"), (9, "PCC"),
+        (10, "SHARDSTATS"), (11, "STREAM"), (12, "SADD"), (13, "SEPOCH"),
+        (14, "SQUERY"), (15, "SSAVE"), (16, "SLOAD"), (17, "LIST"),
+        (18, "DROP"), (19, "METRICS"), (20, "TRACE"), (21, "RECENT"),
+        (22, "QUERY"), (23, "BQUERY"), (24, "HELLO"), (25, "QUIT"),
+    ]
+}
 
 
 class ContourError(RuntimeError):
     """Server-side error (an ``ERR ...`` reply)."""
 
 
+class ContourBusy(ContourError):
+    """Admission control rejected the request (``ERR busy`` on the line
+    protocol, a BUSY frame on the binary one). Safe to retry after
+    retiring in-flight replies."""
+
+
 class ContourClient:
-    def __init__(self, host: str = "127.0.0.1", port: int = 7021, timeout: float = 120.0):
+    def __init__(self, host: str = "127.0.0.1", port: int = 7021,
+                 timeout: float = 120.0, protocol: str = "auto"):
+        """``protocol``: ``"auto"`` (negotiate binary v2, fall back to
+        the line protocol on pre-v2 servers), ``"line"`` (never
+        negotiate), or ``"binary"`` (fail if the server lacks v2)."""
+        if protocol not in ("auto", "line", "binary"):
+            raise ValueError(f"protocol must be auto|line|binary, got {protocol!r}")
         self._sock = socket.create_connection((host, port), timeout=timeout)
         self._rfile = self._sock.makefile("r", encoding="utf-8", newline="\n")
+        self._bfile = None
+        self._proto = "line"
+        self._next_id = 1
+        if protocol != "line":
+            self._negotiate(require=protocol == "binary")
 
     # ------------------------------------------------------------ transport
 
@@ -79,9 +129,92 @@ class ContourClient:
             raise ConnectionError("server closed the connection")
         return line.rstrip("\n")
 
+    def _negotiate(self, require: bool) -> None:
+        """``HELLO 2``: upgrade to binary framing when the server speaks
+        v2; older servers answer ``ERR unknown command`` and the
+        connection simply stays on the line protocol."""
+        self._send("HELLO 2")
+        reply = self._recv()
+        if reply == "OK v2":
+            self._proto = "binary"
+            self._bfile = self._sock.makefile("rb")
+        elif require:
+            raise ContourError(f"server does not speak protocol v2: {reply}")
+
+    @property
+    def protocol(self) -> str:
+        """The negotiated transport: ``"line"`` or ``"binary"``."""
+        return self._proto
+
+    def _send_frame(self, verb: str, args: str = "",
+                    extra: Optional[List[int]] = None) -> int:
+        """Encode and send one request frame; returns its request id."""
+        op = _OPCODES[verb.upper()]
+        rid = self._next_id
+        self._next_id = (self._next_id + 1) & 0xFFFFFFFF or 1
+        a = args.encode("utf-8")
+        payload = struct.pack("<H", len(a)) + a
+        if extra:
+            payload += struct.pack(f"<I{len(extra)}I", len(extra), *extra)
+        self._sock.sendall(
+            struct.pack("<2sBBII", _MAGIC, _VERSION, op, rid, len(payload)) + payload
+        )
+        return rid
+
+    def _read_exact(self, n: int) -> bytes:
+        buf = self._bfile.read(n)
+        if buf is None or len(buf) < n:
+            raise ConnectionError("server closed mid-frame")
+        return buf
+
+    def _recv_frame(self) -> Tuple[int, int, bytes]:
+        """Read one reply frame: (request_id, status, payload)."""
+        magic, ver, status, rid, plen = struct.unpack("<2sBBII", self._read_exact(12))
+        if magic != _MAGIC or ver != _VERSION:
+            raise ContourError(f"bad reply frame (magic={magic!r} version={ver})")
+        return rid, status, self._read_exact(plen) if plen else b""
+
+    @staticmethod
+    def _decode_reply(verb: str, status: int, payload: bytes) -> str:
+        """Render a binary reply as the equivalent line-protocol text,
+        so both transports feed the same parsing above."""
+        if status == _STATUS_BUSY:
+            raise ContourBusy(payload.decode("utf-8", "replace"))
+        if status == _STATUS_ERR:
+            raise ContourError(payload.decode("utf-8", "replace"))
+        if status == _STATUS_BYE:
+            return "BYE"
+        v = verb.upper()
+        if v == "BQUERY":
+            (count,) = struct.unpack_from("<I", payload, 0)
+            labels = struct.unpack_from(f"<{count}I", payload, 4)
+            return " ".join(["OK", str(count), *map(str, labels)])
+        if v == "LABELS":
+            (total,) = struct.unpack_from("<Q", payload, 0)
+            (count,) = struct.unpack_from("<I", payload, 8)
+            labels = struct.unpack_from(f"<{count}I", payload, 12)
+            return " ".join(["OK", str(total), *map(str, labels)])
+        text = payload.decode("utf-8")
+        if v == "PING":
+            return text  # "PONG"
+        return f"OK {text}" if text else "OK"
+
+    def _frame_request(self, verb: str, args: str,
+                       extra: Optional[List[int]] = None) -> str:
+        rid = self._send_frame(verb, args, extra)
+        got, status, payload = self._recv_frame()
+        if got != rid:
+            raise ContourError(f"reply id {got} for request {rid} (pipelining desync)")
+        return self._decode_reply(verb, status, payload)
+
     def _request(self, line: str) -> str:
+        if self._proto == "binary":
+            verb, _, args = line.partition(" ")
+            return self._frame_request(verb, args)
         self._send(line)
         reply = self._recv()
+        if reply.startswith("ERR busy"):
+            raise ContourBusy(reply[4:])
         if reply.startswith("ERR"):
             raise ContourError(reply[4:])
         return reply
@@ -93,8 +226,11 @@ class ContourClient:
 
     def close(self) -> None:
         try:
-            self._send("QUIT")
-            self._recv()  # BYE
+            if self._proto == "binary":
+                self._frame_request("QUIT", "")  # BYE, after the pipeline drains
+            else:
+                self._send("QUIT")
+                self._recv()  # BYE
         except OSError:
             pass
         finally:
@@ -106,6 +242,14 @@ class ContourClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def pipeline(self, window: int = 16) -> "Pipeline":
+        """Pipelined requests on the binary transport: up to ``window``
+        requests in flight, replies matched by request id (the server
+        may complete them out of order). Requires a v2 connection."""
+        if self._proto != "binary":
+            raise ContourError("pipelining requires the binary protocol (v2 server)")
+        return Pipeline(self, window)
+
     # --------------------------------------------------------------- graphs
 
     def gen(self, name: str, spec: str) -> Tuple[int, int]:
@@ -115,8 +259,15 @@ class ContourClient:
         return int(n), int(m)
 
     def upload(self, name: str, edges: Iterable[Tuple[int, int]]) -> Tuple[int, int]:
-        """Upload an explicit edge list. Returns (n, m) after dedup."""
+        """Upload an explicit edge list. Returns (n, m) after dedup.
+        On the binary transport the edges travel as one packed frame
+        instead of one text line per edge."""
         edges = list(edges)
+        if self._proto == "binary":
+            flat = [x for uv in edges for x in uv]
+            reply = self._frame_request("UPLOAD", f"{name} {len(edges)}", flat)
+            _, n, m = reply.split()
+            return int(n), int(m)
         self._send(f"UPLOAD {name} {len(edges)}")
         for u, v in edges:
             self._send(f"{u} {v}")
@@ -159,6 +310,30 @@ class ContourClient:
         req = f"CC {name} {alg}" + (f" {frontier}" if frontier else "")
         _, comps, iters, ms = self._request(req).split()
         return int(comps), int(iters), float(ms)
+
+    def query(self, name: str, v: int, alg: Optional[str] = None) -> int:
+        """Component label of one vertex, answered wait-free from the
+        server's cached labelling. ``alg`` selects the labelling for
+        static graphs (default C-2); for streams pass ``"epoch:<e>"``
+        to time-travel."""
+        sel = f" {alg}" if alg else ""
+        return int(self._request(f"QUERY {name} {v}{sel}").split()[1])
+
+    def batch_query(self, name: str, ids: Iterable[int],
+                    alg: Optional[str] = None) -> List[int]:
+        """Vectorized component lookup: every id is answered from one
+        epoch/labelling snapshot, so the batch is internally consistent
+        even while the stream moves. On the binary transport the ids
+        travel packed in the frame payload; on the line protocol they
+        ride the arg list."""
+        ids = list(ids)
+        sel = f" {alg}" if alg else ""
+        if self._proto == "binary":
+            reply = self._frame_request("BQUERY", f"{name}{sel}", ids)
+        else:
+            flat = " ".join(str(v) for v in ids)
+            reply = self._request(f"BQUERY {name}{sel} {flat}")
+        return [int(x) for x in reply.split()[2:]]
 
     def labels(self, name: str, alg: str = "C-2",
                offset: int = 0, count: Optional[int] = None) -> List[int]:
@@ -208,6 +383,14 @@ class ContourClient:
         ``chunk_index_built`` / ``chunk_index_reused`` (exact-engine
         vertex→chunk index builds vs. cache hits on sharded views).
 
+        Serving counters: ``qps`` (lifetime requests/second, a float),
+        ``uptime_ms``, ``busy`` (admission-control rejections),
+        ``bytes_in`` / ``bytes_out``, ``hello_upgrades`` (connections
+        negotiated to binary v2), ``batch_queries`` /
+        ``batch_vertices`` (BQUERY traffic), and per-verb error
+        counters ``err/<verb>`` (requests that answered ERR — those
+        land in ``lat/<verb>`` too).
+
         Latency keys (``lat/<verb>`` per request verb, plus
         ``lat/pool_wait`` / ``lat/pool_run`` for the worker pool) are
         log₂-bucket histograms and decode to
@@ -224,7 +407,10 @@ class ContourClient:
             try:
                 out[k] = int(v)
             except ValueError:
-                out[k] = v
+                try:
+                    out[k] = float(v)  # e.g. qps=123.4
+                except ValueError:
+                    out[k] = v
         return out
 
     # ------------------------------------------------------------- tracing
@@ -424,6 +610,92 @@ class ContourClient:
         req = f"SLOAD {name} {snapshot}" + (f" {wal}" if wal else "")
         _, n, epoch = self._request(req).split()
         return int(n), int(epoch)
+
+
+class Pipeline:
+    """Pipelined binary requests (from :meth:`ContourClient.pipeline`).
+
+    Issue requests without waiting for replies; each call returns a
+    ticket (the frame's request id), and :meth:`result` blocks until
+    that ticket's reply has arrived — replies may come back in any
+    order. The client-side ``window`` caps in-flight requests below the
+    server's per-connection window, so well-behaved pipelines never see
+    BUSY; if the server sheds load anyway, :meth:`result` raises
+    :class:`ContourBusy` for that ticket and the request can be
+    reissued.
+
+        with client.pipeline(window=16) as p:
+            tickets = [p.batch_query("g", chunk) for chunk in chunks]
+            labels = [p.result(t) for t in tickets]
+    """
+
+    def __init__(self, client: ContourClient, window: int = 16):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self._c = client
+        self._window = window
+        self._verbs: Dict[int, str] = {}       # in flight: id -> verb
+        self._done: Dict[int, Union[str, ContourError]] = {}
+
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.drain()
+
+    def _submit(self, verb: str, args: str, extra: Optional[List[int]] = None) -> int:
+        while len(self._verbs) >= self._window:
+            self._pump()
+        rid = self._c._send_frame(verb, args, extra)
+        self._verbs[rid] = verb
+        return rid
+
+    def _pump(self) -> None:
+        """Receive one reply and file it under its ticket."""
+        rid, status, payload = self._c._recv_frame()
+        verb = self._verbs.pop(rid, None)
+        if verb is None:
+            raise ContourError(f"reply for unknown request id {rid}")
+        try:
+            self._done[rid] = ContourClient._decode_reply(verb, status, payload)
+        except ContourError as e:  # includes ContourBusy
+            self._done[rid] = e
+
+    def query(self, name: str, v: int, alg: Optional[str] = None) -> int:
+        """Pipelined :meth:`ContourClient.query`; returns a ticket."""
+        sel = f" {alg}" if alg else ""
+        return self._submit("QUERY", f"{name} {v}{sel}")
+
+    def batch_query(self, name: str, ids: Iterable[int],
+                    alg: Optional[str] = None) -> int:
+        """Pipelined :meth:`ContourClient.batch_query`; returns a ticket."""
+        sel = f" {alg}" if alg else ""
+        return self._submit("BQUERY", f"{name}{sel}", list(ids))
+
+    def result(self, ticket: int) -> Union[int, List[int]]:
+        """The reply for ``ticket``: an ``int`` label for ``query``, a
+        list of labels for ``batch_query``. Blocks until that reply
+        arrives; raises the server's error (:class:`ContourBusy` for
+        load shedding) if the request failed."""
+        while ticket not in self._done:
+            if ticket not in self._verbs and ticket not in self._done:
+                raise ContourError(f"unknown ticket {ticket}")
+            self._pump()
+        reply = self._done.pop(ticket)
+        if isinstance(reply, ContourError):
+            raise reply
+        parts = reply.split()
+        if parts[0] != "OK":
+            raise ContourError(reply)
+        labels = [int(x) for x in parts[2:]]
+        # QUERY replies carry exactly one value after OK.
+        return int(parts[1]) if len(parts) == 2 else labels
+
+    def drain(self) -> None:
+        """Receive every outstanding reply (errors are filed, not
+        raised — they surface when their ticket's result is read)."""
+        while self._verbs:
+            self._pump()
 
 
 def graph_cc(graph_name: str, host: str = "127.0.0.1", port: int = 7021,

@@ -4,6 +4,7 @@
 //! figure of the paper (see DESIGN.md §4).
 
 pub mod figures;
+pub mod serve;
 pub mod suite;
 
 use crate::util::Timer;

@@ -1,0 +1,460 @@
+//! Serving benchmark (`contour bench serve`): a multi-connection load
+//! generator against an in-process server, measuring the wire path the
+//! paper cares about — many concurrent clients querying components
+//! while the engine runs underneath (§III-A / Arkouda integration).
+//!
+//! Four scenarios, {line, binary} × {single, batch}, all answered from
+//! one warmed labels-cache entry so the numbers isolate protocol +
+//! dispatch overhead rather than connectivity time:
+//!
+//! - `line/single`   — closed-loop `QUERY` per connection
+//! - `line/batch`    — closed-loop `BQUERY` with ids in the arg list
+//! - `binary/single` — framed `QUERY`, one in flight
+//! - `binary/batch`  — framed `BQUERY`, pipelined (client window 16)
+//!
+//! Output mirrors the hotpath bench: `serving.{txt,csv}` in the out
+//! directory plus machine-readable `BENCH_serving.json` (schema 1) that
+//! CI validates and uploads; the repo-root copy is the committed
+//! trajectory baseline (`bench serve --baseline` refreshes it).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::server::{protocol, serve_listener, ServerState};
+use crate::VId;
+
+use super::Table;
+
+/// Client-side pipeline window for the binary batch scenario. Below the
+/// server's default per-connection window (64) on purpose: the bench
+/// measures steady-state pipelining, not BUSY handling (tests cover
+/// that).
+const PIPELINE_WINDOW: usize = 16;
+
+/// One scenario's measurements.
+#[derive(Clone, Debug)]
+pub struct ServeRecord {
+    /// `protocol/mode`, e.g. `binary/batch`.
+    pub scenario: String,
+    pub protocol: &'static str,
+    pub mode: &'static str,
+    pub conns: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Vertex ids per request (1 for single).
+    pub batch: usize,
+    /// Client-side in-flight window (1 = closed loop).
+    pub window: usize,
+    pub qps: f64,
+    /// Vertex lookups per second (`qps × batch`).
+    pub vps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+fn pctl(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn summarize_scenario(
+    protocol: &'static str,
+    mode: &'static str,
+    conns: usize,
+    batch: usize,
+    window: usize,
+    mut lat_us: Vec<f64>,
+    wall_secs: f64,
+) -> ServeRecord {
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = lat_us.len();
+    let qps = requests as f64 / wall_secs.max(1e-9);
+    ServeRecord {
+        scenario: format!("{protocol}/{mode}"),
+        protocol,
+        mode,
+        conns,
+        requests,
+        batch,
+        window,
+        qps,
+        vps: qps * batch as f64,
+        p50_us: pctl(&lat_us, 0.50),
+        p95_us: pctl(&lat_us, 0.95),
+        p99_us: pctl(&lat_us, 0.99),
+    }
+}
+
+// ------------------------------------------------------------ clients
+
+/// A line-protocol connection (the classic text transport).
+struct LineConn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl LineConn {
+    fn connect(addr: &str) -> Result<Self> {
+        let s = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        s.set_nodelay(true)?;
+        Ok(Self { r: BufReader::new(s.try_clone()?), w: BufWriter::new(s) })
+    }
+
+    fn req(&mut self, cmd: &str) -> Result<String> {
+        self.w.write_all(cmd.as_bytes())?;
+        self.w.write_all(b"\n")?;
+        self.w.flush()?;
+        let mut line = String::new();
+        if self.r.read_line(&mut line)? == 0 {
+            bail!("server closed the connection mid-request");
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    fn req_ok(&mut self, cmd: &str) -> Result<String> {
+        let reply = self.req(cmd)?;
+        anyhow::ensure!(reply.starts_with("OK") || reply == "PONG", "{cmd:?} -> {reply}");
+        Ok(reply)
+    }
+}
+
+/// A binary-protocol connection: line `HELLO 2` upgrade, then frames.
+struct BinConn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    next_id: u32,
+}
+
+impl BinConn {
+    fn connect(addr: &str) -> Result<Self> {
+        let s = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        s.set_nodelay(true)?;
+        let mut r = BufReader::new(s.try_clone()?);
+        let mut w = BufWriter::new(s);
+        w.write_all(b"HELLO 2\n")?;
+        w.flush()?;
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        anyhow::ensure!(line.trim_end() == "OK v2", "HELLO 2 -> {}", line.trim_end());
+        Ok(Self { r, w, next_id: 1 })
+    }
+
+    fn send(&mut self, verb: &str, args: &str, extra: &[VId]) -> Result<u32> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        self.w.write_all(&protocol::encode_request(id, verb, args, extra)?)?;
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<protocol::ReplyFrame> {
+        protocol::read_reply(&mut self.r)?.ok_or_else(|| anyhow!("server closed the connection"))
+    }
+}
+
+// ---------------------------------------------------------- workloads
+
+/// Deterministic vertex-id stream: a Weyl-ish stride walk that touches
+/// ids all over the label array (no RNG dependency, same ids per run).
+fn vid_at(i: usize, conn: usize, n: usize) -> VId {
+    ((i.wrapping_mul(2_654_435_761).wrapping_add(conn * 97)) % n) as VId
+}
+
+fn line_single(addr: &str, graph: &str, conn: usize, n_reqs: usize, n: usize) -> Result<Vec<f64>> {
+    let mut c = LineConn::connect(addr)?;
+    let mut lat = Vec::with_capacity(n_reqs);
+    for i in 0..n_reqs {
+        let cmd = format!("QUERY {graph} {} C-2", vid_at(i, conn, n));
+        let t = Instant::now();
+        c.req_ok(&cmd)?;
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let _ = c.req("QUIT");
+    Ok(lat)
+}
+
+fn line_batch(
+    addr: &str,
+    graph: &str,
+    conn: usize,
+    n_reqs: usize,
+    batch: usize,
+    n: usize,
+) -> Result<Vec<f64>> {
+    let mut c = LineConn::connect(addr)?;
+    let mut lat = Vec::with_capacity(n_reqs);
+    for i in 0..n_reqs {
+        let mut cmd = format!("BQUERY {graph} C-2");
+        for k in 0..batch {
+            cmd.push(' ');
+            cmd.push_str(&vid_at(i * batch + k, conn, n).to_string());
+        }
+        let t = Instant::now();
+        let reply = c.req_ok(&cmd)?;
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+        // `OK <count> l...` — the count pins reply/request pairing.
+        let count: usize =
+            reply.split_whitespace().nth(1).and_then(|t| t.parse().ok()).unwrap_or(0);
+        anyhow::ensure!(count == batch, "BQUERY answered {count} of {batch} ids");
+    }
+    let _ = c.req("QUIT");
+    Ok(lat)
+}
+
+fn bin_single(addr: &str, graph: &str, conn: usize, n_reqs: usize, n: usize) -> Result<Vec<f64>> {
+    let mut c = BinConn::connect(addr)?;
+    let mut lat = Vec::with_capacity(n_reqs);
+    for i in 0..n_reqs {
+        let args = format!("{graph} {} C-2", vid_at(i, conn, n));
+        let t = Instant::now();
+        let id = c.send("QUERY", &args, &[])?;
+        c.w.flush()?;
+        let f = c.recv()?;
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+        anyhow::ensure!(f.id == id && f.status == protocol::STATUS_OK, "QUERY -> {}", f.text());
+    }
+    Ok(lat)
+}
+
+/// The pipelined path: keep up to [`PIPELINE_WINDOW`] BQUERY frames in
+/// flight, matching replies to send times by request id (replies may
+/// arrive out of order).
+fn bin_batch(
+    addr: &str,
+    graph: &str,
+    conn: usize,
+    n_reqs: usize,
+    batch: usize,
+    n: usize,
+) -> Result<Vec<f64>> {
+    let mut c = BinConn::connect(addr)?;
+    let mut lat = Vec::with_capacity(n_reqs);
+    let mut sent_at: std::collections::HashMap<u32, Instant> = std::collections::HashMap::new();
+    let args = format!("{graph} C-2");
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    while done < n_reqs {
+        while sent < n_reqs && sent_at.len() < PIPELINE_WINDOW {
+            let ids: Vec<VId> = (0..batch).map(|k| vid_at(sent * batch + k, conn, n)).collect();
+            let t = Instant::now();
+            let id = c.send("BQUERY", &args, &ids)?;
+            sent_at.insert(id, t);
+            sent += 1;
+        }
+        c.w.flush()?;
+        let f = c.recv()?;
+        let t = sent_at
+            .remove(&f.id)
+            .ok_or_else(|| anyhow!("reply for unknown request id {}", f.id))?;
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+        anyhow::ensure!(f.status == protocol::STATUS_OK, "BQUERY -> {}", f.text());
+        anyhow::ensure!(
+            f.batch_labels()?.len() == batch,
+            "BQUERY reply label count != {batch}"
+        );
+        done += 1;
+    }
+    Ok(lat)
+}
+
+/// Fan a per-connection workload across `conns` OS threads; returns all
+/// latencies merged plus the wall time of the slowest connection.
+fn run_conns<F>(conns: usize, f: F) -> Result<(Vec<f64>, f64)>
+where
+    F: Fn(usize) -> Result<Vec<f64>> + Sync,
+{
+    let t = Instant::now();
+    let f = &f;
+    let per_conn: Vec<Result<Vec<f64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns).map(|c| s.spawn(move || f(c))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("load-generator thread panicked"))?)
+            .collect()
+    });
+    let wall = t.elapsed().as_secs_f64();
+    let mut all = Vec::new();
+    for r in per_conn {
+        all.extend(r?);
+    }
+    Ok((all, wall))
+}
+
+// ------------------------------------------------------------- driver
+
+/// Run the serving benchmark and write `serving.{txt,csv}` +
+/// `BENCH_serving.json` under `out_dir`. Returns the rendered table.
+pub fn serving_json(out_dir: &Path, quick: bool, threads: usize) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let (scale, degree) = if quick { (12u32, 8usize) } else { (16u32, 16usize) };
+    let (conns, singles, batches, batch) =
+        if quick { (2usize, 400usize, 40usize, 64usize) } else { (4, 4000, 200, 256) };
+    let spec = format!("rmat:{scale}:{degree}");
+    let n = 1usize << scale;
+
+    // In-process server on an OS-assigned port: the bench measures the
+    // full TCP wire path but needs no external process.
+    let state = Arc::new(ServerState::new(threads));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let server = {
+        let (state, shutdown) = (state.clone(), shutdown.clone());
+        std::thread::spawn(move || serve_listener(listener, state, shutdown))
+    };
+
+    // Build + warm once so every scenario reads the same cached
+    // labelling — wait-free queries, per ConnectIt's serving model.
+    let mut setup = LineConn::connect(&addr)?;
+    setup.req_ok(&format!("GEN serve {spec}"))?;
+    setup.req_ok("CC serve C-2")?;
+    setup.req_ok("QUERY serve 0 C-2")?;
+
+    let mut records = Vec::new();
+    let (lat, wall) = run_conns(conns, |c| line_single(&addr, "serve", c, singles, n))?;
+    records.push(summarize_scenario("line", "single", conns, 1, 1, lat, wall));
+    let (lat, wall) = run_conns(conns, |c| line_batch(&addr, "serve", c, batches, batch, n))?;
+    records.push(summarize_scenario("line", "batch", conns, batch, 1, lat, wall));
+    let (lat, wall) = run_conns(conns, |c| bin_single(&addr, "serve", c, singles, n))?;
+    records.push(summarize_scenario("binary", "single", conns, 1, 1, lat, wall));
+    let (lat, wall) = run_conns(conns, |c| bin_batch(&addr, "serve", c, batches, batch, n))?;
+    records.push(summarize_scenario(
+        "binary",
+        "batch",
+        conns,
+        batch,
+        PIPELINE_WINDOW,
+        lat,
+        wall,
+    ));
+
+    let _ = setup.req("QUIT");
+    drop(setup);
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = server.join();
+
+    let mut table = Table::new(&[
+        "scenario", "conns", "requests", "batch", "window", "qps", "vps", "p50_us", "p95_us",
+        "p99_us",
+    ]);
+    for r in &records {
+        table.row(vec![
+            r.scenario.clone(),
+            r.conns.to_string(),
+            r.requests.to_string(),
+            r.batch.to_string(),
+            r.window.to_string(),
+            format!("{:.0}", r.qps),
+            format!("{:.0}", r.vps),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p95_us),
+            format!("{:.1}", r.p99_us),
+        ]);
+    }
+    let text = table.render();
+    std::fs::write(out_dir.join("serving.txt"), &text)?;
+    std::fs::write(out_dir.join("serving.csv"), table.csv())?;
+    let json = serving_json_text(quick, threads, &spec, &records);
+    let json_path = out_dir.join("BENCH_serving.json");
+    std::fs::write(&json_path, &json)
+        .with_context(|| format!("writing {}", json_path.display()))?;
+    Ok(format!("{text}json: {}\n", json_path.display()))
+}
+
+fn serving_json_text(quick: bool, threads: usize, graph: &str, records: &[ServeRecord]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"bench\": \"serving\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"graph\": \"{graph}\",\n"));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"scenario\": \"{}\",\n", r.scenario));
+        out.push_str(&format!("      \"protocol\": \"{}\",\n", r.protocol));
+        out.push_str(&format!("      \"mode\": \"{}\",\n", r.mode));
+        out.push_str(&format!("      \"conns\": {},\n", r.conns));
+        out.push_str(&format!("      \"requests\": {},\n", r.requests));
+        out.push_str(&format!("      \"batch\": {},\n", r.batch));
+        out.push_str(&format!("      \"window\": {},\n", r.window));
+        out.push_str(&format!("      \"qps\": {:.1},\n", r.qps));
+        out.push_str(&format!("      \"vertices_per_sec\": {:.1},\n", r.vps));
+        out.push_str(&format!("      \"p50_us\": {:.1},\n", r.p50_us));
+        out.push_str(&format!("      \"p95_us\": {:.1},\n", r.p95_us));
+        out.push_str(&format!("      \"p99_us\": {:.1}\n", r.p99_us));
+        out.push_str(if i + 1 == records.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(scenario: &str, protocol: &'static str, mode: &'static str) -> ServeRecord {
+        ServeRecord {
+            scenario: scenario.to_string(),
+            protocol,
+            mode,
+            conns: 2,
+            requests: 800,
+            batch: 64,
+            window: 16,
+            qps: 12345.6789,
+            vps: 790123.0,
+            p50_us: 81.25,
+            p95_us: 190.5,
+            p99_us: 402.0,
+        }
+    }
+
+    #[test]
+    fn serving_json_shape() {
+        let records =
+            [rec("line/single", "line", "single"), rec("binary/batch", "binary", "batch")];
+        let text = serving_json_text(true, 4, "rmat:12:8", &records);
+        assert!(text.contains("\"schema\": 1"), "{text}");
+        assert!(text.contains("\"bench\": \"serving\""));
+        assert!(text.contains("\"graph\": \"rmat:12:8\""));
+        assert!(text.contains("\"scenario\": \"binary/batch\""));
+        assert!(text.contains("\"qps\": 12345.7"));
+        assert!(text.contains("\"p99_us\": 402.0"));
+        // Valid JSON: no trailing comma before the closing bracket.
+        assert!(!text.contains(",\n  ]"), "{text}");
+    }
+
+    #[test]
+    fn percentiles_clamp() {
+        assert_eq!(pctl(&[], 0.5), 0.0);
+        let one = [7.0];
+        assert_eq!(pctl(&one, 0.5), 7.0);
+        assert_eq!(pctl(&one, 0.99), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(pctl(&v, 0.50), 50.0);
+        assert_eq!(pctl(&v, 0.99), 99.0);
+    }
+
+    #[test]
+    fn vertex_ids_stay_in_range() {
+        let n = 1 << 12;
+        for i in 0..1000 {
+            for c in 0..4 {
+                assert!((vid_at(i, c, n) as usize) < n);
+            }
+        }
+    }
+}

@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use contour::bench::figures;
+use contour::bench::{figures, serve};
 use contour::cc::{self, Algorithm, RunContext};
 use contour::cli::Args;
 use contour::coordinator::{self, algorithm_by_name, Coordinator, Job};
@@ -67,8 +67,8 @@ fn print_usage() {
          \x20        [--trace FILE]  (write the run's span timeline as Chrome trace JSON)\n\
          \x20 contour batch [--graph FILE | --gen SPEC] --algs A,B,C [--workers W]\n\
          \x20 contour bench TARGET [--quick] [--out DIR] [--threads T] [--baseline] [--trace FILE]\n\
-         \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt hotpath all\n\
-         \x20        (--baseline: hotpath only — rewrite ./BENCH_hotpath.json; run from the repo root)\n\
+         \x20        TARGET: table1 fig1 fig2 fig3 fig4 distsim delaunay-scaling pjrt hotpath serve all\n\
+         \x20        (--baseline: hotpath/serve — rewrite ./BENCH_{{hotpath,serving}}.json; run from the repo root)\n\
          \x20        (--trace: afterwards run one traced RMAT pass and export its timeline)\n\
          \x20 contour stats [--graph FILE | --gen SPEC]\n\
          \x20 contour serve [--addr HOST:PORT] [--threads T]\n\
@@ -253,6 +253,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "delaunay-scaling" => figures::delaunay_scaling(&out, quick, threads)?,
             "pjrt" => figures::pjrt_report(&out)?,
             "hotpath" => figures::hotpath_json(&out, quick, threads)?,
+            "serve" => serve::serving_json(&out, quick, threads)?,
             other => bail!("unknown bench target {other:?}"),
         };
         println!("{text}");
@@ -273,14 +274,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // Read-then-write instead of fs::copy: with `--out .` source and
     // destination are the same file, and copy's open-with-truncate
     // would zero the baseline before reading it.
-    if target == "hotpath" && args.flag("baseline") {
-        let src = out.join("BENCH_hotpath.json");
-        let dst = Path::new("BENCH_hotpath.json");
+    if matches!(target, "hotpath" | "serve") && args.flag("baseline") {
+        let file = match target {
+            "hotpath" => "BENCH_hotpath.json",
+            _ => "BENCH_serving.json",
+        };
+        let src = out.join(file);
+        let dst = Path::new(file);
         let bytes = std::fs::read(&src)
             .with_context(|| format!("reading bench output {}", src.display()))?;
         std::fs::write(dst, bytes)
             .with_context(|| format!("writing {}", dst.display()))?;
-        println!("baseline refreshed: ./BENCH_hotpath.json <- {}", src.display());
+        println!("baseline refreshed: ./{file} <- {}", src.display());
     }
     // `--trace FILE`: after the targets, run one traced RMAT pass with
     // the exact frontier and export its timeline as Chrome trace-event

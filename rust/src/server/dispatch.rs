@@ -1,0 +1,805 @@
+//! Transport-agnostic request dispatch — the one place every verb is
+//! interpreted.
+//!
+//! Both wire adapters feed this core: the legacy line protocol
+//! ([`super::Session`] / `handle_conn`) and the framed binary protocol
+//! v2 ([`super::protocol`]). A request is (verb, args, [`Body`]); the
+//! reply is a [`Reply`] value each adapter renders in its own framing.
+//! Keeping parsing and rendering out of here is what guarantees the two
+//! protocols cannot drift: there is exactly one behavior to test, and
+//! the adapters are thin serializers.
+//!
+//! Admission control also lives here so both protocols share it: verbs
+//! that always do heavy work (graph builds, partitioning, snapshot IO)
+//! take a global heavy-verb permit up front, and the CC/PCC/LABELS/
+//! QUERY/BQUERY compute closures take one only on a cache miss — cache
+//! hits and snapshot queries stay wait-free, the ConnectIt property the
+//! serving path is built around. With no permit free the reply is busy
+//! (line: `ERR busy: ...`; binary: a BUSY frame) instead of unbounded
+//! queueing.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cc::contour::FrontierMode;
+use crate::cc::Algorithm;
+use crate::coordinator::{algorithm_by_name_with, auto_select};
+use crate::graph::{io, stats, Csr, EdgeList};
+use crate::obs::RunTrace;
+use crate::shard::{self, ShardedGraph};
+use crate::stream::StreamingCc;
+use crate::VId;
+
+use super::{graph_from_spec, parse_edge_line, CcEntry, HeavyPermit, ServerState, RECENT_CAP};
+
+/// Marker error for admission-control rejections, so adapters can tell
+/// "server at capacity, retry" (BUSY) apart from real errors (ERR).
+#[derive(Debug)]
+pub struct Busy(pub String);
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Busy {}
+
+/// Take a heavy-verb permit or fail with [`Busy`].
+fn heavy_permit(state: &ServerState) -> Result<HeavyPermit<'_>> {
+    state.try_heavy().ok_or_else(|| {
+        anyhow::Error::new(Busy(format!(
+            "{} heavy requests in flight (cap {0})",
+            state.heavy_cap()
+        )))
+    })
+}
+
+/// A request's out-of-band payload.
+pub enum Body<'a> {
+    /// No payload (most verbs).
+    None,
+    /// Line-protocol UPLOAD: the announced edge lines, pulled one at a
+    /// time from the transport.
+    Lines(&'a mut dyn FnMut() -> Result<String>),
+    /// Binary UPLOAD: the decoded edge list.
+    Edges(&'a [(VId, VId)]),
+    /// Binary BQUERY: the decoded vertex ids.
+    Ids(&'a [VId]),
+}
+
+/// A transport-agnostic reply. `Page` and `Batch` keep label data in
+/// structured form so the binary adapter can serialize them compactly
+/// (`Page` zero-copy from the cached label slice) while the line
+/// adapter renders the classic text.
+pub enum Reply {
+    /// Success; the text after `OK` (may be empty).
+    Ok(String),
+    /// A LABELS page backed by a cached labelling.
+    Page { total: usize, entry: Arc<CcEntry>, lo: usize, hi: usize },
+    /// BQUERY: one label per requested vertex, in request order.
+    Batch(Vec<VId>),
+    Err(String),
+    /// Admission control rejected the request; retry later.
+    Busy(String),
+    Pong,
+    /// QUIT: close the connection.
+    Bye,
+    /// HELLO accepted: switch the connection to binary framing v2.
+    Upgrade,
+}
+
+/// Render a reply in the line protocol. `None` means QUIT (the caller
+/// writes `BYE` and closes).
+pub fn render_line(reply: &Reply) -> Option<String> {
+    Some(match reply {
+        Reply::Ok(s) if s.is_empty() => "OK".to_string(),
+        Reply::Ok(s) => format!("OK {s}"),
+        Reply::Page { total, entry, lo, hi } => {
+            let labels = &entry.labels()[*lo..*hi];
+            let mut out = String::with_capacity(8 + 8 * labels.len());
+            out.push_str(&format!("OK {total}"));
+            for l in labels {
+                out.push(' ');
+                out.push_str(&l.to_string());
+            }
+            out
+        }
+        Reply::Batch(labels) => {
+            let mut out = format!("OK {}", labels.len());
+            for l in labels {
+                out.push(' ');
+                out.push_str(&l.to_string());
+            }
+            out
+        }
+        Reply::Err(e) => format!("ERR {e}"),
+        Reply::Busy(m) => format!("ERR busy: {m}"),
+        Reply::Pong => "PONG".to_string(),
+        Reply::Upgrade => "OK v2".to_string(),
+        Reply::Bye => return None,
+    })
+}
+
+/// Parse and dispatch one line-protocol request; UPLOAD payload lines
+/// are pulled through `read_extra`.
+pub fn handle_line(
+    state: &ServerState,
+    line: &str,
+    read_extra: &mut dyn FnMut() -> Result<String>,
+) -> Reply {
+    let mut fields = line.split_whitespace();
+    let verb = fields.next().unwrap_or("");
+    let rest: Vec<&str> = fields.collect();
+    if verb.eq_ignore_ascii_case("UPLOAD") {
+        dispatch(state, verb, &rest, Body::Lines(read_extra))
+    } else {
+        dispatch(state, verb, &rest, Body::None)
+    }
+}
+
+/// Dispatch one request. This is the single verb interpreter both wire
+/// adapters share; it also meters the request (`requests`,
+/// `lat/<verb>`, `err/<verb>`, the RECENT ring) so line and binary
+/// traffic land in the same counters.
+pub fn dispatch(state: &ServerState, verb: &str, args: &[&str], body: Body<'_>) -> Reply {
+    state.metrics.requests.inc();
+    let started = Instant::now();
+    let cmd = verb.to_ascii_uppercase();
+    if cmd == "QUIT" {
+        return Reply::Bye;
+    }
+    let (reply, ok) = match run_verb(state, &cmd, args, body) {
+        Ok(r) => (r, true),
+        Err(e) => {
+            // Error paths are metered like successes: the latency
+            // histogram below plus a per-verb error counter here.
+            state.note_err(&cmd);
+            if let Some(b) = e.downcast_ref::<Busy>() {
+                state.metrics.busy.inc();
+                (Reply::Busy(b.0.clone()), false)
+            } else {
+                state.metrics.errors.inc();
+                (Reply::Err(format!("{e}")), false)
+            }
+        }
+    };
+    // Latency is recorded before the reply is even serialized, so
+    // `lat/<verb>` meters request handling, not socket writes.
+    state.note_verb(&cmd, ok, started.elapsed());
+    reply
+}
+
+fn run_verb(state: &ServerState, cmd: &str, rest: &[&str], body: Body<'_>) -> Result<Reply> {
+    // Verbs that always do heavy work are admission-controlled up
+    // front. CC/PCC/LABELS/QUERY/BQUERY take a permit inside their
+    // compute closures instead: a cache hit must stay wait-free.
+    let _gate = match cmd {
+        "GEN" | "UPLOAD" | "LOAD" | "SHARD" | "STREAM" | "SEPOCH" | "SSAVE" | "SLOAD" => {
+            Some(heavy_permit(state)?)
+        }
+        _ => None,
+    };
+    Ok(match cmd {
+        "PING" => Reply::Pong,
+        "HELLO" => cmd_hello(rest)?,
+        "GEN" => Reply::Ok(cmd_gen(state, rest)?),
+        "UPLOAD" => Reply::Ok(cmd_upload(state, rest, body)?),
+        "LOAD" => Reply::Ok(cmd_load(state, rest)?),
+        "CC" => Reply::Ok(cmd_cc(state, rest)?),
+        "LABELS" => cmd_labels(state, rest)?,
+        "QUERY" => Reply::Ok(cmd_query(state, rest)?),
+        "BQUERY" => cmd_bquery(state, rest, body)?,
+        "STATS" => Reply::Ok(cmd_stats(state, rest)?),
+        "SHARD" => Reply::Ok(cmd_shard(state, rest)?),
+        "PCC" => Reply::Ok(cmd_pcc(state, rest)?),
+        "SHARDSTATS" => Reply::Ok(cmd_shardstats(state, rest)?),
+        "STREAM" => Reply::Ok(cmd_stream(state, rest)?),
+        "SADD" => Reply::Ok(cmd_sadd(state, rest)?),
+        "SEPOCH" => Reply::Ok(cmd_sepoch(state, rest)?),
+        "SQUERY" => Reply::Ok(cmd_squery(state, rest)?),
+        "SSAVE" => Reply::Ok(cmd_ssave(state, rest)?),
+        "SLOAD" => Reply::Ok(cmd_sload(state, rest)?),
+        "LIST" => Reply::Ok(
+            state
+                .list()
+                .iter()
+                .map(|(n, v, m)| format!("{n}:{v}:{m}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ),
+        "DROP" => match rest.first() {
+            Some(name) if state.drop_graph(name) => Reply::Ok(String::new()),
+            Some(name) => bail!("no graph or stream {name:?}"),
+            None => bail!("DROP needs a name"),
+        },
+        "METRICS" => Reply::Ok(format!(
+            "{}{}{}{}",
+            state.metrics.render(),
+            state.render_cache_stats(),
+            state.render_verb_lat(),
+            state.render_verb_err()
+        )),
+        "TRACE" => match rest.first() {
+            Some(name) => match state.trace_of(name) {
+                Some(t) => Reply::Ok(t.render_wire()),
+                None => bail!("no trace for {name:?} (run CC or PCC first)"),
+            },
+            None => bail!("usage: TRACE name"),
+        },
+        "RECENT" => Reply::Ok(cmd_recent(state, rest)?),
+        other => bail!("unknown command {other:?}"),
+    })
+}
+
+/// `HELLO v` — protocol negotiation. Accepting v2 upgrades the
+/// connection to binary framing (the transport reacts to
+/// [`Reply::Upgrade`]; over a non-upgradable transport it is a no-op
+/// acknowledgment). Servers predating v2 answer `ERR unknown command`,
+/// which clients take as "line protocol only" — negotiation never
+/// desyncs either side.
+fn cmd_hello(rest: &[&str]) -> Result<Reply> {
+    let v = match rest {
+        [v] => v.parse::<u32>().map_err(|e| anyhow!("bad protocol version {v:?}: {e}"))?,
+        _ => bail!("usage: HELLO version"),
+    };
+    anyhow::ensure!(v == 2, "unsupported protocol version {v} (server speaks v2)");
+    Ok(Reply::Upgrade)
+}
+
+/// `RECENT [n]` — the last (up to `n`) handled requests as
+/// `verb:ok:dur_ns`, oldest first; the reply leads with the count.
+fn cmd_recent(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let n = match rest {
+        [] => RECENT_CAP,
+        [n] => n.parse::<usize>().map_err(|e| anyhow!("bad count: {e}"))?,
+        _ => bail!("usage: RECENT [n]"),
+    };
+    let r = state.recent.lock().unwrap();
+    let skip = r.len().saturating_sub(n);
+    let mut out = format!("{}", r.len() - skip);
+    for (verb, ok, ns) in r.iter().skip(skip) {
+        out.push_str(&format!(" {verb}:{}:{ns}", *ok as u8));
+    }
+    Ok(out)
+}
+
+fn cmd_gen(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, spec) = match rest {
+        [name, spec] => (*name, *spec),
+        _ => bail!("usage: GEN name SPEC"),
+    };
+    let g = graph_from_spec(spec)?.into_csr().shuffled_edges(7);
+    let (n, m) = (g.n, g.m());
+    state.insert(name, g);
+    state.metrics.graphs_loaded.inc();
+    Ok(format!("{n} {m}"))
+}
+
+fn cmd_upload(state: &ServerState, rest: &[&str], body: Body<'_>) -> Result<String> {
+    match body {
+        Body::Lines(read_extra) => {
+            let (name, m) = match rest {
+                [name, m] => (*name, m.parse::<usize>()?),
+                _ => bail!("usage: UPLOAD name edge_count"),
+            };
+            anyhow::ensure!(m <= 50_000_000, "refusing upload of {m} edges");
+            let mut pairs = Vec::with_capacity(m);
+            let mut max_v = 0u64;
+            // The client has already committed to sending `m` lines: on
+            // a bad line we must still drain the remainder before
+            // replying ERR, or the leftover edge lines get parsed as
+            // commands and the whole connection desynchronizes.
+            // Transport errors (`?` on read_extra) abort outright — the
+            // connection is gone anyway.
+            let mut bad: Option<anyhow::Error> = None;
+            for i in 0..m {
+                let line = read_extra()?;
+                if bad.is_some() {
+                    continue; // draining the announced payload
+                }
+                match parse_edge_line(&line) {
+                    Ok((u, v)) => {
+                        max_v = max_v.max(u).max(v);
+                        pairs.push((u as VId, v as VId));
+                    }
+                    Err(e) => bad = Some(anyhow!("edge line {i}: {e}")),
+                }
+            }
+            if let Some(e) = bad {
+                return Err(e);
+            }
+            admit_upload(state, name, max_v, pairs)
+        }
+        // The binary frame carries the decoded edges; an edge count in
+        // the args (line-protocol habit) is tolerated but the payload
+        // is authoritative.
+        Body::Edges(edges) => {
+            let name = match rest {
+                [name] | [name, _] => *name,
+                _ => bail!("usage: UPLOAD name edge_count"),
+            };
+            anyhow::ensure!(edges.len() <= 50_000_000, "refusing upload of {} edges", edges.len());
+            let max_v = edges.iter().map(|&(u, v)| u.max(v)).max().unwrap_or(0);
+            admit_upload(state, name, u64::from(max_v), edges.to_vec())
+        }
+        _ => bail!("UPLOAD needs an edge payload"),
+    }
+}
+
+fn admit_upload(
+    state: &ServerState,
+    name: &str,
+    max_v: u64,
+    pairs: Vec<(VId, VId)>,
+) -> Result<String> {
+    let g = EdgeList::from_pairs(max_v as usize + 1, &pairs).into_csr();
+    let (n, mm) = (g.n, g.m());
+    state.insert(name, g);
+    state.metrics.graphs_loaded.inc();
+    Ok(format!("{n} {mm}"))
+}
+
+fn cmd_load(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, path) = match rest {
+        [name, path] => (*name, *path),
+        _ => bail!("usage: LOAD name PATH"),
+    };
+    let g = io::read_auto(std::path::Path::new(path))?.into_csr();
+    let (n, m) = (g.n, g.m());
+    state.insert(name, g);
+    state.metrics.graphs_loaded.inc();
+    Ok(format!("{n} {m}"))
+}
+
+fn resolve_alg(
+    state: &ServerState,
+    g: &Csr,
+    alg: &str,
+) -> Result<Box<dyn Algorithm + Send + Sync>> {
+    resolve_alg_with(state, g, alg, None)
+}
+
+/// Resolve an algorithm name with an optional Contour frontier engine
+/// pinned (`Some(mode)`; `None` keeps the process default).
+fn resolve_alg_with(
+    state: &ServerState,
+    g: &Csr,
+    alg: &str,
+    frontier: Option<FrontierMode>,
+) -> Result<Box<dyn Algorithm + Send + Sync>> {
+    if alg == "auto" {
+        let mut c = auto_select(&stats::stats(g)).with_threads(state.threads);
+        if let Some(mode) = frontier {
+            c = c.with_frontier_mode(mode);
+        }
+        Ok(Box::new(c))
+    } else {
+        algorithm_by_name_with(alg, state.threads, frontier)
+    }
+}
+
+fn cmd_cc(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, alg_name, fmode) = match rest {
+        [name] => (*name, "C-2", None),
+        [name, alg] => (*name, *alg, None),
+        [name, alg, mode] => (
+            *name,
+            *alg,
+            Some(FrontierMode::parse(mode).ok_or_else(|| {
+                anyhow!("frontier mode must be exact|chunk|off, got {mode:?}")
+            })?),
+        ),
+        _ => bail!("usage: CC name [alg] [exact|chunk|off]"),
+    };
+    let g = state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+    // Serve repeat CC requests for an unchanged (graph, alg) pair from
+    // the labels cache: graphs are immutable once inserted, and
+    // replacing/dropping a name purges its entries. Labels are
+    // bit-identical across frontier engines, but iterations/millis are
+    // not — an explicitly pinned mode gets its own cache slot so the
+    // reply reflects the engine that was asked for (DROP and replace
+    // purge by name, covering these slots too).
+    let key = match fmode {
+        None => alg_name.to_string(),
+        Some(m) => format!("{alg_name}#{}", m.as_str()),
+    };
+    let (entry, ran_ms) = state.cc_cached(name, &key, &g, || {
+        // Misses do heavy work: admission-controlled. Hits above stay
+        // wait-free.
+        let _permit = heavy_permit(state)?;
+        let alg = resolve_alg_with(state, &g, alg_name, fmode)?;
+        // Every computed run records a span timeline for the TRACE
+        // verb — the recorder costs two clock reads per pass, noise
+        // next to the pass itself, so it is always on here.
+        let r = alg.run_traced(&g);
+        if let Some(t) = &r.trace {
+            state.store_trace(name, Arc::clone(t));
+        }
+        Ok(r)
+    })?;
+    // A cache hit reports 0.000 ms: no connectivity work was done.
+    Ok(format!("{} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
+}
+
+/// The labelling a read verb (LABELS/QUERY/BQUERY) answers from, as a
+/// cached entry: static graphs key on the algorithm (default C-2; one
+/// run serves every page and query), streams key on a sealed epoch
+/// (`epoch:<e>` in the selector slot, default = current). One entry
+/// resolution = one snapshot, so a batch never straddles epochs.
+fn resolve_entry(state: &ServerState, name: &str, selector: Option<&str>) -> Result<Arc<CcEntry>> {
+    if let Some(g) = state.get(name) {
+        let alg_name = selector.unwrap_or("C-2");
+        let (entry, _) = state.cc_cached(name, alg_name, &g, || {
+            let _permit = heavy_permit(state)?;
+            let alg = resolve_alg(state, &g, alg_name)?;
+            Ok(alg.run_with_stats(&g))
+        })?;
+        Ok(entry)
+    } else if let Some(s) = state.get_stream(name) {
+        let epoch = match selector {
+            None => s.epoch(),
+            Some(tok) => tok
+                .strip_prefix("epoch:")
+                .ok_or_else(|| {
+                    anyhow!("streams take `epoch:<e>`, not an algorithm ({tok:?})")
+                })?
+                .parse::<u64>()
+                .map_err(|e| anyhow!("bad epoch in {tok:?}: {e}"))?,
+        };
+        Ok(state.stream_cached(name, &s, epoch)?.0)
+    } else {
+        bail!("no graph or stream {name:?}")
+    }
+}
+
+/// `LABELS name [alg|epoch:<e>] [offset [count]]` — pages through the
+/// label array instead of silently truncating. The reply leads with
+/// the total label count so clients know when they have everything.
+fn cmd_labels(state: &ServerState, rest: &[&str]) -> Result<Reply> {
+    let mut it = rest.iter();
+    let name = *it.next().ok_or_else(|| anyhow!("usage: LABELS name [alg] [off [cnt]]"))?;
+    let mut selector: Option<&str> = None;
+    let mut nums: Vec<usize> = Vec::new();
+    for &tok in it {
+        if !tok.is_empty() && tok.bytes().all(|b| b.is_ascii_digit()) {
+            // All-digit tokens are positional offset/count. Parsing can
+            // still fail past usize::MAX — that must be a clean ERR,
+            // never a wrap and not a confusing fall-through into the
+            // algorithm slot.
+            nums.push(
+                tok.parse::<usize>().map_err(|_| anyhow!("offset/count {tok:?} out of range"))?,
+            );
+        } else if nums.is_empty() && selector.is_none() {
+            selector = Some(tok);
+        } else {
+            bail!("usage: LABELS name [alg] [offset [count]], got {tok:?}");
+        }
+    }
+    anyhow::ensure!(nums.len() <= 2, "usage: LABELS name [alg] [offset [count]]");
+    let offset = nums.first().copied().unwrap_or(0);
+    let count = nums.get(1).copied().unwrap_or(10_000);
+    let entry = resolve_entry(state, name, selector)?;
+    Ok(page_reply(entry, offset, count))
+}
+
+/// Clamp a page request against the label array: any offset/count,
+/// including usize::MAX, resolves to a valid (possibly empty) range.
+pub(crate) fn page_reply(entry: Arc<CcEntry>, offset: usize, count: usize) -> Reply {
+    let total = entry.labels().len();
+    let lo = offset.min(total);
+    let hi = lo.saturating_add(count).min(total);
+    Reply::Page { total, entry, lo, hi }
+}
+
+/// `QUERY name v [alg|epoch:<e>]` — one vertex's component label,
+/// answered from the same cached labelling LABELS pages (wait-free on
+/// a hit). The sequential cross-check for BQUERY.
+fn cmd_query(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, v, sel) = match rest {
+        [name, v] => (*name, *v, None),
+        [name, v, sel] => (*name, *v, Some(*sel)),
+        _ => bail!("usage: QUERY name v [alg|epoch:<e>]"),
+    };
+    let v = v.parse::<u64>().map_err(|e| anyhow!("bad vertex id {v:?}: {e}"))?;
+    let entry = resolve_entry(state, name, sel)?;
+    let labels = entry.labels();
+    let i = usize::try_from(v)
+        .ok()
+        .filter(|&i| i < labels.len())
+        .ok_or_else(|| anyhow!("vertex id {v} out of range (n = {})", labels.len()))?;
+    Ok(labels[i].to_string())
+}
+
+/// `BQUERY name [alg|epoch:<e>] v1 v2 ...` (line) or a binary frame
+/// carrying a packed id array — the vectorized read path. Every id is
+/// answered from one entry resolution, so the batch is consistent (one
+/// epoch/labelling) and wait-free on a cache hit.
+fn cmd_bquery(state: &ServerState, rest: &[&str], body: Body<'_>) -> Result<Reply> {
+    let name =
+        *rest.first().ok_or_else(|| anyhow!("usage: BQUERY name [alg|epoch:<e>] v1 v2 ..."))?;
+    let mut selector: Option<&str> = None;
+    let mut parsed: Vec<VId> = Vec::new();
+    for &tok in &rest[1..] {
+        if let Ok(v) = tok.parse::<VId>() {
+            parsed.push(v);
+        } else if parsed.is_empty() && selector.is_none() {
+            selector = Some(tok);
+        } else {
+            bail!("bad vertex id {tok:?}");
+        }
+    }
+    let ids: &[VId] = match body {
+        Body::Ids(ids) => {
+            anyhow::ensure!(
+                parsed.is_empty(),
+                "BQUERY takes ids in the frame payload or the arg list, not both"
+            );
+            ids
+        }
+        _ => &parsed,
+    };
+    anyhow::ensure!(!ids.is_empty(), "BQUERY needs at least one vertex id");
+    let entry = resolve_entry(state, name, selector)?;
+    let labels = entry.labels();
+    let mut out = Vec::with_capacity(ids.len());
+    for &v in ids {
+        let i = v as usize;
+        anyhow::ensure!(i < labels.len(), "vertex id {v} out of range (n = {})", labels.len());
+        out.push(labels[i]);
+    }
+    state.metrics.batch_queries.inc();
+    state.metrics.batch_vertices.add(out.len() as u64);
+    Ok(Reply::Batch(out))
+}
+
+fn cmd_stats(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let name = rest.first().ok_or_else(|| anyhow!("usage: STATS name"))?;
+    let g = state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+    let s = stats::stats(&g);
+    Ok(format!(
+        "n={} m={} components={} diameter={} max_degree={}",
+        s.n, s.m, s.num_components, s.pseudo_diameter, s.max_degree
+    ))
+}
+
+// ------------------------------------------------------- sharded verbs
+
+/// `SHARD name p [vertices|edges]` — partition a stored graph into `p`
+/// range shards (see [`crate::shard`]); the optional balance policy
+/// places fences by vertex count (default) or by cumulative edge
+/// count. Replaces any previous view and purges its cached PCC
+/// results.
+fn cmd_shard(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, p, balance) = match rest {
+        [name, p] => (*name, *p, shard::Balance::Vertices),
+        [name, p, b] => (
+            *name,
+            *p,
+            shard::Balance::parse(b)
+                .ok_or_else(|| anyhow!("balance must be `vertices` or `edges`, got {b:?}"))?,
+        ),
+        _ => bail!("usage: SHARD name p [vertices|edges]"),
+    };
+    let p = p.parse::<usize>().map_err(|e| anyhow!("bad shard count: {e}"))?;
+    anyhow::ensure!(p >= 1, "shard count must be >= 1");
+    anyhow::ensure!(p <= 65_536, "shard count {p} unreasonably large");
+    let g = state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
+    // Hygiene: purge entries cached for the partition this SHARD
+    // replaces *before* publishing the new one — purging after could
+    // race a concurrent PCC and delete an entry freshly computed on
+    // the new partition. (A PCC racing into this window can still
+    // re-admit an old-partition entry; its weak identity is dead, so
+    // it can never serve and only waits for LRU.) Outside
+    // insert_sharded so the labels-cache lock is never nested inside
+    // the sharded lock.
+    let skey = ServerState::shard_cache_name(name);
+    state.labels_cache.write().unwrap().retain(|k, _| k.0 != skey);
+    let sg = state
+        .insert_sharded(name, &g, ShardedGraph::partition_with(&g, p, balance))
+        .ok_or_else(|| anyhow!("graph {name:?} was replaced during SHARD; retry"))?;
+    Ok(format!("{} {}", sg.p(), sg.boundary.len()))
+}
+
+/// `PCC name [alg] [exact|chunk|off]` — partitioned connectivity:
+/// shard-local runs concurrently (one pool job per shard), then
+/// boundary merge. The optional frontier mode pins the Contour engine
+/// like CC's — with `exact`, repeated runs on one partition reuse each
+/// shard's cached vertex→chunk index (`chunk_index_reused` in METRICS)
+/// instead of rebuilding it. Results are cached per
+/// `(name, alg, mode, p, balance)` with the same identity rules as
+/// `CC` (a cache hit reports 0.000 ms).
+fn cmd_pcc(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, alg_name, fmode) = match rest {
+        [name] => (*name, "C-2", None),
+        [name, alg] => (*name, *alg, None),
+        [name, alg, mode] => (
+            *name,
+            *alg,
+            Some(FrontierMode::parse(mode).ok_or_else(|| {
+                anyhow!("frontier mode must be exact|chunk|off, got {mode:?}")
+            })?),
+        ),
+        _ => bail!("usage: PCC name [alg] [exact|chunk|off]"),
+    };
+    let sg = state
+        .get_sharded(name)
+        .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
+    let threads = state.threads;
+    let key = match fmode {
+        None => alg_name.to_string(),
+        Some(m) => format!("{alg_name}#{}", m.as_str()),
+    };
+    let (entry, ran_ms) = state.pcc_cached(name, &key, &sg, || {
+        let _permit = heavy_permit(state)?;
+        let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
+            // Drive the §IV-E policy from the heaviest shard's topology
+            // (range partitioning, so shards inherit the source graph's
+            // shape).
+            let big = sg
+                .shards
+                .iter()
+                .max_by_key(|s| s.graph.m())
+                .expect("a partition has at least one shard");
+            let mut c = auto_select(big.stats()).with_threads(threads);
+            if let Some(mode) = fmode {
+                c = c.with_frontier_mode(mode);
+            }
+            Box::new(c)
+        } else {
+            algorithm_by_name_with(alg_name, threads, fmode)?
+        };
+        // Computed runs share one timeline: driver track (the pcc +
+        // merge spans) plus one track per shard.
+        let tr = Arc::new(RunTrace::new());
+        let r = shard::run_sharded_ctx(&sg, alg.as_ref(), threads, Some(&tr));
+        state.store_trace(name, tr);
+        Ok(r)
+    })?;
+    Ok(format!("{} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
+}
+
+/// `SHARDSTATS name` — per-shard topology of a sharded view.
+fn cmd_shardstats(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let name = rest.first().ok_or_else(|| anyhow!("usage: SHARDSTATS name"))?;
+    let sg = state
+        .get_sharded(name)
+        .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
+    let mut out = format!(
+        "p={} n={} m={} boundary={} balance={}",
+        sg.p(),
+        sg.n,
+        sg.m,
+        sg.boundary.len(),
+        sg.balance.as_str()
+    );
+    for (k, sh) in sg.shards.iter().enumerate() {
+        let st = sh.stats();
+        out.push_str(&format!(
+            " shard{k}={}:{}:{}:{}:{}",
+            sh.lo, sh.hi, st.m, st.num_components, st.max_degree
+        ));
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------- streaming verbs
+
+fn stream_of(state: &ServerState, name: &str) -> Result<Arc<StreamingCc>> {
+    state.get_stream(name).ok_or_else(|| anyhow!("no stream {name:?}"))
+}
+
+fn cmd_stream(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, n, extra) = match rest {
+        [name, n, extra @ ..] if extra.len() <= 2 => (*name, n.parse::<usize>()?, extra),
+        _ => bail!("usage: STREAM name n [walpath] [maxhist]"),
+    };
+    // Extras in either order: a number is the history cap, anything
+    // else is the WAL path.
+    let mut wal: Option<&str> = None;
+    let mut hist: Option<usize> = None;
+    for tok in extra {
+        if let Ok(h) = tok.parse::<usize>() {
+            anyhow::ensure!(hist.is_none(), "duplicate maxhist argument");
+            hist = Some(h);
+        } else {
+            anyhow::ensure!(wal.is_none(), "duplicate WAL path argument");
+            wal = Some(*tok);
+        }
+    }
+    let threads = state.threads;
+    let s = state.create_stream(name, wal.map(Path::new), || {
+        let mut s = StreamingCc::open(n, threads, wal.map(Path::new))?;
+        if let Some(h) = hist {
+            s = s.with_max_history(h);
+        }
+        Ok(s)
+    })?;
+    if s.epoch() > 0 {
+        // Recovery-on-open sealed an implicit epoch, same as SLOAD.
+        state.metrics.stream_epochs.inc();
+    }
+    Ok(format!("{n} {}", s.epoch()))
+}
+
+fn cmd_sadd(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let name = rest.first().ok_or_else(|| anyhow!("usage: SADD name u v [u v ...]"))?;
+    let ids: Vec<VId> = rest[1..]
+        .iter()
+        .map(|t| t.parse::<VId>().map_err(|e| anyhow!("bad vertex id {t:?}: {e}")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!ids.is_empty() && ids.len() % 2 == 0, "SADD needs one or more u v pairs");
+    let edges: Vec<(VId, VId)> = ids.chunks_exact(2).map(|p| (p[0], p[1])).collect();
+    let s = stream_of(state, name)?;
+    let added = s.add_edges(&edges)?;
+    state.metrics.stream_edges.add(added as u64);
+    Ok(format!("{added} {}", s.epoch()))
+}
+
+fn cmd_sepoch(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let name = rest.first().ok_or_else(|| anyhow!("usage: SEPOCH name"))?;
+    let snap = stream_of(state, name)?.seal_epoch()?;
+    state.metrics.stream_epochs.inc();
+    Ok(format!("{} {}", snap.epoch, snap.num_components))
+}
+
+fn cmd_squery(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, op, args) = match rest {
+        [name, op, args @ ..] => (*name, op.to_ascii_uppercase(), args),
+        _ => bail!("usage: SQUERY name SAME|SIZE|COMPS|LABEL args... [epoch]"),
+    };
+    let nums: Vec<u64> = args
+        .iter()
+        .map(|t| t.parse::<u64>().map_err(|e| anyhow!("bad number {t:?}: {e}")))
+        .collect::<Result<_>>()?;
+    let s = stream_of(state, name)?;
+    state.metrics.stream_queries.inc();
+    let vid =
+        |x: u64| -> Result<VId> { VId::try_from(x).map_err(|_| anyhow!("vertex id {x} out of range")) };
+    match (op.as_str(), nums.as_slice()) {
+        ("SAME", [u, v]) | ("SAME", [u, v, _]) => {
+            let snap = s.snapshot_at(nums.get(2).copied())?;
+            let same = snap.same_comp(vid(*u)?, vid(*v)?)?;
+            Ok(format!("{} {}", same as u8, snap.epoch))
+        }
+        ("SIZE", [v]) | ("SIZE", [v, _]) => {
+            let snap = s.snapshot_at(nums.get(1).copied())?;
+            Ok(format!("{} {}", snap.comp_size(vid(*v)?)?, snap.epoch))
+        }
+        ("COMPS", []) | ("COMPS", [_]) => {
+            let snap = s.snapshot_at(nums.first().copied())?;
+            Ok(format!("{} {}", snap.num_components, snap.epoch))
+        }
+        ("LABEL", [v]) | ("LABEL", [v, _]) => {
+            let snap = s.snapshot_at(nums.get(1).copied())?;
+            Ok(format!("{} {}", snap.label(vid(*v)?)?, snap.epoch))
+        }
+        _ => bail!("usage: SQUERY name SAME u v [e] | SIZE v [e] | COMPS [e] | LABEL v [e]"),
+    }
+}
+
+fn cmd_ssave(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, path) = match rest {
+        [name, path] => (*name, *path),
+        _ => bail!("usage: SSAVE name PATH"),
+    };
+    let epoch = stream_of(state, name)?.save_snapshot(Path::new(path))?;
+    Ok(format!("{epoch}"))
+}
+
+fn cmd_sload(state: &ServerState, rest: &[&str]) -> Result<String> {
+    let (name, snap, wal) = match rest {
+        [name, snap] => (*name, *snap, None),
+        [name, snap, wal] => (*name, *snap, Some(*wal)),
+        _ => bail!("usage: SLOAD name SNAPPATH [WALPATH]"),
+    };
+    let threads = state.threads;
+    let s = state.create_stream(name, wal.map(Path::new), || {
+        StreamingCc::recover(Some(Path::new(snap)), wal.map(Path::new), threads)
+    })?;
+    state.metrics.stream_epochs.inc();
+    Ok(format!("{} {}", s.n(), s.epoch()))
+}

@@ -2,6 +2,7 @@
 //! `key=value` line (scrape-friendly, no external deps).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// A monotonically increasing counter.
 #[derive(Default, Debug)]
@@ -22,7 +23,7 @@ impl Counter {
 }
 
 /// The server's counter set.
-#[derive(Default, Debug)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: Counter,
     pub errors: Counter,
@@ -48,6 +49,52 @@ pub struct Metrics {
     pub stream_epochs: Counter,
     /// SQUERY requests served.
     pub stream_queries: Counter,
+    /// Wire bytes read from clients (line *and* binary transports).
+    pub bytes_in: Counter,
+    /// Wire bytes written to clients.
+    pub bytes_out: Counter,
+    /// Requests rejected by admission control: the global heavy-verb
+    /// semaphore (`ERR busy` / BUSY frames) plus per-connection
+    /// pipeline-window overflows.
+    pub busy: Counter,
+    /// Connections upgraded to binary framing via `HELLO 2`.
+    pub hello_upgrades: Counter,
+    /// BQUERY requests served.
+    pub batch_queries: Counter,
+    /// Total vertex ids answered across all BQUERY requests.
+    pub batch_vertices: Counter,
+    /// Process start, for `uptime_ms` and the `qps` gauge.
+    started: Instant,
+}
+
+// Manual impl: `Instant` has no `Default`, and "now" is the only
+// sensible start-of-life value anyway.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            requests: Counter::default(),
+            errors: Counter::default(),
+            graphs_loaded: Counter::default(),
+            cc_runs: Counter::default(),
+            cc_millis: Counter::default(),
+            cc_cache_hits: Counter::default(),
+            cc_cache_misses: Counter::default(),
+            shards_created: Counter::default(),
+            pcc_runs: Counter::default(),
+            pcc_millis: Counter::default(),
+            streams_created: Counter::default(),
+            stream_edges: Counter::default(),
+            stream_epochs: Counter::default(),
+            stream_queries: Counter::default(),
+            bytes_in: Counter::default(),
+            bytes_out: Counter::default(),
+            busy: Counter::default(),
+            hello_upgrades: Counter::default(),
+            batch_queries: Counter::default(),
+            batch_vertices: Counter::default(),
+            started: Instant::now(),
+        }
+    }
 }
 
 impl Metrics {
@@ -68,8 +115,15 @@ impl Metrics {
         let pool = crate::par::pool::stats();
         let frontier = crate::cc::contour::frontier_totals();
         let (idx_built, idx_reused) = crate::cc::contour::chunk_index_counters();
+        // Lifetime-average QPS: requests over uptime. Coarse on purpose
+        // (a gauge a scraper can sanity-check against its own rate
+        // computation), not a windowed rate.
+        let uptime = self.started.elapsed();
+        let qps = self.requests.get() as f64 / uptime.as_secs_f64().max(1e-9);
         format!(
-            "requests={} errors={} graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
+            "requests={} errors={} busy={} uptime_ms={} qps={qps:.1} bytes_in={} bytes_out={} \
+             hello_upgrades={} batch_queries={} batch_vertices={} \
+             graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
              cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
              streams={} stream_edges={} stream_epochs={} stream_queries={} pool_workers={} \
              pool_jobs={} pool_pulls={} pool_steals={} pool_parks={} pool_wakes={} \
@@ -81,6 +135,13 @@ impl Metrics {
              lat/pool_wait={} lat/pool_run={}",
             self.requests.get(),
             self.errors.get(),
+            self.busy.get(),
+            uptime.as_millis(),
+            self.bytes_in.get(),
+            self.bytes_out.get(),
+            self.hello_upgrades.get(),
+            self.batch_queries.get(),
+            self.batch_vertices.get(),
             self.graphs_loaded.get(),
             self.cc_runs.get(),
             self.cc_millis.get(),
@@ -140,6 +201,12 @@ mod tests {
         assert!(m.render().contains("frontier_full_sweeps="));
         assert!(m.render().contains("chunk_index_built="));
         assert!(m.render().contains("chunk_index_reused="));
+        // Serving-path counters are part of the scrape surface.
+        assert!(m.render().contains("uptime_ms="));
+        assert!(m.render().contains("qps="));
+        assert!(m.render().contains("bytes_in=0"));
+        assert!(m.render().contains("busy=0"));
+        assert!(m.render().contains("batch_queries=0"));
         // Pool latency histograms render as count:p50:p95:p99.
         let r = m.render();
         let wait = r

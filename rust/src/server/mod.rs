@@ -4,13 +4,24 @@
 //! *interactive* server where a Python client sends messages (over ZMQ)
 //! to a parallel Chapel back end that holds graphs in memory and answers
 //! `graph_cc(G)` queries (§III-A). This module reproduces that
-//! architecture with the Rust coordinator as the back end:
+//! architecture with the Rust coordinator as the back end, layered so
+//! the protocol surface cannot drift between transports:
 //!
-//! * line-oriented TCP protocol (ZMQ stand-in; one request per line,
-//!   one response per line — trivially scriptable from any language);
-//! * an in-memory session store of named graphs;
-//! * commands: upload/generate/load graphs, run connectivity with any
-//!   algorithm (or the §IV-E auto policy), stats, metrics, listing.
+//! * [`dispatch`] — the transport-agnostic verb interpreter: one
+//!   `dispatch(state, verb, args, body) -> Reply` core that both wire
+//!   adapters share (and that unit tests drive directly, no TCP);
+//! * the line-oriented TCP protocol below (ZMQ stand-in; one request
+//!   per line, one response per line — trivially scriptable from any
+//!   language) as a thin adapter over the core;
+//! * [`protocol`] — binary framing v2 (`HELLO 2` upgrades a line
+//!   connection): length-prefixed frames with request ids, pipelining
+//!   with out-of-order completion, vectorized `BQUERY`, zero-copy
+//!   `LABELS` pages;
+//! * an in-memory session store of named graphs, with admission
+//!   control: at most [`ServerState::heavy_cap`] heavy verbs run
+//!   concurrently server-wide (excess requests get `ERR busy: ...` /
+//!   a BUSY frame instead of queueing unboundedly), while cache hits
+//!   and point queries stay wait-free.
 //!
 //! `python/client/contour_client.py` is the Arkouda-style Python client.
 //! Python remains off the compute path — it only ships messages, exactly
@@ -28,15 +39,25 @@
 //!   LABELS name [ALG] [off [cnt]]  → OK total l_off .. l_{off+cnt-1}
 //!                                    (cnt defaults to 10000; page with
 //!                                    off/cnt, total = label count)
+//!   QUERY name v [ALG]             → OK label   (one vertex's component
+//!                                    label; streams take `epoch:<e>` in
+//!                                    the alg slot)
+//!   BQUERY name [ALG] v [v ...]    → OK count l l ...  (batch labels,
+//!                                    all answered from one snapshot;
+//!                                    binary frames carry the ids in the
+//!                                    payload instead of the arg list)
 //!   STATS name                     → OK n=.. m=.. components=.. ...
 //!   LIST                           → OK name:n:m ... shard/name:n:m ...
 //!                                    stream/name:n:m ...
 //!   DROP name                      → OK       (graph, shards or stream)
 //!   METRICS                        → OK requests=.. cc_runs=.. ...
+//!                                    uptime_ms=.. qps=.. bytes_in=..
 //!                                    cache/<name>=hits:misses ...
 //!                                    lat/<verb>=count:p50:p95:p99
+//!                                    err/<verb>=count
 //!                                    (per-verb request latency, ns, from
-//!                                    log₂ histograms; lat/pool_wait and
+//!                                    log₂ histograms — error paths are
+//!                                    metered too; lat/pool_wait and
 //!                                    lat/pool_run meter the worker pool)
 //!   TRACE name                     → OK n=.. dropped=.. span span ...
 //!                                    (the most recent CC/PCC run's span
@@ -45,6 +66,8 @@
 //!   RECENT [n]                     → OK count verb:ok:dur_ns ...
 //!                                    (ring buffer of the last requests,
 //!                                    oldest first)
+//!   HELLO 2                        → OK v2  (then the connection speaks
+//!                                    binary frames; see [`protocol`])
 //!   PING                           → PONG
 //!   QUIT                           → BYE (closes connection)
 //!
@@ -82,22 +105,21 @@
 //! retained epoch; default = current):
 //!   LABELS streamname [epoch:E] [off [cnt]] → OK total l.. l..
 
+pub mod dispatch;
 pub mod metrics;
+pub mod protocol;
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cc::contour::FrontierMode;
-use crate::cc::{self, Algorithm};
-use crate::coordinator::{algorithm_by_name_with, auto_select};
-use crate::graph::{gen, io, stats, Csr, EdgeList};
+use crate::cc;
+use crate::graph::{gen, Csr, EdgeList};
 use crate::obs::{Histogram, RunTrace};
 use crate::shard::{self, ShardedGraph};
 use crate::stream::{Snapshot, StreamingCc};
@@ -114,6 +136,11 @@ pub const CC_CACHE_CAP: usize = 16;
 /// Requests retained by the `RECENT` ring buffer.
 pub const RECENT_CAP: usize = 64;
 
+/// Default per-connection in-flight window for pipelined binary
+/// requests (see [`protocol`]): beyond this many unanswered heavy
+/// frames the connection gets BUSY replies instead of queueing.
+pub const DEFAULT_WINDOW: usize = 64;
+
 /// Every verb the dispatcher knows. `note_verb` interns the request's
 /// verb against this table so the latency map and the recent-request
 /// ring hold `&'static str`s and stay bounded even under a stream of
@@ -121,7 +148,7 @@ pub const RECENT_CAP: usize = 64;
 const VERBS: &[&str] = &[
     "PING", "GEN", "UPLOAD", "LOAD", "CC", "LABELS", "STATS", "SHARD", "PCC", "SHARDSTATS",
     "STREAM", "SADD", "SEPOCH", "SQUERY", "SSAVE", "SLOAD", "LIST", "DROP", "METRICS", "TRACE",
-    "RECENT",
+    "RECENT", "QUERY", "BQUERY", "HELLO",
 ];
 
 /// Backing storage for a cached labelling: static entries own their
@@ -170,6 +197,17 @@ impl CcEntry {
     }
 }
 
+/// A slot in the global heavy-verb semaphore, returned to the pool on
+/// drop. Held across a heavy verb's compute (never across a cache
+/// hit), so admission control bounds concurrent *work*, not requests.
+pub struct HeavyPermit<'a>(&'a ServerState);
+
+impl Drop for HeavyPermit<'_> {
+    fn drop(&mut self) {
+        self.0.heavy_avail.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
 /// Shared server state: the graph, shard and stream stores plus
 /// counters.
 pub struct ServerState {
@@ -210,9 +248,21 @@ pub struct ServerState {
     /// Per-verb request-latency histograms (`lat/<verb>` in METRICS).
     /// Keys are interned against [`VERBS`], so the map stays bounded.
     verb_lat: RwLock<HashMap<&'static str, Histogram>>,
+    /// Per-verb error counters (`err/<verb>` in METRICS), interned like
+    /// `verb_lat`. Errors also land in the latency histograms: a
+    /// failing verb's cost is as real as a succeeding one's.
+    verb_err: RwLock<HashMap<&'static str, AtomicU64>>,
     /// Ring buffer of the last [`RECENT_CAP`] handled requests as
     /// (verb, ok, duration ns), oldest first (the `RECENT` verb).
     recent: Mutex<VecDeque<(&'static str, bool, u64)>>,
+    /// Remaining slots in the global heavy-verb semaphore (admission
+    /// control): decremented by [`Self::try_heavy`], restored when the
+    /// [`HeavyPermit`] drops.
+    heavy_avail: AtomicUsize,
+    /// Total heavy-verb slots (the semaphore's capacity).
+    heavy_cap: usize,
+    /// Per-connection in-flight window for pipelined binary requests.
+    window: usize,
     pub metrics: Metrics,
     /// Worker threads each algorithm run may use (0 = all).
     pub threads: usize,
@@ -225,6 +275,11 @@ impl ServerState {
         // losing the pool amortization the server exists to exploit.
         // (0 = "all" already resolves to the pool size.)
         let threads = if threads == 0 { 0 } else { threads.min(crate::par::num_threads()) };
+        // Heavy verbs saturate the worker pool; admitting many more
+        // than the pool has threads only buys queueing and memory
+        // pressure. The floor keeps small machines (and tests) from
+        // serializing everything.
+        let heavy_cap = crate::par::num_threads().max(4);
         Self {
             graphs: RwLock::new(HashMap::new()),
             sharded: RwLock::new(HashMap::new()),
@@ -235,9 +290,55 @@ impl ServerState {
             wal_claims: Mutex::new(HashMap::new()),
             traces: RwLock::new(HashMap::new()),
             verb_lat: RwLock::new(HashMap::new()),
+            verb_err: RwLock::new(HashMap::new()),
             recent: Mutex::new(VecDeque::with_capacity(RECENT_CAP)),
+            heavy_avail: AtomicUsize::new(heavy_cap),
+            heavy_cap,
+            window: DEFAULT_WINDOW,
             metrics: Metrics::default(),
             threads,
+        }
+    }
+
+    /// Override admission-control limits: the per-connection pipeline
+    /// window (clamped to ≥ 1 — a window of 0 could never admit any
+    /// request) and the global heavy-verb cap (0 = reject every heavy
+    /// verb, useful for drain mode and tests).
+    pub fn with_admission(mut self, window: usize, heavy: usize) -> Self {
+        self.window = window.max(1);
+        self.heavy_cap = heavy;
+        self.heavy_avail = AtomicUsize::new(heavy);
+        self
+    }
+
+    /// Per-connection in-flight window for pipelined binary requests.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Capacity of the global heavy-verb semaphore.
+    pub fn heavy_cap(&self) -> usize {
+        self.heavy_cap
+    }
+
+    /// Try to claim a heavy-verb slot; `None` means the server is at
+    /// capacity and the request should be answered busy, not queued.
+    /// Wait-free (one CAS loop over contending claimers).
+    pub fn try_heavy(&self) -> Option<HeavyPermit<'_>> {
+        let mut cur = self.heavy_avail.load(Ordering::Acquire);
+        loop {
+            if cur == 0 {
+                return None;
+            }
+            match self.heavy_avail.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(HeavyPermit(self)),
+                Err(seen) => cur = seen,
+            }
         }
     }
 
@@ -343,6 +444,28 @@ impl ServerState {
         r.push_back((v, ok, ns));
     }
 
+    /// Count one ERR (or BUSY) reply against its verb — `err/<verb>` in
+    /// METRICS. Interned like `note_verb`, so garbage commands are not
+    /// interned and the map stays bounded.
+    fn note_err(&self, verb: &str) {
+        let Some(&v) = VERBS.iter().find(|&&v| v == verb) else {
+            return;
+        };
+        {
+            let m = self.verb_err.read().unwrap();
+            if let Some(c) = m.get(v) {
+                c.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.verb_err
+            .write()
+            .unwrap()
+            .entry(v)
+            .or_default()
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Per-verb latency histograms as ` lat/<verb>=count:p50:p95:p99`
     /// (leading space; empty before the first request; values in ns,
     /// sorted by verb), appended to the METRICS reply alongside the
@@ -351,6 +474,21 @@ impl ServerState {
         let m = self.verb_lat.read().unwrap();
         let mut pairs: Vec<String> =
             m.iter().map(|(v, h)| format!("lat/{v}={}", h.snapshot().render())).collect();
+        pairs.sort();
+        if pairs.is_empty() {
+            String::new()
+        } else {
+            format!(" {}", pairs.join(" "))
+        }
+    }
+
+    /// Per-verb error counters as ` err/<verb>=count ...` (leading
+    /// space; empty until the first error; sorted by verb), appended to
+    /// the METRICS reply after the latency histograms.
+    pub fn render_verb_err(&self) -> String {
+        let m = self.verb_err.read().unwrap();
+        let mut pairs: Vec<String> =
+            m.iter().map(|(v, c)| format!("err/{v}={}", c.load(Ordering::Relaxed))).collect();
         pairs.sort();
         if pairs.is_empty() {
             String::new()
@@ -778,7 +916,11 @@ pub fn graph_from_spec(spec: &str) -> Result<EdgeList> {
     })
 }
 
-/// One client session over any line-based transport.
+/// One client session over any line-based transport — a thin adapter
+/// over [`dispatch`]: parse the line, run the shared core, render the
+/// [`dispatch::Reply`] back to classic `OK ...`/`ERR ...` text. All
+/// verb logic lives in the core; this type exists so in-process callers
+/// (tests, tools) keep a line-level entry point.
 pub struct Session<'s> {
     state: &'s ServerState,
 }
@@ -796,532 +938,7 @@ impl<'s> Session<'s> {
         line: &str,
         mut read_extra: R,
     ) -> Option<String> {
-        self.state.metrics.requests.inc();
-        let started = Instant::now();
-        let mut fields = line.split_whitespace();
-        let cmd = fields.next().unwrap_or("").to_ascii_uppercase();
-        let rest: Vec<&str> = fields.collect();
-        let reply = match cmd.as_str() {
-            "PING" => Ok("PONG".to_string()),
-            "QUIT" => return None,
-            "GEN" => self.cmd_gen(&rest),
-            "UPLOAD" => self.cmd_upload(&rest, &mut read_extra),
-            "LOAD" => self.cmd_load(&rest),
-            "CC" => self.cmd_cc(&rest),
-            "LABELS" => self.cmd_labels(&rest),
-            "STATS" => self.cmd_stats(&rest),
-            "SHARD" => self.cmd_shard(&rest),
-            "PCC" => self.cmd_pcc(&rest),
-            "SHARDSTATS" => self.cmd_shardstats(&rest),
-            "STREAM" => self.cmd_stream(&rest),
-            "SADD" => self.cmd_sadd(&rest),
-            "SEPOCH" => self.cmd_sepoch(&rest),
-            "SQUERY" => self.cmd_squery(&rest),
-            "SSAVE" => self.cmd_ssave(&rest),
-            "SLOAD" => self.cmd_sload(&rest),
-            "LIST" => Ok(format!(
-                "OK {}",
-                self.state
-                    .list()
-                    .iter()
-                    .map(|(n, v, m)| format!("{n}:{v}:{m}"))
-                    .collect::<Vec<_>>()
-                    .join(" ")
-            )),
-            "DROP" => match rest.first() {
-                Some(name) if self.state.drop_graph(name) => Ok("OK".into()),
-                Some(name) => Err(anyhow!("no graph or stream {name:?}")),
-                None => Err(anyhow!("DROP needs a name")),
-            },
-            "METRICS" => Ok(format!(
-                "OK {}{}{}",
-                self.state.metrics.render(),
-                self.state.render_cache_stats(),
-                self.state.render_verb_lat()
-            )),
-            "TRACE" => match rest.first() {
-                Some(name) => match self.state.trace_of(name) {
-                    Some(t) => Ok(format!("OK {}", t.render_wire())),
-                    None => Err(anyhow!("no trace for {name:?} (run CC or PCC first)")),
-                },
-                None => Err(anyhow!("usage: TRACE name")),
-            },
-            "RECENT" => self.cmd_recent(&rest),
-            other => Err(anyhow!("unknown command {other:?}")),
-        };
-        // Latency is recorded before the reply is even serialized, so
-        // `lat/<verb>` meters request handling, not socket writes.
-        self.state.note_verb(&cmd, reply.is_ok(), started.elapsed());
-        Some(match reply {
-            Ok(r) => r,
-            Err(e) => {
-                self.state.metrics.errors.inc();
-                format!("ERR {e}")
-            }
-        })
-    }
-
-    /// `RECENT [n]` — the last (up to `n`) handled requests as
-    /// `verb:ok:dur_ns`, oldest first; the reply leads with the count.
-    fn cmd_recent(&self, rest: &[&str]) -> Result<String> {
-        let n = match rest {
-            [] => RECENT_CAP,
-            [n] => n.parse::<usize>().map_err(|e| anyhow!("bad count: {e}"))?,
-            _ => bail!("usage: RECENT [n]"),
-        };
-        let r = self.state.recent.lock().unwrap();
-        let skip = r.len().saturating_sub(n);
-        let mut out = format!("OK {}", r.len() - skip);
-        for (verb, ok, ns) in r.iter().skip(skip) {
-            out.push_str(&format!(" {verb}:{}:{ns}", *ok as u8));
-        }
-        Ok(out)
-    }
-
-    fn cmd_gen(&self, rest: &[&str]) -> Result<String> {
-        let (name, spec) = match rest {
-            [name, spec] => (*name, *spec),
-            _ => bail!("usage: GEN name SPEC"),
-        };
-        let g = graph_from_spec(spec)?.into_csr().shuffled_edges(7);
-        let (n, m) = (g.n, g.m());
-        self.state.insert(name, g);
-        self.state.metrics.graphs_loaded.inc();
-        Ok(format!("OK {n} {m}"))
-    }
-
-    fn cmd_upload<R: FnMut() -> Result<String>>(
-        &self,
-        rest: &[&str],
-        read_extra: &mut R,
-    ) -> Result<String> {
-        let (name, m) = match rest {
-            [name, m] => (*name, m.parse::<usize>()?),
-            _ => bail!("usage: UPLOAD name edge_count"),
-        };
-        anyhow::ensure!(m <= 50_000_000, "refusing upload of {m} edges");
-        let mut pairs = Vec::with_capacity(m);
-        let mut max_v = 0u64;
-        // The client has already committed to sending `m` lines: on a
-        // bad line we must still drain the remainder before replying
-        // ERR, or the leftover edge lines get parsed as commands and
-        // the whole connection desynchronizes. Transport errors (`?` on
-        // read_extra) abort outright — the connection is gone anyway.
-        let mut bad: Option<anyhow::Error> = None;
-        for i in 0..m {
-            let line = read_extra()?;
-            if bad.is_some() {
-                continue; // draining the announced payload
-            }
-            match parse_edge_line(&line) {
-                Ok((u, v)) => {
-                    max_v = max_v.max(u).max(v);
-                    pairs.push((u as VId, v as VId));
-                }
-                Err(e) => bad = Some(anyhow!("edge line {i}: {e}")),
-            }
-        }
-        if let Some(e) = bad {
-            return Err(e);
-        }
-        let g = EdgeList::from_pairs(max_v as usize + 1, &pairs).into_csr();
-        let (n, mm) = (g.n, g.m());
-        self.state.insert(name, g);
-        self.state.metrics.graphs_loaded.inc();
-        Ok(format!("OK {n} {mm}"))
-    }
-
-    fn cmd_load(&self, rest: &[&str]) -> Result<String> {
-        let (name, path) = match rest {
-            [name, path] => (*name, *path),
-            _ => bail!("usage: LOAD name PATH"),
-        };
-        let g = io::read_auto(std::path::Path::new(path))?.into_csr();
-        let (n, m) = (g.n, g.m());
-        self.state.insert(name, g);
-        self.state.metrics.graphs_loaded.inc();
-        Ok(format!("OK {n} {m}"))
-    }
-
-    fn resolve_alg(&self, g: &Csr, alg: &str) -> Result<Box<dyn Algorithm + Send + Sync>> {
-        self.resolve_alg_with(g, alg, None)
-    }
-
-    /// Resolve an algorithm name with an optional Contour frontier
-    /// engine pinned (`Some(mode)`; `None` keeps the process default).
-    fn resolve_alg_with(
-        &self,
-        g: &Csr,
-        alg: &str,
-        frontier: Option<FrontierMode>,
-    ) -> Result<Box<dyn Algorithm + Send + Sync>> {
-        if alg == "auto" {
-            let mut c = auto_select(&stats::stats(g)).with_threads(self.state.threads);
-            if let Some(mode) = frontier {
-                c = c.with_frontier_mode(mode);
-            }
-            Ok(Box::new(c))
-        } else {
-            algorithm_by_name_with(alg, self.state.threads, frontier)
-        }
-    }
-
-    fn cmd_cc(&self, rest: &[&str]) -> Result<String> {
-        let (name, alg_name, fmode) = match rest {
-            [name] => (*name, "C-2", None),
-            [name, alg] => (*name, *alg, None),
-            [name, alg, mode] => (
-                *name,
-                *alg,
-                Some(FrontierMode::parse(mode).ok_or_else(|| {
-                    anyhow!("frontier mode must be exact|chunk|off, got {mode:?}")
-                })?),
-            ),
-            _ => bail!("usage: CC name [alg] [exact|chunk|off]"),
-        };
-        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
-        // Serve repeat CC requests for an unchanged (graph, alg) pair
-        // from the labels cache: graphs are immutable once inserted,
-        // and replacing/dropping a name purges its entries. Labels are
-        // bit-identical across frontier engines, but iterations/millis
-        // are not — an explicitly pinned mode gets its own cache slot
-        // so the reply reflects the engine that was asked for (DROP and
-        // replace purge by name, covering these slots too).
-        let key = match fmode {
-            None => alg_name.to_string(),
-            Some(m) => format!("{alg_name}#{}", m.as_str()),
-        };
-        let (entry, ran_ms) = self.state.cc_cached(name, &key, &g, || {
-            let alg = self.resolve_alg_with(&g, alg_name, fmode)?;
-            // Every computed run records a span timeline for the TRACE
-            // verb — the recorder costs two clock reads per pass, noise
-            // next to the pass itself, so it is always on here.
-            let r = alg.run_traced(&g);
-            if let Some(t) = &r.trace {
-                self.state.store_trace(name, Arc::clone(t));
-            }
-            Ok(r)
-        })?;
-        // A cache hit reports 0.000 ms: no connectivity work was done.
-        Ok(format!("OK {} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
-    }
-
-    /// `LABELS name [alg] [offset [count]]` — pages through the label
-    /// array instead of silently truncating. The reply leads with the
-    /// total label count so clients know when they have everything.
-    /// For streams the alg slot takes `epoch:<e>` instead (default =
-    /// current epoch) and pages the sealed epoch's labelling.
-    fn cmd_labels(&self, rest: &[&str]) -> Result<String> {
-        let mut it = rest.iter();
-        let name = *it.next().ok_or_else(|| anyhow!("usage: LABELS name [alg] [off [cnt]]"))?;
-        let mut alg_name: Option<&str> = None;
-        let mut nums: Vec<usize> = Vec::new();
-        for &tok in it {
-            if let Ok(x) = tok.parse::<usize>() {
-                nums.push(x);
-            } else if nums.is_empty() && alg_name.is_none() {
-                alg_name = Some(tok);
-            } else {
-                bail!("usage: LABELS name [alg] [offset [count]], got {tok:?}");
-            }
-        }
-        anyhow::ensure!(nums.len() <= 2, "usage: LABELS name [alg] [offset [count]]");
-        let offset = nums.first().copied().unwrap_or(0);
-        let count = nums.get(1).copied().unwrap_or(10_000);
-        let entry = if let Some(g) = self.state.get(name) {
-            // Serve every page of one (graph, alg) from a single run —
-            // paging clients would otherwise trigger a full connectivity
-            // run per page. The same cache backs CC.
-            let alg_name = alg_name.unwrap_or("C-2");
-            self.state
-                .cc_cached(name, alg_name, &g, || {
-                    let alg = self.resolve_alg(&g, alg_name)?;
-                    Ok(alg.run_with_stats(&g))
-                })?
-                .0
-        } else if let Some(s) = self.state.get_stream(name) {
-            // Streams page their sealed-epoch labellings through the
-            // same cache; `epoch:<e>` in the alg slot picks a retained
-            // epoch (default current).
-            let epoch = match alg_name {
-                None => s.epoch(),
-                Some(tok) => tok
-                    .strip_prefix("epoch:")
-                    .ok_or_else(|| {
-                        anyhow!("stream LABELS takes `epoch:<e>`, not an algorithm ({tok:?})")
-                    })?
-                    .parse::<u64>()
-                    .map_err(|e| anyhow!("bad epoch in {tok:?}: {e}"))?,
-            };
-            self.state.stream_cached(name, &s, epoch)?.0
-        } else {
-            bail!("no graph or stream {name:?}");
-        };
-        let labels = entry.labels();
-        let total = labels.len();
-        let lo = offset.min(total);
-        let hi = lo.saturating_add(count).min(total);
-        let mut out = String::with_capacity(8 + 8 * (hi - lo));
-        out.push_str(&format!("OK {total}"));
-        for l in &labels[lo..hi] {
-            out.push(' ');
-            out.push_str(&l.to_string());
-        }
-        Ok(out)
-    }
-
-    fn cmd_stats(&self, rest: &[&str]) -> Result<String> {
-        let name = rest.first().ok_or_else(|| anyhow!("usage: STATS name"))?;
-        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
-        let s = stats::stats(&g);
-        Ok(format!(
-            "OK n={} m={} components={} diameter={} max_degree={}",
-            s.n, s.m, s.num_components, s.pseudo_diameter, s.max_degree
-        ))
-    }
-
-    // --------------------------------------------------- sharded verbs
-
-    /// `SHARD name p [vertices|edges]` — partition a stored graph into
-    /// `p` range shards (see [`crate::shard`]); the optional balance
-    /// policy places fences by vertex count (default) or by cumulative
-    /// edge count. Replaces any previous view and purges its cached PCC
-    /// results.
-    fn cmd_shard(&self, rest: &[&str]) -> Result<String> {
-        let (name, p, balance) = match rest {
-            [name, p] => (*name, *p, shard::Balance::Vertices),
-            [name, p, b] => (
-                *name,
-                *p,
-                shard::Balance::parse(b)
-                    .ok_or_else(|| anyhow!("balance must be `vertices` or `edges`, got {b:?}"))?,
-            ),
-            _ => bail!("usage: SHARD name p [vertices|edges]"),
-        };
-        let p = p.parse::<usize>().map_err(|e| anyhow!("bad shard count: {e}"))?;
-        anyhow::ensure!(p >= 1, "shard count must be >= 1");
-        anyhow::ensure!(p <= 65_536, "shard count {p} unreasonably large");
-        let g = self.state.get(name).ok_or_else(|| anyhow!("no graph {name:?}"))?;
-        // Hygiene: purge entries cached for the partition this SHARD
-        // replaces *before* publishing the new one — purging after
-        // could race a concurrent PCC and delete an entry freshly
-        // computed on the new partition. (A PCC racing into this
-        // window can still re-admit an old-partition entry; its weak
-        // identity is dead, so it can never serve and only waits for
-        // LRU.) Outside insert_sharded so the labels-cache lock is
-        // never nested inside the sharded lock.
-        let skey = ServerState::shard_cache_name(name);
-        self.state.labels_cache.write().unwrap().retain(|k, _| k.0 != skey);
-        let sg = self
-            .state
-            .insert_sharded(name, &g, ShardedGraph::partition_with(&g, p, balance))
-            .ok_or_else(|| anyhow!("graph {name:?} was replaced during SHARD; retry"))?;
-        Ok(format!("OK {} {}", sg.p(), sg.boundary.len()))
-    }
-
-    /// `PCC name [alg] [exact|chunk|off]` — partitioned connectivity:
-    /// shard-local runs concurrently (one pool job per shard), then
-    /// boundary merge. The optional frontier mode pins the Contour
-    /// engine like CC's — with `exact`, repeated runs on one partition
-    /// reuse each shard's cached vertex→chunk index
-    /// (`chunk_index_reused` in METRICS) instead of rebuilding it.
-    /// Results are cached per `(name, alg, mode, p, balance)` with the
-    /// same identity rules as `CC` (a cache hit reports 0.000 ms).
-    fn cmd_pcc(&self, rest: &[&str]) -> Result<String> {
-        let (name, alg_name, fmode) = match rest {
-            [name] => (*name, "C-2", None),
-            [name, alg] => (*name, *alg, None),
-            [name, alg, mode] => (
-                *name,
-                *alg,
-                Some(FrontierMode::parse(mode).ok_or_else(|| {
-                    anyhow!("frontier mode must be exact|chunk|off, got {mode:?}")
-                })?),
-            ),
-            _ => bail!("usage: PCC name [alg] [exact|chunk|off]"),
-        };
-        let sg = self
-            .state
-            .get_sharded(name)
-            .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
-        let threads = self.state.threads;
-        let key = match fmode {
-            None => alg_name.to_string(),
-            Some(m) => format!("{alg_name}#{}", m.as_str()),
-        };
-        let (entry, ran_ms) = self.state.pcc_cached(name, &key, &sg, || {
-            let alg: Box<dyn Algorithm + Send + Sync> = if alg_name == "auto" {
-                // Drive the §IV-E policy from the heaviest shard's
-                // topology (range partitioning, so shards inherit the
-                // source graph's shape).
-                let big = sg
-                    .shards
-                    .iter()
-                    .max_by_key(|s| s.graph.m())
-                    .expect("a partition has at least one shard");
-                let mut c = auto_select(big.stats()).with_threads(threads);
-                if let Some(mode) = fmode {
-                    c = c.with_frontier_mode(mode);
-                }
-                Box::new(c)
-            } else {
-                algorithm_by_name_with(alg_name, threads, fmode)?
-            };
-            // Computed runs share one timeline: driver track (the pcc +
-            // merge spans) plus one track per shard.
-            let tr = Arc::new(RunTrace::new());
-            let r = shard::run_sharded_ctx(&sg, alg.as_ref(), threads, Some(&tr));
-            self.state.store_trace(name, tr);
-            Ok(r)
-        })?;
-        Ok(format!("OK {} {} {:.3}", entry.components, entry.iterations, ran_ms.unwrap_or(0.0)))
-    }
-
-    /// `SHARDSTATS name` — per-shard topology of a sharded view.
-    fn cmd_shardstats(&self, rest: &[&str]) -> Result<String> {
-        let name = rest.first().ok_or_else(|| anyhow!("usage: SHARDSTATS name"))?;
-        let sg = self
-            .state
-            .get_sharded(name)
-            .ok_or_else(|| anyhow!("no sharded graph {name:?} (run SHARD first)"))?;
-        let mut out = format!(
-            "OK p={} n={} m={} boundary={} balance={}",
-            sg.p(),
-            sg.n,
-            sg.m,
-            sg.boundary.len(),
-            sg.balance.as_str()
-        );
-        for (k, sh) in sg.shards.iter().enumerate() {
-            let st = sh.stats();
-            out.push_str(&format!(
-                " shard{k}={}:{}:{}:{}:{}",
-                sh.lo, sh.hi, st.m, st.num_components, st.max_degree
-            ));
-        }
-        Ok(out)
-    }
-
-    // ------------------------------------------------- streaming verbs
-
-    fn stream(&self, name: &str) -> Result<Arc<StreamingCc>> {
-        self.state.get_stream(name).ok_or_else(|| anyhow!("no stream {name:?}"))
-    }
-
-    fn cmd_stream(&self, rest: &[&str]) -> Result<String> {
-        let (name, n, extra) = match rest {
-            [name, n, extra @ ..] if extra.len() <= 2 => (*name, n.parse::<usize>()?, extra),
-            _ => bail!("usage: STREAM name n [walpath] [maxhist]"),
-        };
-        // Extras in either order: a number is the history cap, anything
-        // else is the WAL path.
-        let mut wal: Option<&str> = None;
-        let mut hist: Option<usize> = None;
-        for tok in extra {
-            if let Ok(h) = tok.parse::<usize>() {
-                anyhow::ensure!(hist.is_none(), "duplicate maxhist argument");
-                hist = Some(h);
-            } else {
-                anyhow::ensure!(wal.is_none(), "duplicate WAL path argument");
-                wal = Some(*tok);
-            }
-        }
-        let threads = self.state.threads;
-        let s = self.state.create_stream(name, wal.map(Path::new), || {
-            let mut s = StreamingCc::open(n, threads, wal.map(Path::new))?;
-            if let Some(h) = hist {
-                s = s.with_max_history(h);
-            }
-            Ok(s)
-        })?;
-        if s.epoch() > 0 {
-            // Recovery-on-open sealed an implicit epoch, same as SLOAD.
-            self.state.metrics.stream_epochs.inc();
-        }
-        Ok(format!("OK {n} {}", s.epoch()))
-    }
-
-    fn cmd_sadd(&self, rest: &[&str]) -> Result<String> {
-        let name = rest.first().ok_or_else(|| anyhow!("usage: SADD name u v [u v ...]"))?;
-        let ids: Vec<VId> = rest[1..]
-            .iter()
-            .map(|t| t.parse::<VId>().map_err(|e| anyhow!("bad vertex id {t:?}: {e}")))
-            .collect::<Result<_>>()?;
-        anyhow::ensure!(
-            !ids.is_empty() && ids.len() % 2 == 0,
-            "SADD needs one or more u v pairs"
-        );
-        let edges: Vec<(VId, VId)> = ids.chunks_exact(2).map(|p| (p[0], p[1])).collect();
-        let s = self.stream(name)?;
-        let added = s.add_edges(&edges)?;
-        self.state.metrics.stream_edges.add(added as u64);
-        Ok(format!("OK {added} {}", s.epoch()))
-    }
-
-    fn cmd_sepoch(&self, rest: &[&str]) -> Result<String> {
-        let name = rest.first().ok_or_else(|| anyhow!("usage: SEPOCH name"))?;
-        let snap = self.stream(name)?.seal_epoch()?;
-        self.state.metrics.stream_epochs.inc();
-        Ok(format!("OK {} {}", snap.epoch, snap.num_components))
-    }
-
-    fn cmd_squery(&self, rest: &[&str]) -> Result<String> {
-        let (name, op, args) = match rest {
-            [name, op, args @ ..] => (*name, op.to_ascii_uppercase(), args),
-            _ => bail!("usage: SQUERY name SAME|SIZE|COMPS|LABEL args... [epoch]"),
-        };
-        let nums: Vec<u64> = args
-            .iter()
-            .map(|t| t.parse::<u64>().map_err(|e| anyhow!("bad number {t:?}: {e}")))
-            .collect::<Result<_>>()?;
-        let s = self.stream(name)?;
-        self.state.metrics.stream_queries.inc();
-        let vid = |x: u64| -> Result<VId> {
-            VId::try_from(x).map_err(|_| anyhow!("vertex id {x} out of range"))
-        };
-        match (op.as_str(), nums.as_slice()) {
-            ("SAME", [u, v]) | ("SAME", [u, v, _]) => {
-                let snap = s.snapshot_at(nums.get(2).copied())?;
-                let same = snap.same_comp(vid(*u)?, vid(*v)?)?;
-                Ok(format!("OK {} {}", same as u8, snap.epoch))
-            }
-            ("SIZE", [v]) | ("SIZE", [v, _]) => {
-                let snap = s.snapshot_at(nums.get(1).copied())?;
-                Ok(format!("OK {} {}", snap.comp_size(vid(*v)?)?, snap.epoch))
-            }
-            ("COMPS", []) | ("COMPS", [_]) => {
-                let snap = s.snapshot_at(nums.first().copied())?;
-                Ok(format!("OK {} {}", snap.num_components, snap.epoch))
-            }
-            ("LABEL", [v]) | ("LABEL", [v, _]) => {
-                let snap = s.snapshot_at(nums.get(1).copied())?;
-                Ok(format!("OK {} {}", snap.label(vid(*v)?)?, snap.epoch))
-            }
-            _ => bail!("usage: SQUERY name SAME u v [e] | SIZE v [e] | COMPS [e] | LABEL v [e]"),
-        }
-    }
-
-    fn cmd_ssave(&self, rest: &[&str]) -> Result<String> {
-        let (name, path) = match rest {
-            [name, path] => (*name, *path),
-            _ => bail!("usage: SSAVE name PATH"),
-        };
-        let epoch = self.stream(name)?.save_snapshot(Path::new(path))?;
-        Ok(format!("OK {epoch}"))
-    }
-
-    fn cmd_sload(&self, rest: &[&str]) -> Result<String> {
-        let (name, snap, wal) = match rest {
-            [name, snap] => (*name, *snap, None),
-            [name, snap, wal] => (*name, *snap, Some(*wal)),
-            _ => bail!("usage: SLOAD name SNAPPATH [WALPATH]"),
-        };
-        let threads = self.state.threads;
-        let s = self.state.create_stream(name, wal.map(Path::new), || {
-            StreamingCc::recover(Some(Path::new(snap)), wal.map(Path::new), threads)
-        })?;
-        self.state.metrics.stream_epochs.inc();
-        Ok(format!("OK {} {}", s.n(), s.epoch()))
+        dispatch::render_line(&dispatch::handle_line(self.state, line, &mut read_extra))
     }
 }
 
@@ -1369,35 +986,50 @@ pub fn serve_listener(
     Ok(())
 }
 
+/// One TCP connection: pure transport. Reads lines, feeds them to the
+/// shared dispatch core, writes the rendered reply — no verb ever
+/// parsed or interpreted here. `HELLO 2` hands the connection (with the
+/// reader's buffered bytes — a pipelining client may already have sent
+/// frames) to [`protocol::serve_binary`].
 fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
     stream.set_nonblocking(false)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    let mut session = Session::new(state);
     let mut line = String::new();
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client hung up
         }
+        state.metrics.bytes_in.add(line.len() as u64);
         let trimmed = line.trim().to_string();
         if trimmed.is_empty() {
             continue;
         }
-        let reply = session.handle(&trimmed, || {
+        let reply = dispatch::handle_line(state, &trimmed, &mut || {
             let mut extra = String::new();
             reader.read_line(&mut extra)?;
+            state.metrics.bytes_in.add(extra.len() as u64);
             Ok(extra.trim().to_string())
         });
-        match reply {
+        if let dispatch::Reply::Upgrade = reply {
+            writer.write_all(b"OK v2\n")?;
+            writer.flush()?;
+            state.metrics.bytes_out.add(6);
+            state.metrics.hello_upgrades.inc();
+            return protocol::serve_binary(reader, writer, state);
+        }
+        match dispatch::render_line(&reply) {
             Some(r) => {
                 writer.write_all(r.as_bytes())?;
                 writer.write_all(b"\n")?;
                 writer.flush()?;
+                state.metrics.bytes_out.add(r.len() as u64 + 1);
             }
             None => {
                 writer.write_all(b"BYE\n")?;
                 writer.flush()?;
+                state.metrics.bytes_out.add(4);
                 return Ok(());
             }
         }

@@ -1,0 +1,549 @@
+//! Binary protocol v2: length-prefixed frames with request ids, so one
+//! connection can pipeline many requests and receive replies out of
+//! order — the serving path for programs, next to the line protocol
+//! for humans. A connection starts in the line protocol and upgrades
+//! with `HELLO 2` (see [`super::dispatch`]); both protocols run the
+//! same dispatch core, so behavior cannot drift.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     1  magic 'C'
+//!      1     1  magic 'P'
+//!      2     1  version (2)
+//!      3     1  request: verb opcode · reply: status (OK/ERR/BUSY/BYE)
+//!      4     4  request id (u32, echoed verbatim in the reply)
+//!      8     4  payload length (u32, capped at MAX_FRAME)
+//!     12     …  payload
+//! ```
+//!
+//! Request payload: `u16 args_len | args (UTF-8, space-separated) |
+//! [u32 count | count × u32]` — the optional trailing block carries
+//! vertex ids for BQUERY and flattened `(u, v)` pairs for UPLOAD.
+//!
+//! Reply payload: OK → UTF-8 text (exactly what the line protocol puts
+//! after `OK `), except BQUERY (`u32 count | count × u32 labels`) and
+//! LABELS (`u64 total | u32 count | count × u32 labels`, written
+//! zero-copy from the cached label slice); ERR/BUSY → UTF-8 message;
+//! BYE → empty.
+//!
+//! Pipelining and backpressure: light verbs run inline on the reader
+//! thread; heavy verbs ([`is_pipelined`]) each get a scoped thread and
+//! complete out of order through a per-connection writer queue. At
+//! most [`super::ServerState::window`] heavy requests may be in flight
+//! per connection — beyond that the server answers a BUSY frame
+//! immediately instead of queueing unboundedly (the global heavy-verb
+//! semaphore in the dispatch core guards total load the same way).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::VId;
+
+use super::dispatch::{self, Body, Reply};
+use super::{CcEntry, ServerState};
+
+pub const MAGIC: [u8; 2] = *b"CP";
+pub const VERSION: u8 = 2;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+pub const STATUS_BUSY: u8 = 2;
+pub const STATUS_BYE: u8 = 3;
+
+/// Frame payload cap: a malformed or hostile length field cannot make
+/// the server allocate unboundedly.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Verb opcodes (request header byte 3). A stable wire contract:
+/// append new verbs, never renumber.
+pub const OPCODES: &[(u8, &str)] = &[
+    (1, "PING"),
+    (2, "GEN"),
+    (3, "UPLOAD"),
+    (4, "LOAD"),
+    (5, "CC"),
+    (6, "LABELS"),
+    (7, "STATS"),
+    (8, "SHARD"),
+    (9, "PCC"),
+    (10, "SHARDSTATS"),
+    (11, "STREAM"),
+    (12, "SADD"),
+    (13, "SEPOCH"),
+    (14, "SQUERY"),
+    (15, "SSAVE"),
+    (16, "SLOAD"),
+    (17, "LIST"),
+    (18, "DROP"),
+    (19, "METRICS"),
+    (20, "TRACE"),
+    (21, "RECENT"),
+    (22, "QUERY"),
+    (23, "BQUERY"),
+    (24, "HELLO"),
+    (25, "QUIT"),
+];
+
+pub fn opcode_of(verb: &str) -> Option<u8> {
+    OPCODES.iter().find(|(_, v)| *v == verb).map(|(o, _)| *o)
+}
+
+pub fn verb_of(op: u8) -> Option<&'static str> {
+    OPCODES.iter().find(|(o, _)| *o == op).map(|(_, v)| *v)
+}
+
+fn header(kind: u8, id: u32, payload_len: u32) -> [u8; 12] {
+    let mut h = [0u8; 12];
+    h[0] = MAGIC[0];
+    h[1] = MAGIC[1];
+    h[2] = VERSION;
+    h[3] = kind;
+    h[4..8].copy_from_slice(&id.to_le_bytes());
+    h[8..12].copy_from_slice(&payload_len.to_le_bytes());
+    h
+}
+
+/// Read and validate one frame header; `None` on clean EOF at a frame
+/// boundary. A torn header (EOF mid-frame) is an error.
+fn read_header<R: Read>(r: &mut R) -> Result<Option<(u8, u32, usize)>> {
+    let mut h = [0u8; 12];
+    loop {
+        match r.read(&mut h[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    r.read_exact(&mut h[1..])?;
+    anyhow::ensure!(
+        h[0] == MAGIC[0] && h[1] == MAGIC[1],
+        "bad frame magic {:02x}{:02x}",
+        h[0],
+        h[1]
+    );
+    anyhow::ensure!(h[2] == VERSION, "unsupported frame version {}", h[2]);
+    let id = u32::from_le_bytes(h[4..8].try_into().unwrap());
+    let len = u32::from_le_bytes(h[8..12].try_into().unwrap());
+    anyhow::ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds cap {MAX_FRAME}");
+    Ok(Some((h[3], id, len as usize)))
+}
+
+// ------------------------------------------------------- request side
+
+/// One decoded request frame.
+pub(crate) struct Request {
+    pub id: u32,
+    pub verb: &'static str,
+    pub args: String,
+    /// The packed u32 block: BQUERY ids or UPLOAD edge pairs.
+    pub extra: Vec<VId>,
+    /// Bytes this frame occupied on the wire (header + payload).
+    pub wire_len: usize,
+}
+
+pub(crate) fn read_request<R: Read>(r: &mut R) -> Result<Option<Request>> {
+    let Some((op, id, len)) = read_header(r)? else { return Ok(None) };
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let verb = verb_of(op).ok_or_else(|| anyhow!("unknown opcode {op}"))?;
+    let (args, extra) = decode_request_payload(&payload)?;
+    Ok(Some(Request { id, verb, args, extra, wire_len: 12 + len }))
+}
+
+fn decode_request_payload(p: &[u8]) -> Result<(String, Vec<VId>)> {
+    anyhow::ensure!(p.len() >= 2, "truncated frame: missing args length");
+    let alen = u16::from_le_bytes([p[0], p[1]]) as usize;
+    let rest = &p[2..];
+    anyhow::ensure!(rest.len() >= alen, "truncated frame: args length {alen} exceeds payload");
+    let args =
+        std::str::from_utf8(&rest[..alen]).map_err(|_| anyhow!("args not UTF-8"))?.to_string();
+    let tail = &rest[alen..];
+    if tail.is_empty() {
+        return Ok((args, Vec::new()));
+    }
+    anyhow::ensure!(tail.len() >= 4, "truncated frame: missing id count");
+    let count = u32::from_le_bytes(tail[..4].try_into().unwrap()) as usize;
+    let data = &tail[4..];
+    let want = count.checked_mul(4).ok_or_else(|| anyhow!("id count overflow"))?;
+    anyhow::ensure!(data.len() == want, "frame id block: {} bytes for {count} ids", data.len());
+    let mut ids = Vec::with_capacity(count);
+    for c in data.chunks_exact(4) {
+        ids.push(u32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok((args, ids))
+}
+
+/// Encode one request frame (the client side: the Rust load generator
+/// and wire tests; `python/client/contour_client.py` mirrors this).
+/// `extra` packs BQUERY vertex ids or UPLOAD flattened edge pairs.
+pub fn encode_request(id: u32, verb: &str, args: &str, extra: &[VId]) -> Result<Vec<u8>> {
+    let cmd = verb.to_ascii_uppercase();
+    let op = opcode_of(&cmd).ok_or_else(|| anyhow!("no opcode for verb {verb:?}"))?;
+    anyhow::ensure!(args.len() <= u16::MAX as usize, "args too long ({} bytes)", args.len());
+    let extra_len = if extra.is_empty() { 0 } else { 4 + 4 * extra.len() };
+    let payload_len = 2 + args.len() + extra_len;
+    anyhow::ensure!(payload_len as u64 <= u64::from(MAX_FRAME), "frame too large");
+    let mut b = Vec::with_capacity(12 + payload_len);
+    b.extend_from_slice(&header(op, id, payload_len as u32));
+    b.extend_from_slice(&(args.len() as u16).to_le_bytes());
+    b.extend_from_slice(args.as_bytes());
+    if !extra.is_empty() {
+        b.extend_from_slice(&(extra.len() as u32).to_le_bytes());
+        for v in extra {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Ok(b)
+}
+
+// --------------------------------------------------------- reply side
+
+/// One decoded reply frame (client side).
+pub struct ReplyFrame {
+    pub id: u32,
+    pub status: u8,
+    pub payload: Vec<u8>,
+}
+
+impl ReplyFrame {
+    /// The payload as text (OK/ERR/BUSY bodies).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.payload).into_owned()
+    }
+
+    /// Decode a BQUERY reply payload: `u32 count | labels`.
+    pub fn batch_labels(&self) -> Result<Vec<VId>> {
+        decode_u32_block(&self.payload, 0)
+    }
+
+    /// Decode a LABELS page payload: `(total, labels)`.
+    pub fn page(&self) -> Result<(u64, Vec<VId>)> {
+        anyhow::ensure!(self.payload.len() >= 8, "short LABELS payload");
+        let total = u64::from_le_bytes(self.payload[..8].try_into().unwrap());
+        Ok((total, decode_u32_block(&self.payload, 8)?))
+    }
+}
+
+fn decode_u32_block(p: &[u8], at: usize) -> Result<Vec<VId>> {
+    anyhow::ensure!(p.len() >= at + 4, "short label block");
+    let count = u32::from_le_bytes(p[at..at + 4].try_into().unwrap()) as usize;
+    let data = &p[at + 4..];
+    anyhow::ensure!(data.len() == 4 * count, "label block: {} bytes for {count} labels", data.len());
+    Ok(data.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Read one reply frame; `None` on clean EOF.
+pub fn read_reply<R: Read>(r: &mut R) -> Result<Option<ReplyFrame>> {
+    let Some((status, id, len)) = read_header(r)? else { return Ok(None) };
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(ReplyFrame { id, status, payload }))
+}
+
+fn encode_reply(id: u32, status: u8, text: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(12 + text.len());
+    b.extend_from_slice(&header(status, id, text.len() as u32));
+    b.extend_from_slice(text.as_bytes());
+    b
+}
+
+fn encode_batch(id: u32, labels: &[VId]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(12 + 4 + 4 * labels.len());
+    b.extend_from_slice(&header(STATUS_OK, id, (4 + 4 * labels.len()) as u32));
+    b.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for l in labels {
+        b.extend_from_slice(&l.to_le_bytes());
+    }
+    b
+}
+
+fn page_head(id: u32, total: usize, count: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(12 + 12);
+    b.extend_from_slice(&header(STATUS_OK, id, (12 + 4 * count) as u32));
+    b.extend_from_slice(&(total as u64).to_le_bytes());
+    b.extend_from_slice(&(count as u32).to_le_bytes());
+    b
+}
+
+/// A reply queued for the writer thread. `Page` defers the label bytes
+/// so they are written zero-copy from the cached slice, never staged
+/// through an intermediate buffer.
+enum WireReply {
+    Buf(Vec<u8>),
+    Page { head: Vec<u8>, entry: Arc<CcEntry>, lo: usize, hi: usize },
+}
+
+fn encode_wire(id: u32, reply: Reply) -> WireReply {
+    match reply {
+        Reply::Ok(s) => WireReply::Buf(encode_reply(id, STATUS_OK, &s)),
+        Reply::Pong => WireReply::Buf(encode_reply(id, STATUS_OK, "PONG")),
+        Reply::Upgrade => WireReply::Buf(encode_reply(id, STATUS_OK, "v2")),
+        Reply::Err(e) => WireReply::Buf(encode_reply(id, STATUS_ERR, &e)),
+        Reply::Busy(m) => WireReply::Buf(encode_reply(id, STATUS_BUSY, &m)),
+        Reply::Bye => WireReply::Buf(encode_reply(id, STATUS_BYE, "")),
+        Reply::Batch(labels) => WireReply::Buf(encode_batch(id, &labels)),
+        Reply::Page { total, entry, lo, hi } => {
+            WireReply::Page { head: page_head(id, total, hi - lo), entry, lo, hi }
+        }
+    }
+}
+
+/// Verbs dispatched on their own thread so replies can complete out of
+/// order behind the per-connection window. Cheap point lookups run
+/// inline on the reader thread — a spawn would cost more than the
+/// lookup itself.
+fn is_pipelined(verb: &str) -> bool {
+    matches!(
+        verb,
+        "GEN"
+            | "UPLOAD"
+            | "LOAD"
+            | "CC"
+            | "PCC"
+            | "SHARD"
+            | "STREAM"
+            | "SADD"
+            | "SEPOCH"
+            | "SSAVE"
+            | "SLOAD"
+            | "LABELS"
+            | "BQUERY"
+    )
+}
+
+fn dispatch_request(state: &ServerState, req: &Request) -> Reply {
+    let args: Vec<&str> = req.args.split_whitespace().collect();
+    if req.verb == "UPLOAD" {
+        if req.extra.len() % 2 != 0 {
+            return Reply::Err("UPLOAD payload needs an even number of ids (u v pairs)".into());
+        }
+        let edges: Vec<(VId, VId)> = req.extra.chunks_exact(2).map(|p| (p[0], p[1])).collect();
+        dispatch::dispatch(state, req.verb, &args, Body::Edges(&edges))
+    } else if req.extra.is_empty() {
+        dispatch::dispatch(state, req.verb, &args, Body::None)
+    } else {
+        dispatch::dispatch(state, req.verb, &args, Body::Ids(&req.extra))
+    }
+}
+
+fn write_msg(
+    w: &mut BufWriter<TcpStream>,
+    msg: &WireReply,
+    state: &ServerState,
+) -> std::io::Result<()> {
+    match msg {
+        WireReply::Buf(b) => {
+            w.write_all(b)?;
+            state.metrics.bytes_out.add(b.len() as u64);
+        }
+        WireReply::Page { head, entry, lo, hi } => {
+            w.write_all(head)?;
+            let labels = &entry.labels()[*lo..*hi];
+            write_label_slice(w, labels)?;
+            state.metrics.bytes_out.add((head.len() + 4 * labels.len()) as u64);
+        }
+    }
+    Ok(())
+}
+
+/// The zero-copy LABELS body: on little-endian targets the cached
+/// label slice *is* the wire encoding, so it goes to the socket
+/// without per-element formatting or an intermediate buffer.
+fn write_label_slice<W: Write>(w: &mut W, labels: &[VId]) -> std::io::Result<()> {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: u32 has no padding bytes and u8 has no alignment
+        // requirement; the view covers exactly `4 * len` initialized
+        // bytes of the slice.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(labels.as_ptr().cast::<u8>(), labels.len() * 4) };
+        w.write_all(bytes)
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        for l in labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+/// The writer half of a pipelined connection: a queue drained by one
+/// thread, so replies from concurrently dispatched requests are
+/// serialized onto the socket whole (never interleaved) and in
+/// completion order. Flushes only when the queue runs dry, batching
+/// back-to-back replies into one syscall.
+fn write_loop(mut w: BufWriter<TcpStream>, rx: mpsc::Receiver<WireReply>, state: &ServerState) {
+    while let Ok(msg) = rx.recv() {
+        if write_msg(&mut w, &msg, state).is_err() {
+            return;
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(m) => {
+                    if write_msg(&mut w, &m, state).is_err() {
+                        return;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    let _ = w.flush();
+                    return;
+                }
+            }
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+    let _ = w.flush();
+}
+
+/// Serve one upgraded connection until QUIT, EOF or a protocol error.
+/// Called by `handle_conn` after the `HELLO 2` upgrade, inheriting the
+/// line reader's buffer (a pipelining client may have sent binary
+/// frames right behind its HELLO).
+pub(crate) fn serve_binary(
+    mut reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    state: &ServerState,
+) -> Result<()> {
+    let window = state.window();
+    // In-flight pipelined requests on this connection. Incremented by
+    // the reader, decremented by each worker *after* queueing its
+    // reply, so "window full" and "QUIT drain" are both exact.
+    let inflight = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<WireReply>();
+    std::thread::scope(|scope| {
+        scope.spawn(|| write_loop(writer, rx, state));
+        loop {
+            let req = match read_request(&mut reader) {
+                Ok(Some(r)) => r,
+                // Clean EOF between frames or a protocol error: either
+                // way the framing is unrecoverable, drop the connection.
+                _ => break,
+            };
+            state.metrics.bytes_in.add(req.wire_len as u64);
+            if is_pipelined(req.verb) {
+                if inflight.load(Ordering::Acquire) >= window {
+                    // Backpressure: over the per-connection window the
+                    // request is rejected immediately — the client
+                    // retires replies and resubmits — instead of
+                    // queueing without bound.
+                    state.metrics.busy.inc();
+                    let msg = format!("pipeline window full ({window} in flight)");
+                    if tx.send(WireReply::Buf(encode_reply(req.id, STATUS_BUSY, &msg))).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::AcqRel);
+                let tx2 = tx.clone();
+                let inflight = &inflight;
+                scope.spawn(move || {
+                    let wire = encode_wire(req.id, dispatch_request(state, &req));
+                    let _ = tx2.send(wire);
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                });
+            } else {
+                let reply = dispatch_request(state, &req);
+                let bye = matches!(reply, Reply::Bye);
+                if bye {
+                    // Retire the window first so BYE is the last frame
+                    // on the wire.
+                    while inflight.load(Ordering::Acquire) > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                if tx.send(encode_wire(req.id, reply)).is_err() || bye {
+                    break;
+                }
+            }
+        }
+        drop(tx);
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_frames_roundtrip() {
+        let b = encode_request(7, "bquery", "g epoch:3", &[1, 2, 99]).unwrap();
+        let req = read_request(&mut &b[..]).unwrap().unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.verb, "BQUERY");
+        assert_eq!(req.args, "g epoch:3");
+        assert_eq!(req.extra, vec![1, 2, 99]);
+        assert_eq!(req.wire_len, b.len());
+        // No extra block when there are no ids.
+        let b = encode_request(1, "PING", "", &[]).unwrap();
+        let req = read_request(&mut &b[..]).unwrap().unwrap();
+        assert_eq!(req.verb, "PING");
+        assert!(req.args.is_empty() && req.extra.is_empty());
+        // Clean EOF at a frame boundary is None, not an error.
+        assert!(read_request(&mut &[][..]).unwrap().is_none());
+        assert!(encode_request(0, "NOPE", "", &[]).is_err());
+    }
+
+    #[test]
+    fn reply_frames_roundtrip() {
+        let b = encode_reply(42, STATUS_ERR, "no graph \"g\"");
+        let f = read_reply(&mut &b[..]).unwrap().unwrap();
+        assert_eq!((f.id, f.status), (42, STATUS_ERR));
+        assert_eq!(f.text(), "no graph \"g\"");
+
+        let b = encode_batch(3, &[5, 5, 0]);
+        let f = read_reply(&mut &b[..]).unwrap().unwrap();
+        assert_eq!(f.status, STATUS_OK);
+        assert_eq!(f.batch_labels().unwrap(), vec![5, 5, 0]);
+
+        // A page frame: head + the raw label bytes the writer appends.
+        let mut b = page_head(9, 100, 3);
+        let mut cursor = Vec::new();
+        write_label_slice(&mut cursor, &[7, 8, 9]).unwrap();
+        b.extend_from_slice(&cursor);
+        let f = read_reply(&mut &b[..]).unwrap().unwrap();
+        let (total, labels) = f.page().unwrap();
+        assert_eq!(total, 100);
+        assert_eq!(labels, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn malformed_frames_are_clean_errors() {
+        // Bad magic.
+        let mut b = encode_request(1, "PING", "", &[]).unwrap();
+        b[0] = b'X';
+        assert!(read_request(&mut &b[..]).is_err());
+        // Wrong version.
+        let mut b = encode_request(1, "PING", "", &[]).unwrap();
+        b[2] = 9;
+        assert!(read_request(&mut &b[..]).is_err());
+        // Oversized payload length.
+        let mut b = header(1, 1, MAX_FRAME + 1).to_vec();
+        b.extend_from_slice(&[0u8; 16]);
+        assert!(read_request(&mut &b[..]).is_err());
+        // Args length pointing past the payload.
+        let mut b = header(1, 1, 2).to_vec();
+        b.extend_from_slice(&u16::MAX.to_le_bytes());
+        assert!(read_request(&mut &b[..]).is_err());
+        // Id count not matching the block size.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&0u16.to_le_bytes());
+        payload.extend_from_slice(&9u32.to_le_bytes()); // claims 9 ids
+        payload.extend_from_slice(&[0u8; 4]); // provides 1
+        let mut b = header(23, 1, payload.len() as u32).to_vec();
+        b.extend_from_slice(&payload);
+        assert!(read_request(&mut &b[..]).is_err());
+    }
+}

@@ -1,0 +1,404 @@
+//! Serving-path integration tests: the dispatcher extraction (every
+//! verb through `dispatch()` with no transport attached), binary
+//! protocol v2 pipelining over real TCP cross-checked against
+//! sequential line-protocol answers, admission-control backpressure
+//! (BUSY frames / `ERR busy`), error-path metering, and LABELS paging
+//! bounds hardening.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use contour::server::dispatch::{self, Body};
+use contour::server::{protocol, serve_listener, ServerState, Session};
+use contour::VId;
+
+fn no_body() -> anyhow::Result<String> {
+    anyhow::bail!("no extra payload expected")
+}
+
+fn ask(state: &ServerState, line: &str) -> String {
+    Session::new(state).handle(line, no_body).unwrap_or_else(|| "BYE".into())
+}
+
+// ------------------------------------------------- dispatcher core
+
+/// Satellite: every verb in the protocol table runs through the shared
+/// `dispatch()` core directly — no TCP, no Session — and the coverage
+/// set is pinned to `protocol::OPCODES`, so adding a verb without
+/// extending this table fails the build's tests.
+#[test]
+fn every_verb_through_dispatch_directly() {
+    let state = ServerState::new(1);
+    let dir = std::env::temp_dir().join(format!("contour-serving-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let edge_file = dir.join("edges.txt");
+    std::fs::write(&edge_file, "0 1\n1 2\n2 3\n").unwrap();
+    let snap = dir.join("stream.snap");
+
+    let run = |line: &str| -> Option<String> {
+        let mut fields = line.split_whitespace();
+        let verb = fields.next().unwrap();
+        let rest: Vec<&str> = fields.collect();
+        dispatch::render_line(&dispatch::dispatch(&state, verb, &rest, Body::None))
+    };
+
+    // (request line, expected reply prefix) — order matters: later rows
+    // read state earlier rows created.
+    let table: Vec<(String, &str)> = vec![
+        ("PING".into(), "PONG"),
+        ("HELLO 2".into(), "OK v2"),
+        ("GEN g path:6".into(), "OK 6 5"),
+        (format!("LOAD f {}", edge_file.display()), "OK 4 3"),
+        ("CC g C-2".into(), "OK 1 "),
+        ("QUERY g 3 C-2".into(), "OK 0"),
+        ("LABELS g C-2 0 3".into(), "OK 6 0 0 0"),
+        ("STATS g".into(), "OK n=6 m=5"),
+        ("SHARD g 2".into(), "OK "),
+        ("PCC g C-2".into(), "OK 1 "),
+        ("SHARDSTATS g".into(), "OK "),
+        ("TRACE g".into(), "OK "),
+        ("STREAM s 4".into(), "OK "),
+        ("SADD s 0 1".into(), "OK "),
+        ("SEPOCH s".into(), "OK 1 "),
+        ("SQUERY s SAME 0 1".into(), "OK "),
+        (format!("SSAVE s {}", snap.display()), "OK "),
+        ("DROP s".into(), "OK"),
+        (format!("SLOAD s2 {}", snap.display()), "OK "),
+        ("LIST".into(), "OK "),
+        ("METRICS".into(), "OK requests="),
+        ("RECENT".into(), "OK "),
+    ];
+    let mut covered: HashSet<&'static str> = HashSet::new();
+    for (line, want) in &table {
+        let verb = line.split_whitespace().next().unwrap().to_ascii_uppercase();
+        let got = run(line).unwrap_or_else(|| panic!("{line:?} closed the session"));
+        assert!(got.starts_with(want), "{line:?} -> {got:?}, wanted prefix {want:?}");
+        covered.insert(
+            protocol::OPCODES.iter().find(|(_, v)| *v == verb).map(|(_, v)| *v).unwrap(),
+        );
+    }
+
+    // UPLOAD: the line body (announced edge lines) and the binary body
+    // (a decoded edge array) must produce identical replies — one
+    // dispatch core, two transports.
+    let mut lines = vec!["1 2".to_string(), "0 1".to_string()];
+    let via_lines = Session::new(&state)
+        .handle("UPLOAD u1 2", move || Ok(lines.pop().expect("two edge lines")))
+        .unwrap();
+    let edges: Vec<(VId, VId)> = vec![(0, 1), (1, 2)];
+    let via_edges = dispatch::render_line(&dispatch::dispatch(
+        &state,
+        "UPLOAD",
+        &["u2", "2"],
+        Body::Edges(&edges),
+    ))
+    .unwrap();
+    assert!(via_lines.starts_with("OK "), "{via_lines}");
+    assert_eq!(via_lines, via_edges, "line vs binary UPLOAD bodies disagree");
+    covered.insert("UPLOAD");
+
+    // BQUERY: ids in the arg list (line) and ids in the frame payload
+    // (binary) answer identically from the same cached labelling.
+    let via_args = run("BQUERY g C-2 0 2 5").unwrap();
+    let ids: Vec<VId> = vec![0, 2, 5];
+    let via_payload = dispatch::render_line(&dispatch::dispatch(
+        &state,
+        "BQUERY",
+        &["g", "C-2"],
+        Body::Ids(&ids),
+    ))
+    .unwrap();
+    assert_eq!(via_args, "OK 3 0 0 0");
+    assert_eq!(via_args, via_payload, "line vs binary BQUERY ids disagree");
+    covered.insert("BQUERY");
+
+    // Deterministic read verbs render identically through the Session
+    // line adapter and through dispatch() directly.
+    for line in ["PING", "QUERY g 3 C-2", "LABELS g C-2 0 3", "STATS g", "LIST"] {
+        assert_eq!(run(line), Some(ask(&state, line)), "{line:?} drifted between adapters");
+    }
+
+    // QUIT ends the session (render_line -> None)...
+    assert!(run("QUIT").is_none());
+    covered.insert("QUIT");
+    // ...an unknown verb is a clean ERR...
+    assert!(run("NOPE").unwrap().starts_with("ERR "));
+    // ...and the table covered the entire opcode set.
+    let all: HashSet<&'static str> = protocol::OPCODES.iter().map(|(_, v)| *v).collect();
+    let missing: Vec<_> = all.difference(&covered).collect();
+    assert!(missing.is_empty(), "verbs not exercised through dispatch(): {missing:?}");
+}
+
+// ----------------------------------------------------- TCP helpers
+
+fn spawn_server(state: Arc<ServerState>) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local_addr").to_string();
+    let sd = Arc::clone(&shutdown);
+    let handle = std::thread::spawn(move || serve_listener(listener, state, sd));
+    (addr, shutdown, handle)
+}
+
+struct LineWire {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl LineWire {
+    fn connect(addr: &str) -> Self {
+        let s = TcpStream::connect(addr).expect("connect");
+        Self { r: BufReader::new(s.try_clone().unwrap()), w: BufWriter::new(s) }
+    }
+
+    fn ask(&mut self, msg: &str) -> String {
+        self.w.write_all(msg.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+        let mut reply = String::new();
+        self.r.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+struct BinWire {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl BinWire {
+    /// Connect and upgrade: line `HELLO 2`, expect `OK v2`, then frames.
+    fn connect(addr: &str) -> Self {
+        let s = TcpStream::connect(addr).expect("connect");
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut w = BufWriter::new(s);
+        w.write_all(b"HELLO 2\n").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK v2", "HELLO 2 negotiation failed");
+        Self { r, w }
+    }
+
+    fn send(&mut self, id: u32, verb: &str, args: &str, extra: &[VId]) {
+        let b = protocol::encode_request(id, verb, args, extra).unwrap();
+        self.w.write_all(&b).unwrap();
+    }
+
+    fn recv(&mut self) -> protocol::ReplyFrame {
+        protocol::read_reply(&mut self.r).unwrap().expect("server closed mid-stream")
+    }
+}
+
+// --------------------------------------------- pipelined binary path
+
+/// Acceptance: N≥8 in-flight BQUERY frames on one upgraded connection
+/// come back request-id-matched and equal to sequential line-protocol
+/// QUERY answers; QUIT drains the pipeline and BYE is the last frame.
+#[test]
+fn pipelined_bquery_matches_sequential_query() {
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+
+    let mut line = LineWire::connect(&addr);
+    assert!(line.ask("GEN g er:2000:3500").starts_with("OK 2000 "));
+    assert!(line.ask("CC g C-2").starts_with("OK "));
+
+    // Ground truth, one vertex at a time over the line protocol.
+    let ids: Vec<VId> = (0..96).map(|i| (i * 131) % 2000).collect();
+    let mut expected: Vec<VId> = Vec::new();
+    for &v in &ids {
+        let reply = line.ask(&format!("QUERY g {v} C-2"));
+        let label =
+            reply.split_whitespace().nth(1).and_then(|t| t.parse().ok()).unwrap_or_else(|| {
+                panic!("QUERY g {v} -> {reply:?}");
+            });
+        expected.push(label);
+    }
+
+    // 12 BQUERY frames in flight before a single reply is read.
+    let mut bin = BinWire::connect(&addr);
+    let chunks: Vec<&[VId]> = ids.chunks(8).collect();
+    assert!(chunks.len() >= 8, "need >=8 in-flight requests");
+    for (i, chunk) in chunks.iter().enumerate() {
+        bin.send(100 + i as u32, "BQUERY", "g C-2", chunk);
+    }
+    bin.w.flush().unwrap();
+
+    let mut got: HashMap<u32, Vec<VId>> = HashMap::new();
+    for _ in 0..chunks.len() {
+        let f = bin.recv();
+        assert_eq!(f.status, protocol::STATUS_OK, "BQUERY -> {}", f.text());
+        assert!(got.insert(f.id, f.batch_labels().unwrap()).is_none(), "duplicate id {}", f.id);
+    }
+    for (i, chunk) in chunks.iter().enumerate() {
+        let labels = &got[&(100 + i as u32)];
+        assert_eq!(labels.len(), chunk.len());
+        for (k, &v) in chunk.iter().enumerate() {
+            let want = expected[i * 8 + k];
+            assert_eq!(labels[k], want, "vertex {v}: pipelined label != sequential QUERY");
+        }
+    }
+
+    // A light verb and a QUERY ride the same framed connection.
+    bin.send(7, "PING", "", &[]);
+    bin.w.flush().unwrap();
+    let f = bin.recv();
+    assert_eq!((f.id, f.status), (7, protocol::STATUS_OK));
+    assert_eq!(f.text(), "PONG");
+    bin.send(8, "QUERY", &format!("g {} C-2", ids[0]), &[]);
+    bin.w.flush().unwrap();
+    let f = bin.recv();
+    assert_eq!((f.id, f.status), (8, protocol::STATUS_OK));
+    assert_eq!(f.text(), expected[0].to_string());
+
+    // QUIT: BYE is the last frame, then EOF.
+    bin.send(9, "QUIT", "", &[]);
+    bin.w.flush().unwrap();
+    let f = bin.recv();
+    assert_eq!((f.id, f.status), (9, protocol::STATUS_BYE));
+    assert!(protocol::read_reply(&mut bin.r).unwrap().is_none(), "frames after BYE");
+
+    // The upgrade and the batch path showed up in the metrics.
+    let m = line.ask("METRICS");
+    assert!(m.contains("hello_upgrades=1"), "{m}");
+    assert!(m.contains(&format!("batch_queries={}", chunks.len())), "{m}");
+    assert_eq!(line.ask("QUIT"), "BYE");
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+/// Acceptance: under an over-window pipelined load the server answers
+/// BUSY frames immediately instead of queueing without bound, and every
+/// request id still gets exactly one reply.
+#[test]
+fn over_window_pipelining_sees_busy() {
+    // Window of 1: any second in-flight pipelined request is over the
+    // window. Heavy cap stays high so admission control's *global*
+    // gate does not fire here — this test isolates the per-connection
+    // window.
+    let state = Arc::new(ServerState::new(1).with_admission(1, 64));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+
+    let mut line = LineWire::connect(&addr);
+    assert!(line.ask("GEN g path:64").starts_with("OK 64 "));
+    assert!(line.ask("CC g C-2").starts_with("OK "));
+
+    let mut bin = BinWire::connect(&addr);
+    // A slow pipelined request occupies the window...
+    bin.send(1, "GEN", "big rmat:14:8", &[]);
+    // ...and a burst of reads behind it overflows it.
+    let burst = 32u32;
+    for i in 0..burst {
+        bin.send(10 + i, "BQUERY", "g C-2", &[(i % 64) as VId]);
+    }
+    bin.w.flush().unwrap();
+
+    let mut seen: HashMap<u32, u8> = HashMap::new();
+    for _ in 0..(burst + 1) {
+        let f = bin.recv();
+        assert!(seen.insert(f.id, f.status).is_none(), "duplicate reply id {}", f.id);
+    }
+    assert_eq!(seen.len() as u32, burst + 1, "every request answered exactly once");
+    assert_eq!(seen[&1], protocol::STATUS_OK, "the in-window request succeeded");
+    let busy = seen.values().filter(|&&s| s == protocol::STATUS_BUSY).count();
+    assert!(busy >= 1, "no BUSY under an over-window load");
+    for (&id, &status) in &seen {
+        assert!(
+            status == protocol::STATUS_OK || status == protocol::STATUS_BUSY,
+            "request {id} -> unexpected status {status}"
+        );
+    }
+
+    let m = line.ask("METRICS");
+    let busy_total: u64 = m
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("busy="))
+        .and_then(|v| v.parse().ok())
+        .expect("busy= counter missing");
+    assert!(busy_total >= busy as u64, "{m}");
+    assert_eq!(line.ask("QUIT"), "BYE");
+    drop(bin);
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+/// The global heavy-verb semaphore: with zero heavy slots every heavy
+/// verb is `ERR busy` on the line protocol (frame-level BUSY is the
+/// binary rendering of the same reply), while light verbs still serve.
+#[test]
+fn heavy_cap_zero_turns_heavy_verbs_busy() {
+    let state = ServerState::new(1).with_admission(8, 0);
+    let r = ask(&state, "GEN g path:10");
+    assert!(r.starts_with("ERR busy:"), "{r}");
+    assert_eq!(ask(&state, "PING"), "PONG");
+    let m = ask(&state, "METRICS");
+    assert!(m.contains("busy=1"), "{m}");
+    assert!(m.contains("errors=0"), "busy rejections are not errors: {m}");
+    assert!(m.contains("err/GEN=1"), "{m}");
+}
+
+// ------------------------------------------------- error metering
+
+/// Satellite bugfix, over the real wire: an ERR reply records both
+/// `lat/<verb>` and the new `err/<verb>` counter.
+#[test]
+fn error_replies_are_metered_on_the_wire() {
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+    let mut line = LineWire::connect(&addr);
+
+    let before = line.ask("METRICS");
+    assert!(!before.contains("err/CC="), "{before}");
+    assert!(line.ask("CC nosuch C-2").starts_with("ERR "));
+    let m = line.ask("METRICS");
+    assert!(m.contains("err/CC=1"), "{m}");
+    // The latency histogram saw the failed request: count is the first
+    // field of `lat/CC=count:p50:p95:p99`.
+    let lat = m
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("lat/CC="))
+        .expect("lat/CC missing after an ERR reply");
+    let count: u64 = lat.split(':').next().unwrap().parse().unwrap();
+    assert_eq!(count, 1, "{lat}");
+    // Errors on one verb don't invent counters for others.
+    assert!(!m.contains("err/PING="), "{m}");
+    assert_eq!(line.ask("QUIT"), "BYE");
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+// --------------------------------------------------- LABELS bounds
+
+/// Satellite: LABELS paging never panics or wraps — huge and
+/// overflowing offsets/counts are clean ERRs or clamped pages, and the
+/// page boundaries are exact.
+#[test]
+fn labels_paging_is_bounds_hardened() {
+    let state = ServerState::new(1);
+    assert!(ask(&state, "GEN g path:50").starts_with("OK 50 "));
+
+    // 2^64 does not fit usize: a clean ERR, not a wrap.
+    let r = ask(&state, "LABELS g 18446744073709551616");
+    assert!(r.starts_with("ERR ") && r.contains("out of range"), "{r}");
+    let r = ask(&state, "LABELS g 0 18446744073709551616");
+    assert!(r.starts_with("ERR ") && r.contains("out of range"), "{r}");
+
+    // usize::MAX is in range and clamps: offset 49 + MAX saturates to
+    // the end, one label left.
+    assert_eq!(ask(&state, "LABELS g 49 18446744073709551615"), "OK 50 0");
+    // offset == total and offset > total: empty page, total still told.
+    assert_eq!(ask(&state, "LABELS g 50"), "OK 50");
+    assert_eq!(ask(&state, "LABELS g 1000 5"), "OK 50");
+    // Exact page boundaries.
+    assert_eq!(ask(&state, "LABELS g 48 2"), "OK 50 0 0");
+    assert_eq!(ask(&state, "LABELS g 0 0"), "OK 50");
+    let full = ask(&state, "LABELS g");
+    assert_eq!(full.split_whitespace().count(), 2 + 50, "default page covers path:50");
+}
