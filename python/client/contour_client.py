@@ -51,6 +51,10 @@ METRICS carries per-verb log₂ latency histograms):
             print(s["name"], s["mode"], s["dur_ns"], s["args"])
         c.metrics()["lat/CC"]                 # {"count", "p50", "p95", "p99"}
         c.recent(5)                           # last 5 requests (verb, ok, ns)
+        c.health()["status"]                  # ready | degraded | overloaded
+        for tick in c.watch(ticks=3, interval_ms=500):
+            print(tick["qps"], tick["deltas"])
+        c.prom()                              # OpenMetrics exposition text
 
 Protocol v2 (binary framing): on connect the client sends ``HELLO 2``;
 a v2 server answers ``OK v2`` and the connection switches to
@@ -70,9 +74,11 @@ against either server. ``protocol="line"`` pins the text protocol;
 
 from __future__ import annotations
 
+import random
 import socket
 import struct
-from typing import Dict, Iterable, List, Optional, Tuple, Union
+import time
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple, Union
 
 _MAGIC = b"CP"
 _VERSION = 2
@@ -88,8 +94,20 @@ _OPCODES = {
         (14, "SQUERY"), (15, "SSAVE"), (16, "SLOAD"), (17, "LIST"),
         (18, "DROP"), (19, "METRICS"), (20, "TRACE"), (21, "RECENT"),
         (22, "QUERY"), (23, "BQUERY"), (24, "HELLO"), (25, "QUIT"),
+        (26, "PROM"), (27, "HEALTH"), (28, "WATCH"),
     ]
 }
+
+# BUSY retry backoff: exponential from _RETRY_BASE_S, capped at
+# _RETRY_CAP_S, with jitter in [0.5x, 1x] so a fleet of shed clients
+# does not retry in lockstep.
+_RETRY_BASE_S = 0.05
+_RETRY_CAP_S = 2.0
+
+
+def _backoff_delay(attempt: int) -> float:
+    full = min(_RETRY_CAP_S, _RETRY_BASE_S * (2 ** attempt))
+    return full * (0.5 + random.random() / 2)
 
 
 class ContourError(RuntimeError):
@@ -219,6 +237,20 @@ class ContourClient:
             raise ContourError(reply[4:])
         return reply
 
+    def _with_busy_retry(self, fn, retry_busy: int):
+        """Run ``fn``, retrying up to ``retry_busy`` times on
+        :class:`ContourBusy` with capped exponential backoff + jitter.
+        0 (the default everywhere) keeps load-shed replies visible."""
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except ContourBusy:
+                if attempt >= retry_busy:
+                    raise
+                time.sleep(_backoff_delay(attempt))
+                attempt += 1
+
     # -------------------------------------------------------------- session
 
     def ping(self) -> bool:
@@ -242,13 +274,16 @@ class ContourClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def pipeline(self, window: int = 16) -> "Pipeline":
+    def pipeline(self, window: int = 16, retry_busy: int = 0) -> "Pipeline":
         """Pipelined requests on the binary transport: up to ``window``
         requests in flight, replies matched by request id (the server
-        may complete them out of order). Requires a v2 connection."""
+        may complete them out of order). Requires a v2 connection.
+        ``retry_busy`` resubmits load-shed (BUSY) requests that many
+        times with capped exponential backoff + jitter; results still
+        land under the original ticket."""
         if self._proto != "binary":
             raise ContourError("pipelining requires the binary protocol (v2 server)")
-        return Pipeline(self, window)
+        return Pipeline(self, window, retry_busy)
 
     # --------------------------------------------------------------- graphs
 
@@ -311,28 +346,35 @@ class ContourClient:
         _, comps, iters, ms = self._request(req).split()
         return int(comps), int(iters), float(ms)
 
-    def query(self, name: str, v: int, alg: Optional[str] = None) -> int:
+    def query(self, name: str, v: int, alg: Optional[str] = None,
+              retry_busy: int = 0) -> int:
         """Component label of one vertex, answered wait-free from the
         server's cached labelling. ``alg`` selects the labelling for
         static graphs (default C-2); for streams pass ``"epoch:<e>"``
-        to time-travel."""
+        to time-travel. ``retry_busy`` retries load-shed (BUSY) replies
+        that many times with capped exponential backoff + jitter."""
         sel = f" {alg}" if alg else ""
-        return int(self._request(f"QUERY {name} {v}{sel}").split()[1])
+        reply = self._with_busy_retry(
+            lambda: self._request(f"QUERY {name} {v}{sel}"), retry_busy
+        )
+        return int(reply.split()[1])
 
     def batch_query(self, name: str, ids: Iterable[int],
-                    alg: Optional[str] = None) -> List[int]:
+                    alg: Optional[str] = None, retry_busy: int = 0) -> List[int]:
         """Vectorized component lookup: every id is answered from one
         epoch/labelling snapshot, so the batch is internally consistent
         even while the stream moves. On the binary transport the ids
         travel packed in the frame payload; on the line protocol they
-        ride the arg list."""
+        ride the arg list. ``retry_busy`` retries load-shed (BUSY)
+        replies with capped exponential backoff + jitter."""
         ids = list(ids)
         sel = f" {alg}" if alg else ""
         if self._proto == "binary":
-            reply = self._frame_request("BQUERY", f"{name}{sel}", ids)
+            ask = lambda: self._frame_request("BQUERY", f"{name}{sel}", ids)
         else:
             flat = " ".join(str(v) for v in ids)
-            reply = self._request(f"BQUERY {name}{sel} {flat}")
+            ask = lambda: self._request(f"BQUERY {name}{sel} {flat}")
+        reply = self._with_busy_retry(ask, retry_busy)
         return [int(x) for x in reply.split()[2:]]
 
     def labels(self, name: str, alg: str = "C-2",
@@ -412,6 +454,91 @@ class ContourClient:
                 except ValueError:
                     out[k] = v
         return out
+
+    # ------------------------------------------------------------ telemetry
+    #
+    # Continuous telemetry on top of the snapshot verbs: PROM is the
+    # OpenMetrics text exposition (what `contour serve --prom-addr`
+    # serves over HTTP), HEALTH a windowed ready/degraded/overloaded
+    # signal, WATCH a server-push stream of per-interval metric deltas.
+
+    def prom(self) -> str:
+        """The server's OpenMetrics/Prometheus text exposition (ends
+        with ``# EOF``). Same body a scrape of ``--prom-addr`` gets."""
+        if self._proto == "binary":
+            reply = self._frame_request("PROM", "")
+            _, _, body = reply.partition("\n")  # drop the "OK <n>" head
+            return body
+        self._send("PROM")
+        head = self._recv()
+        if head.startswith("ERR"):
+            raise ContourError(head[4:])
+        n = int(head.split()[1])
+        return "\n".join(self._recv() for _ in range(n))
+
+    def health(self) -> dict:
+        """Windowed health signal: ``{"status": "ready"|"degraded"|
+        "overloaded", "busy_frac": .., "heavy_sat": ..,
+        "pool_wait_p95_ns": .., "wal_fsync_ns": .., "window_ms": ..,
+        "samples": .., ...}`` (thresholds ride along)."""
+        parts = self._request("HEALTH").split()
+        out: dict = {"status": parts[1]}
+        for tok in parts[2:]:
+            k, v = tok.split("=", 1)
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = float(v)
+        return out
+
+    @staticmethod
+    def _parse_tick(line: str) -> dict:
+        parts = line.split()
+        if not parts or parts[0] != "TICK":
+            raise ContourError(f"unexpected WATCH frame: {line!r}")
+        out: dict = {"seq": int(parts[1]), "deltas": {}}
+        for tok in parts[2:]:
+            k, v = tok.split("=", 1)
+            if k in ("t_ms", "dt_ms"):
+                out[k] = int(v)
+            elif k == "qps":
+                out["qps"] = float(v)
+            else:
+                out["deltas"][k] = int(v)
+        return out
+
+    def watch(self, ticks: int = 5, interval_ms: int = 1000) -> Iterator[dict]:
+        """Server-push metric deltas: yields one dict per tick —
+        ``{"seq", "t_ms", "dt_ms", "qps", "deltas": {counter: delta}}``
+        — every ``interval_ms`` until ``ticks`` frames have arrived.
+        Works on both transports (OK frames keyed by the request id on
+        binary; TICK lines then DONE on the line protocol)."""
+        if self._proto == "binary":
+            rid = self._send_frame("WATCH", f"{ticks} {interval_ms}")
+            while True:
+                got, status, payload = self._recv_frame()
+                if got != rid:
+                    raise ContourError(f"reply id {got} inside WATCH stream {rid}")
+                text = payload.decode("utf-8", "replace")
+                if status == _STATUS_BUSY:
+                    raise ContourBusy(text)
+                if status != _STATUS_OK:
+                    raise ContourError(text)
+                if text == "DONE":
+                    return
+                yield self._parse_tick(text)
+        else:
+            self._send(f"WATCH {ticks} {interval_ms}")
+            head = self._recv()
+            if head.startswith("ERR busy"):
+                raise ContourBusy(head[4:])
+            if head.startswith("ERR"):
+                raise ContourError(head[4:])
+            while True:
+                line = self._recv()
+                if line == "DONE":
+                    return
+                yield self._parse_tick(line)
 
     # ------------------------------------------------------------- tracing
     #
@@ -629,13 +756,17 @@ class Pipeline:
             labels = [p.result(t) for t in tickets]
     """
 
-    def __init__(self, client: ContourClient, window: int = 16):
+    def __init__(self, client: ContourClient, window: int = 16, retry_busy: int = 0):
         if window < 1:
             raise ValueError("window must be >= 1")
         self._c = client
         self._window = window
-        self._verbs: Dict[int, str] = {}       # in flight: id -> verb
-        self._done: Dict[int, Union[str, ContourError]] = {}
+        self._retry_busy = retry_busy
+        # In flight, by current frame id. A BUSY resubmission gets a
+        # fresh frame id but keeps its original ticket, so callers never
+        # see the retries.
+        self._inflight: Dict[int, Tuple[str, str, Optional[List[int]], int, int]] = {}
+        self._done: Dict[int, Union[str, ContourError]] = {}  # by ticket
 
     def __enter__(self) -> "Pipeline":
         return self
@@ -644,22 +775,31 @@ class Pipeline:
         self.drain()
 
     def _submit(self, verb: str, args: str, extra: Optional[List[int]] = None) -> int:
-        while len(self._verbs) >= self._window:
+        while len(self._inflight) >= self._window:
             self._pump()
         rid = self._c._send_frame(verb, args, extra)
-        self._verbs[rid] = verb
+        self._inflight[rid] = (verb, args, extra, 0, rid)  # ticket = first id
         return rid
 
     def _pump(self) -> None:
-        """Receive one reply and file it under its ticket."""
+        """Receive one reply and file it under its ticket (or resubmit
+        a BUSY request while it has retries left)."""
         rid, status, payload = self._c._recv_frame()
-        verb = self._verbs.pop(rid, None)
-        if verb is None:
+        rec = self._inflight.pop(rid, None)
+        if rec is None:
             raise ContourError(f"reply for unknown request id {rid}")
+        verb, args, extra, attempt, ticket = rec
         try:
-            self._done[rid] = ContourClient._decode_reply(verb, status, payload)
-        except ContourError as e:  # includes ContourBusy
-            self._done[rid] = e
+            self._done[ticket] = ContourClient._decode_reply(verb, status, payload)
+        except ContourBusy as e:
+            if attempt < self._retry_busy:
+                time.sleep(_backoff_delay(attempt))
+                new_rid = self._c._send_frame(verb, args, extra)
+                self._inflight[new_rid] = (verb, args, extra, attempt + 1, ticket)
+            else:
+                self._done[ticket] = e
+        except ContourError as e:
+            self._done[ticket] = e
 
     def query(self, name: str, v: int, alg: Optional[str] = None) -> int:
         """Pipelined :meth:`ContourClient.query`; returns a ticket."""
@@ -678,7 +818,7 @@ class Pipeline:
         arrives; raises the server's error (:class:`ContourBusy` for
         load shedding) if the request failed."""
         while ticket not in self._done:
-            if ticket not in self._verbs and ticket not in self._done:
+            if not any(t == ticket for (_, _, _, _, t) in self._inflight.values()):
                 raise ContourError(f"unknown ticket {ticket}")
             self._pump()
         reply = self._done.pop(ticket)
@@ -694,7 +834,7 @@ class Pipeline:
     def drain(self) -> None:
         """Receive every outstanding reply (errors are filed, not
         raised — they surface when their ticket's result is read)."""
-        while self._verbs:
+        while self._inflight:
             self._pump()
 
 

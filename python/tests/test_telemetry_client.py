@@ -1,0 +1,272 @@
+"""Client-side telemetry tests against in-process mock servers — no
+Rust binary needed. Covers the opt-in BUSY retry (line protocol,
+binary pipeline), backoff shape, and the WATCH/PROM/HEALTH parsers on
+both transports."""
+
+import pathlib
+import socket
+import struct
+import sys
+import threading
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "client"))
+import contour_client as cc  # noqa: E402
+from contour_client import ContourBusy, ContourClient  # noqa: E402
+
+OP_QUIT = cc._OPCODES["QUIT"]
+OP_QUERY = cc._OPCODES["QUERY"]
+OP_WATCH = cc._OPCODES["WATCH"]
+
+
+class MockLineServer(threading.Thread):
+    """One-connection line-protocol mock. ``handler(line)`` returns the
+    reply line or a list of lines; QUIT is answered here."""
+
+    def __init__(self, handler):
+        super().__init__(daemon=True)
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(1)
+        self.port = self.sock.getsockname()[1]
+        self.handler = handler
+        self.lines = []
+        self.start()
+
+    def run(self):
+        conn, _ = self.sock.accept()
+        f = conn.makefile("r", encoding="utf-8", newline="\n")
+        try:
+            for line in f:
+                line = line.rstrip("\n")
+                self.lines.append(line)
+                if line == "QUIT":
+                    conn.sendall(b"BYE\n")
+                    break
+                out = self.handler(line)
+                if isinstance(out, str):
+                    out = [out]
+                conn.sendall(("".join(l + "\n" for l in out)).encode("utf-8"))
+        finally:
+            conn.close()
+            self.sock.close()
+
+
+def _send_frame(conn, rid, status, text):
+    b = text.encode("utf-8")
+    conn.sendall(struct.pack("<2sBBII", b"CP", 2, status, rid, len(b)) + b)
+
+
+class MockBinaryServer(threading.Thread):
+    """One-connection protocol-v2 mock: answers the HELLO upgrade, then
+    feeds each request frame to ``handler(op, rid, args)``, which
+    returns a list of ``(rid, status, text)`` reply frames. QUIT is
+    answered here with a BYE frame."""
+
+    def __init__(self, handler):
+        super().__init__(daemon=True)
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(1)
+        self.port = self.sock.getsockname()[1]
+        self.handler = handler
+        self.frames = []
+        self.start()
+
+    def run(self):
+        conn, _ = self.sock.accept()
+        rf = conn.makefile("rb")
+        try:
+            assert rf.readline() == b"HELLO 2\n"
+            conn.sendall(b"OK v2\n")
+            while True:
+                head = rf.read(12)
+                if not head or len(head) < 12:
+                    break
+                magic, ver, op, rid, plen = struct.unpack("<2sBBII", head)
+                payload = rf.read(plen) if plen else b""
+                (alen,) = struct.unpack_from("<H", payload, 0)
+                args = payload[2 : 2 + alen].decode("utf-8")
+                self.frames.append((op, rid, args))
+                if op == OP_QUIT:
+                    _send_frame(conn, rid, cc._STATUS_BYE, "")
+                    break
+                for reply in self.handler(op, rid, args):
+                    _send_frame(conn, *reply)
+        finally:
+            conn.close()
+            self.sock.close()
+
+
+# ----------------------------------------------------------- BUSY retry
+
+
+def test_backoff_grows_and_caps():
+    for attempt in range(12):
+        d = cc._backoff_delay(attempt)
+        full = min(cc._RETRY_CAP_S, cc._RETRY_BASE_S * 2 ** attempt)
+        assert full / 2 <= d <= full, (attempt, d)
+    # Far past the cap: still bounded (no overflow blowup).
+    assert cc._backoff_delay(60) <= cc._RETRY_CAP_S
+
+
+def test_busy_surfaces_without_optin():
+    srv = MockLineServer(lambda line: "ERR busy: shed")
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        with pytest.raises(ContourBusy):
+            c.query("g", 3)
+    srv.join(2)
+    # Exactly one attempt: no silent retries by default.
+    assert srv.lines == ["QUERY g 3", "QUIT"]
+
+
+def test_line_query_retries_busy_until_ok(monkeypatch):
+    monkeypatch.setattr(cc, "_RETRY_BASE_S", 0.001)
+    state = {"n": 0}
+
+    def handler(line):
+        state["n"] += 1
+        return "ERR busy: shed" if state["n"] <= 2 else "OK 7"
+
+    srv = MockLineServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        assert c.query("g", 3, retry_busy=5) == 7
+    srv.join(2)
+    assert srv.lines[:3] == ["QUERY g 3"] * 3, srv.lines
+
+
+def test_line_batch_query_retries_busy(monkeypatch):
+    monkeypatch.setattr(cc, "_RETRY_BASE_S", 0.001)
+    state = {"n": 0, "always_busy": False}
+
+    def handler(line):
+        state["n"] += 1
+        if state["always_busy"] or state["n"] == 1:
+            return "ERR busy: shed"
+        return "OK 2 0 0"
+
+    srv = MockLineServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        assert c.batch_query("g", [1, 2], retry_busy=1) == [0, 0]
+        # Retries exhausted: the BUSY surfaces.
+        state["always_busy"] = True
+        with pytest.raises(ContourBusy):
+            c.batch_query("g", [1, 2], retry_busy=2)
+    srv.join(2)
+
+
+def test_pipeline_resubmits_busy_under_original_ticket(monkeypatch):
+    monkeypatch.setattr(cc, "_RETRY_BASE_S", 0.001)
+    state = {"n": 0}
+
+    def handler(op, rid, args):
+        assert op == OP_QUERY
+        state["n"] += 1
+        if state["n"] <= 2:
+            return [(rid, cc._STATUS_BUSY, "shed")]
+        return [(rid, cc._STATUS_OK, "7")]
+
+    srv = MockBinaryServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="binary") as c:
+        with c.pipeline(window=4, retry_busy=3) as p:
+            ticket = p.query("g", 3)
+            assert p.result(ticket) == 7
+    srv.join(2)
+    query_frames = [f for f in srv.frames if f[0] == OP_QUERY]
+    assert len(query_frames) == 3, srv.frames
+    # Each resubmission used a fresh frame id.
+    assert len({rid for _, rid, _ in query_frames}) == 3
+    assert {args for _, _, args in query_frames} == {"g 3"}
+
+
+def test_pipeline_busy_raises_when_retries_exhausted(monkeypatch):
+    monkeypatch.setattr(cc, "_RETRY_BASE_S", 0.001)
+
+    def handler(op, rid, args):
+        return [(rid, cc._STATUS_BUSY, "shed")]
+
+    srv = MockBinaryServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="binary") as c:
+        with c.pipeline(window=4, retry_busy=2) as p:
+            ticket = p.query("g", 3)
+            with pytest.raises(ContourBusy):
+                p.result(ticket)
+    srv.join(2)
+    assert len([f for f in srv.frames if f[0] == OP_QUERY]) == 3  # 1 + 2 retries
+
+
+# ------------------------------------------------- WATCH / PROM / HEALTH
+
+
+TICKS = [
+    "TICK 0 t_ms=12 dt_ms=10 requests=4 errors=0 qps=400.0",
+    "TICK 1 t_ms=22 dt_ms=10 requests=0 errors=1 qps=0.0",
+]
+
+
+def _check_ticks(got):
+    assert [t["seq"] for t in got] == [0, 1]
+    assert got[0]["t_ms"] == 12 and got[0]["dt_ms"] == 10
+    assert got[0]["deltas"] == {"requests": 4, "errors": 0}
+    assert got[0]["qps"] == 400.0
+    assert got[1]["deltas"]["errors"] == 1 and got[1]["qps"] == 0.0
+
+
+def test_watch_parses_line_stream():
+    def handler(line):
+        assert line == "WATCH 2 10"
+        return ["OK 2 10"] + TICKS + ["DONE"]
+
+    srv = MockLineServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        _check_ticks(list(c.watch(ticks=2, interval_ms=10)))
+    srv.join(2)
+
+
+def test_watch_parses_binary_stream():
+    def handler(op, rid, args):
+        assert (op, args) == (OP_WATCH, "2 10")
+        return [(rid, cc._STATUS_OK, t) for t in TICKS] + [(rid, cc._STATUS_OK, "DONE")]
+
+    srv = MockBinaryServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="binary") as c:
+        _check_ticks(list(c.watch(ticks=2, interval_ms=10)))
+    srv.join(2)
+
+
+PROM_BODY = ["# TYPE contour_requests_total counter", "contour_requests_total 7", "# EOF"]
+
+
+def test_prom_line_transport():
+    srv = MockLineServer(lambda line: [f"OK {len(PROM_BODY)}"] + PROM_BODY)
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        assert c.prom() == "\n".join(PROM_BODY)
+    srv.join(2)
+
+
+def test_prom_binary_transport():
+    body = "\n".join(PROM_BODY)
+
+    def handler(op, rid, args):
+        return [(rid, cc._STATUS_OK, f"{len(PROM_BODY)}\n{body}")]
+
+    srv = MockBinaryServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="binary") as c:
+        assert c.prom() == body
+    srv.join(2)
+
+
+def test_health_parses_status_and_signals():
+    reply = (
+        "OK degraded busy_frac=0.0870 heavy_sat=1.0000 pool_wait_p95_ns=12 "
+        "wal_fsync_ns=0 window_ms=60000 samples=0 busy_degraded=0.05 busy_overloaded=0.5"
+    )
+    srv = MockLineServer(lambda line: reply)
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        h = c.health()
+    srv.join(2)
+    assert h["status"] == "degraded"
+    assert h["busy_frac"] == pytest.approx(0.087)
+    assert h["samples"] == 0 and h["window_ms"] == 60000
+    assert h["busy_overloaded"] == pytest.approx(0.5)

@@ -795,6 +795,7 @@ impl Algorithm for Contour {
     /// `ctx.tid` so sharded runs land on their own tracks. With
     /// `ctx.trace` unset the extra cost is one branch per pass.
     fn run_ctx(&self, g: &Csr, ctx: &RunContext<'_>) -> RunResult {
+        let mem = crate::obs::MemScope::start();
         let tr = ctx.trace.as_deref();
         let n = g.n;
         let labels = AtomicLabels::identity(n);
@@ -904,6 +905,9 @@ impl Algorithm for Contour {
                 } else {
                     args.push(("changed", out.changed as u64));
                 }
+                if crate::obs::alloc::enabled() {
+                    args.push(("mem_bytes", crate::obs::alloc::current_bytes()));
+                }
                 t.close(format!("pass{pass_idx}"), "contour", detail, ctx.tid, start, args);
             }
             match mode {
@@ -959,6 +963,7 @@ impl Algorithm for Contour {
             iterations: iters,
             frontier: stats,
             trace: ctx.trace.clone(),
+            mem: mem.finish(),
         }
     }
 }

@@ -72,13 +72,18 @@ pub struct RunResult {
     /// (see [`Algorithm::run_ctx`]). Shared so the shard executor can
     /// merge many runs onto one timeline.
     pub trace: Option<Arc<RunTrace>>,
+    /// Heap accounting for this run — peak/net bytes and alloc/free
+    /// counts — present iff the crate was built with the `alloc-track`
+    /// feature (see [`crate::obs::MemScope`]). Approximate under
+    /// concurrent runs: the peak watermark is process-global.
+    pub mem: Option<crate::obs::MemStats>,
 }
 
 impl RunResult {
     /// Result with no frontier accounting (every non-Contour algorithm,
     /// and Contour runs with the frontier off).
     pub fn new(labels: Labels, iterations: usize) -> Self {
-        Self { labels, iterations, frontier: FrontierStats::default(), trace: None }
+        Self { labels, iterations, frontier: FrontierStats::default(), trace: None, mem: None }
     }
 }
 
@@ -119,12 +124,19 @@ pub trait Algorithm {
     /// algorithm is traceable; engines with finer structure (Contour's
     /// pass loop) override this to emit per-pass spans.
     fn run_ctx(&self, g: &Csr, ctx: &RunContext<'_>) -> RunResult {
+        let mem = crate::obs::MemScope::start();
         let Some(tr) = ctx.trace.as_deref() else {
-            return self.run_with_stats(g);
+            let mut r = self.run_with_stats(g);
+            r.mem = mem.finish();
+            return r;
         };
         let start = tr.now();
         let mut r = self.run_with_stats(g);
-        let args = vec![("iterations", r.iterations as u64)];
+        r.mem = mem.finish();
+        let mut args = vec![("iterations", r.iterations as u64)];
+        if let Some(m) = &r.mem {
+            args.push(("peak_bytes", m.peak_bytes));
+        }
         tr.close(self.name(), "cc", "", ctx.tid, start, args);
         r.trace = ctx.trace.clone();
         r

@@ -71,7 +71,7 @@ fn print_usage() {
          \x20        (--baseline: hotpath/serve — rewrite ./BENCH_{{hotpath,serving}}.json; run from the repo root)\n\
          \x20        (--trace: afterwards run one traced RMAT pass and export its timeline)\n\
          \x20 contour stats [--graph FILE | --gen SPEC]\n\
-         \x20 contour serve [--addr HOST:PORT] [--threads T]\n\
+         \x20 contour serve [--addr HOST:PORT] [--threads T] [--sample-ms MS] [--prom-addr HOST:PORT]\n\
          \x20 contour stream [--graph FILE | --gen SPEC] [--batch B] [--epochs K]\n\
          \x20        [--wal PATH] [--snapshot PATH] [--threads T] [--verify]\n\
          \x20 contour shard [--graph FILE | --gen SPEC] [--alg NAME] [--shards 1,2,4,8]\n\
@@ -331,12 +331,28 @@ fn cmd_stats(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7021").to_string();
     let threads = args.get_usize("threads", 0)?;
-    let state = std::sync::Arc::new(contour::server::ServerState::new(threads));
+    let sample_ms = args.get_usize("sample-ms", 0)? as u64;
+    let state = std::sync::Arc::new(
+        contour::server::ServerState::new(threads).with_sample_interval(sample_ms),
+    );
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     // Bind before announcing: with `--addr host:0` the OS assigns the
     // port, and the printed address is the one clients can reach.
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("contour server on {} (Ctrl-C to stop)", listener.local_addr()?);
+    // Optional plain-HTTP Prometheus scrape endpoint, on its own
+    // listener so scrapers never mix with the verb protocol.
+    if let Some(prom) = args.get("prom-addr") {
+        let prom_listener = std::net::TcpListener::bind(prom)?;
+        println!("prometheus scrape endpoint on {}", prom_listener.local_addr()?);
+        let state = std::sync::Arc::clone(&state);
+        let shutdown = std::sync::Arc::clone(&shutdown);
+        std::thread::spawn(move || {
+            if let Err(e) = contour::server::serve_prom_listener(prom_listener, state, shutdown) {
+                eprintln!("prom endpoint error: {e}");
+            }
+        });
+    }
     contour::server::serve_listener(listener, state, shutdown)
 }
 

@@ -1,0 +1,281 @@
+//! Per-run memory accounting via a counting global allocator.
+//!
+//! With the `alloc-track` feature enabled this module installs a
+//! [`#[global_allocator]`](std::alloc::GlobalAlloc) wrapper around the
+//! system allocator that counts bytes and calls into thread-tagged
+//! atomic stripes (tagged by a hash of the calling thread's stack
+//! address — no TLS, so the accounting can never recurse into the
+//! allocator or touch a thread mid-teardown). On top of the raw
+//! counters, [`MemScope`] brackets a region of work — one CC run — and
+//! reports the scope's peak and net heap growth as [`MemStats`], which
+//! `RunResult` carries and TRACE/METRICS surface.
+//!
+//! Without the feature every entry point compiles to a no-op returning
+//! zeros/`None`, so the default build pays nothing (the allocator
+//! wrapper itself is not even installed).
+//!
+//! Accuracy notes (feature on): the current/peak watermarks are
+//! process-global, so two runs measured concurrently attribute each
+//! other's allocations to whichever scope is open — fine for the
+//! diagnostic this is (the serving path runs heavy verbs under an
+//! admission gate anyway), not a substitute for a heap profiler.
+
+/// Heap accounting for one bracketed region of work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemStats {
+    /// Peak bytes live above the scope's starting point.
+    pub peak_bytes: u64,
+    /// Net growth across the scope (bytes still live at close minus
+    /// bytes live at open); negative when the scope freed more than it
+    /// allocated.
+    pub net_bytes: i64,
+    /// Allocation calls observed process-wide during the scope.
+    pub allocs: u64,
+    /// Deallocation calls observed process-wide during the scope.
+    pub frees: u64,
+}
+
+#[cfg(feature = "alloc-track")]
+mod imp {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+    const STRIPES: usize = 64;
+
+    #[repr(align(128))] // one stripe per cache line pair: no false sharing
+    struct Stripe {
+        alloc_bytes: AtomicU64,
+        alloc_calls: AtomicU64,
+        free_bytes: AtomicU64,
+        free_calls: AtomicU64,
+    }
+
+    #[allow(clippy::declare_interior_mutable_const)]
+    const STRIPE_INIT: Stripe = Stripe {
+        alloc_bytes: AtomicU64::new(0),
+        alloc_calls: AtomicU64::new(0),
+        free_bytes: AtomicU64::new(0),
+        free_calls: AtomicU64::new(0),
+    };
+    static STRIPED: [Stripe; STRIPES] = [STRIPE_INIT; STRIPES];
+
+    /// Live bytes right now (allocated minus freed, process-wide).
+    static CUR: AtomicI64 = AtomicI64::new(0);
+    /// High-water mark of `CUR`, resettable by an opening [`MemScope`].
+    static WATERMARK: AtomicI64 = AtomicI64::new(0);
+
+    /// Tag the calling thread without TLS: thread stacks are distinct
+    /// multi-page regions, so the page number of a local variable is a
+    /// stable, allocation-free per-thread discriminator.
+    #[inline]
+    fn stripe() -> &'static Stripe {
+        let probe = 0u8;
+        let tag = (&probe as *const u8 as usize) >> 13;
+        &STRIPED[tag % STRIPES]
+    }
+
+    #[inline]
+    fn on_alloc(n: usize) {
+        let s = stripe();
+        s.alloc_bytes.fetch_add(n as u64, Ordering::Relaxed);
+        s.alloc_calls.fetch_add(1, Ordering::Relaxed);
+        let cur = CUR.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+        WATERMARK.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn on_free(n: usize) {
+        let s = stripe();
+        s.free_bytes.fetch_add(n as u64, Ordering::Relaxed);
+        s.free_calls.fetch_add(1, Ordering::Relaxed);
+        CUR.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    pub struct CountingAlloc;
+
+    // SAFETY: defers every allocation to `System`; the bookkeeping is
+    // atomic arithmetic on static storage and never allocates.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc_zeroed(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            on_free(layout.size());
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                on_free(layout.size());
+                on_alloc(new_size);
+            }
+            p
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    pub fn current_bytes() -> u64 {
+        CUR.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    pub fn cur_raw() -> i64 {
+        CUR.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_watermark_to_current() -> i64 {
+        let cur = CUR.load(Ordering::Relaxed);
+        WATERMARK.store(cur, Ordering::Relaxed);
+        cur
+    }
+
+    pub fn watermark() -> i64 {
+        WATERMARK.load(Ordering::Relaxed)
+    }
+
+    pub fn totals() -> (u64, u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64, 0u64);
+        for s in &STRIPED {
+            t.0 = t.0.wrapping_add(s.alloc_bytes.load(Ordering::Relaxed));
+            t.1 = t.1.wrapping_add(s.alloc_calls.load(Ordering::Relaxed));
+            t.2 = t.2.wrapping_add(s.free_bytes.load(Ordering::Relaxed));
+            t.3 = t.3.wrapping_add(s.free_calls.load(Ordering::Relaxed));
+        }
+        t
+    }
+}
+
+/// Whether the counting allocator is compiled in.
+pub const fn enabled() -> bool {
+    cfg!(feature = "alloc-track")
+}
+
+/// Bytes currently live on the heap (0 when `alloc-track` is off).
+pub fn current_bytes() -> u64 {
+    #[cfg(feature = "alloc-track")]
+    {
+        imp::current_bytes()
+    }
+    #[cfg(not(feature = "alloc-track"))]
+    {
+        0
+    }
+}
+
+/// Lifetime allocator totals `(alloc_bytes, alloc_calls, free_bytes,
+/// free_calls)`, summed across thread stripes. All zeros when the
+/// feature is off.
+pub fn totals() -> (u64, u64, u64, u64) {
+    #[cfg(feature = "alloc-track")]
+    {
+        imp::totals()
+    }
+    #[cfg(not(feature = "alloc-track"))]
+    {
+        (0, 0, 0, 0)
+    }
+}
+
+/// Process-wide peak of live bytes since the last scope opened (0 when
+/// the feature is off).
+pub fn peak_bytes() -> u64 {
+    #[cfg(feature = "alloc-track")]
+    {
+        imp::watermark().max(0) as u64
+    }
+    #[cfg(not(feature = "alloc-track"))]
+    {
+        0
+    }
+}
+
+/// Brackets a region of work for heap accounting.
+///
+/// `start()` marks the live-byte level and resets the peak watermark;
+/// `finish()` returns the scope's [`MemStats`] — or `None` when the
+/// `alloc-track` feature is off, so callers store an `Option<MemStats>`
+/// and pay nothing by default.
+pub struct MemScope {
+    #[cfg(feature = "alloc-track")]
+    start_cur: i64,
+    #[cfg(feature = "alloc-track")]
+    start_totals: (u64, u64, u64, u64),
+}
+
+impl MemScope {
+    pub fn start() -> MemScope {
+        #[cfg(feature = "alloc-track")]
+        {
+            MemScope {
+                start_cur: imp::reset_watermark_to_current(),
+                start_totals: imp::totals(),
+            }
+        }
+        #[cfg(not(feature = "alloc-track"))]
+        {
+            MemScope {}
+        }
+    }
+
+    pub fn finish(self) -> Option<MemStats> {
+        #[cfg(feature = "alloc-track")]
+        {
+            let end = imp::totals();
+            Some(MemStats {
+                peak_bytes: (imp::watermark() - self.start_cur).max(0) as u64,
+                net_bytes: imp::cur_raw() - self.start_cur,
+                allocs: end.1.wrapping_sub(self.start_totals.1),
+                frees: end.3.wrapping_sub(self.start_totals.3),
+            })
+        }
+        #[cfg(not(feature = "alloc-track"))]
+        {
+            None
+        }
+    }
+}
+
+#[cfg(all(test, feature = "alloc-track"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_sees_a_large_allocation() {
+        let scope = MemScope::start();
+        let buf = vec![0u8; 1 << 20];
+        std::hint::black_box(&buf);
+        let held = MemScope::start(); // nested mark while buf is live
+        drop(buf);
+        let inner = held.finish().unwrap();
+        let outer = scope.finish().unwrap();
+        assert!(outer.peak_bytes >= 1 << 20, "peak {outer:?}");
+        assert!(outer.allocs >= 1);
+        // The inner scope opened after the megabyte was allocated and
+        // closed after it was freed: net must go negative.
+        assert!(inner.net_bytes <= -(1 << 20) + 4096, "inner {inner:?}");
+    }
+
+    #[test]
+    fn current_bytes_moves_with_live_data() {
+        let before = current_bytes();
+        let buf = vec![7u8; 1 << 18];
+        std::hint::black_box(&buf);
+        let during = current_bytes();
+        assert!(during >= before + (1 << 18), "{before} -> {during}");
+    }
+}

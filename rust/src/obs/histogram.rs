@@ -69,6 +69,15 @@ impl Histogram {
         self.record(d.as_nanos() as u64);
     }
 
+    /// Raw per-bucket counts (relaxed reads). The telemetry ring stores
+    /// these so windowed quantiles can be derived from count *deltas*
+    /// via [`quantile_from_counts`] — a lifetime histogram cannot answer
+    /// "p95 over the last minute", but the difference of two bucket
+    /// vectors can.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed))
+    }
+
     /// A consistent-enough snapshot for rendering (buckets are read
     /// relaxed, so a concurrent recorder may be half-visible; counts
     /// only ever grow, so quantiles stay sane).
@@ -102,6 +111,31 @@ impl Histogram {
             p99: quantile(0.99),
         }
     }
+}
+
+/// Quantile over a standalone bucket-count vector (same log₂ bucket
+/// scheme as [`Histogram`]). Used on *deltas* of two
+/// [`Histogram::bucket_counts`] snapshots to answer windowed quantiles;
+/// with no exact max available, the top bucket reports its lower bound
+/// rather than a midpoint that could overshoot by 1.5×.
+pub fn quantile_from_counts(counts: &[u64], q: f64) -> u64 {
+    let count: u64 = counts.iter().sum();
+    if count == 0 {
+        return 0;
+    }
+    let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+    let mut cum = 0u64;
+    for (b, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return if b + 1 == BUCKETS && b > 0 {
+                1u64 << (b - 1)
+            } else {
+                Histogram::representative(b)
+            };
+        }
+    }
+    0
 }
 
 /// Plain-value view of a [`Histogram`] at one instant.
@@ -171,6 +205,48 @@ mod tests {
         // Bucket [512, 1024) midpoint is 768 > the observed max 700.
         assert_eq!(s.p50, 700);
         assert_eq!(s.p99, 700);
+    }
+
+    #[test]
+    fn max_bucket_clamps_without_overflow() {
+        // 2^63 and u64::MAX both land in the top bucket; the reported
+        // quantile must clamp to the tracked max instead of overflowing
+        // while computing a midpoint above 2^63.
+        let h = Histogram::new();
+        h.record(1u64 << 63);
+        h.record(u64::MAX);
+        assert_eq!(Histogram::bucket(1u64 << 63), BUCKETS - 1);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.max, u64::MAX);
+        assert!(s.p50 >= 1u64 << 62, "p50={}", s.p50);
+        assert!(s.p99 <= s.max);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{s:?}");
+    }
+
+    #[test]
+    fn quantile_from_count_deltas_matches_window() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(1_000);
+        }
+        let before = h.bucket_counts();
+        for _ in 0..100 {
+            h.record(1_000_000);
+        }
+        let after = h.bucket_counts();
+        let delta: Vec<u64> = after.iter().zip(before.iter()).map(|(a, b)| a - b).collect();
+        // The window contains only ~1ms samples even though the lifetime
+        // histogram is dominated by 1µs ones.
+        let p50 = quantile_from_counts(&delta, 0.50);
+        assert!((524_288..1_048_576).contains(&p50), "p50={p50}");
+        assert_eq!(quantile_from_counts(&[], 0.5), 0);
+        assert_eq!(quantile_from_counts(&[0; BUCKETS], 0.99), 0);
+        // Top-bucket mass reports the bucket's lower bound, not an
+        // overflowing midpoint.
+        let mut top = [0u64; BUCKETS];
+        top[BUCKETS - 1] = 5;
+        assert_eq!(quantile_from_counts(&top, 0.5), 1u64 << 62);
     }
 
     #[test]

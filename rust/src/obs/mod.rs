@@ -28,9 +28,23 @@
 //! with the layers being observed ([`crate::cc::RunContext`] threads a
 //! trace through the algorithm core, [`crate::par::pool`] owns the
 //! queue-wait/run-time pair, [`crate::server`] owns the per-verb set).
+//!
+//! Two continuous-telemetry primitives build on the same foundations:
+//!
+//! * [`TimeSeries`] — a bounded lock-free ring of periodic metric
+//!   snapshots (seqlock per slot) with delta/rate derivation over any
+//!   lookback window; the server's sampler thread feeds one and the
+//!   PROM/HEALTH/WATCH verbs read it.
+//! * [`alloc`] — an optional (`alloc-track` feature) counting global
+//!   allocator so each run's [`MemStats`](alloc::MemStats) ride on
+//!   `RunResult` and pass spans.
 
+pub mod alloc;
 mod histogram;
+mod timeseries;
 mod trace;
 
-pub use histogram::{Histogram, HistogramSnapshot};
+pub use alloc::{MemScope, MemStats};
+pub use histogram::{quantile_from_counts, Histogram, HistogramSnapshot, BUCKETS};
+pub use timeseries::{Sample, TimeSeries};
 pub use trace::{DEFAULT_SPAN_CAP, RunTrace, Span};

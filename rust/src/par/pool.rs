@@ -346,6 +346,17 @@ pub fn stats() -> PoolStats {
     }
 }
 
+/// Raw per-bucket counts of the queue-wait histogram (all-zero before
+/// first use). The telemetry ring samples these so HEALTH can derive a
+/// *windowed* queue-wait p95 from count deltas — the lifetime snapshot
+/// in [`PoolStats`] cannot answer "p95 over the last minute".
+pub fn queue_wait_buckets() -> [u64; crate::obs::BUCKETS] {
+    match POOL.get() {
+        Some(p) => p.inner.metrics.queue_wait.bucket_counts(),
+        None => [0; crate::obs::BUCKETS],
+    }
+}
+
 /// True while the current thread is executing inside a pool job.
 pub fn in_job() -> bool {
     IN_JOB.with(|f| f.get())

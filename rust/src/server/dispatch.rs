@@ -33,6 +33,7 @@ use crate::shard::{self, ShardedGraph};
 use crate::stream::StreamingCc;
 use crate::VId;
 
+use super::telemetry;
 use super::{graph_from_spec, parse_edge_line, CcEntry, HeavyPermit, ServerState, RECENT_CAP};
 
 /// Marker error for admission-control rejections, so adapters can tell
@@ -90,6 +91,9 @@ pub enum Reply {
     Bye,
     /// HELLO accepted: switch the connection to binary framing v2.
     Upgrade,
+    /// WATCH accepted: the transport streams `ticks` metric-delta
+    /// frames, one every `interval_ms`, then a terminal `DONE`.
+    Watch { ticks: u64, interval_ms: u64 },
 }
 
 /// Render a reply in the line protocol. `None` means QUIT (the caller
@@ -120,6 +124,8 @@ pub fn render_line(reply: &Reply) -> Option<String> {
         Reply::Busy(m) => format!("ERR busy: {m}"),
         Reply::Pong => "PONG".to_string(),
         Reply::Upgrade => "OK v2".to_string(),
+        // The header only; the transport streams the ticks after it.
+        Reply::Watch { ticks, interval_ms } => format!("OK {ticks} {interval_ms}"),
         Reply::Bye => return None,
     })
 }
@@ -216,13 +222,17 @@ fn run_verb(state: &ServerState, cmd: &str, rest: &[&str], body: Body<'_>) -> Re
             Some(name) => bail!("no graph or stream {name:?}"),
             None => bail!("DROP needs a name"),
         },
-        "METRICS" => Reply::Ok(format!(
-            "{}{}{}{}",
-            state.metrics.render(),
-            state.render_cache_stats(),
-            state.render_verb_lat(),
-            state.render_verb_err()
-        )),
+        // Rendered from the telemetry registry so METRICS and PROM
+        // expose the same key set, in the same (sorted) order.
+        "METRICS" => Reply::Ok(telemetry::render_metrics(state)),
+        "PROM" => {
+            // The line transport needs a length prefix to frame the
+            // multi-line body: `OK <nlines>` then that many lines.
+            let body = telemetry::render_prom(state);
+            Reply::Ok(format!("{}\n{}", body.lines().count(), body))
+        }
+        "HEALTH" => Reply::Ok(telemetry::render_health(state)),
+        "WATCH" => cmd_watch(rest)?,
         "TRACE" => match rest.first() {
             Some(name) => match state.trace_of(name) {
                 Some(t) => Reply::Ok(t.render_wire()),
@@ -248,6 +258,29 @@ fn cmd_hello(rest: &[&str]) -> Result<Reply> {
     };
     anyhow::ensure!(v == 2, "unsupported protocol version {v} (server speaks v2)");
     Ok(Reply::Upgrade)
+}
+
+/// `WATCH [ticks] [interval_ms]` — stream `ticks` metric-delta frames,
+/// one per interval, then `DONE`. Parse + validation only; the actual
+/// streaming happens in the transports (the dispatch core is
+/// one-request-one-reply by design).
+fn cmd_watch(rest: &[&str]) -> Result<Reply> {
+    let (ticks, interval_ms) = match rest {
+        [] => (5, 1000),
+        [t] => (t.parse::<u64>().map_err(|e| anyhow!("bad tick count {t:?}: {e}"))?, 1000),
+        [t, i] => (
+            t.parse::<u64>().map_err(|e| anyhow!("bad tick count {t:?}: {e}"))?,
+            i.parse::<u64>().map_err(|e| anyhow!("bad interval {i:?}: {e}"))?,
+        ),
+        _ => bail!("usage: WATCH [ticks] [interval_ms]"),
+    };
+    anyhow::ensure!(ticks >= 1, "WATCH needs at least one tick");
+    anyhow::ensure!(
+        ticks <= telemetry::WATCH_MAX_TICKS,
+        "tick count {ticks} over cap {}",
+        telemetry::WATCH_MAX_TICKS
+    );
+    Ok(Reply::Watch { ticks, interval_ms })
 }
 
 /// `RECENT [n]` — the last (up to `n`) handled requests as

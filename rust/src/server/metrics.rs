@@ -98,6 +98,46 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Milliseconds since the server process came up.
+    pub fn uptime_ms(&self) -> u64 {
+        self.started.elapsed().as_millis().min(u64::MAX as u128) as u64
+    }
+
+    /// Lifetime-average requests per second (see `render` for why this
+    /// stays a coarse gauge; the telemetry ring owns windowed rates).
+    pub fn qps(&self) -> f64 {
+        self.requests.get() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Every counter under its METRICS wire key, in wire-render order.
+    /// The single source the telemetry registry (METRICS/PROM/ring
+    /// schema) consumes, so a counter added here is automatically
+    /// scraped, sampled and exposed everywhere.
+    pub fn counter_pairs(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.requests.get()),
+            ("errors", self.errors.get()),
+            ("busy", self.busy.get()),
+            ("bytes_in", self.bytes_in.get()),
+            ("bytes_out", self.bytes_out.get()),
+            ("hello_upgrades", self.hello_upgrades.get()),
+            ("batch_queries", self.batch_queries.get()),
+            ("batch_vertices", self.batch_vertices.get()),
+            ("graphs_loaded", self.graphs_loaded.get()),
+            ("cc_runs", self.cc_runs.get()),
+            ("cc_millis", self.cc_millis.get()),
+            ("cc_cache_hits", self.cc_cache_hits.get()),
+            ("cc_cache_misses", self.cc_cache_misses.get()),
+            ("shards", self.shards_created.get()),
+            ("pcc_runs", self.pcc_runs.get()),
+            ("pcc_millis", self.pcc_millis.get()),
+            ("streams", self.streams_created.get()),
+            ("stream_edges", self.stream_edges.get()),
+            ("stream_epochs", self.stream_epochs.get()),
+            ("stream_queries", self.stream_queries.get()),
+        ]
+    }
+
     pub fn render(&self) -> String {
         // Worker-pool and frontier counters ride along so one METRICS
         // scrape covers the request layer, the parallel substrate and

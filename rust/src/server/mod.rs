@@ -66,6 +66,25 @@
 //!   RECENT [n]                     → OK count verb:ok:dur_ns ...
 //!                                    (ring buffer of the last requests,
 //!                                    oldest first)
+//!   PROM                           → OK nlines + nlines of OpenMetrics
+//!                                    text (the only multi-line reply:
+//!                                    the first line carries the body's
+//!                                    line count so line clients stay
+//!                                    framed; binary frames carry the
+//!                                    same payload whole; also served
+//!                                    over plain HTTP via `contour serve
+//!                                    --prom-addr`)
+//!   HEALTH                         → OK ready|degraded|overloaded
+//!                                    busy_frac=.. heavy_sat=..
+//!                                    pool_wait_p95_ns=.. wal_fsync_ns=..
+//!                                    (windowed rates vs env thresholds;
+//!                                    see [`telemetry::render_health`])
+//!   WATCH [ticks] [interval_ms]    → OK ticks interval, then one
+//!                                    `TICK seq t_ms=.. dt_ms=.. k=Δv ..
+//!                                    qps=..` line per interval, then
+//!                                    DONE (binary: one OK frame per
+//!                                    tick, same request id, then a
+//!                                    DONE frame)
 //!   HELLO 2                        → OK v2  (then the connection speaks
 //!                                    binary frames; see [`protocol`])
 //!   PING                           → PONG
@@ -108,6 +127,7 @@
 pub mod dispatch;
 pub mod metrics;
 pub mod protocol;
+pub mod telemetry;
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -148,7 +168,7 @@ pub const DEFAULT_WINDOW: usize = 64;
 const VERBS: &[&str] = &[
     "PING", "GEN", "UPLOAD", "LOAD", "CC", "LABELS", "STATS", "SHARD", "PCC", "SHARDSTATS",
     "STREAM", "SADD", "SEPOCH", "SQUERY", "SSAVE", "SLOAD", "LIST", "DROP", "METRICS", "TRACE",
-    "RECENT", "QUERY", "BQUERY", "HELLO",
+    "RECENT", "QUERY", "BQUERY", "HELLO", "PROM", "HEALTH", "WATCH",
 ];
 
 /// Backing storage for a cached labelling: static entries own their
@@ -264,6 +284,13 @@ pub struct ServerState {
     /// Per-connection in-flight window for pipelined binary requests.
     window: usize,
     pub metrics: Metrics,
+    /// Telemetry ring: periodic metric snapshots pushed by the sampler
+    /// thread in [`serve_listener`] (tests push directly). PROM rate
+    /// gauges, HEALTH's windowed signals and WATCH deltas all read it.
+    pub ring: crate::obs::TimeSeries,
+    /// Sampler interval override in ms (0 = `CONTOUR_SAMPLE_MS` or the
+    /// default; see [`telemetry::sample_interval`]).
+    sample_ms: u64,
     /// Worker threads each algorithm run may use (0 = all).
     pub threads: usize,
 }
@@ -296,8 +323,18 @@ impl ServerState {
             heavy_cap,
             window: DEFAULT_WINDOW,
             metrics: Metrics::default(),
+            ring: crate::obs::TimeSeries::new(telemetry::RING_CAP, telemetry::sample_keys()),
+            sample_ms: 0,
             threads,
         }
+    }
+
+    /// Override the telemetry sampler interval (ms; clamped to
+    /// [`telemetry::MIN_SAMPLE_MS`]). 0 keeps the `CONTOUR_SAMPLE_MS` /
+    /// default resolution.
+    pub fn with_sample_interval(mut self, ms: u64) -> Self {
+        self.sample_ms = ms;
+        self
     }
 
     /// Override admission-control limits: the per-connection pipeline
@@ -962,6 +999,25 @@ pub fn serve_listener(
     listener.set_nonblocking(true)?;
     crate::info!("contour server listening on {addr}");
     std::thread::scope(|scope| {
+        // Telemetry sampler: one ring sample per interval for as long as
+        // the server runs. Sleeps in short slices so shutdown is prompt.
+        {
+            let state = Arc::clone(&state);
+            let shutdown = Arc::clone(&shutdown);
+            scope.spawn(move || {
+                let interval = telemetry::sample_interval(&state);
+                let slice = interval.min(std::time::Duration::from_millis(50));
+                telemetry::sample_into_ring(&state);
+                let mut last = std::time::Instant::now();
+                while !shutdown.load(Ordering::Relaxed) {
+                    std::thread::sleep(slice);
+                    if last.elapsed() >= interval {
+                        telemetry::sample_into_ring(&state);
+                        last = std::time::Instant::now();
+                    }
+                }
+            });
+        }
         loop {
             if shutdown.load(Ordering::Relaxed) {
                 break;
@@ -982,7 +1038,76 @@ pub fn serve_listener(
                 }
             }
         }
+        // Whatever ended the accept loop, release the sampler thread so
+        // the scope can join.
+        shutdown.store(true, Ordering::Relaxed);
     });
+    Ok(())
+}
+
+/// Minimal plain-HTTP scrape endpoint (`contour serve --prom-addr`):
+/// every request — path ignored, Prometheus sends `GET /metrics` — gets
+/// a `200` with the current OpenMetrics exposition and the connection
+/// closes. Deliberately not a web server: no keep-alive, no routing,
+/// one short-lived thread per scrape (scrapes arrive every ~15s).
+pub fn serve_prom_listener(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    crate::info!("prometheus scrape endpoint on {}", listener.local_addr()?);
+    std::thread::scope(|scope| {
+        loop {
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = Arc::clone(&state);
+                    scope.spawn(move || {
+                        let _ = answer_scrape(stream, &state);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => {
+                    crate::info!("prom accept error: {e}");
+                    break;
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// One scrape: drain the request head, answer, close.
+fn answer_scrape(stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // Read request line + headers up to the blank line; tolerate
+    // clients that just open the socket and wait.
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let mut body = telemetry::render_prom(state);
+    body.push('\n');
+    let mut writer = BufWriter::new(stream);
+    write!(
+        writer,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/openmetrics-text; version=1.0.0; \
+         charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()?;
+    state.metrics.bytes_out.add(body.len() as u64);
     Ok(())
 }
 
@@ -1018,6 +1143,30 @@ fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
             state.metrics.bytes_out.add(6);
             state.metrics.hello_upgrades.inc();
             return protocol::serve_binary(reader, writer, state);
+        }
+        if let dispatch::Reply::Watch { ticks, interval_ms } = reply {
+            // Streaming verb: this connection's reader thread becomes
+            // the push loop — header, one TICK line per interval,
+            // DONE. A write error means the client went away.
+            let header = format!("OK {ticks} {interval_ms}\n");
+            writer.write_all(header.as_bytes())?;
+            writer.flush()?;
+            state.metrics.bytes_out.add(header.len() as u64);
+            telemetry::watch_stream(state, ticks, interval_ms, |tick| {
+                let ok = writer
+                    .write_all(tick.as_bytes())
+                    .and_then(|()| writer.write_all(b"\n"))
+                    .and_then(|()| writer.flush())
+                    .is_ok();
+                if ok {
+                    state.metrics.bytes_out.add(tick.len() as u64 + 1);
+                }
+                ok
+            });
+            writer.write_all(b"DONE\n")?;
+            writer.flush()?;
+            state.metrics.bytes_out.add(5);
+            continue;
         }
         match dispatch::render_line(&reply) {
             Some(r) => {

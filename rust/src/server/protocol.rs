@@ -35,6 +35,11 @@
 //! per connection — beyond that the server answers a BUSY frame
 //! immediately instead of queueing unboundedly (the global heavy-verb
 //! semaphore in the dispatch core guards total load the same way).
+//!
+//! WATCH is the one multi-frame verb: the server pushes one OK frame
+//! per tick (each echoing the request id) and a final OK frame whose
+//! payload is `DONE`; a pipelining client keys the stream off the id
+//! and interleaves other traffic freely.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
@@ -89,6 +94,9 @@ pub const OPCODES: &[(u8, &str)] = &[
     (23, "BQUERY"),
     (24, "HELLO"),
     (25, "QUIT"),
+    (26, "PROM"),
+    (27, "HEALTH"),
+    (28, "WATCH"),
 ];
 
 pub fn opcode_of(verb: &str) -> Option<u8> {
@@ -293,6 +301,11 @@ fn encode_wire(id: u32, reply: Reply) -> WireReply {
         Reply::Page { total, entry, lo, hi } => {
             WireReply::Page { head: page_head(id, total, hi - lo), entry, lo, hi }
         }
+        // Only reachable if WATCH ever runs un-pipelined; the header
+        // alone is still a well-formed (if tick-less) reply.
+        Reply::Watch { ticks, interval_ms } => {
+            WireReply::Buf(encode_reply(id, STATUS_OK, &format!("{ticks} {interval_ms}")))
+        }
     }
 }
 
@@ -316,6 +329,7 @@ fn is_pipelined(verb: &str) -> bool {
             | "SLOAD"
             | "LABELS"
             | "BQUERY"
+            | "WATCH"
     )
 }
 
@@ -449,8 +463,23 @@ pub(crate) fn serve_binary(
                 let tx2 = tx.clone();
                 let inflight = &inflight;
                 scope.spawn(move || {
-                    let wire = encode_wire(req.id, dispatch_request(state, &req));
-                    let _ = tx2.send(wire);
+                    match dispatch_request(state, &req) {
+                        // WATCH streams: one OK frame per tick (all
+                        // carrying the request id, so a pipelining
+                        // client can interleave other traffic), then a
+                        // terminal DONE frame.
+                        Reply::Watch { ticks, interval_ms } => {
+                            super::telemetry::watch_stream(state, ticks, interval_ms, |tick| {
+                                tx2.send(WireReply::Buf(encode_reply(req.id, STATUS_OK, tick)))
+                                    .is_ok()
+                            });
+                            let _ =
+                                tx2.send(WireReply::Buf(encode_reply(req.id, STATUS_OK, "DONE")));
+                        }
+                        reply => {
+                            let _ = tx2.send(encode_wire(req.id, reply));
+                        }
+                    }
                     inflight.fetch_sub(1, Ordering::AcqRel);
                 });
             } else {

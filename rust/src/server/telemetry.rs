@@ -1,0 +1,653 @@
+//! Continuous telemetry: the typed metric registry and everything
+//! rendered from it.
+//!
+//! PR 7 left the server with a hand-formatted `METRICS` line assembled
+//! from four independent renderers — fine for one snapshot verb,
+//! useless as a foundation for time series, scrape exposition and
+//! health signals that must all agree on what a "metric" is. This
+//! module centralizes the answer:
+//!
+//! * [`registry`] — every live metric (counters, gauges, latency
+//!   summaries, per-graph cache pairs) as one typed, key-sorted list.
+//!   `METRICS` ([`render_metrics`]) and the OpenMetrics exposition
+//!   ([`render_prom`]) are both projections of this list, so a PROM
+//!   family exists for every METRICS counter *by construction*, and
+//!   successive scrapes diff cleanly (stable sorted key order).
+//! * [`sample_keys`] / [`live_sample`] — the fixed schema the sampler
+//!   thread pushes into the server's [`TimeSeries`] ring each interval:
+//!   all counters, per-verb histogram percentiles (the verb table is
+//!   static, so the schema is too), and the pool queue-wait bucket
+//!   counts (so *windowed* quantiles come from count deltas).
+//! * [`render_health`] — ready/degraded/overloaded from windowed rates
+//!   (busy fraction, heavy-gate saturation, pool queue-wait p95, WAL
+//!   fsync lag) with env-configurable thresholds.
+//! * [`watch_stream`] / [`render_tick`] — the `WATCH` verb's push loop:
+//!   per-interval counter deltas + instantaneous qps on any transport.
+//!
+//! Wire-key spellings are owned by [`Metrics::counter_pairs`] and this
+//! module; they are frozen (clients parse them), which is why the
+//! registry reuses them verbatim instead of inventing a second naming
+//! scheme. The PROM names are derived mechanically (`contour_` prefix,
+//! non-alphanumerics → `_`, `_total` on counters).
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use crate::obs::{self, quantile_from_counts, HistogramSnapshot, Sample};
+
+use super::ServerState;
+
+/// Samples retained by the server's telemetry ring. At the default 1s
+/// interval this is 12 minutes of history — enough for any sane health
+/// window — in ~1.3 MB (227 u64 values per sample).
+pub const RING_CAP: usize = 720;
+
+/// Default sampler interval (override: `CONTOUR_SAMPLE_MS` or
+/// `contour serve --sample-ms`).
+pub const DEFAULT_SAMPLE_MS: u64 = 1000;
+
+/// Floor on the sampler interval — below this the sampler itself
+/// becomes measurable load.
+pub const MIN_SAMPLE_MS: u64 = 10;
+
+/// Lookback window for windowed rates (HEALTH, PROM rate gauges),
+/// override `CONTOUR_HEALTH_WINDOW_MS`.
+pub const DEFAULT_WINDOW_MS: u64 = 60_000;
+
+/// Counters whose deltas a WATCH tick reports (a curated subset — the
+/// full 200+-key schema would make tick lines unreadable).
+pub const WATCH_KEYS: &[&str] = &[
+    "requests",
+    "errors",
+    "busy",
+    "bytes_in",
+    "bytes_out",
+    "cc_runs",
+    "pcc_runs",
+    "batch_queries",
+    "stream_queries",
+    "pool_jobs",
+];
+
+/// One registry entry's value. The variant decides both the METRICS
+/// text form and the OpenMetrics family type.
+pub enum Value {
+    /// Monotone counter → OpenMetrics `counter` (`_total` suffix).
+    Count(u64),
+    /// Point-in-time gauge.
+    Gauge(u64),
+    /// Floating gauge (qps), rendered `{:.1}`.
+    GaugeF(f64),
+    /// Latency summary (`count:p50:p95:p99` on the wire).
+    Hist(HistogramSnapshot),
+    /// Per-graph cache `hits:misses`.
+    Pair(u64, u64),
+}
+
+/// One live metric under its frozen METRICS wire key.
+pub struct Metric {
+    pub key: String,
+    pub val: Value,
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The sampler interval for a server: explicit override first (the
+/// `--sample-ms` flag lands in [`ServerState`]), then the env, clamped
+/// to [`MIN_SAMPLE_MS`].
+pub fn sample_interval(state: &ServerState) -> Duration {
+    let ms = match state.sample_ms {
+        0 => env_u64("CONTOUR_SAMPLE_MS", DEFAULT_SAMPLE_MS),
+        ms => ms,
+    };
+    Duration::from_millis(ms.max(MIN_SAMPLE_MS))
+}
+
+/// Highest `last_fsync_ns` across live streams — the WAL fsync lag
+/// signal HEALTH checks (0 with no streams or no WAL).
+fn wal_fsync_ns(state: &ServerState) -> u64 {
+    state.streams.read().unwrap().values().map(|s| s.last_fsync_ns()).max().unwrap_or(0)
+}
+
+/// Heavy-verb slots currently held.
+fn heavy_used(state: &ServerState) -> u64 {
+    state.heavy_cap.saturating_sub(state.heavy_avail.load(Ordering::Acquire)) as u64
+}
+
+/// Allocator gauges (all zero unless built with `alloc-track`):
+/// `(mem_cur_bytes, alloc_bytes, alloc_calls, free_calls)`.
+fn mem_gauges() -> (u64, u64, u64, u64) {
+    let (alloc_bytes, alloc_calls, _free_bytes, free_calls) = obs::alloc::totals();
+    (obs::alloc::current_bytes(), alloc_bytes, alloc_calls, free_calls)
+}
+
+/// Every live metric, sorted by wire key. The one list METRICS and
+/// PROM render from.
+pub fn registry(state: &ServerState) -> Vec<Metric> {
+    let m = |key: &str, val: Value| Metric { key: key.to_string(), val };
+    let mut out = Vec::with_capacity(96);
+    for (k, v) in state.metrics.counter_pairs() {
+        out.push(m(k, Value::Count(v)));
+    }
+    out.push(m("uptime_ms", Value::Gauge(state.metrics.uptime_ms())));
+    out.push(m("qps", Value::GaugeF(state.metrics.qps())));
+
+    let pool = crate::par::pool::stats();
+    out.push(m("pool_workers", Value::Gauge(pool.workers as u64)));
+    out.push(m("pool_jobs", Value::Count(pool.jobs)));
+    out.push(m("pool_pulls", Value::Count(pool.pulls)));
+    out.push(m("pool_steals", Value::Count(pool.steals)));
+    out.push(m("pool_parks", Value::Count(pool.parks)));
+    out.push(m("pool_wakes", Value::Count(pool.wakes)));
+    out.push(m("pool_inflight", Value::Gauge(pool.inflight)));
+    out.push(m("pool_max_inflight", Value::Gauge(pool.max_inflight)));
+    out.push(m("pool_exec_peak", Value::Gauge(pool.exec_peak)));
+    out.push(m("pool_pins", Value::Count(pool.pins)));
+    out.push(m("pool_sticky_jobs", Value::Count(pool.sticky_jobs)));
+    out.push(m("pool_sticky_home", Value::Count(pool.sticky_home)));
+    out.push(m("pool_sticky_away", Value::Count(pool.sticky_away)));
+    out.push(m("lat/pool_wait", Value::Hist(pool.queue_wait)));
+    out.push(m("lat/pool_run", Value::Hist(pool.run_time)));
+
+    let fr = crate::cc::contour::frontier_totals();
+    out.push(m("frontier_passes", Value::Count(fr.passes)));
+    out.push(m("frontier_skipped", Value::Count(fr.skipped_chunks)));
+    out.push(m("frontier_activations", Value::Count(fr.activations)));
+    out.push(m("frontier_exact", Value::Count(fr.exact_passes)));
+    out.push(m("frontier_full_sweeps", Value::Count(fr.full_sweeps)));
+    let (idx_built, idx_reused) = crate::cc::contour::chunk_index_counters();
+    out.push(m("chunk_index_built", Value::Count(idx_built)));
+    out.push(m("chunk_index_reused", Value::Count(idx_reused)));
+
+    out.push(m("heavy_cap", Value::Gauge(state.heavy_cap as u64)));
+    out.push(m("heavy_used", Value::Gauge(heavy_used(state))));
+    out.push(m("wal_fsync_ns", Value::Gauge(wal_fsync_ns(state))));
+    let (mem_cur, alloc_bytes, alloc_calls, free_calls) = mem_gauges();
+    out.push(m("mem_cur_bytes", Value::Gauge(mem_cur)));
+    out.push(m("alloc_bytes", Value::Count(alloc_bytes)));
+    out.push(m("alloc_calls", Value::Count(alloc_calls)));
+    out.push(m("free_calls", Value::Count(free_calls)));
+
+    {
+        let lat = state.verb_lat.read().unwrap();
+        for (v, h) in lat.iter() {
+            out.push(m(&format!("lat/{v}"), Value::Hist(h.snapshot())));
+        }
+    }
+    {
+        let err = state.verb_err.read().unwrap();
+        for (v, c) in err.iter() {
+            out.push(m(&format!("err/{v}"), Value::Count(c.load(Ordering::Relaxed))));
+        }
+    }
+    {
+        let cache = state.cache_stats.read().unwrap();
+        for (name, (h, mi)) in cache.iter() {
+            out.push(m(
+                &format!("cache/{name}"),
+                Value::Pair(h.load(Ordering::Relaxed), mi.load(Ordering::Relaxed)),
+            ));
+        }
+    }
+    out.sort_by(|a, b| a.key.cmp(&b.key));
+    out
+}
+
+/// The `METRICS` reply body: every registry entry as `key=value`,
+/// key-sorted, space-joined. Same key spellings and value forms as the
+/// PR 7 renderer (clients parse them); only the ordering changed — to
+/// globally sorted, so successive scrapes diff cleanly.
+pub fn render_metrics(state: &ServerState) -> String {
+    let parts: Vec<String> = registry(state)
+        .iter()
+        .map(|mt| match &mt.val {
+            Value::Count(v) | Value::Gauge(v) => format!("{}={v}", mt.key),
+            Value::GaugeF(v) => format!("{}={v:.1}", mt.key),
+            Value::Hist(h) => format!("{}={}", mt.key, h.render()),
+            Value::Pair(h, m) => format!("{}={h}:{m}", mt.key),
+        })
+        .collect();
+    parts.join(" ")
+}
+
+/// `contour_`-prefixed OpenMetrics name for a wire key.
+fn prom_name(key: &str) -> String {
+    let mut s = String::with_capacity(key.len() + 8);
+    s.push_str("contour_");
+    for c in key.chars() {
+        s.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    s
+}
+
+/// Escape a label value per the OpenMetrics text format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// One exposition family: `# TYPE` header plus its sample lines.
+struct Family {
+    name: String,
+    kind: &'static str,
+    lines: Vec<String>,
+}
+
+fn summary_lines(fam: &str, label: &str, verb: &str, h: &HistogramSnapshot) -> Vec<String> {
+    let l = escape_label(verb);
+    vec![
+        format!("{fam}{{{label}=\"{l}\",quantile=\"0.5\"}} {}", h.p50),
+        format!("{fam}{{{label}=\"{l}\",quantile=\"0.95\"}} {}", h.p95),
+        format!("{fam}{{{label}=\"{l}\",quantile=\"0.99\"}} {}", h.p99),
+        format!("{fam}_sum{{{label}=\"{l}\"}} {}", h.sum),
+        format!("{fam}_count{{{label}=\"{l}\"}} {}", h.count),
+    ]
+}
+
+/// The OpenMetrics/Prometheus text exposition: one family per registry
+/// entry (labelled families for the per-verb/per-graph groups), plus
+/// windowed rate gauges derived from the telemetry ring's newest
+/// samples, ending in `# EOF`. No trailing newline — the PROM verb
+/// prefixes a line count so the line transport stays line-framed.
+pub fn render_prom(state: &ServerState) -> String {
+    let mut fams: Vec<Family> = Vec::new();
+    // Grouped (labelled) families are collected across registry entries.
+    let fam = |name: &str, kind: &'static str| Family {
+        name: name.to_string(),
+        kind,
+        lines: Vec::new(),
+    };
+    let mut lat = fam("contour_verb_latency_ns", "summary");
+    let mut errs = fam("contour_verb_errors_total", "counter");
+    let mut cache_h = fam("contour_cache_hits", "gauge");
+    let mut cache_m = fam("contour_cache_misses", "gauge");
+    for mt in registry(state) {
+        match &mt.val {
+            Value::Count(v) => {
+                if let Some(verb) = mt.key.strip_prefix("err/") {
+                    errs.lines.push(format!("{}{{verb=\"{}\"}} {v}", errs.name, escape_label(verb)));
+                } else {
+                    let name = format!("{}_total", prom_name(&mt.key));
+                    fams.push(Family {
+                        lines: vec![format!("{name} {v}")],
+                        name,
+                        kind: "counter",
+                    });
+                }
+            }
+            Value::Gauge(v) => {
+                let name = prom_name(&mt.key);
+                fams.push(Family { lines: vec![format!("{name} {v}")], name, kind: "gauge" });
+            }
+            Value::GaugeF(v) => {
+                let name = prom_name(&mt.key);
+                fams.push(Family { lines: vec![format!("{name} {v:.3}")], name, kind: "gauge" });
+            }
+            Value::Hist(h) => {
+                let verb = mt.key.strip_prefix("lat/").unwrap_or(&mt.key);
+                lat.lines.extend(summary_lines(&lat.name, "verb", verb, h));
+            }
+            Value::Pair(h, mi) => {
+                let name = escape_label(mt.key.strip_prefix("cache/").unwrap_or(&mt.key));
+                cache_h.lines.push(format!("{}{{name=\"{name}\"}} {h}", cache_h.name));
+                cache_m.lines.push(format!("{}{{name=\"{name}\"}} {mi}", cache_m.name));
+            }
+        }
+    }
+    for f in [lat, errs, cache_h, cache_m] {
+        if !f.lines.is_empty() {
+            fams.push(f);
+        }
+    }
+
+    // Windowed rates from the ring: live registry + newest samples.
+    let window_ms = env_u64("CONTOUR_HEALTH_WINDOW_MS", DEFAULT_WINDOW_MS);
+    let gauge = |name: &str, line: String| Family {
+        name: name.to_string(),
+        kind: "gauge",
+        lines: vec![line],
+    };
+    fams.push(gauge(
+        "contour_ring_samples",
+        format!("contour_ring_samples {}", state.ring.len()),
+    ));
+    if let Some((old, new)) = state.ring.window(window_ms) {
+        let rate = |key: &str| -> f64 {
+            state
+                .ring
+                .index_of(key)
+                .map_or(0.0, |i| obs::TimeSeries::rate_per_sec(&old, &new, i))
+        };
+        fams.push(gauge("contour_rate_qps", format!("contour_rate_qps {:.3}", rate("requests"))));
+        fams.push(gauge(
+            "contour_rate_bytes_in_per_s",
+            format!("contour_rate_bytes_in_per_s {:.3}", rate("bytes_in")),
+        ));
+        fams.push(gauge(
+            "contour_rate_bytes_out_per_s",
+            format!("contour_rate_bytes_out_per_s {:.3}", rate("bytes_out")),
+        ));
+        let h = health_signals(state);
+        fams.push(gauge(
+            "contour_busy_fraction",
+            format!("contour_busy_fraction {:.6}", h.busy_frac),
+        ));
+        fams.push(gauge(
+            "contour_pool_saturation",
+            format!("contour_pool_saturation {:.6}", h.heavy_sat),
+        ));
+    }
+
+    fams.sort_by(|a, b| a.name.cmp(&b.name));
+    let mut out = String::with_capacity(4096);
+    for f in &fams {
+        out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind));
+        for l in &f.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    out.push_str("# EOF");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Ring sample schema
+// ---------------------------------------------------------------------
+
+// The schema is FIXED: sample_keys() and sample_values() must walk the
+// exact same sections in the exact same order (the push asserts the
+// lengths agree, and tests/telemetry.rs pins key↔value alignment).
+
+const POOL_KEYS: &[&str] = &[
+    "pool_jobs",
+    "pool_pulls",
+    "pool_steals",
+    "pool_parks",
+    "pool_wakes",
+    "pool_pins",
+    "pool_sticky_jobs",
+    "pool_sticky_home",
+    "pool_sticky_away",
+    "pool_workers",
+    "pool_inflight",
+    "pool_max_inflight",
+    "pool_exec_peak",
+];
+
+const ENGINE_KEYS: &[&str] = &[
+    "frontier_passes",
+    "frontier_skipped",
+    "frontier_activations",
+    "frontier_exact",
+    "frontier_full_sweeps",
+    "chunk_index_built",
+    "chunk_index_reused",
+    "heavy_used",
+    "heavy_cap",
+    "wal_fsync_ns",
+    "mem_cur_bytes",
+    "alloc_bytes",
+    "alloc_calls",
+    "free_calls",
+];
+
+/// Histogram families sampled per tick: every verb (the table is
+/// static) plus the pool pair.
+fn hist_names() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = super::VERBS.to_vec();
+    v.push("pool_wait");
+    v.push("pool_run");
+    v
+}
+
+/// The ring's key schema, fixed at server construction.
+pub fn sample_keys() -> Vec<String> {
+    let mut keys: Vec<String> = Vec::with_capacity(256);
+    // Counter keys come from the same source the registry uses; the
+    // values of a default Metrics are irrelevant here.
+    for (k, _) in super::metrics::Metrics::default().counter_pairs() {
+        keys.push(k.to_string());
+    }
+    keys.extend(POOL_KEYS.iter().map(|k| k.to_string()));
+    keys.extend(ENGINE_KEYS.iter().map(|k| k.to_string()));
+    for h in hist_names() {
+        for q in ["count", "p50", "p95", "p99"] {
+            keys.push(format!("lat/{h}/{q}"));
+        }
+    }
+    for b in 0..obs::BUCKETS {
+        keys.push(format!("pool_wait_bkt/{b}"));
+    }
+    keys
+}
+
+/// The schema's values right now, in [`sample_keys`] order.
+pub fn sample_values(state: &ServerState) -> Vec<u64> {
+    let mut v: Vec<u64> = Vec::with_capacity(256);
+    for (_, x) in state.metrics.counter_pairs() {
+        v.push(x);
+    }
+    let pool = crate::par::pool::stats();
+    v.extend([
+        pool.jobs,
+        pool.pulls,
+        pool.steals,
+        pool.parks,
+        pool.wakes,
+        pool.pins,
+        pool.sticky_jobs,
+        pool.sticky_home,
+        pool.sticky_away,
+        pool.workers as u64,
+        pool.inflight,
+        pool.max_inflight,
+        pool.exec_peak,
+    ]);
+    let fr = crate::cc::contour::frontier_totals();
+    let (idx_built, idx_reused) = crate::cc::contour::chunk_index_counters();
+    let (mem_cur, alloc_bytes, alloc_calls, free_calls) = mem_gauges();
+    v.extend([
+        fr.passes,
+        fr.skipped_chunks,
+        fr.activations,
+        fr.exact_passes,
+        fr.full_sweeps,
+        idx_built,
+        idx_reused,
+        heavy_used(state),
+        state.heavy_cap as u64,
+        wal_fsync_ns(state),
+        mem_cur,
+        alloc_bytes,
+        alloc_calls,
+        free_calls,
+    ]);
+    {
+        let lat = state.verb_lat.read().unwrap();
+        for name in hist_names() {
+            let h = match name {
+                "pool_wait" => pool.queue_wait,
+                "pool_run" => pool.run_time,
+                verb => lat.get(verb).map(|h| h.snapshot()).unwrap_or_default(),
+            };
+            v.extend([h.count, h.p50, h.p95, h.p99]);
+        }
+    }
+    v.extend(crate::par::pool::queue_wait_buckets());
+    v
+}
+
+/// Capture one live sample (timestamped against server start).
+pub fn live_sample(state: &ServerState) -> Sample {
+    Sample { ts_ms: state.metrics.uptime_ms(), values: sample_values(state) }
+}
+
+/// Capture and push one sample into the server's ring.
+pub fn sample_into_ring(state: &ServerState) {
+    let s = live_sample(state);
+    state.ring.push(s.ts_ms, &s.values);
+}
+
+// ---------------------------------------------------------------------
+// HEALTH
+// ---------------------------------------------------------------------
+
+/// The windowed signals HEALTH judges.
+pub struct HealthSignals {
+    /// BUSY replies over requests in the window (0 with no traffic).
+    pub busy_frac: f64,
+    /// Heavy-verb slots held / capacity (1.0 when the cap is 0 — drain
+    /// mode rejects every heavy verb, which *is* saturation).
+    pub heavy_sat: f64,
+    /// Windowed pool queue-wait p95 (ns) from ring bucket deltas, or
+    /// the lifetime p95 when the ring has no window yet.
+    pub pool_wait_p95_ns: u64,
+    /// Duration of the most recent WAL fsync (ns), max across streams.
+    pub fsync_ns: u64,
+    /// Ring samples backing the windowed values (0 = lifetime
+    /// fallback).
+    pub samples: usize,
+    pub window_ms: u64,
+}
+
+/// Compute the health signals over the configured lookback window,
+/// falling back to lifetime totals while the ring has fewer than two
+/// samples (e.g. dispatch-only use with no sampler thread).
+pub fn health_signals(state: &ServerState) -> HealthSignals {
+    let window_ms = env_u64("CONTOUR_HEALTH_WINDOW_MS", DEFAULT_WINDOW_MS);
+    let heavy_sat = if state.heavy_cap == 0 {
+        1.0
+    } else {
+        heavy_used(state) as f64 / state.heavy_cap as f64
+    };
+    let fsync_ns = wal_fsync_ns(state);
+    if let Some((old, new)) = state.ring.window(window_ms) {
+        let d = |key: &str| -> u64 {
+            state.ring.index_of(key).map_or(0, |i| obs::TimeSeries::delta(&old, &new, i))
+        };
+        let d_req = d("requests");
+        let busy_frac = if d_req == 0 { 0.0 } else { d("busy") as f64 / d_req as f64 };
+        let bkt: Vec<u64> = (0..obs::BUCKETS)
+            .map(|b| {
+                state
+                    .ring
+                    .index_of(&format!("pool_wait_bkt/{b}"))
+                    .map_or(0, |i| obs::TimeSeries::delta(&old, &new, i))
+            })
+            .collect();
+        HealthSignals {
+            busy_frac,
+            heavy_sat,
+            pool_wait_p95_ns: quantile_from_counts(&bkt, 0.95),
+            fsync_ns,
+            samples: state.ring.len(),
+            window_ms,
+        }
+    } else {
+        let req = state.metrics.requests.get();
+        let busy_frac = if req == 0 { 0.0 } else { state.metrics.busy.get() as f64 / req as f64 };
+        HealthSignals {
+            busy_frac,
+            heavy_sat,
+            pool_wait_p95_ns: crate::par::pool::stats().queue_wait.p95,
+            fsync_ns,
+            samples: 0,
+            window_ms,
+        }
+    }
+}
+
+/// The `HEALTH` reply body: a status word first (`ready` | `degraded` |
+/// `overloaded`), then the signals and thresholds as `k=v` pairs.
+///
+/// Thresholds (env-overridable, read per request so operators can tune
+/// a live server):
+/// * `CONTOUR_HEALTH_BUSY_DEGRADED`   — busy fraction, default 0.05
+/// * `CONTOUR_HEALTH_BUSY_OVERLOADED` — busy fraction, default 0.5
+/// * `CONTOUR_HEALTH_POOL_WAIT_MS`    — queue-wait p95, default 100
+/// * `CONTOUR_HEALTH_FSYNC_MS`        — WAL fsync lag, default 1000
+pub fn render_health(state: &ServerState) -> String {
+    let s = health_signals(state);
+    let busy_deg = env_f64("CONTOUR_HEALTH_BUSY_DEGRADED", 0.05);
+    let busy_over = env_f64("CONTOUR_HEALTH_BUSY_OVERLOADED", 0.5);
+    let wait_ns = env_f64("CONTOUR_HEALTH_POOL_WAIT_MS", 100.0) * 1e6;
+    let fsync_ns = env_f64("CONTOUR_HEALTH_FSYNC_MS", 1000.0) * 1e6;
+    let status = if s.busy_frac >= busy_over {
+        "overloaded"
+    } else if s.busy_frac >= busy_deg
+        || s.heavy_sat >= 1.0
+        || s.pool_wait_p95_ns as f64 > wait_ns
+        || s.fsync_ns as f64 > fsync_ns
+    {
+        "degraded"
+    } else {
+        "ready"
+    };
+    format!(
+        "{status} busy_frac={:.4} heavy_sat={:.4} pool_wait_p95_ns={} wal_fsync_ns={} \
+         window_ms={} samples={} busy_degraded={busy_deg} busy_overloaded={busy_over}",
+        s.busy_frac, s.heavy_sat, s.pool_wait_p95_ns, s.fsync_ns, s.window_ms, s.samples
+    )
+}
+
+// ---------------------------------------------------------------------
+// WATCH
+// ---------------------------------------------------------------------
+
+/// Bounds on WATCH arguments (a stuck client cannot pin a server
+/// thread forever, and a zero interval cannot spin).
+pub const WATCH_MAX_TICKS: u64 = 100_000;
+pub const WATCH_MIN_INTERVAL_MS: u64 = 10;
+pub const WATCH_MAX_INTERVAL_MS: u64 = 60_000;
+
+/// One WATCH tick line: counter deltas between two samples plus the
+/// instantaneous qps over the tick interval.
+pub fn render_tick(seq: u64, prev: &Sample, cur: &Sample, keys: &[String]) -> String {
+    let dt_ms = cur.ts_ms.saturating_sub(prev.ts_ms);
+    let mut out = format!("TICK {seq} t_ms={} dt_ms={dt_ms}", cur.ts_ms);
+    for &k in WATCH_KEYS {
+        if let Some(i) = keys.iter().position(|key| key == k) {
+            out.push_str(&format!(" {k}={}", cur.values[i].saturating_sub(prev.values[i])));
+        }
+    }
+    let qps = if dt_ms == 0 {
+        0.0
+    } else {
+        let d = keys
+            .iter()
+            .position(|k| k == "requests")
+            .map_or(0, |i| cur.values[i].saturating_sub(prev.values[i]));
+        d as f64 * 1000.0 / dt_ms as f64
+    };
+    out.push_str(&format!(" qps={qps:.1}"));
+    out
+}
+
+/// Drive one WATCH subscription: sample, sleep an interval, emit a tick
+/// line, `ticks` times. `emit` returns false to stop early (client went
+/// away). Both transports share this loop; only the framing differs.
+pub fn watch_stream(
+    state: &ServerState,
+    ticks: u64,
+    interval_ms: u64,
+    mut emit: impl FnMut(&str) -> bool,
+) {
+    let keys = sample_keys();
+    let interval =
+        Duration::from_millis(interval_ms.clamp(WATCH_MIN_INTERVAL_MS, WATCH_MAX_INTERVAL_MS));
+    let mut prev = live_sample(state);
+    for seq in 0..ticks.min(WATCH_MAX_TICKS) {
+        std::thread::sleep(interval);
+        let cur = live_sample(state);
+        if !emit(&render_tick(seq, &prev, &cur, &keys)) {
+            return;
+        }
+        prev = cur;
+    }
+}

@@ -86,6 +86,10 @@ pub struct StreamingCc {
     /// so each epoch is a consistent cut of acknowledged batches.
     gate: RwLock<()>,
     max_history: usize,
+    /// Duration of the most recent seal-time WAL fsync, in nanoseconds
+    /// (0 until the first durable seal). A health signal: a climbing
+    /// fsync lag means the disk is falling behind ingestion.
+    last_fsync_ns: AtomicU64,
 }
 
 impl StreamingCc {
@@ -103,6 +107,7 @@ impl StreamingCc {
             seal: Mutex::new(()),
             gate: RwLock::new(()),
             max_history: DEFAULT_MAX_HISTORY,
+            last_fsync_ns: AtomicU64::new(0),
         }
     }
 
@@ -204,6 +209,7 @@ impl StreamingCc {
             seal: Mutex::new(()),
             gate: RwLock::new(()),
             max_history: DEFAULT_MAX_HISTORY,
+            last_fsync_ns: AtomicU64::new(0),
         };
         s.seal_epoch()?;
         Ok(s)
@@ -227,6 +233,12 @@ impl StreamingCc {
     /// Edge insertions acknowledged so far (duplicates counted).
     pub fn edges_ingested(&self) -> usize {
         self.edges_ingested.load(Ordering::Relaxed)
+    }
+
+    /// Nanoseconds the most recent seal-time WAL fsync took (0 with no
+    /// WAL attached, or before the first durable seal).
+    pub fn last_fsync_ns(&self) -> u64 {
+        self.last_fsync_ns.load(Ordering::Relaxed)
     }
 
     /// The attached WAL's path, if durable. A WAL file must back at
@@ -295,7 +307,10 @@ impl StreamingCc {
         // Durability fsync off the gate: ingestion resumes while the
         // disk syncs (frames appended meanwhile simply ride along).
         if let Some(w) = &self.wal {
+            let t = std::time::Instant::now();
             w.lock().unwrap().sync()?;
+            let ns = t.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            self.last_fsync_ns.store(ns, Ordering::Relaxed);
         }
         // Re-contour compaction, off the gate so ingestion resumes while
         // labels are recanonicalized: the forest is itself a graph with

@@ -68,7 +68,14 @@ fn every_verb_through_dispatch_directly() {
         ("DROP s".into(), "OK"),
         (format!("SLOAD s2 {}", snap.display()), "OK "),
         ("LIST".into(), "OK "),
-        ("METRICS".into(), "OK requests="),
+        // Sorted-key render: the first key is alphabetical, not
+        // requests= — the exact ordering is pinned in tests/telemetry.rs.
+        ("METRICS".into(), "OK "),
+        ("PROM".into(), "OK "),
+        ("HEALTH".into(), "OK "),
+        // WATCH through bare dispatch() renders the header only; the
+        // tick streaming lives in the transports (tests/telemetry.rs).
+        ("WATCH 3 10".into(), "OK 3 10"),
         ("RECENT".into(), "OK "),
     ];
     let mut covered: HashSet<&'static str> = HashSet::new();

@@ -1,0 +1,507 @@
+//! Continuous-telemetry acceptance tests: ring sampling (monotone
+//! timestamps, exact counter deltas under concurrent load), the
+//! OpenMetrics exposition (structure + one family per METRICS entry),
+//! sorted-stable METRICS rendering, HEALTH state transitions, WATCH
+//! streaming on both transports, the sampler thread, the HTTP scrape
+//! endpoint, and (feature-gated) per-run memory accounting.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use contour::obs::TimeSeries;
+use contour::server::{
+    protocol, serve_listener, serve_prom_listener, telemetry, ServerState, Session,
+};
+use contour::VId;
+
+fn no_body() -> anyhow::Result<String> {
+    anyhow::bail!("no extra payload expected")
+}
+
+fn ask(state: &ServerState, line: &str) -> String {
+    Session::new(state).handle(line, no_body).unwrap_or_else(|| "BYE".into())
+}
+
+fn spawn_server(state: Arc<ServerState>) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local_addr").to_string();
+    let sd = Arc::clone(&shutdown);
+    let handle = std::thread::spawn(move || serve_listener(listener, state, sd));
+    (addr, shutdown, handle)
+}
+
+struct LineWire {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl LineWire {
+    fn connect(addr: &str) -> Self {
+        let s = TcpStream::connect(addr).expect("connect");
+        Self { r: BufReader::new(s.try_clone().unwrap()), w: BufWriter::new(s) }
+    }
+
+    fn send(&mut self, msg: &str) {
+        self.w.write_all(msg.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut reply = String::new();
+        self.r.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+
+    fn ask(&mut self, msg: &str) -> String {
+        self.send(msg);
+        self.read_line()
+    }
+
+    /// Ask a length-prefixed multi-line verb (PROM): `OK <n>` then
+    /// exactly n body lines.
+    fn ask_multi(&mut self, msg: &str) -> String {
+        self.send(msg);
+        let head = self.read_line();
+        let n: usize = head
+            .strip_prefix("OK ")
+            .unwrap_or_else(|| panic!("{msg} -> {head:?}"))
+            .parse()
+            .unwrap();
+        let mut lines = Vec::with_capacity(n);
+        for _ in 0..n {
+            lines.push(self.read_line());
+        }
+        lines.join("\n")
+    }
+}
+
+struct BinWire {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl BinWire {
+    fn connect(addr: &str) -> Self {
+        let s = TcpStream::connect(addr).expect("connect");
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut w = BufWriter::new(s);
+        w.write_all(b"HELLO 2\n").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK v2", "HELLO 2 negotiation failed");
+        Self { r, w }
+    }
+
+    fn send(&mut self, id: u32, verb: &str, args: &str, extra: &[VId]) {
+        let b = protocol::encode_request(id, verb, args, extra).unwrap();
+        self.w.write_all(&b).unwrap();
+    }
+
+    fn recv(&mut self) -> protocol::ReplyFrame {
+        protocol::read_reply(&mut self.r).unwrap().expect("server closed mid-stream")
+    }
+}
+
+/// Grab `key=<value>` out of a space-separated reply.
+fn field(reply: &str, key: &str) -> String {
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(key))
+        .unwrap_or_else(|| panic!("{key} missing in {reply:?}"))
+        .to_string()
+}
+
+// ------------------------------------------------------ ring sampling
+
+/// Acceptance: ring samples keep monotone timestamps and exact counter
+/// deltas while request traffic and sample pushes race each other.
+#[test]
+fn ring_sampling_monotone_with_exact_deltas_under_load() {
+    let state = ServerState::new(1);
+    telemetry::sample_into_ring(&state);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for _ in 0..50 {
+                    assert_eq!(ask(&state, "PING"), "PONG");
+                }
+            });
+        }
+        s.spawn(|| {
+            for _ in 0..20 {
+                telemetry::sample_into_ring(&state);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+    });
+    telemetry::sample_into_ring(&state);
+
+    let samples = state.ring.samples();
+    assert!(samples.len() >= 3, "only {} samples retained", samples.len());
+    let i = state.ring.index_of("requests").expect("requests in the ring schema");
+    for w in samples.windows(2) {
+        assert!(w[1].ts_ms >= w[0].ts_ms, "timestamps went backwards");
+        assert!(w[1].values[i] >= w[0].values[i], "requests counter not monotone");
+    }
+    // First sample preceded all traffic, last followed it: the delta is
+    // exactly the 4x50 PINGs (this state saw no other requests).
+    let (first, last) = (samples.first().unwrap(), samples.last().unwrap());
+    assert_eq!(first.values[i], 0);
+    assert_eq!(TimeSeries::delta(first, last, i), 200);
+}
+
+// -------------------------------------------------- METRICS rendering
+
+/// Satellite: METRICS renders in stable sorted key order.
+#[test]
+fn metrics_keys_are_sorted_and_stable() {
+    let state = ServerState::new(1);
+    assert!(ask(&state, "GEN g path:8").starts_with("OK"));
+    assert!(ask(&state, "CC g C-2").starts_with("OK"));
+    assert!(ask(&state, "CC nosuch C-2").starts_with("ERR"));
+
+    let keys_of = |m: &str| -> Vec<String> {
+        m.strip_prefix("OK ")
+            .unwrap()
+            .split_whitespace()
+            .map(|t| t.split('=').next().unwrap().to_string())
+            .collect()
+    };
+    let k1 = keys_of(&ask(&state, "METRICS"));
+    for w in k1.windows(2) {
+        assert!(w[0] < w[1], "METRICS keys out of order: {:?} before {:?}", w[0], w[1]);
+    }
+    // Stable across calls: same keys, same order (values move).
+    assert_eq!(k1, keys_of(&ask(&state, "METRICS")), "key order drifted between calls");
+    for want in ["requests", "lat/CC", "err/CC", "uptime_ms", "pool_workers"] {
+        assert!(k1.iter().any(|k| k == want), "{want} missing from METRICS: {k1:?}");
+    }
+}
+
+// ----------------------------------------------- OpenMetrics / PROM
+
+/// Replicate the server's wire-key → exposition-name derivation.
+fn prom_name(key: &str) -> String {
+    let mut s = String::from("contour_");
+    for c in key.chars() {
+        s.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    s
+}
+
+/// Acceptance: the PROM body is well-formed OpenMetrics text and every
+/// METRICS entry — plain counters/gauges, `lat/*` summaries, `err/*`
+/// counters, `cache/*` pairs — has a corresponding exposition line.
+#[test]
+fn prom_exposition_covers_every_metrics_entry() {
+    let state = ServerState::new(1);
+    assert!(ask(&state, "GEN g path:32").starts_with("OK"));
+    assert!(ask(&state, "CC g C-2").starts_with("OK"));
+    assert!(ask(&state, "CC nosuch C-2").starts_with("ERR"));
+    assert!(ask(&state, "SHARD g 2").starts_with("OK"));
+    assert!(ask(&state, "PCC g C-2").starts_with("OK"));
+
+    // METRICS first: by exposition time its key set can only have
+    // grown (lat/METRICS lands after METRICS itself renders).
+    let metrics = ask(&state, "METRICS").strip_prefix("OK ").unwrap().to_string();
+    let reply = ask(&state, "PROM");
+    let mut lines = reply.lines();
+    let head = lines.next().unwrap();
+    let n: usize = head.strip_prefix("OK ").expect("PROM header").parse().unwrap();
+    let body: Vec<&str> = lines.collect();
+    assert_eq!(body.len(), n, "line-count prefix disagrees with the body");
+    assert_eq!(*body.last().unwrap(), "# EOF");
+
+    // Structural validity: every line is `# TYPE <name> <kind>`, the
+    // terminator, or `<name>[{labels}] <numeric value>` under a
+    // declared family; family declarations arrive in sorted order.
+    let mut families: Vec<String> = Vec::new();
+    for l in &body[..n - 1] {
+        if let Some(decl) = l.strip_prefix("# TYPE ") {
+            let mut f = decl.split(' ');
+            let name = f.next().unwrap().to_string();
+            let kind = f.next().unwrap();
+            assert!(matches!(kind, "counter" | "gauge" | "summary"), "{l}");
+            if let Some(prev) = families.last() {
+                assert!(*prev < name, "families out of order: {prev} before {name}");
+            }
+            families.push(name);
+        } else {
+            let (name_part, value) = l.rsplit_once(' ').unwrap_or_else(|| panic!("{l:?}"));
+            assert!(value.parse::<f64>().is_ok(), "non-numeric sample value: {l}");
+            let base = name_part.split('{').next().unwrap();
+            let fam = base.strip_suffix("_sum").or_else(|| base.strip_suffix("_count"));
+            let fam = fam.unwrap_or(base);
+            assert!(
+                families.iter().any(|f| f == fam || f == base),
+                "sample line outside any declared family: {l}"
+            );
+        }
+    }
+    assert!(families.contains(&"contour_requests_total".to_string()), "{families:?}");
+    assert!(families.contains(&"contour_uptime_ms".to_string()), "{families:?}");
+    assert!(families.contains(&"contour_verb_latency_ns".to_string()), "{families:?}");
+    // No sampler ran: the ring gauge reads 0 and no rate gauges exist.
+    assert!(body.contains(&"contour_ring_samples 0"), "{reply}");
+    assert!(!reply.contains("contour_rate_qps"), "rate gauges without a ring window");
+
+    // Coverage: every METRICS key projects into the exposition.
+    for tok in metrics.split_whitespace() {
+        let key = tok.split('=').next().unwrap();
+        let want = if let Some(verb) = key.strip_prefix("lat/") {
+            format!("contour_verb_latency_ns{{verb=\"{verb}\",quantile=\"0.5\"}}")
+        } else if let Some(verb) = key.strip_prefix("err/") {
+            format!("contour_verb_errors_total{{verb=\"{verb}\"}}")
+        } else if let Some(name) = key.strip_prefix("cache/") {
+            format!("contour_cache_hits{{name=\"{name}\"}}")
+        } else {
+            prom_name(key)
+        };
+        assert!(
+            body.iter().any(|l| l.starts_with(&want)),
+            "METRICS key {key} has no exposition line (wanted prefix {want})"
+        );
+    }
+}
+
+// -------------------------------------------------------------- HEALTH
+
+/// Acceptance: HEALTH reads ready on a fresh server and degrades, then
+/// overloads, as the windowed busy rate is forced over its thresholds
+/// (heavy cap 0 BUSYs every heavy verb).
+#[test]
+fn health_transitions_ready_degraded_overloaded() {
+    let fresh = ServerState::new(1);
+    let r = ask(&fresh, "HEALTH");
+    assert!(r.starts_with("OK ready "), "{r}");
+
+    // Drain mode: heavy_sat pins at 1.0 (degraded on its own) and every
+    // GEN is a BUSY reply, so the busy fraction is under our control.
+    let state = ServerState::new(1).with_admission(64, 0);
+    for _ in 0..20 {
+        assert_eq!(ask(&state, "PING"), "PONG");
+    }
+    for _ in 0..2 {
+        assert!(ask(&state, "GEN g path:4").starts_with("ERR busy:"));
+    }
+    // 2 BUSY over ~23 requests: past degraded (0.05), short of 0.5.
+    let r = ask(&state, "HEALTH");
+    assert!(r.starts_with("OK degraded "), "{r}");
+    let busy: f64 = field(&r, "busy_frac=").parse().unwrap();
+    assert!((0.05..0.5).contains(&busy), "{r}");
+    // No sampler pushed anything: the lifetime fallback served this.
+    assert_eq!(field(&r, "samples="), "0", "{r}");
+
+    for _ in 0..40 {
+        assert!(ask(&state, "GEN g path:4").starts_with("ERR busy:"));
+    }
+    let r = ask(&state, "HEALTH");
+    assert!(r.starts_with("OK overloaded "), "{r}");
+    let busy: f64 = field(&r, "busy_frac=").parse().unwrap();
+    assert!(busy >= 0.5, "{r}");
+}
+
+// --------------------------------------------------------------- WATCH
+
+/// Acceptance: WATCH on the line transport streams its header, one TICK
+/// line per interval with monotone timestamps and live request deltas,
+/// then DONE — and the session keeps serving afterwards.
+#[test]
+fn watch_streams_ticks_on_the_line_transport() {
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+
+    // Background traffic so the tick deltas have something to report.
+    let stop = Arc::new(AtomicBool::new(false));
+    let pinger = {
+        let (addr, stop) = (addr.clone(), Arc::clone(&stop));
+        std::thread::spawn(move || {
+            let mut w = LineWire::connect(&addr);
+            while !stop.load(Ordering::Relaxed) {
+                assert_eq!(w.ask("PING"), "PONG");
+            }
+            assert_eq!(w.ask("QUIT"), "BYE");
+        })
+    };
+
+    let mut w = LineWire::connect(&addr);
+    w.send("WATCH 3 25");
+    assert_eq!(w.read_line(), "OK 3 25");
+    let mut t_prev = 0u64;
+    let mut req_sum = 0u64;
+    for i in 0..3u64 {
+        let tick = w.read_line();
+        assert!(tick.starts_with(&format!("TICK {i} ")), "{tick}");
+        let t_ms: u64 = field(&tick, "t_ms=").parse().unwrap();
+        assert!(t_ms >= t_prev, "{tick}");
+        t_prev = t_ms;
+        assert!(field(&tick, "dt_ms=").parse::<u64>().unwrap() >= 1, "{tick}");
+        req_sum += field(&tick, "requests=").parse::<u64>().unwrap();
+        assert!(tick.contains(" qps="), "{tick}");
+    }
+    assert_eq!(w.read_line(), "DONE");
+    stop.store(true, Ordering::Relaxed);
+    pinger.join().unwrap();
+    assert!(req_sum >= 1, "ticks never saw the background traffic");
+    assert_eq!(w.ask("PING"), "PONG");
+    assert_eq!(w.ask("QUIT"), "BYE");
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+/// Acceptance: WATCH over binary v2 pushes one OK frame per tick (all
+/// carrying the request id) plus a terminal DONE frame, while another
+/// pipelined request interleaves on the same connection.
+#[test]
+fn watch_streams_frames_on_the_binary_transport() {
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+
+    let mut bin = BinWire::connect(&addr);
+    bin.send(42, "WATCH", "3 10", &[]);
+    bin.send(7, "PING", "", &[]);
+    bin.w.flush().unwrap();
+
+    let mut ticks = 0u64;
+    let mut pong = false;
+    loop {
+        let f = bin.recv();
+        if f.id == 7 {
+            assert_eq!((f.status, f.text().as_str()), (protocol::STATUS_OK, "PONG"));
+            pong = true;
+            continue;
+        }
+        assert_eq!(f.id, 42, "unexpected request id in WATCH stream");
+        assert_eq!(f.status, protocol::STATUS_OK, "{}", f.text());
+        if f.text() == "DONE" {
+            break;
+        }
+        assert!(f.text().starts_with(&format!("TICK {ticks} ")), "{}", f.text());
+        ticks += 1;
+    }
+    assert_eq!(ticks, 3, "tick frames before DONE");
+    assert!(pong, "pipelined PING never answered during the WATCH stream");
+
+    bin.send(9, "QUIT", "", &[]);
+    bin.w.flush().unwrap();
+    let f = bin.recv();
+    assert_eq!((f.id, f.status), (9, protocol::STATUS_BYE));
+    assert!(protocol::read_reply(&mut bin.r).unwrap().is_none(), "frames after BYE");
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------------ sampler thread
+
+/// Acceptance: `serve_listener` runs the sampler at the configured
+/// interval, HEALTH switches to its windowed (ring-backed) signals, and
+/// PROM grows the ring-derived rate gauges.
+#[test]
+fn sampler_thread_fills_the_ring() {
+    let state = Arc::new(ServerState::new(1).with_sample_interval(10));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+
+    let mut w = LineWire::connect(&addr);
+    for _ in 0..10 {
+        assert_eq!(w.ask("PING"), "PONG");
+    }
+    std::thread::sleep(Duration::from_millis(150));
+
+    assert!(state.ring.len() >= 3, "sampler pushed only {} samples", state.ring.len());
+    for pair in state.ring.samples().windows(2) {
+        assert!(pair[1].ts_ms >= pair[0].ts_ms, "sampler timestamps not monotone");
+    }
+    let h = w.ask("HEALTH");
+    assert!(h.starts_with("OK "), "{h}");
+    let n: usize = field(&h, "samples=").parse().unwrap();
+    assert!(n >= 2, "HEALTH still on the lifetime fallback: {h}");
+    let p = w.ask_multi("PROM");
+    assert!(p.contains("contour_ring_samples "), "{p}");
+    assert!(p.contains("contour_rate_qps "), "{p}");
+    assert!(p.contains("contour_busy_fraction "), "{p}");
+    assert_eq!(w.ask("QUIT"), "BYE");
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------- HTTP scrape endpoint
+
+/// The `--prom-addr` endpoint: any HTTP request gets a 200 with the
+/// OpenMetrics exposition, an exact Content-Length, and a close.
+#[test]
+fn http_scrape_endpoint_serves_openmetrics() {
+    let state = Arc::new(ServerState::new(1));
+    assert_eq!(ask(&state, "PING"), "PONG");
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (st, sd) = (Arc::clone(&state), Arc::clone(&shutdown));
+    let handle = std::thread::spawn(move || serve_prom_listener(listener, st, sd));
+
+    for _ in 0..2 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\nAccept: */*\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200 OK\r\n"), "{buf}");
+        assert!(buf.contains("Content-Type: application/openmetrics-text"), "{buf}");
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+        let cl: usize =
+            head.lines().find_map(|l| l.strip_prefix("Content-Length: ")).unwrap().parse().unwrap();
+        assert_eq!(body.len(), cl, "Content-Length disagrees with the body");
+        assert!(body.contains("contour_requests_total "), "{body}");
+        assert!(body.trim_end().ends_with("# EOF"), "{body}");
+    }
+
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+// ----------------------------------------------------- memory accounting
+
+/// Acceptance (alloc-track builds): a Contour run reports a nonzero
+/// heap peak that reconciles with its working-set arrays — at least the
+/// labels array, at most a small multiple of it. Other tests allocate
+/// concurrently in this process, so the upper bounds stay loose.
+#[cfg(feature = "alloc-track")]
+#[test]
+fn contour_run_reports_heap_peak_reconciling_with_labels() {
+    use contour::cc::{contour::Contour, Algorithm, RunContext};
+
+    let n = 1usize << 21;
+    let g = contour::graph::gen::path(n).into_csr();
+    let r = Contour::c2().run_ctx(&g, &RunContext::default());
+    let m = r.mem.expect("alloc-track builds must report MemStats");
+    let labels_bytes = (n * std::mem::size_of::<VId>()) as u64;
+    assert!(m.peak_bytes >= labels_bytes, "peak {} < labels array {labels_bytes}", m.peak_bytes);
+    assert!(m.peak_bytes <= 16 * labels_bytes, "peak {} implausibly large", m.peak_bytes);
+    assert!(m.allocs > 0 && m.frees > 0, "{m:?}");
+    // The returned labels vec is still live when the scope closes.
+    assert!(m.net_bytes >= labels_bytes as i64 / 2, "net {} vs labels {labels_bytes}", m.net_bytes);
+    assert!(m.net_bytes <= 16 * labels_bytes as i64, "net {} implausibly large", m.net_bytes);
+}
+
+/// Default builds carry no accounting: `RunResult::mem` stays `None`
+/// and the allocator counters read zero.
+#[cfg(not(feature = "alloc-track"))]
+#[test]
+fn mem_accounting_absent_without_the_feature() {
+    use contour::cc::{contour::Contour, Algorithm, RunContext};
+
+    assert!(!contour::obs::alloc::enabled());
+    assert_eq!(contour::obs::alloc::current_bytes(), 0);
+    assert_eq!(contour::obs::alloc::totals(), (0, 0, 0, 0));
+    let g = contour::graph::gen::path(64).into_csr();
+    let r = Contour::c2().run_ctx(&g, &RunContext::default());
+    assert!(r.mem.is_none(), "mem stats in a no-feature build");
+}

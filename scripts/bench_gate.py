@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Bench regression gate: diff a fresh bench JSON against the committed
+repo-root baseline with per-metric tolerance bands.
+
+    python3 scripts/bench_gate.py --bench hotpath \
+        --current results/BENCH_hotpath.json --baseline BENCH_hotpath.json
+    python3 scripts/bench_gate.py --bench serving \
+        --current results/BENCH_serving.json --baseline BENCH_serving.json
+
+Prints a trajectory table (and appends it to $GITHUB_STEP_SUMMARY when
+set). While the committed baseline has no records the gate is
+warn-only: it reports the fresh numbers and exits 0, so the trajectory
+can be seeded from CI artifacts without a chicken-and-egg failure.
+Once the baseline is populated, a metric outside its band fails the
+job (exit 1); `--warn-only` downgrades that to a warning.
+
+Timing bands are deliberately loose (shared CI runners are noisy);
+deterministic metrics (per-shard edge-mass balance) get tight bands.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# (metric key, direction, band) — "higher" means bigger is better and
+# the gate fails when current < baseline * band; "lower" means smaller
+# is better and the gate fails when current > baseline * band.
+HOTPATH_BANDS = [
+    ("frontier_speedup_rmat", "higher", 0.80),
+    ("exact_vs_chunk_rmat", "higher", 0.80),
+    ("exact_vs_chunk_road", "higher", 0.80),
+    ("edge_mass_ratio_p4_vertices", "lower", 1.05),
+    ("edge_mass_ratio_p4_edges", "lower", 1.05),
+]
+
+SERVING_BANDS = [
+    ("qps", "higher", 0.75),
+    ("vertices_per_sec", "higher", 0.75),
+    ("p95_us", "lower", 1.50),
+    ("p99_us", "lower", 2.00),
+]
+
+
+def fmt(v):
+    if v is None:
+        return "-"
+    if isinstance(v, float) and v != int(v):
+        return f"{v:.3f}"
+    return f"{v:.0f}" if isinstance(v, float) else str(v)
+
+
+def judge(cur, base, direction, band):
+    """Return (status, detail). Status: ok | REGRESSED | new | missing."""
+    if cur is None:
+        return "missing", "metric absent from fresh run"
+    if base is None:
+        return "new", "no baseline value"
+    if base == 0:
+        return "ok", "baseline zero, skipped"
+    ratio = cur / base
+    if direction == "higher":
+        bad = ratio < band
+        detail = f"{ratio:.2f}x vs floor {band:.2f}x"
+    else:
+        bad = ratio > band
+        detail = f"{ratio:.2f}x vs ceiling {band:.2f}x"
+    return ("REGRESSED" if bad else "ok"), detail
+
+
+def gate_hotpath(cur, base):
+    cs, bs = cur.get("summary", {}), base.get("summary", {})
+    rows = []
+    for key, direction, band in HOTPATH_BANDS:
+        status, detail = judge(cs.get(key), bs.get(key), direction, band)
+        rows.append((key, fmt(bs.get(key)), fmt(cs.get(key)), status, detail))
+    return rows
+
+
+def gate_serving(cur, base):
+    def by_scenario(doc):
+        return {r.get("scenario"): r for r in doc.get("records", [])}
+
+    cs, bs = by_scenario(cur), by_scenario(base)
+    rows = []
+    for scenario in sorted(cs):
+        crec, brec = cs[scenario], bs.get(scenario, {})
+        for key, direction, band in SERVING_BANDS:
+            status, detail = judge(crec.get(key), brec.get(key), direction, band)
+            rows.append((f"{scenario} {key}", fmt(brec.get(key)), fmt(crec.get(key)),
+                         status, detail))
+    for scenario in sorted(set(bs) - set(cs)):
+        rows.append((scenario, "present", "-", "missing", "scenario absent from fresh run"))
+    return rows
+
+
+def render(rows, title):
+    lines = [f"### Bench gate: {title}", "",
+             "| metric | baseline | current | status | band |",
+             "|---|---:|---:|---|---|"]
+    for name, b, c, status, detail in rows:
+        lines.append(f"| {name} | {b} | {c} | {status} | {detail} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", choices=["hotpath", "serving"], required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    seeded = bool(base.get("records"))
+    gate = gate_hotpath if args.bench == "hotpath" else gate_serving
+    rows = gate(cur, base)
+
+    table = render(rows, args.bench)
+    if not seeded:
+        table += ("\n\nBaseline has no records yet — warn-only. Refresh the committed "
+                  f"{os.path.basename(args.baseline)} from this run's artifact to arm the gate.")
+    print(table)
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(table + "\n\n")
+
+    regressed = [r for r in rows if r[3] in ("REGRESSED", "missing")]
+    if regressed and seeded:
+        for name, _, _, status, detail in regressed:
+            print(f"::warning::{args.bench}: {name} {status} ({detail})")
+        if args.warn_only:
+            print("gate: regressions found, but --warn-only is set")
+            return 0
+        print(f"gate: FAIL — {len(regressed)} metric(s) outside tolerance")
+        return 1
+    print("gate: pass" if seeded else "gate: pass (unseeded baseline, warn-only)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
