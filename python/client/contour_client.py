@@ -94,7 +94,7 @@ _OPCODES = {
         (14, "SQUERY"), (15, "SSAVE"), (16, "SLOAD"), (17, "LIST"),
         (18, "DROP"), (19, "METRICS"), (20, "TRACE"), (21, "RECENT"),
         (22, "QUERY"), (23, "BQUERY"), (24, "HELLO"), (25, "QUIT"),
-        (26, "PROM"), (27, "HEALTH"), (28, "WATCH"),
+        (26, "PROM"), (27, "HEALTH"), (28, "WATCH"), (29, "FAULTS"),
     ]
 }
 
@@ -118,6 +118,31 @@ class ContourBusy(ContourError):
     """Admission control rejected the request (``ERR busy`` on the line
     protocol, a BUSY frame on the binary one). Safe to retry after
     retiring in-flight replies."""
+
+
+class ContourInternal(ContourError):
+    """The verb panicked server-side (``ERR internal``). The server
+    caught the panic, dropped the affected graph's cached results, and
+    keeps serving — the connection stays usable, but the request did
+    not complete and is not automatically safe to retry."""
+
+
+class ContourDeadline(ContourError):
+    """The request exceeded the server's per-request deadline
+    (``ERR deadline``, from ``CONTOUR_DEADLINE_MS`` / ``--deadline-ms``).
+    Partial work was abandoned; retry with a smaller request or a
+    larger server-side budget."""
+
+
+def _server_error(message: str) -> ContourError:
+    """Classify an ERR reply body into the matching exception type."""
+    if message.startswith("busy"):
+        return ContourBusy(message)
+    if message.startswith("internal"):
+        return ContourInternal(message)
+    if message.startswith("deadline"):
+        return ContourDeadline(message)
+    return ContourError(message)
 
 
 class ContourClient:
@@ -199,7 +224,7 @@ class ContourClient:
         if status == _STATUS_BUSY:
             raise ContourBusy(payload.decode("utf-8", "replace"))
         if status == _STATUS_ERR:
-            raise ContourError(payload.decode("utf-8", "replace"))
+            raise _server_error(payload.decode("utf-8", "replace"))
         if status == _STATUS_BYE:
             return "BYE"
         v = verb.upper()
@@ -231,10 +256,8 @@ class ContourClient:
             return self._frame_request(verb, args)
         self._send(line)
         reply = self._recv()
-        if reply.startswith("ERR busy"):
-            raise ContourBusy(reply[4:])
         if reply.startswith("ERR"):
-            raise ContourError(reply[4:])
+            raise _server_error(reply[4:])
         return reply
 
     def _with_busy_retry(self, fn, retry_busy: int):
@@ -308,7 +331,7 @@ class ContourClient:
             self._send(f"{u} {v}")
         reply = self._recv()
         if reply.startswith("ERR"):
-            raise ContourError(reply[4:])
+            raise _server_error(reply[4:])
         _, n, m = reply.split()
         return int(n), int(m)
 
@@ -472,7 +495,7 @@ class ContourClient:
         self._send("PROM")
         head = self._recv()
         if head.startswith("ERR"):
-            raise ContourError(head[4:])
+            raise _server_error(head[4:])
         n = int(head.split()[1])
         return "\n".join(self._recv() for _ in range(n))
 
@@ -523,17 +546,15 @@ class ContourClient:
                 if status == _STATUS_BUSY:
                     raise ContourBusy(text)
                 if status != _STATUS_OK:
-                    raise ContourError(text)
+                    raise _server_error(text)
                 if text == "DONE":
                     return
                 yield self._parse_tick(text)
         else:
             self._send(f"WATCH {ticks} {interval_ms}")
             head = self._recv()
-            if head.startswith("ERR busy"):
-                raise ContourBusy(head[4:])
             if head.startswith("ERR"):
-                raise ContourError(head[4:])
+                raise _server_error(head[4:])
             while True:
                 line = self._recv()
                 if line == "DONE":

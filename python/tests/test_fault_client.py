@@ -1,0 +1,122 @@
+"""Typed fault exceptions against in-process mock servers — no Rust
+binary needed. ``ERR internal`` (a caught server-side panic) and
+``ERR deadline`` (per-request budget exceeded) must surface as their
+own exception types on both transports, stay distinct from BUSY (no
+silent retry), and leave the connection usable for the next request."""
+
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "client"))
+import contour_client as cc  # noqa: E402
+from contour_client import (  # noqa: E402
+    ContourBusy,
+    ContourClient,
+    ContourDeadline,
+    ContourError,
+    ContourInternal,
+)
+
+from test_telemetry_client import MockBinaryServer, MockLineServer  # noqa: E402
+
+OP_CC = cc._OPCODES["CC"]
+OP_QUERY = cc._OPCODES["QUERY"]
+
+
+def test_error_classifier():
+    assert isinstance(cc._server_error("busy: shed"), ContourBusy)
+    assert isinstance(cc._server_error("internal: CC panicked"), ContourInternal)
+    assert isinstance(
+        cc._server_error("deadline exceeded after 50ms budget"), ContourDeadline
+    )
+    plain = cc._server_error("no such graph")
+    assert isinstance(plain, ContourError)
+    assert not isinstance(plain, (ContourBusy, ContourInternal, ContourDeadline))
+    # Both faults are ContourError subclasses, so blanket handlers still fire.
+    assert isinstance(cc._server_error("internal: x"), ContourError)
+    assert isinstance(cc._server_error("deadline x"), ContourError)
+
+
+def test_faults_opcode_registered():
+    # The FAULTS verb rides the append-only opcode table at 29.
+    assert cc._OPCODES["FAULTS"] == 29
+
+
+def test_line_internal_error_is_typed_and_connection_survives():
+    replies = iter(["ERR internal: CC panicked: boom", "OK 7"])
+    srv = MockLineServer(lambda line: next(replies))
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        with pytest.raises(ContourInternal, match="CC panicked"):
+            c.graph_cc("g")
+        # Panic isolation: the same connection answers the next request.
+        assert c.query("g", 3) == 7
+    srv.join(2)
+    assert srv.lines == ["CC g C-2", "QUERY g 3", "QUIT"]
+
+
+def test_line_deadline_error_is_typed():
+    srv = MockLineServer(lambda line: "ERR deadline exceeded after 50ms budget")
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        with pytest.raises(ContourDeadline, match="50ms"):
+            c.graph_cc("g")
+    srv.join(2)
+
+
+def test_internal_is_not_retried_as_busy(monkeypatch):
+    """A panicking verb must not be silently resubmitted: retry_busy
+    only covers load shedding, and repeating a crashed request without
+    the caller's say-so could crash the server's worker again."""
+    monkeypatch.setattr(cc, "_RETRY_BASE_S", 0.001)
+    srv = MockLineServer(lambda line: "ERR internal: boom")
+    with ContourClient("127.0.0.1", srv.port, protocol="line") as c:
+        with pytest.raises(ContourInternal):
+            c.query("g", 3, retry_busy=5)
+    srv.join(2)
+    assert srv.lines == ["QUERY g 3", "QUIT"]  # exactly one attempt
+
+
+def test_binary_internal_and_deadline_are_typed():
+    replies = {
+        1: "internal: PCC panicked: index out of bounds",
+        2: "deadline exceeded after 250ms budget",
+        3: "no such graph g",
+    }
+    state = {"n": 0}
+
+    def handler(op, rid, args):
+        state["n"] += 1
+        return [(rid, cc._STATUS_ERR, replies[state["n"]])]
+
+    srv = MockBinaryServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="binary") as c:
+        with pytest.raises(ContourInternal, match="PCC panicked"):
+            c.graph_cc("g", "C-2")
+        with pytest.raises(ContourDeadline, match="250ms"):
+            c.graph_cc("g", "C-2")
+        with pytest.raises(ContourError) as ei:
+            c.graph_cc("g", "C-2")
+        assert not isinstance(
+            ei.value, (ContourBusy, ContourInternal, ContourDeadline)
+        )
+    srv.join(2)
+
+
+def test_pipeline_files_typed_errors_under_ticket():
+    def handler(op, rid, args):
+        assert op == OP_QUERY
+        if args == "g 1":
+            return [(rid, cc._STATUS_ERR, "internal: boom")]
+        return [(rid, cc._STATUS_OK, "9")]
+
+    srv = MockBinaryServer(handler)
+    with ContourClient("127.0.0.1", srv.port, protocol="binary") as c:
+        with c.pipeline(window=4) as p:
+            bad = p.query("g", 1)
+            good = p.query("g", 2)
+            with pytest.raises(ContourInternal):
+                p.result(bad)
+            # The panic poisoned neither the pipeline nor the connection.
+            assert p.result(good) == 9
+    srv.join(2)

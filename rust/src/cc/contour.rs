@@ -860,6 +860,10 @@ impl Algorithm for Contour {
         let mut force_full = true;
         let mut since_full = 0usize;
         loop {
+            // Cooperative deadline: between passes nothing is borrowed by
+            // pool workers, so an armed `CONTOUR_DEADLINE_MS` can safely
+            // abandon the run here (dispatch maps it to `ERR deadline`).
+            crate::util::deadline::check();
             let pass_idx = iters;
             let h = self.schedule.order_at(iters).max(1);
             iters += 1;

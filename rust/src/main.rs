@@ -72,6 +72,9 @@ fn print_usage() {
          \x20        (--trace: afterwards run one traced RMAT pass and export its timeline)\n\
          \x20 contour stats [--graph FILE | --gen SPEC]\n\
          \x20 contour serve [--addr HOST:PORT] [--threads T] [--sample-ms MS] [--prom-addr HOST:PORT]\n\
+         \x20        [--idle-ms MS] [--write-ms MS] [--deadline-ms MS]\n\
+         \x20        (idle/write: per-connection socket budgets; deadline: heavy-verb compute\n\
+         \x20        budget -> ERR deadline; defaults from CONTOUR_IDLE_MS/_WRITE_MS/_DEADLINE_MS)\n\
          \x20 contour stream [--graph FILE | --gen SPEC] [--batch B] [--epochs K]\n\
          \x20        [--wal PATH] [--snapshot PATH] [--threads T] [--verify]\n\
          \x20 contour shard [--graph FILE | --gen SPEC] [--alg NAME] [--shards 1,2,4,8]\n\
@@ -332,9 +335,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7021").to_string();
     let threads = args.get_usize("threads", 0)?;
     let sample_ms = args.get_usize("sample-ms", 0)? as u64;
-    let state = std::sync::Arc::new(
-        contour::server::ServerState::new(threads).with_sample_interval(sample_ms),
-    );
+    // Robustness budgets (0 = keep the CONTOUR_*_MS env default, which
+    // itself defaults to unbounded).
+    let idle_ms = args.get_usize("idle-ms", 0)? as u64;
+    let write_ms = args.get_usize("write-ms", 0)? as u64;
+    let deadline_ms = args.get_usize("deadline-ms", 0)? as u64;
+    let mut state = contour::server::ServerState::new(threads).with_sample_interval(sample_ms);
+    if idle_ms > 0 || write_ms > 0 || deadline_ms > 0 {
+        let pick = |flag: u64, cur: Option<std::time::Duration>| {
+            if flag > 0 { flag } else { cur.map_or(0, |d| d.as_millis() as u64) }
+        };
+        state = state.with_timeouts(
+            pick(idle_ms, state.idle()),
+            pick(write_ms, state.write_timeout()),
+            pick(deadline_ms, state.deadline()),
+        );
+    }
+    let state = std::sync::Arc::new(state);
     let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     // Bind before announcing: with `--addr host:0` the OS assigns the
     // port, and the printed address is the one clients can reach.

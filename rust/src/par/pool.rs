@@ -663,7 +663,18 @@ fn execute(inner: &Inner, job: &Job, wid: Option<usize>) {
     let started = Instant::now();
     let r = {
         let _in_job = JobScope::enter();
-        count_exec(&inner.metrics, || catch_unwind(AssertUnwindSafe(task)))
+        count_exec(&inner.metrics, || {
+            catch_unwind(AssertUnwindSafe(|| {
+                // Failpoint `pool.job`: any armed action panics the task
+                // in place — the interesting behavior to exercise is the
+                // panic funnel (mark job panicked, re-raise on the
+                // submitter, isolate at dispatch), not the action kind.
+                if crate::util::faults::fire("pool.job").is_some() {
+                    panic!("injected fault at pool.job");
+                }
+                task()
+            }))
+        })
     };
     inner.metrics.run_time.record_duration(started.elapsed());
     if r.is_err() {

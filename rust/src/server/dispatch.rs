@@ -18,6 +18,7 @@
 //! (line: `ERR busy: ...`; binary: a BUSY frame) instead of unbounded
 //! queueing.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -31,6 +32,8 @@ use crate::graph::{io, stats, Csr, EdgeList};
 use crate::obs::RunTrace;
 use crate::shard::{self, ShardedGraph};
 use crate::stream::StreamingCc;
+use crate::util::deadline::{self, DeadlineExceeded};
+use crate::util::{faults, mlock};
 use crate::VId;
 
 use super::telemetry;
@@ -147,10 +150,39 @@ pub fn handle_line(
     }
 }
 
+/// Verbs whose compute can run long enough for `CONTOUR_DEADLINE_MS` to
+/// matter; the deadline is armed only for these so admin verbs and
+/// WATCH streams never trip it.
+fn deadline_applies(cmd: &str) -> bool {
+    matches!(
+        cmd,
+        "GEN" | "UPLOAD" | "LOAD" | "CC" | "LABELS" | "QUERY" | "BQUERY" | "SHARD" | "PCC"
+            | "STREAM" | "SADD" | "SEPOCH" | "SSAVE" | "SLOAD"
+    )
+}
+
+/// Extract something printable from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("verb handler panicked")
+}
+
 /// Dispatch one request. This is the single verb interpreter both wire
 /// adapters share; it also meters the request (`requests`,
 /// `lat/<verb>`, `err/<verb>`, the RECENT ring) so line and binary
 /// traffic land in the same counters.
+///
+/// Panic isolation lives here: a panicking verb handler (a bug, or an
+/// injected `pool.job` fault re-raised by the pool onto this thread) is
+/// caught and mapped to `ERR internal: ...` — the connection and the
+/// server survive, `panics_total` counts it, and any cached labellings
+/// for the graph named by the request are purged (a panic mid-run may
+/// have left that graph's derived state suspect). An expired cooperative
+/// deadline unwinds with a typed payload and maps to `ERR deadline ...`
+/// instead.
 pub fn dispatch(state: &ServerState, verb: &str, args: &[&str], body: Body<'_>) -> Reply {
     state.metrics.requests.inc();
     let started = Instant::now();
@@ -158,7 +190,30 @@ pub fn dispatch(state: &ServerState, verb: &str, args: &[&str], body: Body<'_>) 
     if cmd == "QUIT" {
         return Reply::Bye;
     }
-    let (reply, ok) = match run_verb(state, &cmd, args, body) {
+    let outcome = {
+        let budget = if deadline_applies(&cmd) { state.deadline() } else { None };
+        let _armed = deadline::arm(budget);
+        catch_unwind(AssertUnwindSafe(|| run_verb(state, &cmd, args, body)))
+    };
+    let result = match outcome {
+        Ok(r) => r,
+        Err(payload) => {
+            if let Some(d) = payload.downcast_ref::<DeadlineExceeded>() {
+                state.metrics.deadlines.inc();
+                Err(anyhow!("deadline exceeded after {}ms budget", d.budget.as_millis()))
+            } else {
+                state.metrics.panics.inc();
+                // A panic mid-run can leave derived (cached) state for
+                // the named graph suspect — purge it; the graph itself
+                // is immutable and stays.
+                if let Some(name) = args.first() {
+                    state.purge_labels_cache(name);
+                }
+                Err(anyhow!("internal: {}", panic_message(payload.as_ref())))
+            }
+        }
+    };
+    let (reply, ok) = match result {
         Ok(r) => (r, true),
         Err(e) => {
             // Error paths are metered like successes: the latency
@@ -232,6 +287,7 @@ fn run_verb(state: &ServerState, cmd: &str, rest: &[&str], body: Body<'_>) -> Re
             Reply::Ok(format!("{}\n{}", body.lines().count(), body))
         }
         "HEALTH" => Reply::Ok(telemetry::render_health(state)),
+        "FAULTS" => Reply::Ok(cmd_faults(rest)?),
         "WATCH" => cmd_watch(rest)?,
         "TRACE" => match rest.first() {
             Some(name) => match state.trace_of(name) {
@@ -283,6 +339,33 @@ fn cmd_watch(rest: &[&str]) -> Result<Reply> {
     Ok(Reply::Watch { ticks, interval_ms })
 }
 
+/// `FAULTS [SET spec | CLEAR]` — inspect or swap the fault-injection
+/// schedule at runtime (see [`crate::util::faults`] for the spec
+/// syntax). Test-gated: refused unless a schedule was armed at boot via
+/// `CONTOUR_FAULTS` or `CONTOUR_FAULTS_VERB=1` opts in — a production
+/// server never exposes a verb that makes it fail on purpose.
+fn cmd_faults(rest: &[&str]) -> Result<String> {
+    anyhow::ensure!(
+        faults::verb_enabled(),
+        "FAULTS is disabled (set CONTOUR_FAULTS or CONTOUR_FAULTS_VERB=1 at boot)"
+    );
+    match rest {
+        [] => {
+            let lines = faults::describe();
+            Ok(format!("{} {}", lines.len(), lines.join("; ")).trim_end().to_string())
+        }
+        [set, spec] if set.eq_ignore_ascii_case("SET") => {
+            faults::configure(spec)?;
+            Ok(format!("armed {}", faults::describe().len()))
+        }
+        [clear] if clear.eq_ignore_ascii_case("CLEAR") => {
+            faults::clear();
+            Ok("cleared".to_string())
+        }
+        _ => bail!("usage: FAULTS [SET point=action[@trigger][;...] | CLEAR]"),
+    }
+}
+
 /// `RECENT [n]` — the last (up to `n`) handled requests as
 /// `verb:ok:dur_ns`, oldest first; the reply leads with the count.
 fn cmd_recent(state: &ServerState, rest: &[&str]) -> Result<String> {
@@ -291,7 +374,7 @@ fn cmd_recent(state: &ServerState, rest: &[&str]) -> Result<String> {
         [n] => n.parse::<usize>().map_err(|e| anyhow!("bad count: {e}"))?,
         _ => bail!("usage: RECENT [n]"),
     };
-    let r = state.recent.lock().unwrap();
+    let r = mlock(&state.recent);
     let skip = r.len().saturating_sub(n);
     let mut out = format!("{}", r.len() - skip);
     for (verb, ok, ns) in r.iter().skip(skip) {
@@ -630,7 +713,7 @@ fn cmd_shard(state: &ServerState, rest: &[&str]) -> Result<String> {
     // insert_sharded so the labels-cache lock is never nested inside
     // the sharded lock.
     let skey = ServerState::shard_cache_name(name);
-    state.labels_cache.write().unwrap().retain(|k, _| k.0 != skey);
+    crate::util::wlock(&state.labels_cache).retain(|k, _| k.0 != skey);
     let sg = state
         .insert_sharded(name, &g, ShardedGraph::partition_with(&g, p, balance))
         .ok_or_else(|| anyhow!("graph {name:?} was replaced during SHARD; retry"))?;
@@ -755,7 +838,11 @@ fn cmd_stream(state: &ServerState, rest: &[&str]) -> Result<String> {
         // Recovery-on-open sealed an implicit epoch, same as SLOAD.
         state.metrics.stream_epochs.inc();
     }
-    Ok(format!("{n} {}", s.epoch()))
+    // Recovery-on-open surfaces its stats, same as SLOAD.
+    Ok(match s.recovery() {
+        Some(info) => format!("{n} {} {}", s.epoch(), info.summary()),
+        None => format!("{n} {}", s.epoch()),
+    })
 }
 
 fn cmd_sadd(state: &ServerState, rest: &[&str]) -> Result<String> {
@@ -834,5 +921,11 @@ fn cmd_sload(state: &ServerState, rest: &[&str]) -> Result<String> {
         StreamingCc::recover(Some(Path::new(snap)), wal.map(Path::new), threads)
     })?;
     state.metrics.stream_epochs.inc();
-    Ok(format!("{} {}", s.n(), s.epoch()))
+    // Lead with the classic `n epoch` so old clients keep parsing, then
+    // the recovery stats: frames replayed past the snapshot's cut and
+    // any torn tail dropped.
+    Ok(match s.recovery() {
+        Some(info) => format!("{} {} {}", s.n(), s.epoch(), info.summary()),
+        None => format!("{} {}", s.n(), s.epoch()),
+    })
 }

@@ -63,6 +63,13 @@ pub struct Metrics {
     pub batch_queries: Counter,
     /// Total vertex ids answered across all BQUERY requests.
     pub batch_vertices: Counter,
+    /// Verb handlers that panicked and were isolated by the dispatch
+    /// `catch_unwind` (each also counts toward `errors` and the verb's
+    /// `err/<verb>`). Any nonzero rate degrades HEALTH.
+    pub panics: Counter,
+    /// Requests that exceeded `CONTOUR_DEADLINE_MS` and were abandoned
+    /// at a safe point (`ERR deadline`).
+    pub deadlines: Counter,
     /// Process start, for `uptime_ms` and the `qps` gauge.
     started: Instant,
 }
@@ -92,6 +99,8 @@ impl Default for Metrics {
             hello_upgrades: Counter::default(),
             batch_queries: Counter::default(),
             batch_vertices: Counter::default(),
+            panics: Counter::default(),
+            deadlines: Counter::default(),
             started: Instant::now(),
         }
     }
@@ -135,6 +144,9 @@ impl Metrics {
             ("stream_edges", self.stream_edges.get()),
             ("stream_epochs", self.stream_epochs.get()),
             ("stream_queries", self.stream_queries.get()),
+            ("panics", self.panics.get()),
+            ("deadlines", self.deadlines.get()),
+            ("faults_injected", crate::util::faults::injected_total()),
         ]
     }
 
@@ -165,7 +177,8 @@ impl Metrics {
              hello_upgrades={} batch_queries={} batch_vertices={} \
              graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
              cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
-             streams={} stream_edges={} stream_epochs={} stream_queries={} pool_workers={} \
+             streams={} stream_edges={} stream_epochs={} stream_queries={} \
+             panics={} deadlines={} faults_injected={} pool_workers={} \
              pool_jobs={} pool_pulls={} pool_steals={} pool_parks={} pool_wakes={} \
              pool_inflight={} pool_max_inflight={} pool_exec_peak={} pool_pins={} \
              pool_sticky_jobs={} pool_sticky_home={} pool_sticky_away={} \
@@ -194,6 +207,9 @@ impl Metrics {
             self.stream_edges.get(),
             self.stream_epochs.get(),
             self.stream_queries.get(),
+            self.panics.get(),
+            self.deadlines.get(),
+            crate::util::faults::injected_total(),
             pool.workers,
             pool.jobs,
             pool.pulls,
@@ -247,6 +263,10 @@ mod tests {
         assert!(m.render().contains("bytes_in=0"));
         assert!(m.render().contains("busy=0"));
         assert!(m.render().contains("batch_queries=0"));
+        // Robustness counters are part of the scrape surface.
+        assert!(m.render().contains("panics=0"));
+        assert!(m.render().contains("deadlines=0"));
+        assert!(m.render().contains("faults_injected="));
         // Pool latency histograms render as count:p50:p95:p99.
         let r = m.render();
         let wait = r

@@ -87,8 +87,27 @@
 //!                                    DONE frame)
 //!   HELLO 2                        → OK v2  (then the connection speaks
 //!                                    binary frames; see [`protocol`])
+//!   FAULTS [SET spec|CLEAR]        → OK ...  (test-gated fault-injection
+//!                                    control — list, arm or clear the
+//!                                    failpoint registry; only served
+//!                                    when `CONTOUR_FAULTS` or
+//!                                    `CONTOUR_FAULTS_VERB=1` is set,
+//!                                    ERR otherwise; see
+//!                                    [`crate::util::faults`])
 //!   PING                           → PONG
 //!   QUIT                           → BYE (closes connection)
+//!
+//! Robustness knobs (all per-process env, read at [`ServerState::new`]):
+//! `CONTOUR_IDLE_MS` closes a connection that sends no complete request
+//! for that long (BYE first; 0/unset = never — WATCH pushes are
+//! write-driven and unaffected); `CONTOUR_WRITE_MS` bounds blocking
+//! writes to a stalled client; `CONTOUR_DEADLINE_MS` gives every heavy
+//! verb a compute budget, answered with `ERR deadline ...` when
+//! exceeded. A panicking verb is caught at dispatch and answered with
+//! `ERR internal ...` (counted in `panics`); the connection, the server
+//! and every other request survive. On shutdown the server drains:
+//! stops accepting, finishes in-flight requests, then BYEs each idle
+//! connection.
 //!
 //! Sharded store (see [`crate::shard`]; SHARD partitions a stored graph
 //! into p range shards — fences by vertex count or, with `edges`, by
@@ -143,7 +162,7 @@ use crate::graph::{gen, Csr, EdgeList};
 use crate::obs::{Histogram, RunTrace};
 use crate::shard::{self, ShardedGraph};
 use crate::stream::{Snapshot, StreamingCc};
-use crate::util::Timer;
+use crate::util::{mlock, rlock, wlock, Timer};
 use crate::VId;
 
 use metrics::Metrics;
@@ -168,7 +187,7 @@ pub const DEFAULT_WINDOW: usize = 64;
 const VERBS: &[&str] = &[
     "PING", "GEN", "UPLOAD", "LOAD", "CC", "LABELS", "STATS", "SHARD", "PCC", "SHARDSTATS",
     "STREAM", "SADD", "SEPOCH", "SQUERY", "SSAVE", "SLOAD", "LIST", "DROP", "METRICS", "TRACE",
-    "RECENT", "QUERY", "BQUERY", "HELLO", "PROM", "HEALTH", "WATCH",
+    "RECENT", "QUERY", "BQUERY", "HELLO", "PROM", "HEALTH", "WATCH", "FAULTS",
 ];
 
 /// Backing storage for a cached labelling: static entries own their
@@ -293,6 +312,17 @@ pub struct ServerState {
     sample_ms: u64,
     /// Worker threads each algorithm run may use (0 = all).
     pub threads: usize,
+    /// Idle budget per connection (`CONTOUR_IDLE_MS`): close — BYE
+    /// first — when no complete request arrives for this long. `None`
+    /// = never.
+    idle: Option<std::time::Duration>,
+    /// Socket write timeout (`CONTOUR_WRITE_MS`): bound blocking writes
+    /// to a stalled client. `None` = OS default (unbounded).
+    write_timeout: Option<std::time::Duration>,
+    /// Per-request compute budget for heavy verbs
+    /// (`CONTOUR_DEADLINE_MS`): exceeded runs abandon at the next safe
+    /// point and answer `ERR deadline ...`. `None` = unbounded.
+    deadline: Option<std::time::Duration>,
 }
 
 impl ServerState {
@@ -326,7 +356,49 @@ impl ServerState {
             ring: crate::obs::TimeSeries::new(telemetry::RING_CAP, telemetry::sample_keys()),
             sample_ms: 0,
             threads,
+            idle: env_ms("CONTOUR_IDLE_MS"),
+            write_timeout: env_ms("CONTOUR_WRITE_MS"),
+            deadline: env_ms("CONTOUR_DEADLINE_MS"),
         }
+    }
+
+    /// Override the idle / write / heavy-verb-deadline budgets (ms;
+    /// 0 disables), shadowing the `CONTOUR_*_MS` env defaults — tests
+    /// and the CLI flags use this.
+    pub fn with_timeouts(mut self, idle_ms: u64, write_ms: u64, deadline_ms: u64) -> Self {
+        let ms = |v: u64| (v > 0).then(|| std::time::Duration::from_millis(v));
+        self.idle = ms(idle_ms);
+        self.write_timeout = ms(write_ms);
+        self.deadline = ms(deadline_ms);
+        self
+    }
+
+    /// Per-connection idle budget, if bounded (`CONTOUR_IDLE_MS`).
+    pub fn idle(&self) -> Option<std::time::Duration> {
+        self.idle
+    }
+
+    /// Socket write timeout, if bounded (`CONTOUR_WRITE_MS`).
+    pub fn write_timeout(&self) -> Option<std::time::Duration> {
+        self.write_timeout
+    }
+
+    /// Heavy-verb compute budget, if bounded (`CONTOUR_DEADLINE_MS`).
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        self.deadline
+    }
+
+    /// Evict every cached labelling associated with `name` — the static
+    /// entries plus the `shard/` and `stream/` namespaces. Called when
+    /// a verb touching `name` panics: a task that died mid-update may
+    /// have been computing *into* state these entries describe, so the
+    /// cheap safe move is to recompute on next touch rather than trust
+    /// anything cached under the name.
+    pub(crate) fn purge_labels_cache(&self, name: &str) {
+        let skey = Self::shard_cache_name(name);
+        let stkey = format!("stream/{name}");
+        crate::util::wlock(&self.labels_cache)
+            .retain(|k, _| k.0 != name && k.0 != skey && k.0 != stkey);
     }
 
     /// Override the telemetry sampler interval (ms; clamped to
@@ -407,14 +479,14 @@ impl ServerState {
             self.metrics.cc_cache_misses.inc();
         }
         {
-            let m = self.cache_stats.read().unwrap();
+            let m = self.cache_stats.read().unwrap_or_else(|e| e.into_inner());
             if let Some(e) = m.get(name) {
                 let c = if hit { &e.0 } else { &e.1 };
                 c.fetch_add(1, Ordering::Relaxed);
                 return;
             }
         }
-        let mut m = self.cache_stats.write().unwrap();
+        let mut m = self.cache_stats.write().unwrap_or_else(|e| e.into_inner());
         let e = m.entry(name.to_string()).or_default();
         let c = if hit { &e.0 } else { &e.1 };
         c.fetch_add(1, Ordering::Relaxed);
@@ -424,7 +496,7 @@ impl ServerState {
     /// (leading space; empty when nothing was ever looked up), appended
     /// to the METRICS reply.
     pub fn render_cache_stats(&self) -> String {
-        let m = self.cache_stats.read().unwrap();
+        let m = self.cache_stats.read().unwrap_or_else(|e| e.into_inner());
         let mut pairs: Vec<String> = m
             .iter()
             .map(|(k, (h, mi))| {
@@ -447,12 +519,12 @@ impl ServerState {
     /// verb). CC and PCC overwrite the same slot, so the verb always
     /// answers with the latest run on that graph.
     fn store_trace(&self, name: &str, t: Arc<RunTrace>) {
-        self.traces.write().unwrap().insert(name.to_string(), t);
+        self.traces.write().unwrap_or_else(|e| e.into_inner()).insert(name.to_string(), t);
     }
 
     /// The most recent run trace stored under `name`, if any.
     pub fn trace_of(&self, name: &str) -> Option<Arc<RunTrace>> {
-        self.traces.read().unwrap().get(name).cloned()
+        self.traces.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
     }
 
     /// Record one handled request into the per-verb latency histogram
@@ -464,7 +536,7 @@ impl ServerState {
             return;
         };
         let ns = dur.as_nanos().min(u64::MAX as u128) as u64;
-        let recorded = match self.verb_lat.read().unwrap().get(v) {
+        let recorded = match self.verb_lat.read().unwrap_or_else(|e| e.into_inner()).get(v) {
             Some(h) => {
                 h.record(ns);
                 true
@@ -472,9 +544,9 @@ impl ServerState {
             None => false,
         };
         if !recorded {
-            self.verb_lat.write().unwrap().entry(v).or_default().record(ns);
+            wlock(&self.verb_lat).entry(v).or_default().record(ns);
         }
-        let mut r = self.recent.lock().unwrap();
+        let mut r = self.recent.lock().unwrap_or_else(|e| e.into_inner());
         if r.len() == RECENT_CAP {
             r.pop_front();
         }
@@ -489,15 +561,14 @@ impl ServerState {
             return;
         };
         {
-            let m = self.verb_err.read().unwrap();
+            let m = self.verb_err.read().unwrap_or_else(|e| e.into_inner());
             if let Some(c) = m.get(v) {
                 c.fetch_add(1, Ordering::Relaxed);
                 return;
             }
         }
         self.verb_err
-            .write()
-            .unwrap()
+            .write().unwrap_or_else(|e| e.into_inner())
             .entry(v)
             .or_default()
             .fetch_add(1, Ordering::Relaxed);
@@ -508,7 +579,7 @@ impl ServerState {
     /// sorted by verb), appended to the METRICS reply alongside the
     /// per-graph cache counters.
     pub fn render_verb_lat(&self) -> String {
-        let m = self.verb_lat.read().unwrap();
+        let m = self.verb_lat.read().unwrap_or_else(|e| e.into_inner());
         let mut pairs: Vec<String> =
             m.iter().map(|(v, h)| format!("lat/{v}={}", h.snapshot().render())).collect();
         pairs.sort();
@@ -523,7 +594,7 @@ impl ServerState {
     /// space; empty until the first error; sorted by verb), appended to
     /// the METRICS reply after the latency histograms.
     pub fn render_verb_err(&self) -> String {
-        let m = self.verb_err.read().unwrap();
+        let m = self.verb_err.read().unwrap_or_else(|e| e.into_inner());
         let mut pairs: Vec<String> =
             m.iter().map(|(v, c)| format!("err/{v}={}", c.load(Ordering::Relaxed))).collect();
         pairs.sort();
@@ -567,7 +638,7 @@ impl ServerState {
         F: FnOnce() -> Result<cc::RunResult>,
     {
         let key = (name.to_string(), alg.to_string());
-        if let Some(e) = self.labels_cache.read().unwrap().get(&key).cloned() {
+        if let Some(e) = rlock(&self.labels_cache).get(&key).cloned() {
             // Pointer identity, not just key match: a racing replace of
             // this name may not have purged the old entry yet.
             if e.graph.as_ref().map_or(false, |eg| Arc::ptr_eq(eg, g)) {
@@ -591,13 +662,13 @@ impl ServerState {
             stamp: AtomicU64::new(0),
         });
         self.touch(&entry);
-        let mut map = self.labels_cache.write().unwrap();
+        let mut map = self.labels_cache.write().unwrap_or_else(|e| e.into_inner());
         // Admit only if `name` still maps to the graph we computed on:
         // a concurrent GEN/UPLOAD/LOAD may have replaced it (purging
         // these keys) while we computed, and inserting then would
         // resurrect labels for a graph that no longer exists.
         let still_current =
-            self.graphs.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, g));
+            rlock(&self.graphs).get(name).is_some_and(|cur| Arc::ptr_eq(cur, g));
         if still_current {
             // Count the miss only on admission: a racing DROP must not
             // have its cache_stats cleanup resurrected by this lookup.
@@ -628,7 +699,7 @@ impl ServerState {
         // would hold the read guard through the body (temporary
         // lifetime extension), deadlocking the dead-entry removal's
         // write lock below.
-        let cached = self.labels_cache.read().unwrap().get(&key).cloned();
+        let cached = self.labels_cache.read().unwrap_or_else(|e| e.into_inner()).get(&key).cloned();
         if let Some(e) = cached {
             // Pointer identity against the *current* stream, like the
             // static path: a DROP + recreate reuses name and epoch
@@ -651,7 +722,7 @@ impl ServerState {
                 // Dead entry: the epoch left the stream's history, so
                 // it can never hit again — free its cache slot (and
                 // the snapshot it pins) instead of waiting for LRU.
-                self.labels_cache.write().unwrap().remove(&key);
+                self.labels_cache.write().unwrap_or_else(|e| e.into_inner()).remove(&key);
             }
         }
         let snap = s.snapshot_at(Some(epoch))?;
@@ -665,13 +736,13 @@ impl ServerState {
             stamp: AtomicU64::new(0),
         });
         self.touch(&entry);
-        let mut map = self.labels_cache.write().unwrap();
+        let mut map = self.labels_cache.write().unwrap_or_else(|e| e.into_inner());
         // Admit only while `name` still maps to this stream: a racing
         // DROP (or DROP + recreate) must not have its purge undone —
         // neither in the cache nor in cache_stats (miss counted only on
         // admission).
         let still_current =
-            self.streams.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, s));
+            rlock(&self.streams).get(name).is_some_and(|cur| Arc::ptr_eq(cur, s));
         if still_current {
             self.note_cache(&cache_name, false);
             Self::evict_if_full(&mut map, &key);
@@ -703,7 +774,7 @@ impl ServerState {
     {
         let cache_name = Self::shard_cache_name(name);
         let key = (cache_name.clone(), format!("{alg}:p{}:{}", sg.p(), sg.balance.as_str()));
-        if let Some(e) = self.labels_cache.read().unwrap().get(&key).cloned() {
+        if let Some(e) = rlock(&self.labels_cache).get(&key).cloned() {
             let same = e
                 .sharded
                 .as_ref()
@@ -729,13 +800,13 @@ impl ServerState {
             stamp: AtomicU64::new(0),
         });
         self.touch(&entry);
-        let mut map = self.labels_cache.write().unwrap();
+        let mut map = self.labels_cache.write().unwrap_or_else(|e| e.into_inner());
         // Admit only while `name`'s sharded view is still the exact
         // partition we computed on: a concurrent SHARD/GEN/DROP must
         // not have its purge undone (miss counted only on admission,
         // mirroring the static path).
         let still_current =
-            self.sharded.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, sg));
+            rlock(&self.sharded).get(name).is_some_and(|cur| Arc::ptr_eq(cur, sg));
         if still_current {
             self.note_cache(&cache_name, false);
             Self::evict_if_full(&mut map, &key);
@@ -746,23 +817,23 @@ impl ServerState {
 
     #[cfg(test)]
     fn cache_len(&self) -> usize {
-        self.labels_cache.read().unwrap().len()
+        self.labels_cache.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     pub fn insert(&self, name: &str, g: Csr) {
-        self.graphs.write().unwrap().insert(name.to_string(), Arc::new(g));
+        wlock(&self.graphs).insert(name.to_string(), Arc::new(g));
         let skey = Self::shard_cache_name(name);
         // Purge both the static entries and any cached PCC labellings:
         // a sharded view partitions the *replaced* graph, so its cached
         // results are as dead as the view itself (dropped below).
-        self.labels_cache.write().unwrap().retain(|k, _| k.0 != name && k.0 != skey);
-        self.sharded.write().unwrap().remove(name);
+        wlock(&self.labels_cache).retain(|k, _| k.0 != name && k.0 != skey);
+        self.sharded.write().unwrap_or_else(|e| e.into_inner()).remove(name);
         // A replaced graph's timeline describes a dead graph.
-        self.traces.write().unwrap().remove(name);
+        self.traces.write().unwrap_or_else(|e| e.into_inner()).remove(name);
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<Csr>> {
-        self.graphs.read().unwrap().get(name).cloned()
+        self.graphs.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
     }
 
     /// Register a sharded view of graph `name`, guarding against a
@@ -781,9 +852,9 @@ impl ServerState {
         sg: ShardedGraph,
     ) -> Option<Arc<ShardedGraph>> {
         let sg = Arc::new(sg);
-        let mut map = self.sharded.write().unwrap();
+        let mut map = self.sharded.write().unwrap_or_else(|e| e.into_inner());
         let still_current =
-            self.graphs.read().unwrap().get(name).map_or(false, |cur| Arc::ptr_eq(cur, src));
+            rlock(&self.graphs).get(name).is_some_and(|cur| Arc::ptr_eq(cur, src));
         if !still_current {
             return None;
         }
@@ -793,7 +864,7 @@ impl ServerState {
     }
 
     pub fn get_sharded(&self, name: &str) -> Option<Arc<ShardedGraph>> {
-        self.sharded.read().unwrap().get(name).cloned()
+        self.sharded.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
     }
 
     /// Create (or recover) a stream and register it under `name`,
@@ -812,14 +883,14 @@ impl ServerState {
     where
         F: FnOnce() -> Result<StreamingCc>,
     {
-        let mut map = self.streams.write().unwrap();
+        let mut map = self.streams.write().unwrap_or_else(|e| e.into_inner());
         anyhow::ensure!(
             !map.contains_key(name),
             "stream {name:?} already exists (DROP it first)"
         );
         if let Some(w) = wal {
             let cand = canonical_wal(w);
-            let mut claims = self.wal_claims.lock().unwrap();
+            let mut claims = self.wal_claims.lock().unwrap_or_else(|e| e.into_inner());
             claims.retain(|_, s| s.strong_count() > 0);
             if claims.contains_key(&cand) {
                 bail!(
@@ -830,7 +901,7 @@ impl ServerState {
         }
         let s = Arc::new(build()?);
         if let Some(p) = s.wal_path() {
-            self.wal_claims.lock().unwrap().insert(canonical_wal(p), Arc::downgrade(&s));
+            mlock(&self.wal_claims).insert(canonical_wal(p), Arc::downgrade(&s));
         }
         map.insert(name.to_string(), Arc::clone(&s));
         self.metrics.streams_created.inc();
@@ -838,30 +909,30 @@ impl ServerState {
     }
 
     pub fn get_stream(&self, name: &str) -> Option<Arc<StreamingCc>> {
-        self.streams.read().unwrap().get(name).cloned()
+        self.streams.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
     }
 
     /// Drop a graph (with its sharded view) or stream by name (graphs
     /// take precedence).
     pub fn drop_graph(&self, name: &str) -> bool {
-        if self.graphs.write().unwrap().remove(name).is_some() {
+        if self.graphs.write().unwrap_or_else(|e| e.into_inner()).remove(name).is_some() {
             let skey = ServerState::shard_cache_name(name);
-            self.labels_cache.write().unwrap().retain(|k, _| k.0 != name && k.0 != skey);
-            self.sharded.write().unwrap().remove(name);
-            let mut stats = self.cache_stats.write().unwrap();
+            wlock(&self.labels_cache).retain(|k, _| k.0 != name && k.0 != skey);
+            self.sharded.write().unwrap_or_else(|e| e.into_inner()).remove(name);
+            let mut stats = self.cache_stats.write().unwrap_or_else(|e| e.into_inner());
             stats.remove(name);
             stats.remove(&skey);
-            self.traces.write().unwrap().remove(name);
+            self.traces.write().unwrap_or_else(|e| e.into_inner()).remove(name);
             return true;
         }
-        if self.streams.write().unwrap().remove(name).is_some() {
+        if self.streams.write().unwrap_or_else(|e| e.into_inner()).remove(name).is_some() {
             // Streaming graphs cache sealed-epoch labellings under
             // `stream/<name>`; dropping the stream must evict them or a
             // recreated stream reusing the name (and its epoch numbers)
             // would serve the dead stream's labels.
             let skey = format!("stream/{name}");
-            self.labels_cache.write().unwrap().retain(|k, _| k.0 != skey);
-            self.cache_stats.write().unwrap().remove(&skey);
+            self.labels_cache.write().unwrap_or_else(|e| e.into_inner()).retain(|k, _| k.0 != skey);
+            self.cache_stats.write().unwrap_or_else(|e| e.into_inner()).remove(&skey);
             return true;
         }
         false
@@ -870,28 +941,35 @@ impl ServerState {
     pub fn list(&self) -> Vec<(String, usize, usize)> {
         let mut v: Vec<_> = self
             .graphs
-            .read()
-            .unwrap()
+            .read().unwrap_or_else(|e| e.into_inner())
             .iter()
             .map(|(k, g)| (k.clone(), g.n, g.m()))
             .collect();
         v.extend(
             self.sharded
-                .read()
-                .unwrap()
+                .read().unwrap_or_else(|e| e.into_inner())
                 .iter()
                 .map(|(k, s)| (format!("shard/{k}"), s.n, s.m)),
         );
         v.extend(
             self.streams
-                .read()
-                .unwrap()
+                .read().unwrap_or_else(|e| e.into_inner())
                 .iter()
                 .map(|(k, s)| (format!("stream/{k}"), s.n(), s.edges_ingested())),
         );
         v.sort();
         v
     }
+}
+
+/// A `CONTOUR_*_MS` env knob as a duration: a positive integer is
+/// milliseconds, 0/unset/garbage disables the budget.
+fn env_ms(name: &str) -> Option<std::time::Duration> {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(std::time::Duration::from_millis)
 }
 
 /// Best-effort canonical form of a WAL path for the one-appender check:
@@ -1025,8 +1103,9 @@ pub fn serve_listener(
             match listener.accept() {
                 Ok((stream, _peer)) => {
                     let state = Arc::clone(&state);
+                    let shutdown = Arc::clone(&shutdown);
                     scope.spawn(move || {
-                        let _ = handle_conn(stream, &state);
+                        let _ = handle_conn(stream, &state, &shutdown);
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -1039,7 +1118,10 @@ pub fn serve_listener(
             }
         }
         // Whatever ended the accept loop, release the sampler thread so
-        // the scope can join.
+        // the scope can join. Connection threads see the same flag at
+        // their next command boundary (within [`POLL_MS`]) and drain:
+        // finish the in-flight request, write BYE, close — so the scope
+        // join below is the graceful-shutdown barrier.
         shutdown.store(true, Ordering::Relaxed);
     });
     Ok(())
@@ -1082,10 +1164,15 @@ pub fn serve_prom_listener(
     Ok(())
 }
 
-/// One scrape: drain the request head, answer, close.
+/// One scrape: drain the request head, answer, close. The read budget
+/// is the server's idle budget (`CONTOUR_IDLE_MS`), defaulting to 5 s —
+/// a scraper that opens the socket and never finishes its request head
+/// must not pin a thread forever.
 fn answer_scrape(stream: TcpStream, state: &ServerState) -> Result<()> {
     stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let budget = state.idle().unwrap_or(std::time::Duration::from_secs(5));
+    stream.set_read_timeout(Some(budget))?;
+    stream.set_write_timeout(state.write_timeout())?;
     let mut reader = BufReader::new(stream.try_clone()?);
     // Read request line + headers up to the blank line; tolerate
     // clients that just open the socket and wait.
@@ -1111,20 +1198,108 @@ fn answer_scrape(stream: TcpStream, state: &ServerState) -> Result<()> {
     Ok(())
 }
 
+/// Socket read-poll interval for line connections: reads wake this
+/// often to check the idle budget and the drain flag, so neither knob
+/// needs a kernel timeout equal to the (possibly unbounded) budget.
+const POLL_MS: u64 = 200;
+
+/// How long a draining server waits for the *rest* of a half-received
+/// request line before abandoning the connection anyway — bounds the
+/// shutdown barrier even against a client that stalls mid-command with
+/// no idle budget configured.
+const DRAIN_GRACE_MS: u64 = 2000;
+
+/// What one polled line read produced.
+enum LineRead {
+    /// A complete line is in the buffer.
+    Line,
+    /// Clean EOF — the client hung up.
+    Eof,
+    /// Idle budget exhausted with no complete request.
+    Idle,
+    /// Drain requested at a command boundary (or mid-line past the
+    /// grace period): stop serving this connection.
+    Drain,
+}
+
+/// `read_line` under the [`POLL_MS`] socket timeout: keep polling —
+/// partial bytes accumulate in `line` across timeouts — until a full
+/// line, EOF, the idle budget, or (between commands) a drain request.
+/// `shutdown: None` means "mid-command": a drain must not abandon a
+/// half-consumed payload, or the tail would desync the next session's
+/// framing.
+fn poll_read_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    idle: Option<std::time::Duration>,
+    shutdown: Option<&AtomicBool>,
+) -> std::io::Result<LineRead> {
+    let start = std::time::Instant::now();
+    let mut drain_since: Option<std::time::Instant> = None;
+    loop {
+        match reader.read_line(line) {
+            Ok(0) => return Ok(LineRead::Eof),
+            Ok(_) => return Ok(LineRead::Line),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if let Some(sd) = shutdown {
+                    if sd.load(Ordering::Relaxed) {
+                        // At a command boundary (no bytes of a next
+                        // request yet) drain immediately; mid-line,
+                        // give the client a bounded grace to finish.
+                        if line.is_empty() {
+                            return Ok(LineRead::Drain);
+                        }
+                        let since = *drain_since.get_or_insert_with(std::time::Instant::now);
+                        if since.elapsed() >= std::time::Duration::from_millis(DRAIN_GRACE_MS) {
+                            return Ok(LineRead::Drain);
+                        }
+                    }
+                }
+                if let Some(budget) = idle {
+                    if start.elapsed() >= budget {
+                        return Ok(LineRead::Idle);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// One TCP connection: pure transport. Reads lines, feeds them to the
 /// shared dispatch core, writes the rendered reply — no verb ever
 /// parsed or interpreted here. `HELLO 2` hands the connection (with the
 /// reader's buffered bytes — a pipelining client may already have sent
-/// frames) to [`protocol::serve_binary`].
-fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
+/// frames) to [`protocol::serve_binary`]. Reads poll every [`POLL_MS`]
+/// so the idle budget (`CONTOUR_IDLE_MS`) and the drain flag apply at
+/// command boundaries; both closes are graceful (BYE first).
+fn handle_conn(stream: TcpStream, state: &ServerState, shutdown: &AtomicBool) -> Result<()> {
     stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(POLL_MS)))?;
+    stream.set_write_timeout(state.write_timeout())?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client hung up
+        match poll_read_line(&mut reader, &mut line, state.idle(), Some(shutdown))? {
+            LineRead::Line => {}
+            LineRead::Eof => return Ok(()), // client hung up
+            LineRead::Idle | LineRead::Drain => {
+                // Deliberate close (idle timeout or server drain), not
+                // a crash: tell the client before hanging up. Best
+                // effort — the peer may already be gone.
+                if writer.write_all(b"BYE\n").and_then(|()| writer.flush()).is_ok() {
+                    state.metrics.bytes_out.add(4);
+                }
+                return Ok(());
+            }
         }
         state.metrics.bytes_in.add(line.len() as u64);
         let trimmed = line.trim().to_string();
@@ -1133,7 +1308,15 @@ fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
         }
         let reply = dispatch::handle_line(state, &trimmed, &mut || {
             let mut extra = String::new();
-            reader.read_line(&mut extra)?;
+            // Mid-command: the idle budget still applies but a drain
+            // never abandons a half-consumed payload (shutdown: None).
+            match poll_read_line(&mut reader, &mut extra, state.idle(), None)? {
+                // EOF mid-payload surfaces as an empty line; the verb's
+                // own parser rejects it and the outer loop then sees
+                // the EOF — same shape as before the poll reads.
+                LineRead::Line | LineRead::Eof => {}
+                LineRead::Idle | LineRead::Drain => bail!("idle timeout mid-payload"),
+            }
             state.metrics.bytes_in.add(extra.len() as u64);
             Ok(extra.trim().to_string())
         });
@@ -1142,6 +1325,11 @@ fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
             writer.flush()?;
             state.metrics.bytes_out.add(6);
             state.metrics.hello_upgrades.inc();
+            // Binary framing blocks in read_exact (a retry after a
+            // partial header read would lose bytes), so the poll
+            // timeout is replaced by the idle budget itself: a timeout
+            // at a frame boundary is an idle close. No budget = block.
+            reader.get_ref().set_read_timeout(state.idle())?;
             return protocol::serve_binary(reader, writer, state);
         }
         if let dispatch::Reply::Watch { ticks, interval_ms } = reply {
@@ -1170,6 +1358,13 @@ fn handle_conn(stream: TcpStream, state: &ServerState) -> Result<()> {
         }
         match dispatch::render_line(&reply) {
             Some(r) => {
+                // Failpoint `conn.write`: any armed action drops the
+                // connection without a reply — the client sees a close
+                // mid-pipeline, exactly the failure a flaky network
+                // produces between request and response.
+                if crate::util::faults::fire("conn.write").is_some() {
+                    return Ok(());
+                }
                 writer.write_all(r.as_bytes())?;
                 writer.write_all(b"\n")?;
                 writer.flush()?;
@@ -1398,7 +1593,7 @@ mod tests {
         assert!(state.cache_len() <= CC_CACHE_CAP, "cache grew to {}", state.cache_len());
         let hot = ("keep".to_string(), "C-2".to_string());
         assert!(
-            state.labels_cache.read().unwrap().contains_key(&hot),
+            state.labels_cache.read().unwrap_or_else(|e| e.into_inner()).contains_key(&hot),
             "recently-touched entry was evicted"
         );
     }

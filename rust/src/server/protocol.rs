@@ -97,6 +97,7 @@ pub const OPCODES: &[(u8, &str)] = &[
     (26, "PROM"),
     (27, "HEALTH"),
     (28, "WATCH"),
+    (29, "FAULTS"),
 ];
 
 pub fn opcode_of(verb: &str) -> Option<u8> {

@@ -112,7 +112,7 @@ pub fn sample_interval(state: &ServerState) -> Duration {
 /// Highest `last_fsync_ns` across live streams — the WAL fsync lag
 /// signal HEALTH checks (0 with no streams or no WAL).
 fn wal_fsync_ns(state: &ServerState) -> u64 {
-    state.streams.read().unwrap().values().map(|s| s.last_fsync_ns()).max().unwrap_or(0)
+    crate::util::rlock(&state.streams).values().map(|s| s.last_fsync_ns()).max().unwrap_or(0)
 }
 
 /// Heavy-verb slots currently held.
@@ -134,6 +134,12 @@ pub fn registry(state: &ServerState) -> Vec<Metric> {
     let mut out = Vec::with_capacity(96);
     for (k, v) in state.metrics.counter_pairs() {
         out.push(m(k, Value::Count(v)));
+    }
+    // Per-failpoint injection counts (the flat `faults_injected` total
+    // is a counter_pair above). Keys only exist while faults have been
+    // configured, like the per-graph cache pairs.
+    for (point, n) in crate::util::faults::injected_counts() {
+        out.push(m(&format!("faults_injected/{point}"), Value::Count(n)));
     }
     out.push(m("uptime_ms", Value::Gauge(state.metrics.uptime_ms())));
     out.push(m("qps", Value::GaugeF(state.metrics.qps())));
@@ -175,19 +181,19 @@ pub fn registry(state: &ServerState) -> Vec<Metric> {
     out.push(m("free_calls", Value::Count(free_calls)));
 
     {
-        let lat = state.verb_lat.read().unwrap();
+        let lat = state.verb_lat.read().unwrap_or_else(|e| e.into_inner());
         for (v, h) in lat.iter() {
             out.push(m(&format!("lat/{v}"), Value::Hist(h.snapshot())));
         }
     }
     {
-        let err = state.verb_err.read().unwrap();
+        let err = state.verb_err.read().unwrap_or_else(|e| e.into_inner());
         for (v, c) in err.iter() {
             out.push(m(&format!("err/{v}"), Value::Count(c.load(Ordering::Relaxed))));
         }
     }
     {
-        let cache = state.cache_stats.read().unwrap();
+        let cache = state.cache_stats.read().unwrap_or_else(|e| e.into_inner());
         for (name, (h, mi)) in cache.iter() {
             out.push(m(
                 &format!("cache/{name}"),
@@ -469,7 +475,7 @@ pub fn sample_values(state: &ServerState) -> Vec<u64> {
         free_calls,
     ]);
     {
-        let lat = state.verb_lat.read().unwrap();
+        let lat = state.verb_lat.read().unwrap_or_else(|e| e.into_inner());
         for name in hist_names() {
             let h = match name {
                 "pool_wait" => pool.queue_wait,
@@ -510,6 +516,12 @@ pub struct HealthSignals {
     pub pool_wait_p95_ns: u64,
     /// Duration of the most recent WAL fsync (ns), max across streams.
     pub fsync_ns: u64,
+    /// Caught verb panics in the window (lifetime total as fallback).
+    pub panics: u64,
+    /// Injected faults in the window (lifetime total as fallback) — a
+    /// storm means someone armed the failpoint registry against this
+    /// server, which an operator should see as degraded.
+    pub faults: u64,
     /// Ring samples backing the windowed values (0 = lifetime
     /// fallback).
     pub samples: usize,
@@ -546,6 +558,8 @@ pub fn health_signals(state: &ServerState) -> HealthSignals {
             heavy_sat,
             pool_wait_p95_ns: quantile_from_counts(&bkt, 0.95),
             fsync_ns,
+            panics: d("panics"),
+            faults: d("faults_injected"),
             samples: state.ring.len(),
             window_ms,
         }
@@ -557,6 +571,8 @@ pub fn health_signals(state: &ServerState) -> HealthSignals {
             heavy_sat,
             pool_wait_p95_ns: crate::par::pool::stats().queue_wait.p95,
             fsync_ns,
+            panics: state.metrics.panics.get(),
+            faults: crate::util::faults::injected_total(),
             samples: 0,
             window_ms,
         }
@@ -572,18 +588,27 @@ pub fn health_signals(state: &ServerState) -> HealthSignals {
 /// * `CONTOUR_HEALTH_BUSY_OVERLOADED` — busy fraction, default 0.5
 /// * `CONTOUR_HEALTH_POOL_WAIT_MS`    — queue-wait p95, default 100
 /// * `CONTOUR_HEALTH_FSYNC_MS`        — WAL fsync lag, default 1000
+/// * `CONTOUR_HEALTH_PANICS`          — caught verb panics in the
+///   window, default 1 (any recent panic degrades)
+/// * `CONTOUR_HEALTH_FAULTS`          — injected faults in the window,
+///   default 100 (a fault storm means someone armed the failpoint
+///   registry against this server)
 pub fn render_health(state: &ServerState) -> String {
     let s = health_signals(state);
     let busy_deg = env_f64("CONTOUR_HEALTH_BUSY_DEGRADED", 0.05);
     let busy_over = env_f64("CONTOUR_HEALTH_BUSY_OVERLOADED", 0.5);
     let wait_ns = env_f64("CONTOUR_HEALTH_POOL_WAIT_MS", 100.0) * 1e6;
     let fsync_ns = env_f64("CONTOUR_HEALTH_FSYNC_MS", 1000.0) * 1e6;
+    let panics_max = env_u64("CONTOUR_HEALTH_PANICS", 1);
+    let faults_max = env_u64("CONTOUR_HEALTH_FAULTS", 100);
     let status = if s.busy_frac >= busy_over {
         "overloaded"
     } else if s.busy_frac >= busy_deg
         || s.heavy_sat >= 1.0
         || s.pool_wait_p95_ns as f64 > wait_ns
         || s.fsync_ns as f64 > fsync_ns
+        || s.panics >= panics_max
+        || s.faults >= faults_max
     {
         "degraded"
     } else {
@@ -591,8 +616,10 @@ pub fn render_health(state: &ServerState) -> String {
     };
     format!(
         "{status} busy_frac={:.4} heavy_sat={:.4} pool_wait_p95_ns={} wal_fsync_ns={} \
-         window_ms={} samples={} busy_degraded={busy_deg} busy_overloaded={busy_over}",
-        s.busy_frac, s.heavy_sat, s.pool_wait_p95_ns, s.fsync_ns, s.window_ms, s.samples
+         panics={} faults_injected={} window_ms={} samples={} busy_degraded={busy_deg} \
+         busy_overloaded={busy_over}",
+        s.busy_frac, s.heavy_sat, s.pool_wait_p95_ns, s.fsync_ns, s.panics, s.faults, s.window_ms,
+        s.samples
     )
 }
 

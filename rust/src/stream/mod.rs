@@ -54,10 +54,42 @@ use crate::cc::incremental::IncrementalCc;
 use crate::cc::{Algorithm, Labels};
 use crate::graph::EdgeList;
 use crate::par;
+use crate::util::{mlock, rlock, wlock};
 use crate::VId;
 
 pub use snapshot::Snapshot;
-pub use wal::{Wal, WalRecord};
+pub use wal::{RepairStats, Wal, WalRecord};
+
+/// What [`StreamingCc::recover`] (and recovery-on-open) found: surfaced
+/// on `SLOAD` replies and logged on open so operators can see how much
+/// of the log was replayed and whether a torn tail was dropped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryInfo {
+    /// Epoch of the snapshot recovery seeded from, if any.
+    pub snapshot_epoch: Option<u64>,
+    /// Complete frames found in the WAL (edges batches + seal markers).
+    pub wal_frames: usize,
+    /// Frames replayed past the snapshot's cut (the WAL suffix).
+    pub frames_replayed: usize,
+    /// Individual edges re-applied from the replayed frames.
+    pub edges_replayed: usize,
+    /// Bytes of torn WAL tail truncated away (crash mid-append).
+    pub truncated_bytes: u64,
+}
+
+impl RecoveryInfo {
+    /// One-line summary for replies and logs.
+    pub fn summary(&self) -> String {
+        let snap = match self.snapshot_epoch {
+            Some(e) => format!("{e}"),
+            None => "-".to_string(),
+        };
+        format!(
+            "snapshot={snap} frames={} replayed={} edges={} truncated={}B",
+            self.wal_frames, self.frames_replayed, self.edges_replayed, self.truncated_bytes
+        )
+    }
+}
 
 /// Epoch snapshots retained for time-travel queries before the oldest
 /// is evicted. Each snapshot holds a full O(n) label array, so the
@@ -90,6 +122,9 @@ pub struct StreamingCc {
     /// (0 until the first durable seal). A health signal: a climbing
     /// fsync lag means the disk is falling behind ingestion.
     last_fsync_ns: AtomicU64,
+    /// Set when this service was built by recovery (SLOAD or
+    /// recovery-on-open); `None` for a fresh stream.
+    recovery: Option<RecoveryInfo>,
 }
 
 impl StreamingCc {
@@ -108,6 +143,7 @@ impl StreamingCc {
             gate: RwLock::new(()),
             max_history: DEFAULT_MAX_HISTORY,
             last_fsync_ns: AtomicU64::new(0),
+            recovery: None,
         }
     }
 
@@ -150,13 +186,15 @@ impl StreamingCc {
         let snap = snapshot.map(Snapshot::load).transpose()?;
         let mut records = Vec::new();
         let mut wal_n = None;
+        let mut repair = RepairStats::default();
         if let Some(p) = wal {
             // replay_and_repair truncates a torn tail frame (crash
             // mid-append) so the appender re-attached below starts at a
             // clean frame boundary.
-            let (n, recs) = Wal::replay_and_repair(p)?;
+            let (n, recs, stats) = Wal::replay_and_repair(p)?;
             wal_n = Some(n);
             records = recs;
+            repair = stats;
         }
         let (inc, base_epoch, base_edges) = match &snap {
             Some(s) => {
@@ -196,6 +234,14 @@ impl StreamingCc {
                 WalRecord::EpochSeal(e) => last_epoch = last_epoch.max(*e),
             }
         }
+        let info = RecoveryInfo {
+            snapshot_epoch: snap.as_ref().map(|s| s.epoch),
+            wal_frames: repair.frames,
+            frames_replayed: records.len() - start,
+            edges_replayed: replayed,
+            truncated_bytes: repair.truncated_bytes,
+        };
+        crate::info!("stream recovery: {}", info.summary());
         let s = Self {
             inc,
             threads,
@@ -210,9 +256,15 @@ impl StreamingCc {
             gate: RwLock::new(()),
             max_history: DEFAULT_MAX_HISTORY,
             last_fsync_ns: AtomicU64::new(0),
+            recovery: Some(info),
         };
         s.seal_epoch()?;
         Ok(s)
+    }
+
+    /// Recovery stats, when this service was rebuilt from durable state.
+    pub fn recovery(&self) -> Option<RecoveryInfo> {
+        self.recovery
     }
 
     /// Cap the number of retained epoch snapshots.
@@ -262,9 +314,9 @@ impl StreamingCc {
         // Hold the ingestion gate (read side, so batches still run in
         // parallel with each other) across log + apply + acknowledge:
         // a seal either sees this whole batch or none of it.
-        let _ingest = self.gate.read().unwrap();
+        let _ingest = rlock(&self.gate);
         if let Some(w) = &self.wal {
-            w.lock().unwrap().append_edges(edges)?;
+            mlock(w).append_edges(edges)?;
         }
         let inc = &self.inc;
         par::par_for(edges.len(), self.threads, par::AUTO_GRAIN, |range| {
@@ -288,19 +340,19 @@ impl StreamingCc {
     /// union-find forest, publish the resulting snapshot, and append a
     /// seal marker to the WAL (fsynced). Returns the new snapshot.
     pub fn seal_epoch(&self) -> Result<Arc<Snapshot>> {
-        let _guard = self.seal.lock().unwrap();
+        let _guard = mlock(&self.seal);
         let epoch = self.last_epoch.load(Ordering::Relaxed) + 1;
         // Consistent cut: with the gate held exclusively, no batch is
         // mid-application, so the forest is exactly the acknowledged
         // state, and the WAL seal marker written inside the same
         // critical section cleanly partitions the log at this epoch.
         let (edges, forest) = {
-            let _cut = self.gate.write().unwrap();
+            let _cut = wlock(&self.gate);
             let edges = self.edges_ingested.load(Ordering::Relaxed);
             let forest = self.inc.forest_edges(self.threads);
             if let Some(w) = &self.wal {
                 // Buffered marker append only — it fixes the log order.
-                w.lock().unwrap().seal_epoch(epoch)?;
+                mlock(w).seal_epoch(epoch)?;
             }
             (edges, forest)
         };
@@ -308,7 +360,7 @@ impl StreamingCc {
         // disk syncs (frames appended meanwhile simply ride along).
         if let Some(w) = &self.wal {
             let t = std::time::Instant::now();
-            w.lock().unwrap().sync()?;
+            mlock(w).sync()?;
             let ns = t.elapsed().as_nanos().min(u64::MAX as u128) as u64;
             self.last_fsync_ns.store(ns, Ordering::Relaxed);
         }
@@ -320,7 +372,7 @@ impl StreamingCc {
         let labels = Contour::c2().with_threads(self.threads).run(&g);
         let snap = Arc::new(Snapshot::from_labels(epoch, edges, labels));
         {
-            let mut h = self.history.write().unwrap();
+            let mut h = wlock(&self.history);
             h.push(Arc::clone(&snap));
             if h.len() > self.max_history {
                 h.remove(0);
@@ -333,13 +385,13 @@ impl StreamingCc {
     /// The current epoch's snapshot (wait-free for practical purposes:
     /// the read-lock's writers hold it only for an O(1) push).
     pub fn current(&self) -> Arc<Snapshot> {
-        let h = self.history.read().unwrap();
+        let h = rlock(&self.history);
         Arc::clone(h.last().expect("history is never empty"))
     }
 
     /// The snapshot sealed as `epoch`, if still retained.
     pub fn at_epoch(&self, epoch: u64) -> Option<Arc<Snapshot>> {
-        let h = self.history.read().unwrap();
+        let h = rlock(&self.history);
         h.binary_search_by_key(&epoch, |s| s.epoch).ok().map(|i| Arc::clone(&h[i]))
     }
 
@@ -349,7 +401,7 @@ impl StreamingCc {
         match epoch {
             None => Ok(self.current()),
             Some(e) => self.at_epoch(e).ok_or_else(|| {
-                let h = self.history.read().unwrap();
+                let h = rlock(&self.history);
                 let span = match (h.first(), h.last()) {
                     (Some(a), Some(b)) => format!("{}..={}", a.epoch, b.epoch),
                     _ => "∅".to_string(),

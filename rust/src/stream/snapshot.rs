@@ -7,23 +7,33 @@
 //! answer `SAME_COMP` / `COMP_SIZE` / `NUM_COMPS` without touching the
 //! ingestion path.
 //!
-//! Disk layout (little-endian):
+//! Disk layout (little-endian), two versions:
 //!
 //! ```text
-//!   "CONTRSS1"  epoch: u64  edges_ingested: u64  n: u64  labels: u32 × n
+//!   v1:  "CONTRSS1"  epoch: u64  edges_ingested: u64  n: u64  labels: u32 × n
+//!   v2:  "CONTRSS2"  ── same fields ──                        crc: u32
+//!        (CRC-32/IEEE over every byte before the trailer)
 //! ```
+//!
+//! New snapshots are written as v2 and crash-safely: the bytes go to a
+//! `<path>.tmp` sibling which is fsynced, atomically renamed over `path`,
+//! and the parent directory fsynced — a crash mid-save can never leave a
+//! half-written snapshot under the real name, and the rename itself is
+//! durable. v1 files (no checksum) remain loadable.
 
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{BufWriter, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::cc::Labels;
+use crate::util::{crc, faults};
 use crate::VId;
 
-const SNAP_MAGIC: &[u8; 8] = b"CONTRSS1";
+const SNAP_MAGIC_V1: &[u8; 8] = b"CONTRSS1";
+const SNAP_MAGIC_V2: &[u8; 8] = b"CONTRSS2";
 
 /// One epoch's immutable connectivity view.
 #[derive(Clone, Debug)]
@@ -76,7 +86,12 @@ impl Snapshot {
         Ok(self.sizes[&l] as usize)
     }
 
-    /// Write the snapshot to `path` (fsynced).
+    /// Write the snapshot to `path` crash-safely: checksummed v2 bytes to
+    /// `<path>.tmp` (fsynced), then atomic rename over `path`, then fsync
+    /// of the parent directory so the new name survives a crash.
+    ///
+    /// Failpoint `snap.save`: `err` fails after the tmp write but before
+    /// the rename — the previous snapshot under `path` is untouched.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -84,30 +99,57 @@ impl Snapshot {
                     .with_context(|| format!("create snapshot dir {}", dir.display()))?;
             }
         }
-        let f = File::create(path)
-            .with_context(|| format!("create snapshot {}", path.display()))?;
-        let mut w = BufWriter::new(f);
-        w.write_all(SNAP_MAGIC)?;
-        w.write_all(&self.epoch.to_le_bytes())?;
-        w.write_all(&(self.edges_ingested as u64).to_le_bytes())?;
-        w.write_all(&(self.labels.len() as u64).to_le_bytes())?;
+        let mut data = Vec::with_capacity(32 + 4 * self.labels.len() + 4);
+        data.extend_from_slice(SNAP_MAGIC_V2);
+        data.extend_from_slice(&self.epoch.to_le_bytes());
+        data.extend_from_slice(&(self.edges_ingested as u64).to_le_bytes());
+        data.extend_from_slice(&(self.labels.len() as u64).to_le_bytes());
         for &l in &self.labels {
-            w.write_all(&l.to_le_bytes())?;
+            data.extend_from_slice(&l.to_le_bytes());
         }
-        w.flush()?;
-        w.get_ref().sync_all()?;
+        let crc = crc::crc32(&data);
+        data.extend_from_slice(&crc.to_le_bytes());
+
+        let tmp = tmp_path(path);
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("create snapshot tmp {}", tmp.display()))?;
+            f.write_all(&data)?;
+            f.sync_all()?;
+        }
+        if faults::hit("snap.save")? {
+            return Ok(()); // drop: simulate a crash between write and rename
+        }
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("rename snapshot {} -> {}", tmp.display(), path.display())
+        })?;
+        sync_parent_dir(path)?;
         Ok(())
     }
 
-    /// Load and validate a snapshot written by [`Snapshot::save`].
+    /// Load and validate a snapshot written by [`Snapshot::save`] (either
+    /// on-disk version). A v2 checksum mismatch fails loudly.
     pub fn load(path: &Path) -> Result<Snapshot> {
-        let data =
+        let mut data =
             std::fs::read(path).with_context(|| format!("read snapshot {}", path.display()))?;
-        ensure!(
-            data.len() >= 32 && &data[..8] == SNAP_MAGIC,
-            "{}: not a contour snapshot",
-            path.display()
-        );
+        ensure!(data.len() >= 32, "{}: not a contour snapshot", path.display());
+        let v2 = match &data[..8] {
+            m if m == SNAP_MAGIC_V2 => true,
+            m if m == SNAP_MAGIC_V1 => false,
+            _ => anyhow::bail!("{}: not a contour snapshot", path.display()),
+        };
+        if v2 {
+            ensure!(data.len() >= 36, "{}: truncated snapshot", path.display());
+            let at = data.len() - 4;
+            let stored = u32::from_le_bytes(data[at..].try_into().unwrap());
+            let actual = crc::crc32(&data[..at]);
+            ensure!(
+                stored == actual,
+                "{}: snapshot checksum mismatch (stored {stored:#010x}, computed {actual:#010x})",
+                path.display()
+            );
+            data.truncate(at);
+        }
         let epoch = u64::from_le_bytes(data[8..16].try_into().unwrap());
         let edges = u64::from_le_bytes(data[16..24].try_into().unwrap()) as usize;
         let n = u64::from_le_bytes(data[24..32].try_into().unwrap()) as usize;
@@ -131,6 +173,24 @@ impl Snapshot {
     }
 }
 
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// fsync the directory containing `path` so a just-renamed entry is
+/// durable (directory metadata is not covered by the file's own fsync).
+fn sync_parent_dir(path: &Path) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    File::open(dir)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsync snapshot dir {}", dir.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +199,19 @@ mod tests {
         let dir = std::env::temp_dir().join("contour_snapshot_tests");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    /// Hand-build a v1 snapshot (no checksum trailer) to pin compat.
+    fn write_v1(path: &Path, epoch: u64, edges: u64, labels: &[u32]) {
+        let mut data = Vec::new();
+        data.extend_from_slice(SNAP_MAGIC_V1);
+        data.extend_from_slice(&epoch.to_le_bytes());
+        data.extend_from_slice(&edges.to_le_bytes());
+        data.extend_from_slice(&(labels.len() as u64).to_le_bytes());
+        for &l in labels {
+            data.extend_from_slice(&l.to_le_bytes());
+        }
+        std::fs::write(path, data).unwrap();
     }
 
     #[test]
@@ -167,6 +240,44 @@ mod tests {
         assert_eq!(back.labels, s.labels);
         assert_eq!(back.num_components, 3);
         assert_eq!(back.comp_size(4).unwrap(), 3);
+        // The tmp sibling is gone after a successful save.
+        assert!(!tmp_path(&p).exists());
+    }
+
+    #[test]
+    fn v1_snapshots_still_load() {
+        let p = temp("compat_v1.snap");
+        write_v1(&p, 5, 17, &[0, 0, 2, 2]);
+        let s = Snapshot::load(&p).unwrap();
+        assert_eq!(s.epoch, 5);
+        assert_eq!(s.edges_ingested, 17);
+        assert_eq!(s.labels, vec![0, 0, 2, 2]);
+    }
+
+    #[test]
+    fn bit_flip_is_detected_by_checksum() {
+        let p = temp("bit_flip.snap");
+        let s = Snapshot::from_labels(2, 8, vec![0, 0, 0, 0]);
+        s.save(&p).unwrap();
+        let mut data = std::fs::read(&p).unwrap();
+        data[33] ^= 0x01; // corrupt a label byte, keep length intact
+        std::fs::write(&p, &data).unwrap();
+        let err = Snapshot::load(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn failed_save_leaves_previous_snapshot_intact() {
+        let _g = crate::util::faults::test_lock();
+        let p = temp("crash_mid_save.snap");
+        Snapshot::from_labels(1, 3, vec![0, 0]).save(&p).unwrap();
+        crate::util::faults::configure("snap.save=err@1").unwrap();
+        let err = Snapshot::from_labels(2, 6, vec![0, 0]).save(&p).unwrap_err().to_string();
+        crate::util::faults::clear();
+        assert!(err.contains("injected fault at snap.save"), "{err}");
+        // The old snapshot under the real name is untouched and valid.
+        let back = Snapshot::load(&p).unwrap();
+        assert_eq!(back.epoch, 1);
     }
 
     #[test]
@@ -175,18 +286,15 @@ mod tests {
         std::fs::write(&p, b"not a snapshot at all........").unwrap();
         assert!(Snapshot::load(&p).is_err());
 
-        // Valid header, non-canonical labels (vertex 1 labelled above itself).
+        // Valid v1 header (no checksum to trip first), non-canonical
+        // labels: vertex 1 labelled above itself.
         let q = temp("non_canonical.snap");
-        let s = Snapshot::from_labels(1, 1, vec![0, 0, 2]);
-        s.save(&q).unwrap();
-        let mut data = std::fs::read(&q).unwrap();
-        data[32 + 4..32 + 8].copy_from_slice(&2u32.to_le_bytes()); // labels[1] = 2
-        std::fs::write(&q, &data).unwrap();
+        write_v1(&q, 1, 1, &[0, 2, 2]);
         assert!(Snapshot::load(&q).is_err());
 
         // Truncated payload.
         let r = temp("truncated.snap");
-        s.save(&r).unwrap();
+        Snapshot::from_labels(1, 1, vec![0, 0, 2]).save(&r).unwrap();
         let data = std::fs::read(&r).unwrap();
         std::fs::write(&r, &data[..data.len() - 2]).unwrap();
         assert!(Snapshot::load(&r).is_err());

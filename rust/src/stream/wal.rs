@@ -1,19 +1,25 @@
 //! Write-ahead edge log for the streaming connectivity subsystem.
 //!
-//! Append-only binary file. Layout:
+//! Append-only binary file, two on-disk versions:
 //!
 //! ```text
-//!   header:  "CONTRWAL"  n: u64 LE          (vertex universe size)
-//!   frames:  0x01  count: u32 LE  count × (u: u32 LE, v: u32 LE)
-//!            0x02  epoch: u64 LE            (epoch seal marker)
+//!   v1 header:  "CONTRWAL"  n: u64 LE        (vertex universe size)
+//!   v1 frames:  0x01  count: u32 LE  count × (u: u32 LE, v: u32 LE)
+//!               0x02  epoch: u64 LE          (epoch seal marker)
+//!
+//!   v2 header:  "CONTRWL2"  n: u64 LE
+//!   v2 frames:  as v1, each followed by crc: u32 LE
+//!               (CRC-32/IEEE over the frame bytes: tag + payload)
 //! ```
 //!
-//! Edges are logged *before* they are applied to the union-find, so a
-//! crash can lose at most work that was never acknowledged. Replay is
-//! tolerant of a torn final frame (the crash-mid-append case): parsing
-//! stops at the first incomplete frame and everything before it is
-//! recovered. A frame with an unknown tag or an out-of-range vertex is
-//! corruption, not truncation, and fails loudly.
+//! New logs are written as v2; v1 logs remain readable and appendable in
+//! their own format. Edges are logged *before* they are applied to the
+//! union-find, so a crash can lose at most work that was never
+//! acknowledged. Replay is tolerant of a torn final frame (the
+//! crash-mid-append case): parsing stops at the first incomplete frame
+//! and everything before it is recovered. A frame with an unknown tag, an
+//! out-of-range vertex, or a v2 checksum mismatch is corruption, not
+//! truncation, and fails loudly with the byte offset of the bad frame.
 
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
@@ -21,9 +27,11 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::util::{crc, faults};
 use crate::VId;
 
-const WAL_MAGIC: &[u8; 8] = b"CONTRWAL";
+const WAL_MAGIC_V1: &[u8; 8] = b"CONTRWAL";
+const WAL_MAGIC_V2: &[u8; 8] = b"CONTRWL2";
 const FRAME_EDGES: u8 = 0x01;
 const FRAME_SEAL: u8 = 0x02;
 
@@ -36,6 +44,15 @@ pub enum WalRecord {
     EpochSeal(u64),
 }
 
+/// What [`Wal::replay_and_repair`] found and fixed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepairStats {
+    /// Complete frames recovered from the log.
+    pub frames: usize,
+    /// Bytes of torn tail truncated away (0 for a clean log).
+    pub truncated_bytes: u64,
+}
+
 /// An open WAL, positioned for appending.
 ///
 /// Every append is flushed to the OS (one frame per `write` syscall
@@ -43,11 +60,13 @@ pub enum WalRecord {
 /// natural place callers do that.
 pub struct Wal {
     w: BufWriter<File>,
+    /// Frame format of the underlying file; appends must match it.
+    v2: bool,
 }
 
 impl Wal {
     /// Create a fresh WAL at `path` (truncating any existing file) for a
-    /// universe of `n` vertices.
+    /// universe of `n` vertices. New logs use the checksummed v2 format.
     pub fn create(path: &Path, n: usize) -> Result<Self> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -57,64 +76,99 @@ impl Wal {
         }
         let f = File::create(path).with_context(|| format!("create WAL {}", path.display()))?;
         let mut w = BufWriter::new(f);
-        w.write_all(WAL_MAGIC)?;
+        w.write_all(WAL_MAGIC_V2)?;
         w.write_all(&(n as u64).to_le_bytes())?;
         w.flush()?;
-        Ok(Self { w })
+        Ok(Self { w, v2: true })
     }
 
-    /// Read just the header of an existing WAL: the vertex universe
-    /// size. Cheap (16 bytes) — lets callers validate before replaying
-    /// or mutating the log.
-    pub fn universe(path: &Path) -> Result<usize> {
+    /// Read just the header of an existing WAL: the vertex universe size
+    /// and whether the file is checksummed v2. Cheap (16 bytes) — lets
+    /// callers validate before replaying or mutating the log.
+    fn header(path: &Path) -> Result<(usize, bool)> {
         let mut head = [0u8; 16];
         File::open(path)
             .and_then(|mut f| f.read_exact(&mut head))
             .with_context(|| format!("read WAL header {}", path.display()))?;
-        ensure!(&head[..8] == WAL_MAGIC, "{}: not a contour WAL", path.display());
-        Ok(u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize)
+        let v2 = match &head[..8] {
+            m if m == WAL_MAGIC_V2 => true,
+            m if m == WAL_MAGIC_V1 => false,
+            _ => bail!("{}: not a contour WAL", path.display()),
+        };
+        Ok((u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize, v2))
+    }
+
+    /// The vertex universe size recorded in an existing WAL's header.
+    pub fn universe(path: &Path) -> Result<usize> {
+        Ok(Self::header(path)?.0)
     }
 
     /// Open an existing WAL for appending; returns the log and the
-    /// vertex universe size recorded in its header.
+    /// vertex universe size recorded in its header. Appends continue in
+    /// the file's own frame format (v1 stays v1).
     pub fn append_to(path: &Path) -> Result<(Self, usize)> {
-        let n = Self::universe(path)?;
+        let (n, v2) = Self::header(path)?;
         let f = OpenOptions::new()
             .append(true)
             .open(path)
             .with_context(|| format!("open WAL {} for append", path.display()))?;
-        Ok((Self { w: BufWriter::new(f) }, n))
+        Ok((Self { w: BufWriter::new(f), v2 }, n))
     }
 
     /// Append one edge batch (no-op for an empty batch).
+    ///
+    /// Failpoint `wal.append`: `err` fails the append before any bytes
+    /// are written (the batch is never acknowledged, so recovery stays
+    /// consistent); `drop` silently loses the frame (simulates a lost
+    /// write that the next replay must tolerate as a missing suffix).
     pub fn append_edges(&mut self, edges: &[(VId, VId)]) -> Result<()> {
         if edges.is_empty() {
             return Ok(());
         }
-        let mut buf = Vec::with_capacity(5 + 8 * edges.len());
+        if faults::hit("wal.append")? {
+            return Ok(());
+        }
+        let mut buf = Vec::with_capacity(5 + 8 * edges.len() + 4);
         buf.push(FRAME_EDGES);
         buf.extend_from_slice(&(edges.len() as u32).to_le_bytes());
         for &(u, v) in edges {
             buf.extend_from_slice(&u.to_le_bytes());
             buf.extend_from_slice(&v.to_le_bytes());
         }
+        if self.v2 {
+            let crc = crc::crc32(&buf);
+            buf.extend_from_slice(&crc.to_le_bytes());
+        }
         self.w.write_all(&buf)?;
         self.w.flush()?;
         Ok(())
     }
 
-    /// Append an epoch seal marker.
+    /// Append an epoch seal marker (failpoint `wal.append` applies).
     pub fn seal_epoch(&mut self, epoch: u64) -> Result<()> {
-        let mut buf = [0u8; 9];
+        if faults::hit("wal.append")? {
+            return Ok(());
+        }
+        let mut buf = [0u8; 13];
         buf[0] = FRAME_SEAL;
-        buf[1..].copy_from_slice(&epoch.to_le_bytes());
-        self.w.write_all(&buf)?;
+        buf[1..9].copy_from_slice(&epoch.to_le_bytes());
+        let len = if self.v2 {
+            let crc = crc::crc32(&buf[..9]);
+            buf[9..].copy_from_slice(&crc.to_le_bytes());
+            13
+        } else {
+            9
+        };
+        self.w.write_all(&buf[..len])?;
         self.w.flush()?;
         Ok(())
     }
 
-    /// Flush and fsync.
+    /// Flush and fsync (failpoint `wal.fsync`: `err` fails the fsync).
     pub fn sync(&mut self) -> Result<()> {
+        if faults::hit("wal.fsync")? {
+            return Ok(());
+        }
         self.w.flush()?;
         self.w.get_ref().sync_all()?;
         Ok(())
@@ -131,10 +185,12 @@ impl Wal {
     /// (crash mid-append), truncate it away so subsequent appends start
     /// at a clean frame boundary — appending after torn bytes would make
     /// the next replay misparse or silently drop everything after them.
-    /// Call before re-attaching an appender (recovery does).
-    pub fn replay_and_repair(path: &Path) -> Result<(usize, Vec<WalRecord>)> {
+    /// Call before re-attaching an appender (recovery does). Returns the
+    /// records plus [`RepairStats`] for recovery reporting.
+    pub fn replay_and_repair(path: &Path) -> Result<(usize, Vec<WalRecord>, RepairStats)> {
         let (n, records, valid_end) = Self::scan(path)?;
         let len = std::fs::metadata(path)?.len();
+        let mut stats = RepairStats { frames: records.len(), truncated_bytes: 0 };
         if valid_end < len {
             let f = OpenOptions::new()
                 .write(true)
@@ -142,8 +198,9 @@ impl Wal {
                 .with_context(|| format!("open WAL {} for repair", path.display()))?;
             f.set_len(valid_end)?;
             f.sync_all()?;
+            stats.truncated_bytes = len - valid_end;
         }
-        Ok((n, records))
+        Ok((n, records, stats))
     }
 
     /// Parse the log, returning (universe, records, end offset of the
@@ -151,30 +208,34 @@ impl Wal {
     fn scan(path: &Path) -> Result<(usize, Vec<WalRecord>, u64)> {
         let data =
             std::fs::read(path).with_context(|| format!("read WAL {}", path.display()))?;
-        ensure!(
-            data.len() >= 16 && &data[..8] == WAL_MAGIC,
-            "{}: not a contour WAL",
-            path.display()
-        );
+        ensure!(data.len() >= 16, "{}: not a contour WAL", path.display());
+        let v2 = match &data[..8] {
+            m if m == WAL_MAGIC_V2 => true,
+            m if m == WAL_MAGIC_V1 => false,
+            _ => bail!("{}: not a contour WAL", path.display()),
+        };
         let n = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        let crc_len = if v2 { 4usize } else { 0 };
         let mut records = Vec::new();
         let mut off = 16usize;
         while off < data.len() {
             match data[off] {
                 FRAME_EDGES => {
                     let Some(count) = read_u32(&data, off + 1) else { break };
-                    let end = off + 5 + 8 * count as usize;
+                    let body_end = off + 5 + 8 * count as usize;
+                    let end = body_end + crc_len;
                     if end > data.len() {
                         break; // torn frame: crash mid-append
                     }
+                    check_crc(&data, off, body_end, v2, path)?;
                     let mut edges = Vec::with_capacity(count as usize);
                     let mut p = off + 5;
-                    while p < end {
+                    while p < body_end {
                         let u = read_u32(&data, p).unwrap();
                         let v = read_u32(&data, p + 4).unwrap();
                         ensure!(
                             (u as usize) < n && (v as usize) < n,
-                            "{}: edge ({u}, {v}) out of range (n = {n})",
+                            "{}: edge ({u}, {v}) out of range (n = {n}) at byte {off}",
                             path.display()
                         );
                         edges.push((u, v));
@@ -184,12 +245,15 @@ impl Wal {
                     off = end;
                 }
                 FRAME_SEAL => {
-                    if off + 9 > data.len() {
+                    let body_end = off + 9;
+                    let end = body_end + crc_len;
+                    if end > data.len() {
                         break; // torn seal
                     }
+                    check_crc(&data, off, body_end, v2, path)?;
                     let epoch = u64::from_le_bytes(data[off + 1..off + 9].try_into().unwrap());
                     records.push(WalRecord::EpochSeal(epoch));
-                    off += 9;
+                    off = end;
                 }
                 other => {
                     bail!("{}: corrupt WAL frame tag {other:#04x} at byte {off}", path.display())
@@ -198,6 +262,23 @@ impl Wal {
         }
         Ok((n, records, off as u64))
     }
+}
+
+/// Verify a v2 frame's trailing CRC (no-op for v1). The frame spans
+/// `data[off..body_end]` with the stored CRC directly after it; callers
+/// have already bounds-checked `body_end + 4`.
+fn check_crc(data: &[u8], off: usize, body_end: usize, v2: bool, path: &Path) -> Result<()> {
+    if !v2 {
+        return Ok(());
+    }
+    let stored = read_u32(data, body_end).unwrap();
+    let actual = crc::crc32(&data[off..body_end]);
+    ensure!(
+        stored == actual,
+        "{}: WAL checksum mismatch at byte {off} (stored {stored:#010x}, computed {actual:#010x})",
+        path.display()
+    );
+    Ok(())
 }
 
 fn read_u32(data: &[u8], off: usize) -> Option<u32> {
@@ -212,6 +293,30 @@ mod tests {
         let dir = std::env::temp_dir().join("contour_wal_tests");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    /// Hand-build a v1 log (magic, no per-frame CRCs) to pin compat.
+    fn write_v1(path: &Path, n: u64, frames: &[WalRecord]) {
+        let mut data = Vec::new();
+        data.extend_from_slice(WAL_MAGIC_V1);
+        data.extend_from_slice(&n.to_le_bytes());
+        for rec in frames {
+            match rec {
+                WalRecord::Edges(edges) => {
+                    data.push(FRAME_EDGES);
+                    data.extend_from_slice(&(edges.len() as u32).to_le_bytes());
+                    for &(u, v) in edges {
+                        data.extend_from_slice(&u.to_le_bytes());
+                        data.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                WalRecord::EpochSeal(e) => {
+                    data.push(FRAME_SEAL);
+                    data.extend_from_slice(&e.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path, data).unwrap();
     }
 
     #[test]
@@ -255,6 +360,28 @@ mod tests {
     }
 
     #[test]
+    fn v1_logs_replay_and_append_in_their_own_format() {
+        let p = temp("compat_v1.wal");
+        let frames =
+            vec![WalRecord::Edges(vec![(0, 1), (2, 3)]), WalRecord::EpochSeal(1)];
+        write_v1(&p, 50, &frames);
+        let (n, recs) = Wal::replay(&p).unwrap();
+        assert_eq!(n, 50);
+        assert_eq!(recs, frames);
+        // Appending to a v1 log keeps writing v1 frames (no CRC), and the
+        // whole file still replays.
+        let (mut w, n) = Wal::append_to(&p).unwrap();
+        assert_eq!(n, 50);
+        w.append_edges(&[(4, 5)]).unwrap();
+        w.seal_epoch(2).unwrap();
+        drop(w);
+        let (_, recs) = Wal::replay(&p).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(recs[2], WalRecord::Edges(vec![(4, 5)]));
+        assert_eq!(recs[3], WalRecord::EpochSeal(2));
+    }
+
+    #[test]
     fn torn_tail_is_tolerated_corruption_is_not() {
         let p = temp("torn.wal");
         {
@@ -281,14 +408,45 @@ mod tests {
 
         // So is an edge outside the declared universe.
         let q = temp("bad_vertex.wal");
-        let mut w = Wal::create(&q, 4).unwrap();
-        w.append_edges(&[(0, 3)]).unwrap();
-        drop(w);
-        let mut data = std::fs::read(&q).unwrap();
-        let at = data.len() - 4;
-        data[at..].copy_from_slice(&9u32.to_le_bytes());
-        std::fs::write(&q, &data).unwrap();
+        write_v1(&q, 4, &[WalRecord::Edges(vec![(0, 9)])]);
         assert!(Wal::replay(&q).is_err());
+    }
+
+    #[test]
+    fn bit_flip_fails_with_byte_offset() {
+        let p = temp("bit_flip.wal");
+        {
+            let mut w = Wal::create(&p, 10).unwrap();
+            w.append_edges(&[(0, 1)]).unwrap(); // frame at byte 16
+            w.append_edges(&[(2, 3)]).unwrap(); // frame at byte 33
+        }
+        let mut data = std::fs::read(&p).unwrap();
+        data[40] ^= 0x04; // flip a vertex-id bit inside the second frame
+        std::fs::write(&p, &data).unwrap();
+        let err = Wal::replay(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch at byte 33"), "{err}");
+        // v1 logs have no CRC: the same flip there goes undetected unless
+        // it breaks framing — that asymmetry is exactly why v2 exists.
+    }
+
+    #[test]
+    fn torn_crc_is_truncation_not_corruption() {
+        let p = temp("torn_crc.wal");
+        {
+            let mut w = Wal::create(&p, 10).unwrap();
+            w.append_edges(&[(0, 1)]).unwrap();
+            w.append_edges(&[(2, 3)]).unwrap();
+        }
+        // Cut inside the second frame's trailing CRC: the frame body is
+        // complete but unverifiable — treated as torn, not corrupt.
+        let len = std::fs::metadata(&p).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(len - 2).unwrap();
+        drop(f);
+        let (_, recs, stats) = Wal::replay_and_repair(&p).unwrap();
+        assert_eq!(recs, vec![WalRecord::Edges(vec![(0, 1)])]);
+        assert_eq!(stats.frames, 1);
+        assert_eq!(stats.truncated_bytes, 11); // 1 + 4 + 8 + 4 - 2 torn bytes
     }
 
     #[test]
@@ -304,8 +462,10 @@ mod tests {
         f.set_len(len - 3).unwrap(); // tear the last frame
         drop(f);
         // Repair drops the torn frame and truncates the file...
-        let (_, recs) = Wal::replay_and_repair(&p).unwrap();
+        let (_, recs, stats) = Wal::replay_and_repair(&p).unwrap();
         assert_eq!(recs, vec![WalRecord::Edges(vec![(0, 1)])]);
+        assert_eq!(stats.frames, 1);
+        assert!(stats.truncated_bytes > 0);
         // ...so appending resumes at a clean boundary: without the
         // truncate, these bytes would land after the torn frame and the
         // next replay would misparse or drop them.
@@ -321,6 +481,25 @@ mod tests {
                 WalRecord::Edges(vec![(6, 7)]),
                 WalRecord::EpochSeal(1),
             ]
+        );
+    }
+
+    #[test]
+    fn injected_append_error_leaves_log_replayable() {
+        let _g = crate::util::faults::test_lock();
+        crate::util::faults::configure("wal.append=err@2").unwrap();
+        let p = temp("fault_append.wal");
+        let mut w = Wal::create(&p, 10).unwrap();
+        w.append_edges(&[(0, 1)]).unwrap();
+        let err = w.append_edges(&[(2, 3)]).unwrap_err().to_string();
+        assert!(err.contains("injected fault at wal.append"), "{err}");
+        crate::util::faults::clear();
+        w.append_edges(&[(4, 5)]).unwrap();
+        drop(w);
+        let (_, recs) = Wal::replay(&p).unwrap();
+        assert_eq!(
+            recs,
+            vec![WalRecord::Edges(vec![(0, 1)]), WalRecord::Edges(vec![(4, 5)])]
         );
     }
 

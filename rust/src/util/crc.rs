@@ -1,0 +1,68 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven.
+//!
+//! Hand-rolled because the image has no checksum crates. Used by the WAL
+//! v2 frame format and snapshot v2 trailer; matches zlib's `crc32()` so
+//! files are checkable with standard tooling.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// One-shot CRC-32 of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    update(!0u32, data) ^ !0u32
+}
+
+/// Streaming form: feed `state = update(state, chunk)` starting from
+/// `!0u32`, finish with `state ^ !0u32`.
+pub fn update(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        // The canonical check value for CRC-32/ISO-HDLC.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"split across several update calls";
+        let mut state = !0u32;
+        for chunk in data.chunks(7) {
+            state = update(state, chunk);
+        }
+        assert_eq!(state ^ !0u32, crc32(data));
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut data = vec![0u8; 64];
+        let clean = crc32(&data);
+        data[33] ^= 0x10;
+        assert_ne!(crc32(&data), clean);
+    }
+}

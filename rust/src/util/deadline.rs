@@ -1,0 +1,93 @@
+//! Cooperative per-request deadlines.
+//!
+//! The dispatch layer arms a thread-local deadline before running a heavy
+//! verb (`CONTOUR_DEADLINE_MS`); long-running loops call [`check`] at safe
+//! points — between connectivity passes, between payload lines — where no
+//! borrowed work is in flight on pool workers. An expired deadline panics
+//! with a typed [`DeadlineExceeded`] payload that the dispatch
+//! `catch_unwind` recognizes and turns into `ERR deadline ...` rather than
+//! counting it as an internal panic.
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+/// Typed panic payload for an expired deadline; carries the configured
+/// budget so the error message can report it.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineExceeded {
+    pub budget: Duration,
+}
+
+thread_local! {
+    static DEADLINE: Cell<Option<(Instant, Duration)>> = const { Cell::new(None) };
+}
+
+/// Arm a deadline on this thread for the duration of the returned guard;
+/// `None` disarms (the guard restores whatever was armed before).
+pub fn arm(budget: Option<Duration>) -> Guard {
+    let prev = DEADLINE.with(|d| d.replace(budget.map(|b| (Instant::now() + b, b))));
+    Guard { prev }
+}
+
+/// Restores the previously armed deadline on drop.
+pub struct Guard {
+    prev: Option<(Instant, Duration)>,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        DEADLINE.with(|d| d.set(prev));
+    }
+}
+
+/// Panic with [`DeadlineExceeded`] if this thread's armed deadline has
+/// passed. Call only at points where no borrowed work is in flight.
+#[inline]
+pub fn check() {
+    if let Some((at, budget)) = DEADLINE.with(|d| d.get()) {
+        if Instant::now() > at {
+            std::panic::panic_any(DeadlineExceeded { budget });
+        }
+    }
+}
+
+/// True if a deadline is armed on this thread (cheap; for tests).
+pub fn armed() -> bool {
+    DEADLINE.with(|d| d.get().is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_check_is_noop() {
+        assert!(!armed());
+        check();
+    }
+
+    #[test]
+    fn guard_restores_previous() {
+        let g1 = arm(Some(Duration::from_secs(60)));
+        assert!(armed());
+        {
+            let g2 = arm(None);
+            assert!(!armed());
+            drop(g2);
+        }
+        assert!(armed());
+        drop(g1);
+        assert!(!armed());
+    }
+
+    #[test]
+    fn expired_deadline_panics_with_typed_payload() {
+        let g = arm(Some(Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(2));
+        let caught = std::panic::catch_unwind(check).unwrap_err();
+        let payload = caught.downcast_ref::<DeadlineExceeded>().expect("typed payload");
+        assert_eq!(payload.budget, Duration::ZERO);
+        drop(g);
+    }
+}

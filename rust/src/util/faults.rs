@@ -1,0 +1,383 @@
+//! Deterministic fault injection: named failpoints with a cheap
+//! always-compiled check.
+//!
+//! Production code marks interesting failure sites with a named point —
+//! `faults::hit("wal.append")?` — which is a single relaxed atomic load
+//! when no schedule is armed. A schedule arms points with an action and a
+//! trigger:
+//!
+//! ```text
+//! CONTOUR_FAULTS="wal.append=err@3;pool.job=panic@p0.01;conn.write=drop@5"
+//! ```
+//!
+//! * action — `err` (site returns an error), `panic` (site panics; the
+//!   dispatch layer is expected to isolate it), `drop` (site silently
+//!   abandons the operation, e.g. closes the connection without a reply).
+//! * trigger — `@N` fires exactly once, on the Nth hit of the point;
+//!   `@pX` fires each hit with probability `X` from a per-point
+//!   [`SplitMix64`] stream seeded by `CONTOUR_FAULTS_SEED` (so a schedule
+//!   replays identically); no trigger fires on every hit.
+//!
+//! The schedule can also be swapped at runtime through the test-gated
+//! `FAULTS` server verb (see `server::dispatch`). Injection counts are
+//! kept per point for the lifetime of the process and surfaced as
+//! `faults_injected/<point>` in the metrics registry.
+
+use crate::util::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// Environment variable holding the boot-time schedule.
+pub const ENV_SPEC: &str = "CONTOUR_FAULTS";
+/// Environment variable seeding probabilistic triggers (default `0x5EED`).
+pub const ENV_SEED: &str = "CONTOUR_FAULTS_SEED";
+
+/// What an armed failpoint does when its trigger fires.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Action {
+    /// The call site returns an injected error.
+    Err,
+    /// The call site panics (exercises the panic-isolation layer).
+    Panic,
+    /// The call site abandons the operation without reporting failure.
+    Drop,
+}
+
+impl Action {
+    fn as_str(self) -> &'static str {
+        match self {
+            Action::Err => "err",
+            Action::Panic => "panic",
+            Action::Drop => "drop",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Trigger {
+    /// Fire exactly once, on the Nth hit (1-based).
+    Nth(u64),
+    /// Fire each hit with this probability, from a seeded per-point stream.
+    Prob(f64),
+    /// Fire on every hit.
+    Always,
+}
+
+struct Point {
+    action: Action,
+    trigger: Trigger,
+    hits: u64,
+    rng: SplitMix64,
+}
+
+#[derive(Default)]
+struct State {
+    points: BTreeMap<String, Point>,
+    /// Lifetime injection counts; survive `clear()` so metrics stay monotone.
+    injected: BTreeMap<String, u64>,
+}
+
+/// Fast path: false ⇒ `fire()` is one relaxed load, no lock.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Lifetime total across all points, for the telemetry ring and HEALTH.
+static INJECTED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static ENV_INIT: Once = Once::new();
+
+fn state() -> &'static Mutex<State> {
+    static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(State::default()))
+}
+
+fn lock_state() -> std::sync::MutexGuard<'static, State> {
+    // A panic action unwinds while the lock is *not* held (we release it
+    // before panicking), but stay poison-tolerant anyway.
+    state().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Load `CONTOUR_FAULTS` once, the first time any failpoint is evaluated.
+fn ensure_env_loaded() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var(ENV_SPEC) {
+            if let Err(e) = configure(&spec) {
+                eprintln!("[contour:Warn] ignoring bad {ENV_SPEC}: {e}");
+            }
+        }
+    });
+}
+
+fn seed() -> u64 {
+    std::env::var(ENV_SEED)
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED)
+}
+
+fn point_seed(base: u64, name: &str) -> u64 {
+    // Distinct deterministic stream per point: fold the name into the seed.
+    name.bytes()
+        .fold(base ^ 0x9E37_79B9_7F4A_7C15, |a, b| {
+            a.wrapping_mul(0x100_0000_01B3) ^ b as u64
+        })
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger> {
+    if s.is_empty() {
+        return Ok(Trigger::Always);
+    }
+    if let Some(p) = s.strip_prefix('p') {
+        let q: f64 = p.parse().with_context(|| format!("bad probability {s:?}"))?;
+        if !(0.0..=1.0).contains(&q) {
+            bail!("probability {q} outside [0,1]");
+        }
+        return Ok(Trigger::Prob(q));
+    }
+    let n: u64 = s.parse().with_context(|| format!("bad trigger {s:?}"))?;
+    if n == 0 {
+        bail!("trigger @0 never fires; use @1 for the first hit");
+    }
+    Ok(Trigger::Nth(n))
+}
+
+/// Install a schedule, replacing any previous one. Syntax:
+/// `point=action[@trigger][;point=action[@trigger]]...` with `;` or `,`
+/// separators; an empty spec clears the schedule.
+pub fn configure(spec: &str) -> Result<()> {
+    let base = seed();
+    let mut points = BTreeMap::new();
+    for part in spec.split([';', ',']) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, rhs) = part
+            .split_once('=')
+            .with_context(|| format!("failpoint {part:?} missing '=action'"))?;
+        let (action, trig) = match rhs.split_once('@') {
+            Some((a, t)) => (a, t),
+            None => (rhs, ""),
+        };
+        let action = match action {
+            "err" => Action::Err,
+            "panic" => Action::Panic,
+            "drop" => Action::Drop,
+            other => bail!("unknown fault action {other:?} (err|panic|drop)"),
+        };
+        let trigger = parse_trigger(trig)?;
+        points.insert(
+            name.to_string(),
+            Point { action, trigger, hits: 0, rng: SplitMix64::new(point_seed(base, name)) },
+        );
+    }
+    let active = !points.is_empty();
+    let mut st = lock_state();
+    st.points = points;
+    drop(st);
+    ACTIVE.store(active, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every failpoint (lifetime injection counts are kept).
+pub fn clear() {
+    let mut st = lock_state();
+    st.points.clear();
+    drop(st);
+    ACTIVE.store(false, Ordering::Relaxed);
+}
+
+/// True if any failpoint is currently armed.
+pub fn active() -> bool {
+    ensure_env_loaded();
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Evaluate a failpoint: count the hit and return the action to take if
+/// the trigger fired. The common disarmed case is one relaxed load.
+pub fn fire(point: &str) -> Option<Action> {
+    ensure_env_loaded();
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut st = lock_state();
+    let p = st.points.get_mut(point)?;
+    p.hits += 1;
+    let fired = match p.trigger {
+        Trigger::Always => true,
+        Trigger::Nth(n) => p.hits == n,
+        Trigger::Prob(q) => ((p.rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) < q,
+    };
+    if !fired {
+        return None;
+    }
+    let action = p.action;
+    *st.injected.entry(point.to_string()).or_insert(0) += 1;
+    drop(st);
+    INJECTED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    Some(action)
+}
+
+/// Honor a failpoint at a fallible call site. `Err` becomes an error,
+/// `Panic` panics in place, and `Drop` returns `Ok(true)` for the caller
+/// to interpret (skip the write, close the connection, ...).
+pub fn hit(point: &str) -> Result<bool> {
+    match fire(point) {
+        None => Ok(false),
+        Some(Action::Err) => bail!("injected fault at {point}"),
+        Some(Action::Panic) => panic!("injected fault at {point}"),
+        Some(Action::Drop) => Ok(true),
+    }
+}
+
+/// Same as [`hit`] but typed for `std::io` call sites.
+pub fn hit_io(point: &str) -> std::io::Result<bool> {
+    match fire(point) {
+        None => Ok(false),
+        Some(Action::Err) => Err(std::io::Error::other(format!("injected fault at {point}"))),
+        Some(Action::Panic) => panic!("injected fault at {point}"),
+        Some(Action::Drop) => Ok(true),
+    }
+}
+
+/// Lifetime injection counts per point (points fired at least once).
+pub fn injected_counts() -> Vec<(String, u64)> {
+    ensure_env_loaded();
+    lock_state().injected.iter().map(|(k, v)| (k.clone(), *v)).collect()
+}
+
+/// Lifetime total injections across all points.
+pub fn injected_total() -> u64 {
+    INJECTED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// One line per armed point: `point action[@trigger] hits=H injected=I`.
+pub fn describe() -> Vec<String> {
+    ensure_env_loaded();
+    let st = lock_state();
+    st.points
+        .iter()
+        .map(|(name, p)| {
+            let trig = match p.trigger {
+                Trigger::Always => String::new(),
+                Trigger::Nth(n) => format!("@{n}"),
+                Trigger::Prob(q) => format!("@p{q}"),
+            };
+            let injected = st.injected.get(name).copied().unwrap_or(0);
+            format!("{name} {}{trig} hits={} injected={injected}", p.action.as_str(), p.hits)
+        })
+        .collect()
+}
+
+/// The `FAULTS` server verb is test-gated: it only works when a schedule
+/// was armed at boot or `CONTOUR_FAULTS_VERB=1` opts in explicitly.
+pub fn verb_enabled() -> bool {
+    std::env::var("CONTOUR_FAULTS_VERB").map(|v| v == "1").unwrap_or(false)
+        || std::env::var(ENV_SPEC).is_ok()
+}
+
+/// Serialize tests that mutate the process-global schedule. Not part of
+/// the public API; tests across modules share this one lock so parallel
+/// test threads don't trample each other's schedules.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; serialize tests that mutate it.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
+    }
+
+    #[test]
+    fn disarmed_is_noop() {
+        let _g = guard();
+        clear();
+        assert_eq!(fire("nope"), None);
+        assert!(!hit("nope").unwrap());
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let _g = guard();
+        configure("w=err@3").unwrap();
+        assert_eq!(fire("w"), None);
+        assert_eq!(fire("w"), None);
+        assert_eq!(fire("w"), Some(Action::Err));
+        assert_eq!(fire("w"), None);
+        clear();
+    }
+
+    #[test]
+    fn always_trigger_and_unknown_point() {
+        let _g = guard();
+        configure("x=drop").unwrap();
+        assert_eq!(fire("x"), Some(Action::Drop));
+        assert_eq!(fire("x"), Some(Action::Drop));
+        assert_eq!(fire("y"), None);
+        clear();
+    }
+
+    #[test]
+    fn probability_is_seed_deterministic() {
+        let _g = guard();
+        let run = || -> Vec<bool> {
+            configure("p=err@p0.5").unwrap();
+            let v = (0..64).map(|_| fire("p").is_some()).collect();
+            clear();
+            v
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p0.5 over 64 draws: {a:?}");
+    }
+
+    #[test]
+    fn hit_maps_actions() {
+        let _g = guard();
+        configure("e=err@1;d=drop@1").unwrap();
+        let err = hit("e").unwrap_err().to_string();
+        assert!(err.contains("injected fault at e"), "{err}");
+        assert!(hit("d").unwrap());
+        assert!(!hit("d").unwrap());
+        clear();
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let _g = guard();
+        assert!(configure("nope").is_err());
+        assert!(configure("a=explode").is_err());
+        assert!(configure("a=err@p2").is_err());
+        assert!(configure("a=err@0").is_err());
+        // A bad spec must not leave a half-armed schedule.
+        assert_eq!(fire("a"), None);
+    }
+
+    #[test]
+    fn counts_survive_clear() {
+        let _g = guard();
+        configure("c=err@1").unwrap();
+        let before = injected_total();
+        fire("c");
+        clear();
+        assert_eq!(injected_total(), before + 1);
+        assert!(injected_counts().iter().any(|(k, n)| k == "c" && *n >= 1));
+    }
+
+    #[test]
+    fn describe_lists_armed_points() {
+        let _g = guard();
+        configure("wal.append=err@3;pool.job=panic@p0.25").unwrap();
+        let d = describe();
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().any(|l| l.starts_with("wal.append err@3 ")), "{d:?}");
+        assert!(d.iter().any(|l| l.starts_with("pool.job panic@p0.25 ")), "{d:?}");
+        clear();
+    }
+}

@@ -1,7 +1,11 @@
 //! Small substrates the sandbox image lacks crates for: a deterministic
-//! PRNG family (no `rand`), wall-clock timing helpers, and a leveled
-//! stderr logger.
+//! PRNG family (no `rand`), wall-clock timing helpers, a leveled stderr
+//! logger, deterministic fault injection ([`faults`]), and cooperative
+//! request deadlines ([`deadline`]).
 
+pub mod crc;
+pub mod deadline;
+pub mod faults;
 pub mod rng;
 pub mod timer;
 
@@ -41,6 +45,25 @@ macro_rules! info {
 #[macro_export]
 macro_rules! debug {
     ($($t:tt)*) => { $crate::util::log($crate::util::Level::Debug, format_args!($($t)*)) };
+}
+
+/// Poison-tolerant read lock. With panic isolation (`catch_unwind`
+/// around verb dispatch) a panicking request may poison shared locks;
+/// state mutations under them are single-step map edits, so the data is
+/// still coherent and the server must keep serving rather than cascade
+/// the panic into every later `.unwrap()`.
+pub fn rlock<T: ?Sized>(l: &std::sync::RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant write lock (see [`rlock`]).
+pub fn wlock<T: ?Sized>(l: &std::sync::RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant mutex lock (see [`rlock`]).
+pub fn mlock<T: ?Sized>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Human-readable engineering notation for counts (1.2K, 3.4M, ...).

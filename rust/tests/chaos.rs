@@ -1,0 +1,574 @@
+//! Chaos suite: fault schedules driven end to end. Crash-mid-epoch
+//! recovery cross-checked against a from-scratch recompute, corrupt and
+//! torn WAL matrices, injected WAL I/O errors, pool-job panics isolated
+//! to their own request, request deadlines, connection drops
+//! mid-pipeline, idle/drain closes, hostile binary frames on a live
+//! socket, and an env-driven soak (`CONTOUR_FAULTS`, used by the CI
+//! chaos job) that must leave the server answering once faults clear.
+//!
+//! The failpoint registry is process-global, so every test holds
+//! [`faults::test_lock`] for its whole body (via [`quiesce`]) — the
+//! suite is deliberately serialized.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use contour::cc::{contour::Contour, Algorithm, Labels};
+use contour::graph::{gen, EdgeList};
+use contour::server::{protocol, serve_listener, ServerState, Session};
+use contour::stream::{Snapshot, StreamingCc, Wal};
+use contour::util::faults;
+use contour::VId;
+
+// ---------------------------------------------------------- harness
+
+/// Serialize the suite and disarm any leftover schedule. Forces the
+/// lazy `CONTOUR_FAULTS` env load *before* clearing: clearing first
+/// would let a later failpoint evaluation arm the env schedule
+/// mid-test. The soak test re-reads the env var explicitly.
+fn quiesce() -> std::sync::MutexGuard<'static, ()> {
+    let g = faults::test_lock();
+    let _ = faults::active();
+    faults::clear();
+    g
+}
+
+fn no_body() -> anyhow::Result<String> {
+    anyhow::bail!("no extra payload expected")
+}
+
+fn ask(state: &ServerState, line: &str) -> String {
+    Session::new(state).handle(line, no_body).unwrap_or_else(|| "BYE".into())
+}
+
+type ServerHandle = (String, Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>);
+
+fn spawn_server(state: Arc<ServerState>) -> ServerHandle {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local_addr").to_string();
+    let sd = Arc::clone(&shutdown);
+    let handle = std::thread::spawn(move || serve_listener(listener, state, sd));
+    (addr, shutdown, handle)
+}
+
+fn stop(shutdown: &AtomicBool, handle: std::thread::JoinHandle<anyhow::Result<()>>) {
+    shutdown.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+/// Line-protocol client whose reads time out instead of hanging the
+/// suite: a lost reply (injected `conn.write` drop, server close)
+/// surfaces as `Err` or an empty line, never a stuck test.
+struct Wire {
+    r: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+impl Wire {
+    fn connect(addr: &str) -> std::io::Result<Self> {
+        let s = TcpStream::connect(addr)?;
+        s.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Self { r: BufReader::new(s.try_clone()?), w: s })
+    }
+
+    fn try_ask(&mut self, msg: &str) -> std::io::Result<String> {
+        self.w.write_all(msg.as_bytes())?;
+        self.w.write_all(b"\n")?;
+        self.read_line()
+    }
+
+    fn ask(&mut self, msg: &str) -> String {
+        self.try_ask(msg).unwrap_or_else(|e| panic!("{msg:?}: connection lost: {e}"))
+    }
+
+    /// One reply line; `Ok("")` is the server closing the connection.
+    fn read_line(&mut self) -> std::io::Result<String> {
+        let mut reply = String::new();
+        self.r.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("contour-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Ground truth: static min-id-canonical Contour labels on an edge set.
+fn labels_of(n: usize, edges: &[(VId, VId)]) -> Labels {
+    Contour::c2().run(&EdgeList::from_pairs(n, edges).into_csr())
+}
+
+fn flip_byte(path: &std::path::Path, off: usize) {
+    let mut data = std::fs::read(path).unwrap();
+    assert!(off < data.len(), "flip offset {off} past {} bytes", data.len());
+    data[off] ^= 0xFF;
+    std::fs::write(path, data).unwrap();
+}
+
+// ------------------------------------------- durability under crashes
+
+/// ACCEPTANCE: kill mid-epoch (unsealed WAL suffix past the last
+/// snapshot), recover, and the labels are bit-identical to a
+/// from-scratch recompute on everything that was acknowledged.
+#[test]
+fn kill_mid_epoch_recovery_is_bit_identical() {
+    let _g = quiesce();
+    let dir = fresh_dir("kill");
+    let (wal, snap) = (dir.join("g.wal"), dir.join("g.snap"));
+    let g = gen::rmat(10, 4_000, gen::RmatKind::Graph500, 11).into_csr();
+    let edges: Vec<(VId, VId)> = g.edges().collect();
+    let half = edges.len() / 2;
+    {
+        let s = StreamingCc::open(g.n, 1, Some(wal.as_path())).unwrap();
+        s.add_edges(&edges[..half]).unwrap();
+        s.seal_epoch().unwrap();
+        s.save_snapshot(&snap).unwrap();
+        s.add_edges(&edges[half..]).unwrap();
+        // "Kill": dropped mid-epoch — the suffix lives only in the WAL.
+    }
+    let want = labels_of(g.n, &edges);
+
+    let r = StreamingCc::recover(Some(snap.as_path()), Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r.current().labels, want, "snapshot + WAL suffix diverged");
+    let info = r.recovery().expect("recovery stats");
+    assert!(info.frames_replayed > 0, "nothing replayed past the snapshot cut");
+    assert_eq!(info.truncated_bytes, 0, "clean log repaired bytes");
+    let summary = info.summary();
+    assert!(summary.contains("snapshot=1") && summary.contains("frames="), "{summary}");
+
+    // The WAL alone (snapshot lost in the crash) reaches the same state.
+    let r2 = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r2.current().labels, want, "WAL-only recovery diverged");
+}
+
+/// A crash mid-append tears the final frame: recovery truncates exactly
+/// that frame, keeps every complete one, and reports the repair.
+#[test]
+fn torn_wal_tail_is_truncated_and_recovered() {
+    let _g = quiesce();
+    let dir = fresh_dir("torn");
+    let wal = dir.join("g.wal");
+    let g = gen::erdos_renyi(600, 1_100, 5).into_csr();
+    let edges: Vec<(VId, VId)> = g.edges().collect();
+    let chunk = 64;
+    {
+        let s = StreamingCc::open(g.n, 0, Some(wal.as_path())).unwrap();
+        for c in edges.chunks(chunk) {
+            s.add_edges(c).unwrap();
+        }
+    }
+    // Tear 3 bytes off the last frame (one frame per add_edges batch).
+    let len = std::fs::metadata(&wal).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&wal).unwrap();
+    f.set_len(len - 3).unwrap();
+    drop(f);
+
+    let last = edges.len() - (edges.len() - 1) % chunk - 1;
+    let r = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    let info = r.recovery().expect("recovery stats");
+    assert!(info.truncated_bytes > 0, "torn tail not reported");
+    assert_eq!(r.current().labels, labels_of(g.n, &edges[..last]), "lost more than the torn frame");
+
+    // The repair rewound to a clean frame boundary: appending and
+    // replaying again must work without re-tearing.
+    let r2 = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r2.recovery().unwrap().truncated_bytes, 0, "repair did not persist");
+}
+
+/// ACCEPTANCE: a corrupted (not torn) WAL frame is rejected loudly with
+/// the byte offset of the bad frame — never silently dropped.
+#[test]
+fn corrupt_wal_frame_fails_with_byte_offset() {
+    let _g = quiesce();
+    let dir = fresh_dir("corrupt");
+    let wal = dir.join("g.wal");
+    {
+        let mut w = Wal::create(&wal, 64).unwrap();
+        w.append_edges(&[(0, 1), (1, 2), (2, 3)]).unwrap();
+        w.append_edges(&[(4, 5), (5, 6)]).unwrap();
+        w.seal_epoch(1).unwrap();
+    }
+    // First frame starts at byte 16 (header); flip an edge byte inside
+    // its payload so the frame still parses but the CRC disagrees.
+    flip_byte(&wal, 16 + 5 + 1);
+
+    let err = Wal::replay_and_repair(&wal).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch at byte 16"), "{err}");
+    let err = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "recovery swallowed corruption: {err}");
+}
+
+/// A bit flip inside a snapshot fails the trailing CRC on load.
+#[test]
+fn corrupt_snapshot_fails_checksum() {
+    let _g = quiesce();
+    let dir = fresh_dir("snapcorrupt");
+    let snap = dir.join("g.snap");
+    let s = StreamingCc::new(64, 0);
+    s.add_edges(&[(0, 1), (2, 3), (3, 4)]).unwrap();
+    s.seal_epoch().unwrap();
+    s.save_snapshot(&snap).unwrap();
+    flip_byte(&snap, 40);
+    let err = Snapshot::load(&snap).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+}
+
+/// An injected WAL append error fails only the unacknowledged batch:
+/// the live structure never applies it, so recovery agrees with what
+/// the caller was told.
+#[test]
+fn wal_append_fault_keeps_live_and_recovered_consistent() {
+    let _g = quiesce();
+    let dir = fresh_dir("walerr");
+    let wal = dir.join("g.wal");
+    let (b1, b2, b3) = ([(0u32, 1u32), (1, 2)], [(10u32, 11u32)], [(20u32, 21u32), (21, 22)]);
+    faults::configure("wal.append=err@2").unwrap();
+    {
+        let s = StreamingCc::open(64, 0, Some(wal.as_path())).unwrap();
+        s.add_edges(&b1).unwrap();
+        let err = s.add_edges(&b2).unwrap_err().to_string();
+        assert!(err.contains("injected fault at wal.append"), "{err}");
+        s.add_edges(&b3).unwrap();
+        s.seal_epoch().unwrap();
+        // Live state must exclude the failed batch...
+        assert!(s.connected_live(0, 2).unwrap());
+        assert!(s.connected_live(20, 22).unwrap());
+        assert!(!s.connected_live(10, 11).unwrap(), "unacknowledged batch was applied");
+    }
+    faults::clear();
+    // ...and so must recovery: the batch was never acknowledged.
+    let acked: Vec<(VId, VId)> = b1.iter().chain(b3.iter()).copied().collect();
+    let r = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    assert_eq!(r.current().labels, labels_of(64, &acked));
+}
+
+// -------------------------------------------------- panic isolation
+
+/// ACCEPTANCE: a pool-job panic fails only its own request as
+/// `ERR internal` — the connection, other connections, and a retry of
+/// the same verb all keep working, and the panic is metered.
+#[test]
+fn pool_panic_fails_one_request_server_keeps_answering() {
+    let _g = quiesce();
+    let state = Arc::new(ServerState::new(2));
+    let (addr, shutdown, handle) = spawn_server(Arc::clone(&state));
+    let mut c = Wire::connect(&addr).unwrap();
+    assert!(c.ask("GEN g er:3000:6000").starts_with("OK 3000 "));
+    assert!(c.ask("SHARD g 2").starts_with("OK "));
+
+    faults::configure("pool.job=panic@1").unwrap();
+    let r = c.ask("PCC g C-2");
+    assert!(r.starts_with("ERR internal"), "panic not isolated: {r}");
+    // run_many funnels the job panic to the submitter with its own
+    // payload; dispatch surfaces that, not the failpoint's message.
+    assert!(r.contains("pool task panicked"), "panic message lost: {r}");
+
+    // Same connection still serves; the poisoned run was purged, so a
+    // retry recomputes and succeeds (the @1 trigger is spent).
+    assert_eq!(c.ask("PING"), "PONG");
+    let retry = c.ask("PCC g C-2");
+    assert!(retry.starts_with("OK "), "retry after panic failed: {retry}");
+
+    // Other connections never noticed.
+    let mut c2 = Wire::connect(&addr).unwrap();
+    assert!(c2.ask("QUERY g 5").starts_with("OK "));
+    let m = c2.ask("METRICS");
+    assert!(m.contains("panics=1"), "panic not metered: {m}");
+    assert!(m.contains("err/PCC=1"), "error not metered per verb: {m}");
+
+    faults::clear();
+    drop((c, c2));
+    stop(&shutdown, handle);
+}
+
+/// A panicking verb must degrade HEALTH, not just METRICS.
+#[test]
+fn health_degrades_on_panics() {
+    let _g = quiesce();
+    let state = ServerState::new(1);
+    assert!(ask(&state, "GEN g path:32").starts_with("OK "));
+    faults::configure("pool.job=panic@1").unwrap();
+    assert!(ask(&state, "SHARD g 2").starts_with("OK "));
+    let r = ask(&state, "PCC g C-2");
+    assert!(r.starts_with("ERR internal"), "{r}");
+    faults::clear();
+    let h = ask(&state, "HEALTH");
+    assert!(h.contains("degraded"), "HEALTH ignored a recent panic: {h}");
+}
+
+// -------------------------------------------- deadlines and timeouts
+
+/// ACCEPTANCE: a heavy verb over its `CONTOUR_DEADLINE_MS` budget
+/// returns `ERR deadline` between passes instead of running away.
+#[test]
+fn over_budget_cc_returns_err_deadline() {
+    let _g = quiesce();
+    let state = ServerState::new(1).with_timeouts(0, 0, 1);
+    assert!(ask(&state, "GEN g er:400000:800000").starts_with("OK 400000 "));
+    let r = ask(&state, "CC g C-2");
+    assert!(r.starts_with("ERR deadline exceeded after 1ms budget"), "{r}");
+    let m = ask(&state, "METRICS");
+    assert!(m.contains("deadlines=1"), "deadline not metered: {m}");
+    // Light verbs carry no deadline and still work.
+    assert_eq!(ask(&state, "PING"), "PONG");
+}
+
+/// Idle connections are closed gracefully (BYE, then EOF) after the
+/// configured `CONTOUR_IDLE_MS` budget — the old hard-coded 5 s cutoff
+/// is gone.
+#[test]
+fn idle_timeout_closes_with_bye() {
+    let _g = quiesce();
+    let state = Arc::new(ServerState::new(1).with_timeouts(150, 0, 0));
+    let (addr, shutdown, handle) = spawn_server(state);
+    let mut c = Wire::connect(&addr).unwrap();
+    assert_eq!(c.read_line().unwrap(), "BYE", "idle close must announce itself");
+    assert_eq!(c.read_line().unwrap(), "", "EOF after BYE");
+    drop(c);
+    stop(&shutdown, handle);
+}
+
+/// Graceful drain: on shutdown an idle connection gets BYE before the
+/// socket closes, and the listener thread exits cleanly.
+#[test]
+fn shutdown_drains_with_bye() {
+    let _g = quiesce();
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(state);
+    let mut c = Wire::connect(&addr).unwrap();
+    assert_eq!(c.ask("PING"), "PONG");
+    shutdown.store(true, Ordering::Relaxed);
+    assert_eq!(c.read_line().unwrap(), "BYE", "drain must announce itself");
+    drop(c);
+    handle.join().unwrap().unwrap();
+}
+
+/// WATCH pushes ticks from the server side, so an idle budget shorter
+/// than the tick interval must not kill the stream mid-WATCH — and the
+/// connection is still usable afterwards.
+#[test]
+fn watch_survives_idle_gaps_between_ticks() {
+    let _g = quiesce();
+    let state = Arc::new(ServerState::new(1).with_timeouts(250, 0, 0));
+    let (addr, shutdown, handle) = spawn_server(state);
+    let mut c = Wire::connect(&addr).unwrap();
+    assert_eq!(c.ask("WATCH 3 400"), "OK 3 400");
+    for i in 0..3 {
+        let tick = c.read_line().unwrap();
+        assert!(!tick.is_empty() && tick != "BYE", "tick {i} lost to idle close: {tick:?}");
+    }
+    assert_eq!(c.read_line().unwrap(), "DONE");
+    assert_eq!(c.ask("PING"), "PONG", "connection dead after WATCH");
+    drop(c);
+    stop(&shutdown, handle);
+}
+
+// ------------------------------------------------- connection chaos
+
+/// An injected `conn.write` drop severs the connection between request
+/// and reply — the client sees a clean close, the server keeps serving
+/// new connections.
+#[test]
+fn dropped_reply_severs_only_that_connection() {
+    let _g = quiesce();
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(state);
+    let mut c = Wire::connect(&addr).unwrap();
+    assert_eq!(c.ask("PING"), "PONG");
+
+    faults::configure("conn.write=drop@1").unwrap();
+    let r = c.try_ask("PING").unwrap_or_default();
+    assert_eq!(r, "", "reply should have been dropped: {r:?}");
+    drop(c);
+
+    let mut c2 = Wire::connect(&addr).unwrap();
+    assert_eq!(c2.ask("PING"), "PONG", "server stopped answering after a dropped reply");
+    faults::clear();
+    drop(c2);
+    stop(&shutdown, handle);
+}
+
+/// Hostile binary frames on a live upgraded socket: every malformed
+/// input ends in a clean close (or a clean ERR) — never a panic, never
+/// a hang — and the server keeps answering fresh connections.
+#[test]
+fn hostile_binary_input_never_hangs_or_kills_the_server() {
+    let _g = quiesce();
+    let state = Arc::new(ServerState::new(1));
+    let (addr, shutdown, handle) = spawn_server(state);
+
+    fn frame(magic: &[u8; 2], ver: u8, op: u8, id: u32, len: u32, payload: &[u8]) -> Vec<u8> {
+        let mut b = Vec::with_capacity(12 + payload.len());
+        b.extend_from_slice(magic);
+        b.push(ver);
+        b.push(op);
+        b.extend_from_slice(&id.to_le_bytes());
+        b.extend_from_slice(&len.to_le_bytes());
+        b.extend_from_slice(payload);
+        b
+    }
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("bad magic", frame(b"XX", 2, 1, 1, 0, &[])),
+        ("bad version", frame(b"CP", 9, 1, 1, 0, &[])),
+        ("oversize length", frame(b"CP", 2, 1, 1, protocol::MAX_FRAME + 1, &[])),
+        ("unknown opcode", frame(b"CP", 2, 0xEE, 1, 2, &[0, 0])),
+        ("truncated header", vec![b'C', b'P', 2, 1, 7]),
+        ("truncated payload", frame(b"CP", 2, 1, 1, 64, &[1, 2, 3])),
+        ("args length overflow", frame(b"CP", 2, 1, 1, 2, &[255, 255])),
+        ("garbage flood", vec![0xA5; 4096]),
+    ];
+    for (name, bytes) in &cases {
+        let s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut w = s.try_clone().unwrap();
+        w.write_all(b"HELLO 2\n").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK v2", "{name}: upgrade failed");
+        // The server may close before consuming everything we send.
+        let _ = w.write_all(bytes);
+        let _ = s.shutdown(Shutdown::Write);
+        let mut buf = [0u8; 512];
+        loop {
+            match r.read(&mut buf) {
+                Ok(0) => break, // clean close
+                Ok(_) => {}     // a reply frame before the close is fine
+                Err(e) => panic!("{name}: server hung instead of closing: {e}"),
+            }
+        }
+        // The malformed connection took nothing else down.
+        let mut probe = Wire::connect(&addr).unwrap();
+        assert_eq!(probe.ask("PING"), "PONG", "{name}: server died");
+    }
+
+    // Line transport: a client vanishing mid-payload is a clean close.
+    let mut c = Wire::connect(&addr).unwrap();
+    c.w.write_all(b"UPLOAD u 3\n0 1\n").unwrap();
+    drop(c);
+    let mut probe = Wire::connect(&addr).unwrap();
+    assert_eq!(probe.ask("PING"), "PONG", "mid-payload disconnect killed the server");
+    drop(probe);
+    stop(&shutdown, handle);
+}
+
+// --------------------------------------------------- the FAULTS verb
+
+/// The test-gated FAULTS verb: refuse when disabled (pinned in
+/// tests/serving.rs), and with `CONTOUR_FAULTS_VERB=1` list, arm, and
+/// clear schedules at runtime.
+#[test]
+fn faults_verb_round_trip() {
+    let _g = quiesce();
+    std::env::set_var("CONTOUR_FAULTS_VERB", "1");
+    let state = ServerState::new(1);
+    assert_eq!(ask(&state, "FAULTS"), "OK 0");
+    assert_eq!(ask(&state, "FAULTS SET wal.append=err@5"), "OK armed 1");
+    // Lifetime injected counts survive CLEAR (and other tests in this
+    // process), so only the armed-point half of the line is exact.
+    let listing = ask(&state, "FAULTS");
+    assert!(listing.starts_with("OK 1 wal.append err@5 hits=0 injected="), "{listing}");
+    assert!(ask(&state, "FAULTS SET nope").starts_with("ERR "));
+    assert_eq!(ask(&state, "FAULTS CLEAR"), "OK cleared");
+    assert_eq!(ask(&state, "FAULTS"), "OK 0");
+    std::env::remove_var("CONTOUR_FAULTS_VERB");
+    faults::clear();
+}
+
+// ------------------------------------------------------ env-driven soak
+
+/// CI chaos entry point: run a mixed workload under the schedule in
+/// `CONTOUR_FAULTS` (or a broad default), tolerating injected errors
+/// and dropped connections, then clear the faults and prove the server
+/// still answers correctly. Tallies go to stderr for the CI artifact.
+#[test]
+fn soak_under_env_schedule_recovers() {
+    let _g = quiesce();
+    let schedule = std::env::var("CONTOUR_FAULTS").unwrap_or_else(|_| {
+        "wal.append=err@p0.05;wal.fsync=err@p0.05;pool.job=panic@p0.02;conn.write=drop@p0.05"
+            .to_string()
+    });
+    faults::configure(&schedule).unwrap();
+    eprintln!("[chaos-soak] schedule: {schedule}");
+
+    let dir = fresh_dir("soak");
+    let wal = dir.join("s.wal");
+    let state = Arc::new(ServerState::new(2));
+    let (addr, shutdown, handle) = spawn_server(state);
+
+    let (mut errs, mut drops) = (0u32, 0u32);
+    let mut conn: Option<Wire> = None;
+    for i in 0..160u32 {
+        let op = match i % 8 {
+            0 => "GEN g er:800:1500".to_string(),
+            1 => "CC g C-2".to_string(),
+            2 => format!("QUERY g {}", (i * 37) % 800),
+            3 => "SHARD g 2".to_string(),
+            4 => "PCC g C-2".to_string(),
+            5 => format!("STREAM s 64 {}", wal.display()),
+            6 => format!("SADD s {} {}", i % 64, (i + 1) % 64),
+            _ => "SEPOCH s".to_string(),
+        };
+        if conn.is_none() {
+            match Wire::connect(&addr) {
+                Ok(c) => conn = Some(c),
+                Err(_) => {
+                    drops += 1;
+                    continue;
+                }
+            }
+        }
+        let c = conn.as_mut().expect("connection ensured above");
+        match c.try_ask(&op) {
+            Ok(r) if r.is_empty() => {
+                // Dropped reply: the connection is gone, reconnect.
+                drops += 1;
+                conn = None;
+            }
+            Ok(r) => {
+                if r.starts_with("ERR") {
+                    errs += 1;
+                }
+            }
+            Err(_) => {
+                drops += 1;
+                conn = None;
+            }
+        }
+    }
+    drop(conn);
+
+    // Faults off: the server must answer, correctly, on fresh state.
+    faults::clear();
+    let mut c = None;
+    for _ in 0..10 {
+        if let Ok(mut w) = Wire::connect(&addr) {
+            if matches!(w.try_ask("PING").as_deref(), Ok("PONG")) {
+                c = Some(w);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut c = c.expect("server unreachable after faults cleared");
+    assert!(c.ask("GEN h path:40").starts_with("OK 40 "));
+    assert!(c.ask("CC h C-2").starts_with("OK 1 "));
+    assert_eq!(c.ask("QUERY h 7 C-2"), "OK 0");
+    let metrics = c.ask("METRICS");
+
+    eprintln!("[chaos-soak] err_replies={errs} dropped_conns={drops}");
+    for (point, count) in faults::injected_counts() {
+        eprintln!("[chaos-soak] injected {point}={count}");
+    }
+    eprintln!("[chaos-soak] final {metrics}");
+    drop(c);
+    stop(&shutdown, handle);
+}

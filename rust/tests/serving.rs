@@ -77,6 +77,9 @@ fn every_verb_through_dispatch_directly() {
         // tick streaming lives in the transports (tests/telemetry.rs).
         ("WATCH 3 10".into(), "OK 3 10"),
         ("RECENT".into(), "OK "),
+        // FAULTS is boot-gated: without CONTOUR_FAULTS[_VERB] it must
+        // refuse, not silently no-op. The enabled path is in tests/chaos.rs.
+        ("FAULTS".into(), "ERR FAULTS is disabled"),
     ];
     let mut covered: HashSet<&'static str> = HashSet::new();
     for (line, want) in &table {

@@ -234,10 +234,13 @@ fn server_stream_verbs_end_to_end() {
         "one WAL, one stream"
     );
     assert!(ask(format!("STREAM st3 6 {}", wal.display())).starts_with("ERR"));
-    // Snapshot-only recovery is fine alongside the live stream.
+    // Snapshot-only recovery is fine alongside the live stream. The
+    // reply leads with the classic `n epoch`, then the recovery stats.
     let reply = ask(format!("SLOAD st2 {}", snap.display()));
     assert!(reply.starts_with("OK 6 "), "{reply}");
-    assert_eq!(ask("SQUERY st2 SAME 0 1".into()), format!("OK 1 {}", &reply[5..]));
+    assert!(reply.contains("snapshot="), "recovery stats missing: {reply}");
+    let epoch = reply.split_whitespace().nth(2).unwrap();
+    assert_eq!(ask("SQUERY st2 SAME 0 1".into()), format!("OK 1 {epoch}"));
 
     // LIST shows streams; DROP removes them.
     let list = ask("LIST".into());
