@@ -95,6 +95,7 @@ _OPCODES = {
         (18, "DROP"), (19, "METRICS"), (20, "TRACE"), (21, "RECENT"),
         (22, "QUERY"), (23, "BQUERY"), (24, "HELLO"), (25, "QUIT"),
         (26, "PROM"), (27, "HEALTH"), (28, "WATCH"), (29, "FAULTS"),
+        (30, "SDEL"),
     ]
 }
 
@@ -694,6 +695,27 @@ class ContourClient:
         flat = " ".join(f"{u} {v}" for u, v in edges)
         _, added, epoch = self._request(f"SADD {name} {flat}").split()
         return int(added), int(epoch)
+
+    def stream_delete(self, name: str, edges: Iterable[Tuple[int, int]]) -> Tuple[int, int]:
+        """Remove a batch of edges (multiset semantics: one delete
+        retires one surviving insert of that edge; a parallel edge needs
+        as many deletes as it had inserts). Deleting an edge that is not
+        live is an error. Queries reflect the removal after the next
+        :meth:`stream_epoch` seal. On the binary transport the id pairs
+        travel packed in the frame payload like :meth:`batch_query`.
+        Returns (edges_removed, current_epoch)."""
+        edges = list(edges)
+        if not edges:
+            _, epoch = self._squery(name, "COMPS")
+            return 0, epoch
+        if self._proto == "binary":
+            ids = [x for uv in edges for x in uv]
+            reply = self._frame_request("SDEL", name, ids)
+        else:
+            flat = " ".join(f"{u} {v}" for u, v in edges)
+            reply = self._request(f"SDEL {name} {flat}")
+        _, removed, epoch = reply.split()
+        return int(removed), int(epoch)
 
     def stream_epoch(self, name: str) -> Tuple[int, int]:
         """Seal the current epoch (re-contour compaction + snapshot

@@ -141,6 +141,18 @@ def test_streaming_session(server):
             n2, epoch2 = c.stream_load("live_restored", snap)
             assert n2 == 100 and epoch2 > 1
             assert c.same_comp("live_restored", 0, 2)
+        # Deletions decrement the multiset and publish at the next seal.
+        removed, _ = c.stream_delete("live", [(1, 2)])
+        assert removed == 1
+        assert c.same_comp("live", 0, 2)  # last sealed epoch still answers
+        epoch, comps = c.stream_epoch("live")
+        assert epoch == 2
+        assert comps == 100 - 2
+        assert not c.same_comp("live", 0, 2)
+        assert c.same_comp("live", 0, 1)
+        assert c.stream_delete("live", []) == (0, 2)  # empty batch is a no-op
+        with pytest.raises(ContourError):
+            c.stream_delete("live", [(1, 2)])  # no longer live
         c.drop("live")
         c.drop("live_restored")
 

@@ -3,14 +3,17 @@
 //! paper cares about — many concurrent clients querying components
 //! while the engine runs underneath (§III-A / Arkouda integration).
 //!
-//! Four scenarios, {line, binary} × {single, batch}, all answered from
-//! one warmed labels-cache entry so the numbers isolate protocol +
-//! dispatch overhead rather than connectivity time:
+//! Five scenarios. The four query shapes, {line, binary} × {single,
+//! batch}, are all answered from one warmed labels-cache entry so the
+//! numbers isolate protocol + dispatch overhead rather than
+//! connectivity time; the fifth exercises the streaming write path:
 //!
 //! - `line/single`   — closed-loop `QUERY` per connection
 //! - `line/batch`    — closed-loop `BQUERY` with ids in the arg list
 //! - `binary/single` — framed `QUERY`, one in flight
 //! - `binary/batch`  — framed `BQUERY`, pipelined (client window 16)
+//! - `line/churn`    — closed-loop SADD/SQUERY/SDEL cycles against a
+//!   live stream, one connection also sealing epochs (decremental path)
 //!
 //! Output mirrors the hotpath bench: `serving.{txt,csv}` in the out
 //! directory plus machine-readable `BENCH_serving.json` (schema 1) that
@@ -266,6 +269,46 @@ fn bin_batch(
     Ok(lat)
 }
 
+/// Vertex strip each churn connection owns: deletes always target edges
+/// that same connection inserted, so the server-side multiset never
+/// underflows no matter how the connections interleave.
+const CHURN_SPAN: usize = 512;
+
+/// How many add/query/delete cycles pass between epoch seals on the
+/// sealing connection (conn 0).
+const CHURN_SEAL_EVERY: usize = 16;
+
+/// Churn workload: closed-loop SADD / SQUERY SAME / SDEL cycles against
+/// a live stream — the decremental write path under concurrent load.
+/// Each cycle inserts one edge inside the connection's strip, queries
+/// its endpoints, then deletes it again; connection 0 additionally seals
+/// an epoch every [`CHURN_SEAL_EVERY`] cycles so queries observe the
+/// churn (seals are timed like every other request — they *are* the
+/// expensive part of the workload).
+fn line_churn(addr: &str, stream: &str, conn: usize, cycles: usize) -> Result<Vec<f64>> {
+    let mut c = LineConn::connect(addr)?;
+    let base = conn * CHURN_SPAN;
+    let mut lat = Vec::with_capacity(cycles * 3);
+    let mut timed = |c: &mut LineConn, cmd: &str| -> Result<()> {
+        let t = Instant::now();
+        c.req_ok(cmd)?;
+        lat.push(t.elapsed().as_secs_f64() * 1e6);
+        Ok(())
+    };
+    for i in 0..cycles {
+        let u = base + (i * 97) % (CHURN_SPAN - 1);
+        let v = u + 1;
+        timed(&mut c, &format!("SADD {stream} {u} {v}"))?;
+        timed(&mut c, &format!("SQUERY {stream} SAME {u} {v}"))?;
+        timed(&mut c, &format!("SDEL {stream} {u} {v}"))?;
+        if conn == 0 && (i + 1) % CHURN_SEAL_EVERY == 0 {
+            timed(&mut c, &format!("SEPOCH {stream}"))?;
+        }
+    }
+    let _ = c.req("QUIT");
+    Ok(lat)
+}
+
 /// Fan a per-connection workload across `conns` OS threads; returns all
 /// latencies merged plus the wall time of the slowest connection.
 fn run_conns<F>(conns: usize, f: F) -> Result<(Vec<f64>, f64)>
@@ -299,6 +342,7 @@ pub fn serving_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
     let (scale, degree) = if quick { (12u32, 8usize) } else { (16u32, 16usize) };
     let (conns, singles, batches, batch) =
         if quick { (2usize, 400usize, 40usize, 64usize) } else { (4, 4000, 200, 256) };
+    let churn_cycles = if quick { 48usize } else { 240 };
     let spec = format!("rmat:{scale}:{degree}");
     let n = 1usize << scale;
 
@@ -337,6 +381,13 @@ pub fn serving_json(out_dir: &Path, quick: bool, threads: usize) -> Result<Strin
         lat,
         wall,
     ));
+
+    // Churn scenario: its own stream (no WAL — the bench meters the
+    // in-memory decremental path, not fsync), one vertex strip per
+    // connection.
+    setup.req_ok(&format!("STREAM churn {}", conns * CHURN_SPAN))?;
+    let (lat, wall) = run_conns(conns, |c| line_churn(&addr, "churn", c, churn_cycles))?;
+    records.push(summarize_scenario("line", "churn", conns, 1, 1, lat, wall));
 
     let _ = setup.req("QUIT");
     drop(setup);

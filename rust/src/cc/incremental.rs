@@ -96,6 +96,32 @@ impl IncrementalCc {
         self.edges_added.load(Ordering::Relaxed)
     }
 
+    /// Overwrite the forest in place with a canonical min-id labelling —
+    /// the decremental fixup: a union-find can only merge, so after a
+    /// delete epoch recomputes the true partition, the streaming layer
+    /// stores the new labels straight into the parent array. Parenting
+    /// every vertex on its component minimum respects Rem's
+    /// link-to-smaller invariant, so subsequent concurrent `add_edge`
+    /// calls behave exactly as on a freshly built index.
+    ///
+    /// Callers must hold off concurrent mutators (the streaming layer
+    /// does this under its ingestion gate's write side); concurrent
+    /// readers would observe a torn mix of old and new partitions.
+    pub fn store_labels(&self, labels: &[VId], threads: usize) {
+        assert_eq!(labels.len(), self.n(), "labelling must cover the universe");
+        let p = &self.parent;
+        par::par_for(self.n(), threads, par::AUTO_GRAIN, |range| {
+            for v in range {
+                let l = labels[v];
+                assert!(
+                    (l as usize) <= v && labels[l as usize] == l,
+                    "labels not canonical at vertex {v}"
+                );
+                p[v].store(l, Ordering::Relaxed);
+            }
+        });
+    }
+
     /// Insert an edge (thread-safe; concurrent calls race benignly).
     pub fn add_edge(&self, u: VId, v: VId) {
         assert!((u as usize) < self.n() && (v as usize) < self.n());
@@ -256,6 +282,33 @@ mod tests {
     fn from_labels_rejects_non_canonical() {
         // 1 is not a root (labels[1] = 2 > 1 violates min-id form).
         IncrementalCc::from_labels(&[0, 2, 2]);
+    }
+
+    #[test]
+    fn store_labels_rebuilds_the_partition_in_place() {
+        let idx = IncrementalCc::new(6);
+        idx.add_edge(0, 1);
+        idx.add_edge(1, 2);
+        idx.add_edge(3, 4);
+        assert_eq!(idx.labels(1), vec![0, 0, 0, 3, 3, 5]);
+        // Simulate a delete epoch splitting {0,1,2} into {0,1} and {2}:
+        // the recomputed canonical labelling is stored straight in.
+        idx.store_labels(&[0, 0, 2, 3, 3, 5], 1);
+        assert_eq!(idx.labels(1), vec![0, 0, 2, 3, 3, 5]);
+        assert_eq!(idx.num_components(), 4);
+        assert!(!idx.connected(0, 2));
+        // The flattened forest stays a valid Rem structure: new unions
+        // keep working, and forest_edges reflects the stored partition.
+        assert_eq!(idx.forest_edges(1).len(), 2);
+        idx.add_edge(2, 5);
+        assert!(idx.connected(2, 5));
+        assert_eq!(idx.labels(1), vec![0, 0, 2, 3, 3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn store_labels_rejects_non_canonical() {
+        IncrementalCc::new(3).store_labels(&[0, 2, 2], 1);
     }
 
     /// Concurrent `add_edge` from multiple writer threads interleaved

@@ -157,7 +157,7 @@ fn deadline_applies(cmd: &str) -> bool {
     matches!(
         cmd,
         "GEN" | "UPLOAD" | "LOAD" | "CC" | "LABELS" | "QUERY" | "BQUERY" | "SHARD" | "PCC"
-            | "STREAM" | "SADD" | "SEPOCH" | "SSAVE" | "SLOAD"
+            | "STREAM" | "SADD" | "SDEL" | "SEPOCH" | "SSAVE" | "SLOAD"
     )
 }
 
@@ -260,6 +260,7 @@ fn run_verb(state: &ServerState, cmd: &str, rest: &[&str], body: Body<'_>) -> Re
         "SHARDSTATS" => Reply::Ok(cmd_shardstats(state, rest)?),
         "STREAM" => Reply::Ok(cmd_stream(state, rest)?),
         "SADD" => Reply::Ok(cmd_sadd(state, rest)?),
+        "SDEL" => Reply::Ok(cmd_sdel(state, rest, body)?),
         "SEPOCH" => Reply::Ok(cmd_sepoch(state, rest)?),
         "SQUERY" => Reply::Ok(cmd_squery(state, rest)?),
         "SSAVE" => Reply::Ok(cmd_ssave(state, rest)?),
@@ -859,6 +860,32 @@ fn cmd_sadd(state: &ServerState, rest: &[&str]) -> Result<String> {
     Ok(format!("{added} {}", s.epoch()))
 }
 
+fn cmd_sdel(state: &ServerState, rest: &[&str], body: Body<'_>) -> Result<String> {
+    let name = rest.first().ok_or_else(|| anyhow!("usage: SDEL name u v [u v ...]"))?;
+    let parsed: Vec<VId> = rest[1..]
+        .iter()
+        .map(|t| t.parse::<VId>().map_err(|e| anyhow!("bad vertex id {t:?}: {e}")))
+        .collect::<Result<_>>()?;
+    // Like BQUERY, the binary transport may carry the ids as a packed
+    // frame payload instead of arg-list text.
+    let ids: &[VId] = match body {
+        Body::Ids(ids) => {
+            anyhow::ensure!(
+                parsed.is_empty(),
+                "SDEL takes ids in the frame payload or the arg list, not both"
+            );
+            ids
+        }
+        _ => &parsed,
+    };
+    anyhow::ensure!(!ids.is_empty() && ids.len() % 2 == 0, "SDEL needs one or more u v pairs");
+    let edges: Vec<(VId, VId)> = ids.chunks_exact(2).map(|p| (p[0], p[1])).collect();
+    let s = stream_of(state, name)?;
+    let removed = s.delete_edges(&edges)?;
+    state.metrics.stream_deletes.add(removed as u64);
+    Ok(format!("{removed} {}", s.epoch()))
+}
+
 fn cmd_sepoch(state: &ServerState, rest: &[&str]) -> Result<String> {
     let name = rest.first().ok_or_else(|| anyhow!("usage: SEPOCH name"))?;
     let snap = stream_of(state, name)?.seal_epoch()?;
@@ -866,10 +893,15 @@ fn cmd_sepoch(state: &ServerState, rest: &[&str]) -> Result<String> {
     Ok(format!("{} {}", snap.epoch, snap.num_components))
 }
 
+/// One usage string for every SQUERY error path — the arity check and
+/// the per-op match used to disagree about whether `[epoch]` existed.
+const SQUERY_USAGE: &str =
+    "usage: SQUERY name SAME u v [epoch] | SIZE v [epoch] | COMPS [epoch] | LABEL v [epoch]";
+
 fn cmd_squery(state: &ServerState, rest: &[&str]) -> Result<String> {
     let (name, op, args) = match rest {
         [name, op, args @ ..] => (*name, op.to_ascii_uppercase(), args),
-        _ => bail!("usage: SQUERY name SAME|SIZE|COMPS|LABEL args... [epoch]"),
+        _ => bail!("{SQUERY_USAGE}"),
     };
     let nums: Vec<u64> = args
         .iter()
@@ -897,7 +929,7 @@ fn cmd_squery(state: &ServerState, rest: &[&str]) -> Result<String> {
             let snap = s.snapshot_at(nums.get(1).copied())?;
             Ok(format!("{} {}", snap.label(vid(*v)?)?, snap.epoch))
         }
-        _ => bail!("usage: SQUERY name SAME u v [e] | SIZE v [e] | COMPS [e] | LABEL v [e]"),
+        _ => bail!("{SQUERY_USAGE}"),
     }
 }
 

@@ -45,6 +45,8 @@ pub struct Metrics {
     pub streams_created: Counter,
     /// Edges ingested through SADD across all streams.
     pub stream_edges: Counter,
+    /// Edges removed through SDEL across all streams.
+    pub stream_deletes: Counter,
     /// Epochs sealed (SEPOCH, plus implicit seals on recovery).
     pub stream_epochs: Counter,
     /// SQUERY requests served.
@@ -91,6 +93,7 @@ impl Default for Metrics {
             pcc_millis: Counter::default(),
             streams_created: Counter::default(),
             stream_edges: Counter::default(),
+            stream_deletes: Counter::default(),
             stream_epochs: Counter::default(),
             stream_queries: Counter::default(),
             bytes_in: Counter::default(),
@@ -142,6 +145,7 @@ impl Metrics {
             ("pcc_millis", self.pcc_millis.get()),
             ("streams", self.streams_created.get()),
             ("stream_edges", self.stream_edges.get()),
+            ("stream_deletes", self.stream_deletes.get()),
             ("stream_epochs", self.stream_epochs.get()),
             ("stream_queries", self.stream_queries.get()),
             ("panics", self.panics.get()),
@@ -177,7 +181,7 @@ impl Metrics {
              hello_upgrades={} batch_queries={} batch_vertices={} \
              graphs_loaded={} cc_runs={} cc_millis={} cc_cache_hits={} \
              cc_cache_misses={} shards={} pcc_runs={} pcc_millis={} \
-             streams={} stream_edges={} stream_epochs={} stream_queries={} \
+             streams={} stream_edges={} stream_deletes={} stream_epochs={} stream_queries={} \
              panics={} deadlines={} faults_injected={} pool_workers={} \
              pool_jobs={} pool_pulls={} pool_steals={} pool_parks={} pool_wakes={} \
              pool_inflight={} pool_max_inflight={} pool_exec_peak={} pool_pins={} \
@@ -205,6 +209,7 @@ impl Metrics {
             self.pcc_millis.get(),
             self.streams_created.get(),
             self.stream_edges.get(),
+            self.stream_deletes.get(),
             self.stream_epochs.get(),
             self.stream_queries.get(),
             self.panics.get(),

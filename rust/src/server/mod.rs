@@ -130,6 +130,10 @@
 //!                                    back only one live stream; numeric
 //!                                    HIST caps retained epoch snapshots)
 //!   SADD name u v [u v ...]        → OK added epoch
+//!   SDEL name u v [u v ...]        → OK removed epoch  (multiset delete;
+//!                                    queries reflect it after the next
+//!                                    SEPOCH; binary frames may carry the
+//!                                    id pairs in the payload like BQUERY)
 //!   SEPOCH name                    → OK epoch components  (seal epoch)
 //!   SQUERY name SAME u v [e]       → OK 0|1 epoch
 //!   SQUERY name SIZE v [e]         → OK size epoch

@@ -98,6 +98,7 @@ pub const OPCODES: &[(u8, &str)] = &[
     (27, "HEALTH"),
     (28, "WATCH"),
     (29, "FAULTS"),
+    (30, "SDEL"),
 ];
 
 pub fn opcode_of(verb: &str) -> Option<u8> {
@@ -325,6 +326,7 @@ fn is_pipelined(verb: &str) -> bool {
             | "SHARD"
             | "STREAM"
             | "SADD"
+            | "SDEL"
             | "SEPOCH"
             | "SSAVE"
             | "SLOAD"

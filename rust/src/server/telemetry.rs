@@ -66,6 +66,7 @@ pub const WATCH_KEYS: &[&str] = &[
     "pcc_runs",
     "batch_queries",
     "stream_queries",
+    "stream_deletes",
     "pool_jobs",
 ];
 

@@ -22,32 +22,58 @@
 //!   past epoch) and never block on in-flight ingestion batches: the
 //!   only lock a query touches is a read-lock on the snapshot table,
 //!   whose writers hold it for a single O(1) pointer push.
+//! * **Deletions** — [`StreamingCc::delete_edges`] removes previously
+//!   ingested edges. A union-find can only merge, so deletions are the
+//!   part it cannot express: a compact live-edge multiset (normalized
+//!   pair → multiplicity) rides alongside, deletions are WAL-logged
+//!   (v3 delete frames) and decrement it, and the next
+//!   [`StreamingCc::seal_epoch`] repairs the labelling by re-running
+//!   Contour over only the *affected components* — the pre-delete
+//!   labels (a coarsening of the truth: every merge not justified by a
+//!   surviving edge came from a deleted one) identify exactly which
+//!   components the deletions touched; untouched components carry
+//!   their labels forward verbatim. When the affected mass passes half
+//!   the universe the seal falls back to one full re-contour. Either
+//!   way the repaired labels are stored straight back into the
+//!   union-find ([`IncrementalCc::store_labels`]), so insertions keep
+//!   the lock-free path. Parallel edges are a multiset: each accepted
+//!   delete removes one multiplicity, and connectivity only changes
+//!   when the last one goes.
 //! * **Durability** — a write-ahead edge log ([`wal`]) plus a binary
 //!   snapshot format ([`snapshot`]). [`StreamingCc::recover`] seeds the
 //!   union-find from the latest snapshot, replays the WAL suffix past
 //!   the snapshot's seal marker (full replay if the marker is gone —
 //!   edge re-insertion is idempotent), and seals a fresh epoch so the
-//!   recovered state is immediately queryable.
+//!   recovered state is immediately queryable. A log holding delete
+//!   frames voids the snapshot's labels as a seed (a deleted edge baked
+//!   into them could never be backed out): recovery then rebuilds from
+//!   the surviving multiset of the full log instead.
 //!
 //! Consistency model: a sealed epoch is a *consistent cut*. An
-//! ingestion gate (reader side: `add_edges`; writer side: the seal's
-//! forest capture) guarantees the captured forest contains exactly the
-//! batches acknowledged before the capture began — and the WAL seal
-//! marker is written inside the same critical section, so recovery
-//! skips exactly the edges a snapshot already covers. The gate pauses
-//! ingestion only for the O(n) capture and the buffered seal-marker
-//! append — the WAL fsync and the Contour compaction both run off the
-//! gate; queries touch neither lock and keep answering from the
-//! published snapshots throughout.
+//! ingestion gate (reader side: `add_edges` / `delete_edges`; writer
+//! side: the seal's forest capture) guarantees the captured forest
+//! contains exactly the batches acknowledged before the capture began —
+//! and the WAL seal marker is written inside the same critical section,
+//! so recovery skips exactly the edges a snapshot already covers. For
+//! insert-only epochs the gate pauses ingestion only for the O(n)
+//! capture and the buffered seal-marker append — the WAL fsync and the
+//! Contour compaction both run off the gate; a delete epoch holds the
+//! gate for its re-contour too (the union-find fixup must land before
+//! ingestion resumes). Queries touch neither lock and keep answering
+//! from the published snapshots throughout. Deletions take effect in
+//! the *published labelling* at the next seal; until then
+//! [`StreamingCc::connected_live`] may still answer `true` for a
+//! severed pair (the live union-find cannot un-merge).
 
 pub mod snapshot;
 pub mod wal;
 
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::cc::contour::Contour;
 use crate::cc::incremental::IncrementalCc;
@@ -73,19 +99,28 @@ pub struct RecoveryInfo {
     pub frames_replayed: usize,
     /// Individual edges re-applied from the replayed frames.
     pub edges_replayed: usize,
+    /// Individual deletions replayed from the log (0 for insert-only
+    /// logs — every v1/v2 log, and v3 logs that never saw a delete).
+    pub deletes_replayed: usize,
     /// Bytes of torn WAL tail truncated away (crash mid-append).
     pub truncated_bytes: u64,
 }
 
 impl RecoveryInfo {
-    /// One-line summary for replies and logs.
+    /// One-line summary for replies and logs. The deletes field only
+    /// appears when deletions were replayed, so insert-only recoveries
+    /// keep their historical wire shape.
     pub fn summary(&self) -> String {
         let snap = match self.snapshot_epoch {
             Some(e) => format!("{e}"),
             None => "-".to_string(),
         };
+        let deletes = match self.deletes_replayed {
+            0 => String::new(),
+            d => format!(" deletes={d}"),
+        };
         format!(
-            "snapshot={snap} frames={} replayed={} edges={} truncated={}B",
+            "snapshot={snap} frames={} replayed={} edges={}{deletes} truncated={}B",
             self.wal_frames, self.frames_replayed, self.edges_replayed, self.truncated_bytes
         )
     }
@@ -98,6 +133,22 @@ impl RecoveryInfo {
 /// argument) when deeper time travel is worth the memory.
 pub const DEFAULT_MAX_HISTORY: usize = 64;
 
+/// Fraction of the vertex universe (numerator / denominator) up to
+/// which a delete epoch re-contours only the affected components;
+/// past it, the bookkeeping buys nothing over one full re-contour.
+const SCOPED_MAX_NUM: usize = 1;
+const SCOPED_MAX_DEN: usize = 2;
+
+/// Normalized multiset key for an undirected edge.
+#[inline]
+fn norm(u: VId, v: VId) -> (VId, VId) {
+    if u <= v {
+        (u, v)
+    } else {
+        (v, u)
+    }
+}
+
 /// The streaming connectivity service over a fixed vertex universe.
 pub struct StreamingCc {
     inc: IncrementalCc,
@@ -106,16 +157,32 @@ pub struct StreamingCc {
     /// Where the WAL lives, when attached — exposed so owners (e.g. the
     /// server) can refuse to attach a second appender to the same file.
     wal_path: Option<std::path::PathBuf>,
+    /// Live-edge multiset: normalized `(min, max)` pair → multiplicity.
+    /// The union-find cannot express removal, so this is the ground
+    /// truth deletions validate against and delete epochs rebuild from.
+    multiset: Mutex<HashMap<(VId, VId), u32>>,
+    /// Deletions accepted since the last seal — the endpoints scope the
+    /// next seal's re-contour to the components they touch.
+    pending_deletes: Mutex<Vec<(VId, VId)>>,
     /// Published snapshots, ascending by epoch. Non-empty from
-    /// construction on; the last entry is the current epoch.
-    history: RwLock<Vec<Arc<Snapshot>>>,
+    /// construction on; the back entry is the current epoch. A deque:
+    /// retention pressure evicts from the front in O(1), where a `Vec`
+    /// would shift the whole window per seal.
+    history: RwLock<VecDeque<Arc<Snapshot>>>,
     last_epoch: AtomicU64,
     edges_ingested: AtomicUsize,
+    edges_live: AtomicUsize,
+    edges_deleted: AtomicUsize,
+    /// Delete-epoch seals that re-contoured only the affected
+    /// components / that fell back to a full pass.
+    scoped_recontours: AtomicUsize,
+    full_recontours: AtomicUsize,
     /// Serializes compactions (ingestion and queries never take it).
     seal: Mutex<()>,
-    /// Ingestion gate: `add_edges` holds the read side while logging and
-    /// applying a batch; the seal's forest capture takes the write side
-    /// so each epoch is a consistent cut of acknowledged batches.
+    /// Ingestion gate: `add_edges` / `delete_edges` hold the read side
+    /// while logging and applying a batch; the seal's forest capture
+    /// takes the write side so each epoch is a consistent cut of
+    /// acknowledged batches.
     gate: RwLock<()>,
     max_history: usize,
     /// Duration of the most recent seal-time WAL fsync, in nanoseconds
@@ -136,9 +203,17 @@ impl StreamingCc {
             threads,
             wal: None,
             wal_path: None,
-            history: RwLock::new(vec![Arc::new(Snapshot::from_labels(0, 0, identity))]),
+            multiset: Mutex::new(HashMap::new()),
+            pending_deletes: Mutex::new(Vec::new()),
+            history: RwLock::new(VecDeque::from([Arc::new(Snapshot::from_labels(
+                0, 0, identity,
+            ))])),
             last_epoch: AtomicU64::new(0),
             edges_ingested: AtomicUsize::new(0),
+            edges_live: AtomicUsize::new(0),
+            edges_deleted: AtomicUsize::new(0),
+            scoped_recontours: AtomicUsize::new(0),
+            full_recontours: AtomicUsize::new(0),
             seal: Mutex::new(()),
             gate: RwLock::new(()),
             max_history: DEFAULT_MAX_HISTORY,
@@ -178,6 +253,13 @@ impl StreamingCc {
     /// and/or an optional WAL (at least one required). Ends by sealing a
     /// fresh epoch covering everything recovered, and re-attaches the
     /// WAL for continued appends.
+    ///
+    /// The live-edge multiset is rebuilt from the *full* log (the WAL is
+    /// the complete insert/delete history — it is never rotated), so
+    /// recovered streams validate future deletions against exactly what
+    /// survived. Snapshot-only recovery has no log to rebuild from: the
+    /// multiset starts empty and deletions of pre-snapshot edges are
+    /// rejected — the documented limit of snapshot-only durability.
     pub fn recover(snapshot: Option<&Path>, wal: Option<&Path>, threads: usize) -> Result<Self> {
         ensure!(
             snapshot.is_some() || wal.is_some(),
@@ -196,49 +278,111 @@ impl StreamingCc {
             records = recs;
             repair = stats;
         }
-        let (inc, base_epoch, base_edges) = match &snap {
-            Some(s) => {
-                if let Some(wn) = wal_n {
-                    ensure!(
-                        wn == s.n(),
-                        "snapshot holds n={} but the WAL holds n={wn}",
-                        s.n()
-                    );
-                }
-                (IncrementalCc::from_labels(&s.labels), s.epoch, s.edges_ingested)
-            }
-            None => (IncrementalCc::new(wal_n.expect("ensured above")), 0, 0),
-        };
-        // Skip WAL records already folded into the snapshot: everything
-        // up to and including the seal marker for its epoch. If that
-        // marker is absent (older snapshot, rotated log), replay the
-        // whole log — re-inserting known edges is idempotent.
-        let start = match &snap {
-            Some(s) => records
-                .iter()
-                .position(|r| matches!(r, WalRecord::EpochSeal(e) if *e == s.epoch))
-                .map(|i| i + 1)
-                .unwrap_or(0),
-            None => 0,
-        };
-        let mut last_epoch = base_epoch;
-        let mut replayed = 0usize;
-        for rec in &records[start..] {
+        if let (Some(s), Some(wn)) = (&snap, wal_n) {
+            ensure!(wn == s.n(), "snapshot holds n={} but the WAL holds n={wn}", s.n());
+        }
+        // One pass over the full log: the surviving multiset plus honest
+        // accepted-insert / accepted-delete counts. Self-loops in legacy
+        // logs (written before ingestion dropped them) are skipped — they
+        // never affected connectivity. A delete with no live insert
+        // cannot come from any legal execution (deletions are only
+        // accepted, and logged, after the insert that made them
+        // deletable): corruption, loudly.
+        let mut multiset: HashMap<(VId, VId), u32> = HashMap::new();
+        let mut ingested = 0usize;
+        let mut deleted = 0usize;
+        let mut has_deletes = false;
+        for (i, rec) in records.iter().enumerate() {
             match rec {
                 WalRecord::Edges(batch) => {
                     for &(u, v) in batch {
-                        inc.add_edge(u, v);
+                        if u == v {
+                            continue;
+                        }
+                        *multiset.entry(norm(u, v)).or_insert(0) += 1;
+                        ingested += 1;
                     }
-                    replayed += batch.len();
                 }
-                WalRecord::EpochSeal(e) => last_epoch = last_epoch.max(*e),
+                WalRecord::Deletes(batch) => {
+                    has_deletes = true;
+                    for &(u, v) in batch {
+                        match multiset.get_mut(&norm(u, v)) {
+                            Some(c) if *c > 1 => *c -= 1,
+                            Some(_) => {
+                                multiset.remove(&norm(u, v));
+                            }
+                            None => bail!(
+                                "WAL record {i}: delete of ({u}, {v}) without a live insert — \
+                                 log corrupt"
+                            ),
+                        }
+                        deleted += 1;
+                    }
+                }
+                WalRecord::EpochSeal(_) => {}
             }
         }
+        let live = multiset.values().map(|&c| c as usize).sum::<usize>();
+        let mut last_epoch = snap.as_ref().map(|s| s.epoch).unwrap_or(0);
+        for rec in &records {
+            if let WalRecord::EpochSeal(e) = rec {
+                last_epoch = last_epoch.max(*e);
+            }
+        }
+        let (inc, frames_replayed, edges_replayed) = if has_deletes {
+            // Deletions void the snapshot's labels as a seed — the
+            // union-find can only merge, so a deleted edge baked into
+            // them could never be backed out. Rebuild from the surviving
+            // multiset instead: one insert per distinct live pair.
+            let inc = IncrementalCc::new(wal_n.expect("deletes imply a WAL"));
+            for &(u, v) in multiset.keys() {
+                inc.add_edge(u, v);
+            }
+            (inc, records.len(), multiset.len())
+        } else {
+            // Insert-only log: seed from the snapshot's labels and
+            // replay only the suffix past its seal marker. If that
+            // marker is absent (older snapshot), replay the whole log —
+            // re-inserting known edges is idempotent.
+            let inc = match &snap {
+                Some(s) => IncrementalCc::from_labels(&s.labels),
+                None => IncrementalCc::new(wal_n.expect("ensured above")),
+            };
+            let start = match &snap {
+                Some(s) => records
+                    .iter()
+                    .position(|r| matches!(r, WalRecord::EpochSeal(e) if *e == s.epoch))
+                    .map(|i| i + 1)
+                    .unwrap_or(0),
+                None => 0,
+            };
+            let mut replayed = 0usize;
+            for rec in &records[start..] {
+                if let WalRecord::Edges(batch) = rec {
+                    for &(u, v) in batch {
+                        if u == v {
+                            continue;
+                        }
+                        inc.add_edge(u, v);
+                        replayed += 1;
+                    }
+                }
+            }
+            (inc, records.len() - start, replayed)
+        };
+        // Counters: the full log is authoritative when attached; a
+        // snapshot alone carries its own totals forward.
+        let (ingested, live) = match (&snap, wal.is_some()) {
+            (_, true) => (ingested, live),
+            (Some(s), false) => (s.edges_ingested, s.edges_live),
+            (None, false) => unreachable!("ensured above"),
+        };
         let info = RecoveryInfo {
             snapshot_epoch: snap.as_ref().map(|s| s.epoch),
             wal_frames: repair.frames,
-            frames_replayed: records.len() - start,
-            edges_replayed: replayed,
+            frames_replayed,
+            edges_replayed,
+            deletes_replayed: deleted,
             truncated_bytes: repair.truncated_bytes,
         };
         crate::info!("stream recovery: {}", info.summary());
@@ -249,9 +393,15 @@ impl StreamingCc {
                 .map(|p| Wal::append_to(p).map(|(w, _)| Mutex::new(w)))
                 .transpose()?,
             wal_path: wal.map(|p| p.to_path_buf()),
+            multiset: Mutex::new(multiset),
+            pending_deletes: Mutex::new(Vec::new()),
             history: RwLock::new(snap.into_iter().map(Arc::new).collect()),
             last_epoch: AtomicU64::new(last_epoch),
-            edges_ingested: AtomicUsize::new(base_edges + replayed),
+            edges_ingested: AtomicUsize::new(ingested),
+            edges_live: AtomicUsize::new(live),
+            edges_deleted: AtomicUsize::new(ingested - live),
+            scoped_recontours: AtomicUsize::new(0),
+            full_recontours: AtomicUsize::new(0),
             seal: Mutex::new(()),
             gate: RwLock::new(()),
             max_history: DEFAULT_MAX_HISTORY,
@@ -282,9 +432,33 @@ impl StreamingCc {
         self.last_epoch.load(Ordering::Relaxed)
     }
 
-    /// Edge insertions acknowledged so far (duplicates counted).
+    /// Edge insertions accepted so far (parallel edges counted;
+    /// self-loops are dropped at ingestion and never counted).
     pub fn edges_ingested(&self) -> usize {
         self.edges_ingested.load(Ordering::Relaxed)
+    }
+
+    /// Edges currently live: accepted insertions minus accepted
+    /// deletions.
+    pub fn edges_live(&self) -> usize {
+        self.edges_live.load(Ordering::Relaxed)
+    }
+
+    /// Deletions accepted so far.
+    pub fn edges_deleted(&self) -> usize {
+        self.edges_deleted.load(Ordering::Relaxed)
+    }
+
+    /// Delete-epoch seals that re-contoured only the affected
+    /// components.
+    pub fn scoped_recontours(&self) -> usize {
+        self.scoped_recontours.load(Ordering::Relaxed)
+    }
+
+    /// Delete-epoch seals that fell back to a full re-contour (affected
+    /// mass above the scoped threshold).
+    pub fn full_recontours(&self) -> usize {
+        self.full_recontours.load(Ordering::Relaxed)
     }
 
     /// Nanoseconds the most recent seal-time WAL fsync took (0 with no
@@ -301,8 +475,11 @@ impl StreamingCc {
     }
 
     /// Ingest one batch: WAL-log it, then apply it to the union-find as
-    /// a grouped parallel sweep. Returns the number of edges accepted.
-    /// Safe to call from many threads at once.
+    /// a grouped parallel sweep. Self-loops are dropped — they never
+    /// affect connectivity, and admitting them would corrupt the
+    /// accounting deletions rely on (`edges_ingested` must count exactly
+    /// the edges that can later be deleted). Returns the number of edges
+    /// accepted. Safe to call from many threads at once.
     pub fn add_edges(&self, edges: &[(VId, VId)]) -> Result<usize> {
         let n = self.n();
         for &(u, v) in edges {
@@ -311,71 +488,235 @@ impl StreamingCc {
                 "edge ({u}, {v}) out of range (n = {n})"
             );
         }
+        let accepted: Vec<(VId, VId)> =
+            edges.iter().copied().filter(|&(u, v)| u != v).collect();
+        if accepted.is_empty() {
+            return Ok(0);
+        }
         // Hold the ingestion gate (read side, so batches still run in
         // parallel with each other) across log + apply + acknowledge:
         // a seal either sees this whole batch or none of it.
         let _ingest = rlock(&self.gate);
         if let Some(w) = &self.wal {
-            mlock(w).append_edges(edges)?;
+            mlock(w).append_edges(&accepted)?;
         }
         let inc = &self.inc;
-        par::par_for(edges.len(), self.threads, par::AUTO_GRAIN, |range| {
+        par::par_for(accepted.len(), self.threads, par::AUTO_GRAIN, |range| {
             for e in range {
-                inc.add_edge(edges[e].0, edges[e].1);
+                inc.add_edge(accepted[e].0, accepted[e].1);
             }
         });
-        self.edges_ingested.fetch_add(edges.len(), Ordering::Relaxed);
-        Ok(edges.len())
+        // The multiset increment comes *after* the WAL append: a delete
+        // only accepts an edge it can see here, so the matching insert
+        // frame always precedes the delete frame in the log, and replay
+        // can never underflow.
+        {
+            let mut ms = mlock(&self.multiset);
+            for &(u, v) in &accepted {
+                *ms.entry(norm(u, v)).or_insert(0) += 1;
+            }
+        }
+        self.edges_ingested.fetch_add(accepted.len(), Ordering::Relaxed);
+        self.edges_live.fetch_add(accepted.len(), Ordering::Relaxed);
+        Ok(accepted.len())
     }
 
-    /// Live (pre-seal) connectivity probe against the union-find —
-    /// sees edges the next epoch will publish.
+    /// Remove a batch of previously ingested edges. Parallel edges form
+    /// a multiset: each accepted delete removes one multiplicity, and
+    /// connectivity only changes when the last one goes. A pair that is
+    /// not currently live — never inserted, already fully deleted, or a
+    /// self-loop (never admitted) — fails the whole batch before
+    /// anything is logged or applied, so a caller retrying after an
+    /// error never half-applies a batch. Returns the number of
+    /// deletions accepted (the full batch size on success).
+    ///
+    /// Deletions are durably logged before they are applied, like
+    /// inserts, and take effect in the *published labelling* at the next
+    /// [`StreamingCc::seal_epoch`]: the live union-find cannot un-merge,
+    /// so [`StreamingCc::connected_live`] may keep answering `true` for
+    /// a severed pair until the seal re-contours the affected
+    /// components.
+    pub fn delete_edges(&self, edges: &[(VId, VId)]) -> Result<usize> {
+        let n = self.n();
+        for &(u, v) in edges {
+            ensure!(
+                (u as usize) < n && (v as usize) < n,
+                "edge ({u}, {v}) out of range (n = {n})"
+            );
+        }
+        let _ingest = rlock(&self.gate);
+        // The multiset lock spans accept-check, WAL append and decrement
+        // so two racing deletes cannot both claim an edge's last
+        // multiplicity. (Inserts never hold the WAL and multiset locks
+        // at once, so this multiset→WAL order cannot deadlock against
+        // their WAL→multiset sequence.)
+        let mut ms = mlock(&self.multiset);
+        let mut taken: HashMap<(VId, VId), u32> = HashMap::new();
+        let mut accepted: Vec<(VId, VId)> = Vec::new();
+        for &(u, v) in edges {
+            ensure!(u != v, "edge ({u}, {v}) is a self-loop (never live, delete rejected)");
+            let k = norm(u, v);
+            let have = ms.get(&k).copied().unwrap_or(0);
+            let t = taken.entry(k).or_insert(0);
+            ensure!(
+                *t < have,
+                "edge ({u}, {v}) is not live (delete rejected, batch unapplied)"
+            );
+            *t += 1;
+            accepted.push(k);
+        }
+        if accepted.is_empty() {
+            return Ok(0);
+        }
+        // Log before apply: a failed append leaves the whole batch
+        // unapplied and unacknowledged.
+        if let Some(w) = &self.wal {
+            mlock(w).append_deletes(&accepted)?;
+        }
+        for &k in &accepted {
+            match ms.get_mut(&k) {
+                Some(c) if *c > 1 => *c -= 1,
+                _ => {
+                    ms.remove(&k);
+                }
+            }
+        }
+        drop(ms);
+        mlock(&self.pending_deletes).extend_from_slice(&accepted);
+        self.edges_live.fetch_sub(accepted.len(), Ordering::Relaxed);
+        self.edges_deleted.fetch_add(accepted.len(), Ordering::Relaxed);
+        Ok(accepted.len())
+    }
+
+    /// Live (pre-seal) connectivity probe against the union-find — sees
+    /// edges the next epoch will publish. After a delete, the probe may
+    /// still answer `true` for a severed pair until the next seal
+    /// repairs the union-find (merges cannot be undone in place).
     pub fn connected_live(&self, u: VId, v: VId) -> Result<bool> {
         let n = self.n();
         ensure!((u as usize) < n && (v as usize) < n, "vertex out of range (n = {n})");
         Ok(self.inc.connected(u, v))
     }
 
-    /// Seal the current epoch: run the re-contour compaction over the
-    /// union-find forest, publish the resulting snapshot, and append a
-    /// seal marker to the WAL (fsynced). Returns the new snapshot.
-    pub fn seal_epoch(&self) -> Result<Arc<Snapshot>> {
-        let _guard = mlock(&self.seal);
-        let epoch = self.last_epoch.load(Ordering::Relaxed) + 1;
-        // Consistent cut: with the gate held exclusively, no batch is
-        // mid-application, so the forest is exactly the acknowledged
-        // state, and the WAL seal marker written inside the same
-        // critical section cleanly partitions the log at this epoch.
-        let (edges, forest) = {
-            let _cut = wlock(&self.gate);
-            let edges = self.edges_ingested.load(Ordering::Relaxed);
-            let forest = self.inc.forest_edges(self.threads);
-            if let Some(w) = &self.wal {
-                // Buffered marker append only — it fixes the log order.
-                mlock(w).seal_epoch(epoch)?;
-            }
-            (edges, forest)
-        };
-        // Durability fsync off the gate: ingestion resumes while the
-        // disk syncs (frames appended meanwhile simply ride along).
+    /// Flush and fsync the WAL, recording the fsync duration as the
+    /// health signal.
+    fn wal_sync_timed(&self) -> Result<()> {
         if let Some(w) = &self.wal {
             let t = std::time::Instant::now();
             mlock(w).sync()?;
             let ns = t.elapsed().as_nanos().min(u64::MAX as u128) as u64;
             self.last_fsync_ns.store(ns, Ordering::Relaxed);
         }
-        // Re-contour compaction, off the gate so ingestion resumes while
-        // labels are recanonicalized: the forest is itself a graph with
-        // the same components, so the paper's operator over it yields
-        // the canonical min-id labelling of everything ingested so far.
-        let g = EdgeList::from_pairs(self.n(), &forest).into_csr();
-        let labels = Contour::c2().with_threads(self.threads).run(&g);
-        let snap = Arc::new(Snapshot::from_labels(epoch, edges, labels));
+        Ok(())
+    }
+
+    /// Rebuild the labelling after an epoch with deletions — the
+    /// paper's re-contour operator scoped to the damage. The pre-delete
+    /// union-find partition is a coarsening of the truth (every merge
+    /// not justified by a surviving edge came from a deleted one, whose
+    /// endpoints are in `deletes`), so its labels identify exactly the
+    /// components the deletions touched: unaffected components carry
+    /// their labels forward verbatim, affected ones are re-contoured
+    /// from their surviving edges. When the affected mass passes
+    /// [`SCOPED_MAX_NUM`]/[`SCOPED_MAX_DEN`] of the universe, one full
+    /// re-contour over the surviving multiset is cheaper than the
+    /// bookkeeping. Runs under the ingestion gate's write side.
+    fn recontour_deletes(&self, deletes: &[(VId, VId)]) -> Labels {
+        let n = self.n();
+        let uf = self.inc.labels(self.threads);
+        let mut affected = vec![false; n];
+        for &(u, v) in deletes {
+            affected[uf[u as usize] as usize] = true;
+            affected[uf[v as usize] as usize] = true;
+        }
+        let mass = uf.iter().filter(|&&l| affected[l as usize]).count();
+        let scoped = mass * SCOPED_MAX_DEN <= n * SCOPED_MAX_NUM;
+        let sub: Vec<(VId, VId)> = {
+            let ms = mlock(&self.multiset);
+            if scoped {
+                // A surviving edge's endpoints share a union-find
+                // component (the edge is part of its closure), so one
+                // endpoint decides membership.
+                ms.keys().copied().filter(|&(u, _)| affected[uf[u as usize] as usize]).collect()
+            } else {
+                ms.keys().copied().collect()
+            }
+        };
+        let g = EdgeList::from_pairs(n, &sub).into_csr();
+        let fresh = Contour::c2().with_threads(self.threads).run(&g);
+        if !scoped {
+            self.full_recontours.fetch_add(1, Ordering::Relaxed);
+            return fresh;
+        }
+        self.scoped_recontours.fetch_add(1, Ordering::Relaxed);
+        // Merge: a true component never spans affected and unaffected
+        // union-find components (it refines them), so affected vertices
+        // take the re-contoured labels — their entire component is in
+        // the scoped subgraph, making its min-id the global one — and
+        // everything else keeps its carried label.
+        let mut out = uf;
+        for v in 0..n {
+            if affected[out[v] as usize] {
+                out[v] = fresh[v];
+            }
+        }
+        out
+    }
+
+    /// Seal the current epoch: run the re-contour compaction, publish
+    /// the resulting snapshot, and append a seal marker to the WAL
+    /// (fsynced). Insert-only epochs re-contour the union-find forest
+    /// off the ingestion gate; epochs with deletions rebuild the
+    /// affected components under it (see [`StreamingCc::delete_edges`]).
+    /// Returns the new snapshot.
+    pub fn seal_epoch(&self) -> Result<Arc<Snapshot>> {
+        let _guard = mlock(&self.seal);
+        let epoch = self.last_epoch.load(Ordering::Relaxed) + 1;
+        // Consistent cut: with the gate held exclusively, no batch is
+        // mid-application, so union-find and multiset are exactly the
+        // acknowledged state, and the WAL seal marker written inside the
+        // same critical section cleanly partitions the log at this
+        // epoch.
+        let cut = wlock(&self.gate);
+        let edges = self.edges_ingested.load(Ordering::Relaxed);
+        let live = self.edges_live.load(Ordering::Relaxed);
+        let deletes: Vec<(VId, VId)> = std::mem::take(&mut *mlock(&self.pending_deletes));
+        let labels = if deletes.is_empty() {
+            let forest = self.inc.forest_edges(self.threads);
+            if let Some(w) = &self.wal {
+                // Buffered marker append only — it fixes the log order.
+                mlock(w).seal_epoch(epoch)?;
+            }
+            // Durability fsync and re-contour compaction off the gate:
+            // ingestion resumes while the disk syncs and labels are
+            // recanonicalized. The forest is itself a graph with the
+            // same components, so the paper's operator over it yields
+            // the canonical min-id labelling of everything live.
+            drop(cut);
+            self.wal_sync_timed()?;
+            let g = EdgeList::from_pairs(self.n(), &forest).into_csr();
+            Contour::c2().with_threads(self.threads).run(&g)
+        } else {
+            if let Some(w) = &self.wal {
+                mlock(w).seal_epoch(epoch)?;
+            }
+            // Delete epoch: the union-find can only merge, so the seal
+            // must repair it before ingestion resumes — the re-contour
+            // and the label store-back stay under the gate. Deletions
+            // are the rare, expensive direction; inserts keep the
+            // lock-free path above.
+            let labels = self.recontour_deletes(&deletes);
+            self.inc.store_labels(&labels, self.threads);
+            drop(cut);
+            self.wal_sync_timed()?;
+            labels
+        };
+        let snap = Arc::new(Snapshot::from_labels(epoch, edges, labels).with_edges_live(live));
         {
             let mut h = wlock(&self.history);
-            h.push(Arc::clone(&snap));
+            h.push_back(Arc::clone(&snap));
             if h.len() > self.max_history {
-                h.remove(0);
+                h.pop_front();
             }
         }
         self.last_epoch.store(epoch, Ordering::Relaxed);
@@ -386,7 +727,7 @@ impl StreamingCc {
     /// the read-lock's writers hold it only for an O(1) push).
     pub fn current(&self) -> Arc<Snapshot> {
         let h = rlock(&self.history);
-        Arc::clone(h.last().expect("history is never empty"))
+        Arc::clone(h.back().expect("history is never empty"))
     }
 
     /// The snapshot sealed as `epoch`, if still retained.
@@ -402,7 +743,7 @@ impl StreamingCc {
             None => Ok(self.current()),
             Some(e) => self.at_epoch(e).ok_or_else(|| {
                 let h = rlock(&self.history);
-                let span = match (h.first(), h.last()) {
+                let span = match (h.front(), h.back()) {
                     (Some(a), Some(b)) => format!("{}..={}", a.epoch, b.epoch),
                     _ => "∅".to_string(),
                 };
@@ -497,6 +838,150 @@ mod tests {
         assert!(s.at_epoch(2).is_none(), "old epochs evicted");
         assert!(s.at_epoch(4).is_some());
         assert!(s.at_epoch(6).is_some());
+    }
+
+    #[test]
+    fn deletions_split_components_at_the_seal() {
+        let s = StreamingCc::new(6, 1);
+        s.add_edges(&[(0, 1), (1, 2), (3, 4)]).unwrap();
+        s.seal_epoch().unwrap();
+        assert_eq!(s.current().labels, vec![0, 0, 0, 3, 3, 5]);
+        assert_eq!(s.delete_edges(&[(1, 2)]).unwrap(), 1);
+        // Deletes publish at the next seal: the current snapshot (and
+        // possibly the live probe) still see the severed pair merged.
+        assert!(s.current().same_comp(0, 2).unwrap());
+        let e = s.seal_epoch().unwrap();
+        assert_eq!(e.labels, vec![0, 0, 2, 3, 3, 5]);
+        assert_eq!(e.edges_ingested, 3);
+        assert_eq!(e.edges_live, 2);
+        assert_eq!(s.edges_deleted(), 1);
+        assert!(!s.connected_live(0, 2).unwrap(), "seal repaired the union-find");
+        // Deleting a pair that is not live fails the whole batch: the
+        // live edge riding along with a dead one stays untouched.
+        assert!(s.delete_edges(&[(1, 2)]).is_err());
+        assert!(s.delete_edges(&[(0, 5)]).is_err());
+        assert!(s.delete_edges(&[(0, 1), (1, 2)]).is_err());
+        assert_eq!(s.edges_deleted(), 1);
+        assert_eq!(s.edges_live(), 2, "rejected batches apply nothing");
+        // Out-of-range deletes error like out-of-range inserts.
+        assert!(s.delete_edges(&[(0, 9)]).is_err());
+    }
+
+    #[test]
+    fn parallel_edges_are_a_multiset() {
+        let s = StreamingCc::new(3, 1);
+        s.add_edges(&[(0, 1), (1, 0), (1, 2)]).unwrap(); // (0,1) twice
+        assert_eq!(s.edges_live(), 3);
+        assert_eq!(s.delete_edges(&[(0, 1)]).unwrap(), 1);
+        let e = s.seal_epoch().unwrap();
+        assert!(e.same_comp(0, 1).unwrap(), "one multiplicity survives");
+        assert_eq!(s.delete_edges(&[(1, 0)]).unwrap(), 1, "orientation is normalized");
+        let e = s.seal_epoch().unwrap();
+        assert!(!e.same_comp(0, 1).unwrap(), "last multiplicity severs the pair");
+        assert!(e.same_comp(1, 2).unwrap());
+        // A batch claiming more multiplicity than is live is rejected
+        // whole — not partially applied.
+        s.add_edges(&[(0, 1)]).unwrap();
+        assert!(s.delete_edges(&[(0, 1), (0, 1)]).is_err());
+        assert_eq!(s.delete_edges(&[(0, 1)]).unwrap(), 1);
+    }
+
+    #[test]
+    fn self_loops_are_dropped_and_uncounted() {
+        // Regression: self-loops used to inflate `edges_ingested`.
+        let s = StreamingCc::new(4, 1);
+        assert_eq!(s.add_edges(&[(1, 1), (0, 1), (2, 2)]).unwrap(), 1);
+        assert_eq!(s.edges_ingested(), 1);
+        assert_eq!(s.edges_live(), 1);
+        assert_eq!(s.add_edges(&[(3, 3)]).unwrap(), 0);
+        assert_eq!(s.edges_ingested(), 1);
+        let e = s.seal_epoch().unwrap();
+        assert_eq!(e.edges_ingested, 1);
+        assert!(s.delete_edges(&[(1, 1)]).is_err(), "self-loops are never live");
+    }
+
+    #[test]
+    fn scoped_recontour_matches_full_recompute() {
+        // Two far-apart paths; a delete inside one must not touch the
+        // other's labels, via the scoped path.
+        let n = 100usize;
+        let s = StreamingCc::new(n, 1);
+        let mut edges: Vec<(VId, VId)> = Vec::new();
+        for v in 0..40u32 {
+            edges.push((v, v + 1)); // path over 0..=40 (41 vertices)
+        }
+        for v in 60..99u32 {
+            edges.push((v, v + 1)); // path over 60..=99 (40 vertices)
+        }
+        s.add_edges(&edges).unwrap();
+        s.seal_epoch().unwrap();
+        assert_eq!(s.delete_edges(&[(20, 21)]).unwrap(), 1);
+        let e = s.seal_epoch().unwrap();
+        assert_eq!(s.scoped_recontours(), 1, "affected mass 41 of 100 stays scoped");
+        assert_eq!(s.full_recontours(), 0);
+        let survivors: Vec<(VId, VId)> =
+            edges.iter().copied().filter(|&p| p != (20, 21)).collect();
+        let g = EdgeList::from_pairs(n, &survivors).into_csr();
+        assert_eq!(e.labels, Contour::c2().run(&g));
+        // Join both halves, then cut the bridge: the affected component
+        // now covers more than half the universe → full re-contour.
+        s.add_edges(&[(40, 60)]).unwrap();
+        s.seal_epoch().unwrap();
+        assert_eq!(s.delete_edges(&[(40, 60)]).unwrap(), 1);
+        let e = s.seal_epoch().unwrap();
+        assert_eq!(s.full_recontours(), 1, "affected mass 81 of 100 goes full");
+        let g = EdgeList::from_pairs(n, &survivors).into_csr();
+        assert_eq!(e.labels, Contour::c2().run(&g));
+        assert_eq!(e.edges_live, survivors.len());
+    }
+
+    #[test]
+    fn insert_delete_epochs_match_static_contour() {
+        // Churny differential check: interleave insert, delete and seal
+        // against a mirror multiset; every sealed epoch must equal a
+        // from-scratch static Contour over the surviving edges.
+        let g = gen::erdos_renyi(400, 900, 13).into_csr();
+        let edges: Vec<(VId, VId)> = g.edges().collect();
+        let s = StreamingCc::new(g.n, 1);
+        let mut live: Vec<(VId, VId)> = Vec::new();
+        for (i, chunk) in edges.chunks(64).enumerate() {
+            s.add_edges(chunk).unwrap();
+            live.extend_from_slice(chunk);
+            // Delete every third previously inserted edge of this chunk.
+            let doomed: Vec<(VId, VId)> = chunk.iter().copied().step_by(3).collect();
+            assert_eq!(s.delete_edges(&doomed).unwrap(), doomed.len());
+            live.retain(|p| !doomed.contains(p));
+            if i % 2 == 0 {
+                let snap = s.seal_epoch().unwrap();
+                let want =
+                    Contour::c2().run(&EdgeList::from_pairs(g.n, &live).into_csr());
+                assert_eq!(snap.labels, want, "epoch {}", snap.epoch);
+                assert_eq!(snap.edges_live, live.len());
+            }
+        }
+        let snap = s.seal_epoch().unwrap();
+        let want = Contour::c2().run(&EdgeList::from_pairs(g.n, &live).into_csr());
+        assert_eq!(snap.labels, want);
+    }
+
+    #[test]
+    fn queries_across_an_eviction_boundary() {
+        let s = StreamingCc::new(8, 1).with_max_history(3);
+        for i in 0..7u32 {
+            s.add_edges(&[(i, i + 1)]).unwrap();
+            s.seal_epoch().unwrap();
+        }
+        // History holds epochs 5..=7; the binary search must stay
+        // correct after front evictions wrapped the deque's ring.
+        assert!(s.at_epoch(4).is_none());
+        for e in 5..=7u64 {
+            let snap = s.at_epoch(e).unwrap();
+            assert_eq!(snap.epoch, e);
+            assert_eq!(snap.edges_ingested, e as usize);
+        }
+        assert_eq!(s.current().epoch, 7);
+        let err = s.snapshot_at(Some(2)).unwrap_err().to_string();
+        assert!(err.contains("history spans 5..=7"), "{err}");
     }
 
     #[test]

@@ -7,19 +7,24 @@
 //! answer `SAME_COMP` / `COMP_SIZE` / `NUM_COMPS` without touching the
 //! ingestion path.
 //!
-//! Disk layout (little-endian), two versions:
+//! Disk layout (little-endian), three versions:
 //!
 //! ```text
 //!   v1:  "CONTRSS1"  epoch: u64  edges_ingested: u64  n: u64  labels: u32 × n
 //!   v2:  "CONTRSS2"  ── same fields ──                        crc: u32
 //!        (CRC-32/IEEE over every byte before the trailer)
+//!   v3:  "CONTRSS3"  epoch: u64  edges_ingested: u64  edges_live: u64
+//!                    n: u64  labels: u32 × n  crc: u32
 //! ```
 //!
-//! New snapshots are written as v2 and crash-safely: the bytes go to a
-//! `<path>.tmp` sibling which is fsynced, atomically renamed over `path`,
-//! and the parent directory fsynced — a crash mid-save can never leave a
+//! v3 adds the live-edge count (insertions minus accepted deletions) so
+//! a recovered stream reports honest occupancy. New snapshots are
+//! written as v3 and crash-safely: the bytes go to a `<path>.tmp`
+//! sibling which is fsynced, atomically renamed over `path`, and the
+//! parent directory fsynced — a crash mid-save can never leave a
 //! half-written snapshot under the real name, and the rename itself is
-//! durable. v1 files (no checksum) remain loadable.
+//! durable. v1/v2 files remain loadable (their live count defaults to
+//! the ingested count — those formats predate deletions).
 
 use std::collections::HashMap;
 use std::fs::File;
@@ -34,14 +39,19 @@ use crate::VId;
 
 const SNAP_MAGIC_V1: &[u8; 8] = b"CONTRSS1";
 const SNAP_MAGIC_V2: &[u8; 8] = b"CONTRSS2";
+const SNAP_MAGIC_V3: &[u8; 8] = b"CONTRSS3";
 
 /// One epoch's immutable connectivity view.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     /// Epoch number (0 is the empty pre-ingestion epoch).
     pub epoch: u64,
-    /// Edge insertions acknowledged up to the seal (duplicates counted).
+    /// Edge insertions accepted up to the seal (parallel edges counted,
+    /// self-loops never admitted).
     pub edges_ingested: usize,
+    /// Edges live at the seal: `edges_ingested` minus accepted
+    /// deletions. Equal to `edges_ingested` on insert-only streams.
+    pub edges_live: usize,
     /// Canonical labelling: `labels[v]` = min vertex id in v's component.
     pub labels: Labels,
     pub num_components: usize,
@@ -50,14 +60,22 @@ pub struct Snapshot {
 
 impl Snapshot {
     /// Build from a canonical min-id labelling (O(n): derives the
-    /// component-size table and count).
+    /// component-size table and count). The live-edge count defaults to
+    /// `edges_ingested`; delete-capable callers set it with
+    /// [`Snapshot::with_edges_live`].
     pub fn from_labels(epoch: u64, edges_ingested: usize, labels: Labels) -> Self {
         let mut sizes: HashMap<VId, u32> = HashMap::new();
         for &l in &labels {
             *sizes.entry(l).or_insert(0) += 1;
         }
         let num_components = sizes.len();
-        Self { epoch, edges_ingested, labels, num_components, sizes }
+        Self { epoch, edges_ingested, edges_live: edges_ingested, labels, num_components, sizes }
+    }
+
+    /// Set the live-edge count (insertions minus accepted deletions).
+    pub fn with_edges_live(mut self, live: usize) -> Self {
+        self.edges_live = live;
+        self
     }
 
     pub fn n(&self) -> usize {
@@ -86,7 +104,7 @@ impl Snapshot {
         Ok(self.sizes[&l] as usize)
     }
 
-    /// Write the snapshot to `path` crash-safely: checksummed v2 bytes to
+    /// Write the snapshot to `path` crash-safely: checksummed v3 bytes to
     /// `<path>.tmp` (fsynced), then atomic rename over `path`, then fsync
     /// of the parent directory so the new name survives a crash.
     ///
@@ -99,10 +117,11 @@ impl Snapshot {
                     .with_context(|| format!("create snapshot dir {}", dir.display()))?;
             }
         }
-        let mut data = Vec::with_capacity(32 + 4 * self.labels.len() + 4);
-        data.extend_from_slice(SNAP_MAGIC_V2);
+        let mut data = Vec::with_capacity(40 + 4 * self.labels.len() + 4);
+        data.extend_from_slice(SNAP_MAGIC_V3);
         data.extend_from_slice(&self.epoch.to_le_bytes());
         data.extend_from_slice(&(self.edges_ingested as u64).to_le_bytes());
+        data.extend_from_slice(&(self.edges_live as u64).to_le_bytes());
         data.extend_from_slice(&(self.labels.len() as u64).to_le_bytes());
         for &l in &self.labels {
             data.extend_from_slice(&l.to_le_bytes());
@@ -133,13 +152,15 @@ impl Snapshot {
         let mut data =
             std::fs::read(path).with_context(|| format!("read snapshot {}", path.display()))?;
         ensure!(data.len() >= 32, "{}: not a contour snapshot", path.display());
-        let v2 = match &data[..8] {
-            m if m == SNAP_MAGIC_V2 => true,
-            m if m == SNAP_MAGIC_V1 => false,
+        let ver: u8 = match &data[..8] {
+            m if m == SNAP_MAGIC_V3 => 3,
+            m if m == SNAP_MAGIC_V2 => 2,
+            m if m == SNAP_MAGIC_V1 => 1,
             _ => anyhow::bail!("{}: not a contour snapshot", path.display()),
         };
-        if v2 {
-            ensure!(data.len() >= 36, "{}: truncated snapshot", path.display());
+        let head = if ver >= 3 { 40usize } else { 32 };
+        if ver >= 2 {
+            ensure!(data.len() >= head + 4, "{}: truncated snapshot", path.display());
             let at = data.len() - 4;
             let stored = u32::from_le_bytes(data[at..].try_into().unwrap());
             let actual = crc::crc32(&data[..at]);
@@ -150,15 +171,23 @@ impl Snapshot {
             );
             data.truncate(at);
         }
+        ensure!(data.len() >= head, "{}: truncated snapshot", path.display());
         let epoch = u64::from_le_bytes(data[8..16].try_into().unwrap());
         let edges = u64::from_le_bytes(data[16..24].try_into().unwrap()) as usize;
-        let n = u64::from_le_bytes(data[24..32].try_into().unwrap()) as usize;
+        // v3 inserts the live-edge count before n; older formats predate
+        // deletions, so everything ingested is live.
+        let (live, npos) = if ver >= 3 {
+            (u64::from_le_bytes(data[24..32].try_into().unwrap()) as usize, 32)
+        } else {
+            (edges, 24)
+        };
+        let n = u64::from_le_bytes(data[npos..npos + 8].try_into().unwrap()) as usize;
         ensure!(
-            data.len() == 32 + 4 * n,
+            data.len() == head + 4 * n,
             "{}: truncated snapshot (declares n = {n})",
             path.display()
         );
-        let labels: Labels = data[32..]
+        let labels: Labels = data[head..]
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect();
@@ -169,7 +198,7 @@ impl Snapshot {
                 path.display()
             );
         }
-        Ok(Snapshot::from_labels(epoch, edges, labels))
+        Ok(Snapshot::from_labels(epoch, edges, labels).with_edges_live(live))
     }
 }
 
@@ -232,11 +261,12 @@ mod tests {
     #[test]
     fn save_load_round_trip() {
         let p = temp("round_trip.snap");
-        let s = Snapshot::from_labels(7, 42, vec![0, 0, 2, 2, 2, 5]);
+        let s = Snapshot::from_labels(7, 42, vec![0, 0, 2, 2, 2, 5]).with_edges_live(37);
         s.save(&p).unwrap();
         let back = Snapshot::load(&p).unwrap();
         assert_eq!(back.epoch, 7);
         assert_eq!(back.edges_ingested, 42);
+        assert_eq!(back.edges_live, 37);
         assert_eq!(back.labels, s.labels);
         assert_eq!(back.num_components, 3);
         assert_eq!(back.comp_size(4).unwrap(), 3);
@@ -251,6 +281,29 @@ mod tests {
         let s = Snapshot::load(&p).unwrap();
         assert_eq!(s.epoch, 5);
         assert_eq!(s.edges_ingested, 17);
+        assert_eq!(s.edges_live, 17, "pre-deletion formats: everything ingested is live");
+        assert_eq!(s.labels, vec![0, 0, 2, 2]);
+    }
+
+    #[test]
+    fn v2_snapshots_still_load() {
+        // Hand-build a v2 file (pre-deletion layout, CRC trailer).
+        let p = temp("compat_v2.snap");
+        let mut data = Vec::new();
+        data.extend_from_slice(SNAP_MAGIC_V2);
+        data.extend_from_slice(&9u64.to_le_bytes());
+        data.extend_from_slice(&23u64.to_le_bytes());
+        data.extend_from_slice(&4u64.to_le_bytes());
+        for l in [0u32, 0, 2, 2] {
+            data.extend_from_slice(&l.to_le_bytes());
+        }
+        let crc = crate::util::crc::crc32(&data);
+        data.extend_from_slice(&crc.to_le_bytes());
+        std::fs::write(&p, data).unwrap();
+        let s = Snapshot::load(&p).unwrap();
+        assert_eq!(s.epoch, 9);
+        assert_eq!(s.edges_ingested, 23);
+        assert_eq!(s.edges_live, 23);
         assert_eq!(s.labels, vec![0, 0, 2, 2]);
     }
 

@@ -1,6 +1,7 @@
 //! Chaos suite: fault schedules driven end to end. Crash-mid-epoch
 //! recovery cross-checked against a from-scratch recompute, corrupt and
-//! torn WAL matrices, injected WAL I/O errors, pool-job panics isolated
+//! torn WAL matrices (insert and delete frames, plus pre-deletion v1/v2
+//! format compatibility), injected WAL I/O errors, pool-job panics isolated
 //! to their own request, request deadlines, connection drops
 //! mid-pipeline, idle/drain closes, hostile binary frames on a live
 //! socket, and an env-driven soak (`CONTOUR_FAULTS`, used by the CI
@@ -21,7 +22,7 @@ use contour::cc::{contour::Contour, Algorithm, Labels};
 use contour::graph::{gen, EdgeList};
 use contour::server::{protocol, serve_listener, ServerState, Session};
 use contour::stream::{Snapshot, StreamingCc, Wal};
-use contour::util::faults;
+use contour::util::{crc, faults};
 use contour::VId;
 
 // ---------------------------------------------------------- harness
@@ -110,6 +111,30 @@ fn flip_byte(path: &std::path::Path, off: usize) {
     let mut data = std::fs::read(path).unwrap();
     assert!(off < data.len(), "flip offset {off} past {} bytes", data.len());
     data[off] ^= 0xFF;
+    std::fs::write(path, data).unwrap();
+}
+
+/// Hand-build a pre-deletion WAL image — v1 (`CONTRWAL`, no CRCs) or
+/// v2 (`CONTRWL2`, per-frame CRC) — holding only insert frames. The
+/// equivalent helpers in stream/wal.rs live in its private test module,
+/// so the compat tests here forge the bytes themselves.
+fn write_legacy_wal(path: &std::path::Path, ver: u8, n: usize, frames: &[&[(VId, VId)]]) {
+    assert!(ver == 1 || ver == 2);
+    let mut data = Vec::new();
+    data.extend_from_slice(if ver == 1 { b"CONTRWAL" } else { b"CONTRWL2" });
+    data.extend_from_slice(&(n as u64).to_le_bytes());
+    for pairs in frames {
+        let mut frame = vec![0x01u8];
+        frame.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+        for &(u, v) in *pairs {
+            frame.extend_from_slice(&u.to_le_bytes());
+            frame.extend_from_slice(&v.to_le_bytes());
+        }
+        if ver >= 2 {
+            frame.extend_from_slice(&crc::crc32(&frame).to_le_bytes());
+        }
+        data.extend_from_slice(&frame);
+    }
     std::fs::write(path, data).unwrap();
 }
 
@@ -204,6 +229,95 @@ fn corrupt_wal_frame_fails_with_byte_offset() {
     assert!(err.contains("checksum mismatch at byte 16"), "{err}");
     let err = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap_err().to_string();
     assert!(err.contains("checksum mismatch"), "recovery swallowed corruption: {err}");
+}
+
+/// A crash mid-delete-append tears the final (delete) frame: recovery
+/// truncates exactly that frame — the delete never happened, because it
+/// was never acknowledged — and the repaired log accepts and replays a
+/// re-issued delete cleanly.
+#[test]
+fn torn_delete_frame_is_truncated_and_recovered() {
+    let _g = quiesce();
+    let dir = fresh_dir("torndel");
+    let wal = dir.join("g.wal");
+    let edges = [(0u32, 1u32), (1, 2), (2, 3), (10, 11)];
+    {
+        let s = StreamingCc::open(64, 0, Some(wal.as_path())).unwrap();
+        s.add_edges(&edges).unwrap();
+        s.delete_edges(&[(1, 2), (10, 11)]).unwrap();
+        // "Kill" mid-append: the tear below lands inside this frame.
+    }
+    let len = std::fs::metadata(&wal).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&wal).unwrap();
+    f.set_len(len - 3).unwrap();
+    drop(f);
+
+    let r = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    let info = r.recovery().expect("recovery stats");
+    assert!(info.truncated_bytes > 0, "torn delete tail not reported");
+    assert_eq!(info.deletes_replayed, 0, "a torn delete frame must not replay");
+    assert_eq!(r.current().labels, labels_of(64, &edges), "lost more than the torn frame");
+    assert_eq!(r.edges_live(), edges.len(), "the unacknowledged delete was applied");
+
+    // The repair rewound to a frame boundary: the delete can be
+    // re-issued against the same log and replays on the next boot.
+    r.delete_edges(&[(1, 2)]).unwrap();
+    r.seal_epoch().unwrap();
+    let survivors = [(0u32, 1u32), (2, 3), (10, 11)];
+    assert_eq!(r.current().labels, labels_of(64, &survivors));
+    drop(r);
+    let r2 = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+    let info2 = r2.recovery().expect("recovery stats");
+    assert_eq!(info2.truncated_bytes, 0, "repair did not persist");
+    assert_eq!(info2.deletes_replayed, 1);
+    assert_eq!(r2.current().labels, labels_of(64, &survivors));
+}
+
+/// ACCEPTANCE: interior corruption of a delete frame (bit flip, not a
+/// tear) fails recovery loudly with the frame's byte offset.
+#[test]
+fn corrupt_delete_frame_fails_with_byte_offset() {
+    let _g = quiesce();
+    let dir = fresh_dir("delcorrupt");
+    let wal = dir.join("g.wal");
+    {
+        let s = StreamingCc::open(64, 0, Some(wal.as_path())).unwrap();
+        s.add_edges(&[(0, 1), (1, 2)]).unwrap(); // 25-byte frame at offset 16
+        s.delete_edges(&[(0, 1)]).unwrap(); // 17-byte frame at offset 41
+    }
+    // Flip a payload byte inside the delete frame so it still parses
+    // but its CRC disagrees.
+    flip_byte(&wal, 41 + 5 + 1);
+    let err = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch at byte 41"), "{err}");
+}
+
+/// Pre-deletion log formats still replay end to end: v1 (no CRCs) and
+/// v2 both recover into a working stream, inserts keep appending in the
+/// old format, and a delete is refused cleanly — with nothing applied —
+/// rather than writing a frame an old reader would misparse.
+#[test]
+fn legacy_wal_versions_replay_and_refuse_deletes() {
+    let _g = quiesce();
+    let dir = fresh_dir("legacy");
+    let edges = [(0u32, 1u32), (1, 2), (4, 5)];
+    for ver in [1u8, 2] {
+        let wal = dir.join(format!("v{ver}.wal"));
+        write_legacy_wal(&wal, ver, 64, &[&edges[..2], &edges[2..]]);
+        let r = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+        assert_eq!(r.current().labels, labels_of(64, &edges), "v{ver} replay diverged");
+        assert_eq!(r.edges_live(), edges.len());
+        r.add_edges(&[(10, 11)]).unwrap();
+        let err = r.delete_edges(&[(0, 1)]).unwrap_err().to_string();
+        assert!(err.contains(&format!("v{ver} cannot hold delete frames")), "{err}");
+        assert_eq!(r.edges_live(), 4, "refused delete must leave the batch unapplied");
+        assert_eq!(r.edges_deleted(), 0);
+        drop(r);
+        let mut all = edges.to_vec();
+        all.push((10, 11));
+        let r2 = StreamingCc::recover(None, Some(wal.as_path()), 0).unwrap();
+        assert_eq!(r2.current().labels, labels_of(64, &all), "v{ver} re-replay diverged");
+    }
 }
 
 /// A bit flip inside a snapshot fails the trailing CRC on load.
@@ -507,7 +621,7 @@ fn soak_under_env_schedule_recovers() {
     let (mut errs, mut drops) = (0u32, 0u32);
     let mut conn: Option<Wire> = None;
     for i in 0..160u32 {
-        let op = match i % 8 {
+        let op = match i % 9 {
             0 => "GEN g er:800:1500".to_string(),
             1 => "CC g C-2".to_string(),
             2 => format!("QUERY g {}", (i * 37) % 800),
@@ -515,6 +629,10 @@ fn soak_under_env_schedule_recovers() {
             4 => "PCC g C-2".to_string(),
             5 => format!("STREAM s 64 {}", wal.display()),
             6 => format!("SADD s {} {}", i % 64, (i + 1) % 64),
+            // Delete the pair the preceding SADD added. If that SADD's
+            // append was faulted (or a delete is re-tried after one),
+            // the edge isn't live and this ERRs — tallied, tolerated.
+            7 => format!("SDEL s {} {}", (i - 1) % 64, i % 64),
             _ => "SEPOCH s".to_string(),
         };
         if conn.is_none() {

@@ -62,8 +62,14 @@ fn every_verb_through_dispatch_directly() {
         ("TRACE g".into(), "OK "),
         ("STREAM s 4".into(), "OK "),
         ("SADD s 0 1".into(), "OK "),
+        ("SADD s 2 3".into(), "OK 1 "),
+        ("SDEL s 2 3".into(), "OK 1 "),
         ("SEPOCH s".into(), "OK 1 "),
         ("SQUERY s SAME 0 1".into(), "OK "),
+        // Satellite: the SQUERY usage string is one string on every
+        // error path — arity errors and bad ops used to disagree.
+        ("SQUERY s NOPE 1".into(), "ERR usage: SQUERY name SAME u v [epoch]"),
+        ("SQUERY s".into(), "ERR usage: SQUERY name SAME u v [epoch]"),
         (format!("SSAVE s {}", snap.display()), "OK "),
         ("DROP s".into(), "OK"),
         (format!("SLOAD s2 {}", snap.display()), "OK "),
@@ -124,6 +130,24 @@ fn every_verb_through_dispatch_directly() {
     assert_eq!(via_args, "OK 3 0 0 0");
     assert_eq!(via_args, via_payload, "line vs binary BQUERY ids disagree");
     covered.insert("BQUERY");
+
+    // SDEL: id pairs in the arg list (line) and in the frame payload
+    // (binary) delete identically. Two parallel inserts of the same
+    // edge, one retired each way — multiset semantics on both paths.
+    assert!(run("SADD s2 2 3").unwrap().starts_with("OK 1 "));
+    assert!(run("SADD s2 2 3").unwrap().starts_with("OK 1 "));
+    let via_args = run("SDEL s2 2 3").unwrap();
+    let pair: Vec<VId> = vec![2, 3];
+    let via_payload = dispatch::render_line(&dispatch::dispatch(
+        &state,
+        "SDEL",
+        &["s2"],
+        Body::Ids(&pair),
+    ))
+    .unwrap();
+    assert!(via_args.starts_with("OK 1 "), "{via_args}");
+    assert_eq!(via_args, via_payload, "line vs binary SDEL ids disagree");
+    covered.insert("SDEL");
 
     // Deterministic read verbs render identically through the Session
     // line adapter and through dispatch() directly.

@@ -103,7 +103,7 @@ fn crash_recovery_round_trip() {
         .iter()
         .map(|rec| match rec {
             WalRecord::Edges(b) => b.len(),
-            WalRecord::EpochSeal(_) => 0,
+            WalRecord::Deletes(_) | WalRecord::EpochSeal(_) => 0,
         })
         .sum();
     assert_eq!(logged, edges.len() + 1);
@@ -263,6 +263,216 @@ fn server_stream_verbs_end_to_end() {
     assert_eq!(ask("SEPOCH hist".into()), "OK 3 4");
     assert!(ask("SQUERY hist COMPS 1".into()).starts_with("ERR"), "epoch 1 evicted");
     assert_eq!(ask("SQUERY hist COMPS 3".into()), "OK 4 3");
+}
+
+/// SDEL-equivalent deletions through a Session: multiset semantics,
+/// seal-boundary visibility, error paths, and the stream_deletes
+/// counter.
+#[test]
+fn server_delete_verbs_end_to_end() {
+    let state = ServerState::new(1);
+    let mut session = Session::new(&state);
+    let mut ask = |line: String| session.handle(&line, || unreachable!()).unwrap();
+
+    assert_eq!(ask("STREAM d 6".into()), "OK 6 0");
+    // (1,2) twice: parallel edges are a multiset.
+    assert_eq!(ask("SADD d 0 1 1 2 1 2".into()), "OK 3 0");
+    assert_eq!(ask("SEPOCH d".into()), "OK 1 4");
+    assert_eq!(ask("SDEL d 1 2".into()), "OK 1 1");
+    // One multiplicity survives: still connected after the seal.
+    assert_eq!(ask("SEPOCH d".into()), "OK 2 4");
+    assert_eq!(ask("SQUERY d SAME 1 2".into()), "OK 1 2");
+    // Deletes normalize orientation exactly like inserts.
+    assert_eq!(ask("SDEL d 2 1".into()), "OK 1 2");
+    assert_eq!(ask("SEPOCH d".into()), "OK 3 5");
+    assert_eq!(ask("SQUERY d SAME 1 2".into()), "OK 0 3");
+    assert_eq!(ask("SQUERY d SAME 0 1".into()), "OK 1 3");
+    // Old epochs keep their pre-delete view.
+    assert_eq!(ask("SQUERY d SAME 1 2 2".into()), "OK 1 2");
+    // A dead edge, an odd id list, out-of-range ids, a missing stream:
+    // clean ERRs, none counted as deletions.
+    assert!(ask("SDEL d 1 2".into()).starts_with("ERR"), "edge no longer live");
+    assert!(ask("SDEL d 3".into()).starts_with("ERR"), "odd id count");
+    assert!(ask("SDEL d 0 42".into()).starts_with("ERR"), "out of range");
+    assert!(ask("SDEL nosuch 0 1".into()).starts_with("ERR"));
+    let metrics = ask("METRICS".into());
+    assert!(metrics.contains("stream_deletes=2"), "{metrics}");
+}
+
+/// ACCEPTANCE: deletions are durable. Interleaved insert/delete frames
+/// replay from the WAL (with and without a snapshot seed), snapshots
+/// carry the live-edge count through the v3 format, and snapshot-only
+/// recovery — which has no multiset to check deletes against — refuses
+/// them loudly instead of corrupting.
+#[test]
+fn deletes_survive_crash_recovery() {
+    let dir = std::env::temp_dir().join("contour_stream_delete_recovery_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal = dir.join("del.wal");
+    let snap = dir.join("del.snap");
+    let _ = std::fs::remove_file(&wal);
+
+    {
+        let s = StreamingCc::open(10, 1, Some(wal.as_path())).unwrap();
+        s.add_edges(&[(0, 1), (1, 2), (2, 3), (3, 4)]).unwrap();
+        s.delete_edges(&[(1, 2)]).unwrap();
+        s.seal_epoch().unwrap();
+        s.save_snapshot(&snap).unwrap();
+        assert_eq!(s.edges_live(), 3);
+        s.add_edges(&[(1, 2), (5, 6)]).unwrap();
+        s.delete_edges(&[(3, 4), (5, 6)]).unwrap();
+        // "Crash" mid-epoch: the unsealed suffix holds both frame kinds.
+    }
+    let survivors = [(0, 1), (2, 3), (1, 2)];
+    let want = Contour::c2().run(&contour::graph::EdgeList::from_pairs(10, &survivors).into_csr());
+
+    // WAL alone: full replay rebuilds the surviving multiset.
+    let r = StreamingCc::recover(None, Some(wal.as_path()), 1).unwrap();
+    assert_eq!(r.current().labels, want);
+    assert_eq!(r.edges_ingested(), 6);
+    assert_eq!(r.edges_live(), 3);
+    assert_eq!(r.edges_deleted(), 3);
+    let info = r.recovery().unwrap();
+    assert_eq!(info.deletes_replayed, 3);
+    assert!(info.summary().contains("deletes=3"), "{}", info.summary());
+
+    // Snapshot + WAL agrees (deletions force the full-log path: labels
+    // with a deleted edge baked in cannot seed a merge-only union-find).
+    let r2 = StreamingCc::recover(Some(snap.as_path()), Some(wal.as_path()), 1).unwrap();
+    assert_eq!(r2.current().labels, want);
+    assert_eq!(r2.edges_live(), 3);
+
+    // Recovered streams keep deleting: retire a replayed edge and one
+    // more recovery still matches a static recompute.
+    r2.delete_edges(&[(2, 3)]).unwrap();
+    let sealed = r2.seal_epoch().unwrap();
+    drop(r2);
+    let r2b = StreamingCc::recover(None, Some(wal.as_path()), 1).unwrap();
+    assert_eq!(r2b.current().labels, sealed.labels);
+    assert_eq!(r2b.edges_live(), 2);
+
+    // Snapshot alone: the v3 live-edge count round-trips...
+    let r3 = StreamingCc::recover(Some(snap.as_path()), None, 1).unwrap();
+    assert_eq!(r3.edges_ingested(), 4);
+    assert_eq!(r3.edges_live(), 3);
+    // ...and with no multiset, pre-snapshot edges are not deletable.
+    assert!(r3.delete_edges(&[(0, 1)]).is_err());
+}
+
+/// ACCEPTANCE: differential churn soak. A deterministic ≥300-op
+/// interleaved insert/delete/seal/query schedule over two generator
+/// families × threads {1, 4}, where every sealed epoch's labels are
+/// bit-identical to a from-scratch static Contour C-2 run on the
+/// surviving edge multiset — finishing with a kill mid-epoch that
+/// leaves unsealed inserts *and* deletes in the WAL suffix, which
+/// recovery must replay to the same answer.
+#[test]
+fn churn_soak_matches_static_contour() {
+    for (gname, g) in [
+        ("rmat", gen::rmat(10, 3_000, gen::RmatKind::Graph500, 21).into_csr()),
+        ("er", gen::erdos_renyi(800, 2_000, 22).into_csr()),
+    ] {
+        for threads in [1usize, 4] {
+            churn_soak(gname, &g, threads);
+        }
+    }
+}
+
+fn churn_soak(gname: &str, g: &Csr, threads: usize) {
+    let tag = format!("{gname} t{threads}");
+    let dir = std::env::temp_dir().join(format!("contour_churn_soak_{gname}_{threads}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal = dir.join("soak.wal");
+    let _ = std::fs::remove_file(&wal);
+
+    let edges: Vec<(VId, VId)> = g.edges().collect();
+    let s = StreamingCc::open(g.n, threads, Some(wal.as_path())).unwrap();
+    let mut rng = contour::util::SplitMix64::new(1_000 * threads as u64 + 7);
+    // The oracle: a mirror of the surviving edge multiset, and the
+    // labels of the last sealed epoch.
+    let mut live: Vec<(VId, VId)> = Vec::new();
+    let mut last_want: Vec<VId> = (0..g.n as VId).collect();
+    let mut next = 0usize;
+
+    let verify = |s: &StreamingCc, live: &[(VId, VId)], at: &str| -> Vec<VId> {
+        let snap = s.seal_epoch().unwrap();
+        let want = Contour::c2().run(&contour::graph::EdgeList::from_pairs(g.n, live).into_csr());
+        assert_eq!(snap.labels, want, "{at}: sealed epoch {} diverges from static C-2", snap.epoch);
+        assert_eq!(s.edges_live(), live.len(), "{at}: live-edge count drifted");
+        want
+    };
+
+    for op in 0..300usize {
+        match rng.next_u64() % 10 {
+            // ~half the schedule feeds generator edges in uneven chunks.
+            0..=4 if next < edges.len() => {
+                let take = (edges.len() - next).min(11 + (rng.next_u64() as usize) % 43);
+                let chunk = &edges[next..next + take];
+                assert_eq!(s.add_edges(chunk).unwrap(), take, "{tag} op {op}");
+                live.extend_from_slice(chunk);
+                next += take;
+            }
+            // Deletes pick random live victims (multiset-correctly:
+            // each victim leaves the mirror as it is accepted).
+            5..=6 if !live.is_empty() => {
+                let k = 1 + (rng.next_u64() as usize) % live.len().min(9);
+                let mut batch = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let i = (rng.next_u64() as usize) % live.len();
+                    batch.push(live.swap_remove(i));
+                }
+                assert_eq!(s.delete_edges(&batch).unwrap(), k, "{tag} op {op}");
+            }
+            7 => last_want = verify(&s, &live, &format!("{tag} op {op}")),
+            // Queries answer from the last sealed epoch, exactly.
+            _ => {
+                let u = (rng.next_u64() % g.n as u64) as VId;
+                let v = (rng.next_u64() % g.n as u64) as VId;
+                let snap = s.current();
+                assert_eq!(
+                    snap.same_comp(u, v).unwrap(),
+                    last_want[u as usize] == last_want[v as usize],
+                    "{tag} op {op}: query diverges from last sealed oracle"
+                );
+            }
+        }
+    }
+
+    // Deterministic tail: flush the rest of the feed, force at least
+    // one delete-aware seal, and check the re-contour path really ran.
+    if next < edges.len() {
+        s.add_edges(&edges[next..]).unwrap();
+        live.extend_from_slice(&edges[next..]);
+    }
+    if live.is_empty() {
+        s.add_edges(&edges[..1]).unwrap();
+        live.push(edges[0]);
+    }
+    let victim = live.swap_remove(live.len() / 2);
+    s.delete_edges(&[victim]).unwrap();
+    verify(&s, &live, &format!("{tag} tail"));
+    assert!(
+        s.scoped_recontours() + s.full_recontours() >= 1,
+        "{tag}: no delete-aware seal ran"
+    );
+
+    // Kill mid-epoch: unsealed inserts and deletes in the WAL suffix.
+    s.add_edges(&[victim]).unwrap();
+    live.push(victim);
+    let k = 1 + live.len() / 8;
+    let mut batch = Vec::with_capacity(k);
+    for _ in 0..k {
+        let i = (rng.next_u64() as usize) % live.len();
+        batch.push(live.swap_remove(i));
+    }
+    s.delete_edges(&batch).unwrap();
+    drop(s);
+
+    let r = StreamingCc::recover(None, Some(wal.as_path()), threads).unwrap();
+    let want = Contour::c2().run(&contour::graph::EdgeList::from_pairs(g.n, &live).into_csr());
+    assert_eq!(r.current().labels, want, "{tag}: recovery diverges from static C-2");
+    assert_eq!(r.edges_live(), live.len(), "{tag}: recovered live-edge count drifted");
+    assert!(r.recovery().unwrap().deletes_replayed > 0, "{tag}: no deletes in the replayed log");
 }
 
 /// Snapshots on disk are validated, versioned artifacts.
